@@ -1,0 +1,72 @@
+//! Paper experiment E2: global vs local memory-bank mapping on
+//! ResNet-50, plus a bank-count sweep.
+//!
+//! Reproduces the §3 result: "global mapping eliminate[s] 76% of the
+//! on-chip data copies and 37% of the copies off chip."
+//!
+//! ```sh
+//! cargo run --release --example resnet_bank_mapping
+//! ```
+
+use polymem::accel::{simulate, AccelConfig, SimReport};
+use polymem::passes::bank::BankStats;
+use polymem::passes::manager::{BankMode, PassManager};
+use polymem::report;
+
+fn run_mode(mode: BankMode, batch: i64, cfg: &AccelConfig) -> (BankStats, SimReport) {
+    let pm = PassManager { bank_mode: mode, ..Default::default() };
+    let rep = pm.run(polymem::models::resnet50(batch)).expect("pipeline");
+    let sim = simulate(&rep.program, cfg, None);
+    (rep.bank.unwrap().stats, sim)
+}
+
+fn main() {
+    let cfg = AccelConfig::inferentia_like();
+    let (local_stats, local_sim) = run_mode(BankMode::Local, 1, &cfg);
+    let (global_stats, global_sim) = run_mode(BankMode::Global, 1, &cfg);
+
+    println!("E2 — global vs local bank mapping on ResNet-50\n");
+    println!(
+        "{}",
+        report::e2_table(&local_stats, &global_stats, &local_sim, &global_sim)
+    );
+
+    // who wins must match the paper
+    assert!(global_sim.onchip_copy_total() < local_sim.onchip_copy_total());
+    let reduction = report::pct_reduction(
+        local_sim.onchip_copy_total(),
+        global_sim.onchip_copy_total(),
+    );
+    assert!(
+        (60.0..90.0).contains(&reduction),
+        "on-chip reduction {reduction:.1}% out of the paper's ballpark"
+    );
+
+    // ablation: how the win scales with the eviction-crossbar limit
+    println!("\nablation: eviction-crossbar flexibility (col_flex_limit)\n");
+    let mut t = report::Table::new(&[
+        "col_flex_limit",
+        "global remaps",
+        "on-chip copy bytes",
+        "reduction vs local",
+    ]);
+    for limit in [128i64, 256, 512, 1024, 4096] {
+        let pm = PassManager {
+            bank_mode: BankMode::Global,
+            bank_cfg: polymem::passes::bank::BankConfig { banks: 16, col_flex_limit: limit },
+            ..Default::default()
+        };
+        let rep = pm.run(polymem::models::resnet50(1)).unwrap();
+        let sim = simulate(&rep.program, &cfg, None);
+        t.row(&[
+            limit.to_string(),
+            rep.bank.as_ref().unwrap().stats.copies_inserted.to_string(),
+            report::mb(sim.onchip_copy_total()),
+            format!(
+                "{:.1}%",
+                report::pct_reduction(local_sim.onchip_copy_total(), sim.onchip_copy_total())
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+}

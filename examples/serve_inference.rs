@@ -1,0 +1,100 @@
+//! End-to-end validation: all three layers compose.
+//!
+//! Loads the AOT-compiled JAX/Pallas CNN artifact (L2+L1, built by
+//! `make artifacts`), serves batched synthetic requests through the
+//! Rust coordinator (L3) on the PJRT CPU runtime, and reports
+//! latency/throughput — the serving-paper driver required by the
+//! project brief. Python is not involved at any point of this binary.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example serve_inference
+//! ```
+
+use polymem::coordinator::{PjrtBackend, Server, ServerConfig};
+use polymem::runtime::RuntimeClient;
+use polymem::util::rng::SplitMix64;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const BATCH: usize = 8;
+const CLASSES: usize = 10;
+const REQUESTS: usize = 512;
+
+fn main() {
+    let artifact = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts/model.hlo.txt".to_string());
+    if !Path::new(&artifact).exists() {
+        eprintln!("artifact {artifact} not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let cfg = ServerConfig {
+        max_batch: BATCH,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 4096,
+    };
+    let artifact2 = artifact.clone();
+    let srv = Server::start_with(
+        move || {
+            let rt = RuntimeClient::cpu()?;
+            println!(
+                "PJRT platform: {} ({} devices)",
+                rt.platform(),
+                rt.device_count()
+            );
+            let model = rt.load_hlo_text(Path::new(&artifact2))?;
+            Ok(PjrtBackend::new(model, BATCH, &[3, 32, 32], CLASSES))
+        },
+        cfg,
+    )
+    .expect("starting server");
+
+    // synthetic CIFAR-shaped request stream
+    let mut rng = SplitMix64::new(2026);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..REQUESTS)
+        .map(|_| {
+            let img: Vec<f32> = (0..3 * 32 * 32)
+                .map(|_| (rng.next_f64() as f32) * 2.0 - 1.0)
+                .collect();
+            srv.submit(img).expect("submit")
+        })
+        .collect();
+
+    let mut class_histogram = [0usize; CLASSES];
+    for h in handles {
+        let logits = h.wait().expect("inference");
+        assert_eq!(logits.len(), CLASSES);
+        assert!(logits.iter().all(|v| v.is_finite()), "non-finite logits");
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        class_histogram[argmax] += 1;
+    }
+    let elapsed = t0.elapsed();
+    let snap = srv.metrics().snapshot();
+
+    println!("\nserved {REQUESTS} requests in {elapsed:?}");
+    println!(
+        "throughput: {:.1} req/s  |  latency mean {:?} p50 {:?} p99 {:?}",
+        REQUESTS as f64 / elapsed.as_secs_f64(),
+        snap.mean_latency,
+        snap.p50_latency,
+        snap.p99_latency
+    );
+    println!(
+        "batches: {} (mean batch {:.2}), errors: {}",
+        snap.batches, snap.mean_batch, snap.errors
+    );
+    println!("predicted-class histogram: {class_histogram:?}");
+    assert_eq!(snap.requests as usize, REQUESTS);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.mean_batch > 1.0, "batching never engaged");
+    srv.shutdown();
+    println!("e2e OK — L1 (pallas) + L2 (jax) + L3 (rust) compose");
+}

@@ -1,0 +1,95 @@
+"""AOT bridge: lower the L2 model to HLO **text** artifacts for the
+Rust runtime.
+
+HLO text — not `.serialize()` protos — is the interchange format: this
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids,
+while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with `return_tuple=True`; the Rust
+side unwraps the 1-tuple.
+
+Usage:
+    python -m compile.aot --out ../artifacts/model.hlo.txt
+        writes the serving artifact (batch 8) plus a batch-1 variant
+        next to it (model.b1.hlo.txt).
+    python -m compile.aot --audit
+        prints the L2 fusion audit (op histogram of the lowered HLO,
+        VMEM/MXU structural metrics of the L1 kernel) without writing.
+"""
+
+import argparse
+import collections
+import os
+import re
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels import banked_matmul as bmk
+from .model import model_fn
+
+
+def to_hlo_text(fn, spec) -> str:
+    lowered = jax.jit(fn).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def audit(hlo_text: str):
+    """Fusion/layout audit of a lowered module: op histogram and
+    red-flag count of materialized transposes/copies (L2 §Perf)."""
+    ops = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"= \S+ (\w+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--audit", action="store_true")
+    args = ap.parse_args()
+
+    fn, spec = model_fn(args.batch, seed=args.seed)
+    text = to_hlo_text(fn, spec)
+
+    if args.audit:
+        ops = audit(text)
+        print("== L2 HLO op histogram (batch %d) ==" % args.batch)
+        for op, n in ops.most_common():
+            print(f"  {op:<22} {n}")
+        total = sum(ops.values())
+        moves = ops["transpose"] + ops["copy"] + ops["reshape"]
+        print(f"  data-movement ops: {moves}/{total}")
+        print("== L1 kernel structural metrics ==")
+        for m, k, n in [(1024, 27, 16), (256, 288, 64), (8, 64, 10)]:
+            print(
+                f"  matmul {m}x{k}x{n}: vmem/step = {bmk.vmem_bytes_per_step(m, k, n)}B,"
+                f" mxu = {bmk.mxu_utilization(m, k, n):.2f}"
+            )
+        return
+
+    out = os.path.abspath(args.out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars (batch {args.batch}) to {out}")
+
+    # batch-1 variant for low-latency serving
+    fn1, spec1 = model_fn(1, seed=args.seed)
+    text1 = to_hlo_text(fn1, spec1)
+    out1 = re.sub(r"\.hlo\.txt$", ".b1.hlo.txt", out)
+    with open(out1, "w") as f:
+        f.write(text1)
+    print(f"wrote {len(text1)} chars (batch 1) to {out1}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""L1 Pallas kernel: conv2d as bank-tiled im2col matmul.
+
+The systolic-array formulation the paper's chip uses: unfold the NCHW
+input into patch rows (im2col — a *layout* producer that the L2 graph
+keeps adjacent to the matmul so XLA fuses it instead of materializing
+an intermediate, mirroring what DME achieves in the Rust compiler),
+then contract patches against reshaped OIHW weights on the MXU with
+the bank-tiled matmul kernel.
+"""
+
+import jax.numpy as jnp
+
+from . import banked_matmul as bm
+from . import ref
+
+
+def banked_conv2d(x, w, stride=1, padding=0, bn=128):
+    """NCHW × OIHW → NCHW convolution through the Pallas matmul.
+
+    x: [N, C, H, W]; w: [O, C, KH, KW].
+    """
+    n, c, h, wd = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    patches, oh, ow = ref.im2col_nchw(x, kh, kw, stride, padding)
+    # [N, OH*OW, C*KH*KW] @ [C*KH*KW, O] — O is the banked axis
+    wmat = w.reshape(o, c * kh * kw).T
+    out = jnp.stack(
+        [bm.banked_matmul(patches[i], wmat, bn=bn) for i in range(n)], axis=0
+    )  # [N, OH*OW, O]
+    return jnp.transpose(out, (0, 2, 1)).reshape(n, o, oh, ow)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: bank-tiled matmul — the compute hot-spot.
+
+Hardware adaptation of the paper's bank mapping to Pallas/TPU idioms
+(DESIGN.md §Hardware-Adaptation):
+
+* the grid axis over N is the **bank axis**: each grid step `j` owns
+  one `bn`-wide slab of output columns — the Pallas realization of
+  "the result … spread across several banks, guided by the different
+  output channels";
+* the K dimension stays whole inside a block — operand rows enter the
+  MXU spread across banks by contraction dim, which is the Row-aligned
+  placement the bank-mapping pass establishes (`Placement::row` on the
+  channel dim);
+* block shapes default to MXU-friendly 128×128 tiles and are clamped
+  to the problem size; `python -m compile.aot --audit` prints the VMEM
+  footprint per grid step so the schedule can be checked against the
+  512 KiB bank budget.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the block
+geometry (EXPERIMENTS.md §Perf), while numerics are validated here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm × bn) output tile per grid step; K is resident whole.
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _clamp_tile(dim, want):
+    """Largest divisor of `dim` not exceeding `want` (block shapes must
+    tile the array exactly; shapes here are compile-time constants)."""
+    t = min(dim, want)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def banked_matmul(x, w, bm=128, bn=128):
+    """[M, K] @ [K, N] -> [M, N] via a bank-tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _clamp_tile(m, bm)
+    bn = _clamp_tile(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_bytes_per_step(m, k, n, bm=128, bn=128, elem=4):
+    """Static VMEM footprint of one grid step (operands + result tile) —
+    the §Perf structural metric checked against the bank budget."""
+    bm = _clamp_tile(m, bm)
+    bn = _clamp_tile(n, bn)
+    return elem * (bm * k + k * bn + bm * bn)
+
+
+def mxu_utilization(m, k, n, bm=128, bn=128, mxu=128):
+    """Fraction of MXU lanes a (bm, bn, k) tile keeps busy — 1.0 when
+    both tile sides fill the 128-wide systolic array."""
+    bm = _clamp_tile(m, bm)
+    bn = _clamp_tile(n, bn)
+    return min(bm, mxu) * min(bn, mxu) / float(mxu * mxu)

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: tiled bank remap (the `MemCopy` operator).
+
+The inter-bank relocation the Rust passes materialize as `MemCopy`
+nodes, expressed as a Pallas kernel: a tile-wise 2-D transpose whose
+grid walks destination tiles — each grid step reads one source tile
+from the "old" banking and deposits it transposed into the "new" one.
+Used by the serving example to realize layout changes on the real
+(PJRT) execution path, and as a second, structurally different kernel
+for the correctness suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _remap_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def _clamp_tile(dim, want):
+    t = min(dim, want)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def bank_transpose(x, bt=128):
+    """[A, B] -> [B, A] tile-wise (destination-indexed grid)."""
+    a, b = x.shape
+    ta = _clamp_tile(a, bt)
+    tb = _clamp_tile(b, bt)
+    grid = (b // tb, a // ta)  # destination tiles: [B, A] in (tb, ta) blocks
+    return pl.pallas_call(
+        _remap_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ta, tb), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((tb, ta), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, a), x.dtype),
+        interpret=True,
+    )(x)

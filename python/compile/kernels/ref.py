@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest asserts
+allclose between kernel and oracle across hypothesis-generated shapes.
+The oracles are deliberately written with stock jax.numpy / lax ops —
+no Pallas, no custom tiling — so a disagreement always indicts the
+kernel.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """[M, K] @ [K, N] -> [M, N] in f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_nchw_ref(x, w, stride=1, padding=0):
+    """NCHW x OIHW conv, symmetric padding, f32 accumulation."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out.astype(x.dtype)
+
+
+def bank_transpose_ref(x):
+    """Layout remap oracle: 2-D transpose."""
+    return jnp.swapaxes(x, 0, 1)
+
+
+def im2col_nchw(x, kh, kw, stride=1, padding=0):
+    """Unfold NCHW input into [N, OH*OW, C*KH*KW] patches (row-major
+    over (kh, kw) then c, matching the OIHW weight reshape below)."""
+    n, c, h, w = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = lax.slice(
+                x,
+                (0, 0, dy, dx),
+                (n, c, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )  # [N, C, OH, OW]
+            cols.append(patch)
+    # list of [N, C, OH, OW] -> [N, OH*OW, C*KH*KW] with (c, dy, dx) order
+    stacked = jnp.stack(cols, axis=2)  # [N, C, KH*KW, OH, OW]
+    out = jnp.transpose(stacked, (0, 3, 4, 1, 2)).reshape(n, oh * ow, c * kh * kw)
+    return out, oh, ow

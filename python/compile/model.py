@@ -1,0 +1,69 @@
+"""L2: the JAX model — a small CNN classifier whose convolutions run
+through the L1 bank-tiled Pallas kernels.
+
+This is the model the Rust serving layer executes end to end: weights
+are generated once from a fixed seed and baked into the lowered HLO as
+constants, so the artifact is self-contained — the request path feeds
+images only.
+
+Architecture (CIFAR-sized, NCHW):
+    conv3x3(3→16) + relu
+    conv3x3(16→32, stride 2) + relu
+    conv3x3(32→64, stride 2) + relu
+    global average pool
+    dense 64→10
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.banked_conv import banked_conv2d
+from .kernels.banked_matmul import banked_matmul
+from .kernels import ref
+
+LAYERS = (
+    # (name, cin, cout, stride)
+    ("conv1", 3, 16, 1),
+    ("conv2", 16, 32, 2),
+    ("conv3", 32, 64, 2),
+)
+CLASSES = 10
+
+
+def init_params(seed=0):
+    """He-initialized weights, deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, cin, cout, _stride in LAYERS:
+        key, k1 = jax.random.split(key)
+        fan_in = cin * 9
+        params[name] = jax.random.normal(k1, (cout, cin, 3, 3), jnp.float32) * (
+            (2.0 / fan_in) ** 0.5
+        )
+    key, k1 = jax.random.split(key)
+    params["fc"] = jax.random.normal(k1, (64, CLASSES), jnp.float32) * (
+        (2.0 / 64) ** 0.5
+    )
+    return params
+
+
+def forward(params, x, use_pallas=True):
+    """Classifier forward: [N, 3, 32, 32] -> [N, 10] logits."""
+    conv = banked_conv2d if use_pallas else ref.conv2d_nchw_ref
+    for name, _cin, _cout, stride in LAYERS:
+        x = conv(x, params[name], stride=stride, padding=1)
+        x = jax.nn.relu(x)
+    x = jnp.mean(x, axis=(2, 3))  # global average pool -> [N, 64]
+    if use_pallas:
+        return banked_matmul(x, params["fc"])
+    return ref.matmul_ref(x, params["fc"])
+
+
+def model_fn(batch, seed=0, use_pallas=True):
+    """Closure over baked weights: images -> logits."""
+    params = init_params(seed)
+
+    def fn(x):
+        return (forward(params, x, use_pallas=use_pallas),)
+
+    return fn, jax.ShapeDtypeStruct((batch, 3, 32, 32), jnp.float32)

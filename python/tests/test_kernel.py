@@ -1,0 +1,141 @@
+"""Kernel vs oracle — the CORE numeric correctness signal.
+
+Hypothesis sweeps shapes and dtypes; every Pallas kernel must agree
+with its pure-jnp oracle to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.banked_conv import banked_conv2d
+from compile.kernels.banked_matmul import (
+    banked_matmul,
+    mxu_utilization,
+    vmem_bytes_per_step,
+)
+from compile.kernels.layout import bank_transpose
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    dti=st.integers(0, len(DTYPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, dti, seed):
+    dtype = DTYPES[dti]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (m, k), dtype)
+    w = rand(k2, (k, n), dtype)
+    got = banked_matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([32, 128, 256]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([128, 192, 256]),
+    bm=st.sampled_from([32, 64, 128]),
+    bn=st.sampled_from([32, 64, 128]),
+)
+def test_matmul_tile_shapes_dont_change_numerics(m, k, n, bm, bn):
+    key = jax.random.PRNGKey(m * 7 + n)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, (m, k), jnp.float32)
+    w = rand(k2, (k, n), jnp.float32)
+    base = banked_matmul(x, w)
+    tiled = banked_matmul(x, w, bm=bm, bn=bn)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    c=st.sampled_from([1, 3, 8]),
+    hw=st.sampled_from([6, 9, 16]),
+    o=st.sampled_from([4, 16]),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    dti=st.integers(0, len(DTYPES) - 1),
+)
+def test_conv2d_matches_lax(n, c, hw, o, k, stride, dti):
+    dtype = DTYPES[dti]
+    pad = (k - 1) // 2
+    key = jax.random.PRNGKey(n * 1000 + c * 100 + hw)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, (n, c, hw, hw), dtype)
+    w = rand(k2, (o, c, k, k), dtype)
+    got = banked_conv2d(x, w, stride=stride, padding=pad)
+    want = ref.conv2d_nchw_ref(x, w, stride=stride, padding=pad)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.integers(1, 200),
+    b=st.integers(1, 200),
+    bt=st.sampled_from([16, 64, 128]),
+    dti=st.integers(0, len(DTYPES) - 1),
+)
+def test_bank_transpose_matches_ref(a, b, bt, dti):
+    dtype = DTYPES[dti]
+    x = rand(jax.random.PRNGKey(a * 211 + b), (a, b), dtype)
+    got = bank_transpose(x, bt=bt)
+    want = ref.bank_transpose_ref(x)
+    assert got.shape == (b, a)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_shapes_and_content():
+    x = jnp.arange(2 * 3 * 5 * 5, dtype=jnp.float32).reshape(2, 3, 5, 5)
+    patches, oh, ow = ref.im2col_nchw(x, 3, 3, stride=1, padding=1)
+    assert (oh, ow) == (5, 5)
+    assert patches.shape == (2, 25, 27)
+    # center patch of the interior equals the raw 3x3 neighbourhood
+    got = patches[0, 2 * 5 + 2]  # pixel (2,2)
+    want = x[0, :, 1:4, 1:4].reshape(-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vmem_budget_structural():
+    # serving-model shapes stay within one 256 KiB bank per operand set
+    for m, k, n in [(1024, 27, 16), (256, 144, 32), (64, 288, 64), (8, 64, 10)]:
+        assert vmem_bytes_per_step(m, k, n) <= 512 * 1024, (m, k, n)
+    # utilization reaches 1.0 for MXU-sized tiles
+    assert mxu_utilization(256, 64, 256) == 1.0
+    assert mxu_utilization(8, 64, 10) < 0.1
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (1, 64, 128), (128, 1, 1), (97, 13, 51)])
+def test_matmul_edge_shapes(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = rand(k1, (m, k), jnp.float32)
+    w = rand(k2, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(banked_matmul(x, w)),
+        np.asarray(ref.matmul_ref(x, w)),
+        rtol=1e-5,
+        atol=1e-5,
+    )

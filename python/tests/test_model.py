@@ -1,0 +1,54 @@
+"""L2 model checks: shape, determinism, and Pallas-vs-reference parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import forward, init_params, model_fn
+
+
+def test_output_shape():
+    params = init_params()
+    x = jnp.zeros((2, 3, 32, 32), jnp.float32)
+    out = forward(params, x)
+    assert out.shape == (2, 10)
+
+
+def test_deterministic_in_seed():
+    p1 = init_params(seed=42)
+    p2 = init_params(seed=42)
+    p3 = init_params(seed=43)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+    assert any(
+        not np.array_equal(np.asarray(p1[k]), np.asarray(p3[k])) for k in p1
+    )
+
+
+def test_pallas_path_matches_reference_path():
+    params = init_params()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32), jnp.float32)
+    got = forward(params, x, use_pallas=True)
+    want = forward(params, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_model_fn_closure():
+    fn, spec = model_fn(batch=4)
+    assert spec.shape == (4, 3, 32, 32)
+    x = jnp.ones(spec.shape, spec.dtype)
+    (out,) = fn(x)
+    assert out.shape == (4, 10)
+    # same seed → same logits
+    fn2, _ = model_fn(batch=4)
+    (out2,) = fn2(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_logits_not_degenerate():
+    fn, spec = model_fn(batch=3)
+    x = jax.random.normal(jax.random.PRNGKey(2), spec.shape, spec.dtype)
+    (out,) = fn(x)
+    # different inputs produce different logits and finite values
+    assert np.isfinite(np.asarray(out)).all()
+    assert not np.allclose(np.asarray(out)[0], np.asarray(out)[1])

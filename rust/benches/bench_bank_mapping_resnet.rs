@@ -1,0 +1,84 @@
+//! Bench E2: regenerates the paper's second evaluation paragraph
+//! (global vs local bank mapping on ResNet-50) with timing.
+//!
+//! Run: `cargo bench --bench bench_bank_mapping_resnet`
+
+use polymem::accel::{simulate, AccelConfig, SimReport};
+use polymem::passes::bank::BankStats;
+use polymem::passes::manager::{BankMode, PassManager};
+use polymem::report;
+use polymem::util::bench::{black_box, Bench, Suite};
+
+fn run_mode(mode: BankMode, batch: i64, cfg: &AccelConfig) -> (BankStats, SimReport) {
+    let pm = PassManager { bank_mode: mode, ..Default::default() };
+    let rep = pm.run(polymem::models::resnet50(batch)).expect("pipeline");
+    let sim = simulate(&rep.program, cfg, None);
+    (rep.bank.unwrap().stats, sim)
+}
+
+fn main() {
+    let cfg = AccelConfig::inferentia_like();
+
+    // ---- the paper table ----
+    let (local_stats, local_sim) = run_mode(BankMode::Local, 1, &cfg);
+    let (global_stats, global_sim) = run_mode(BankMode::Global, 1, &cfg);
+    println!("\nE2 — global vs local bank mapping on ResNet-50\n");
+    println!(
+        "{}",
+        report::e2_table(&local_stats, &global_stats, &local_sim, &global_sim)
+    );
+    let reduction =
+        report::pct_reduction(local_sim.onchip_copy_total(), global_sim.onchip_copy_total());
+    assert!(
+        (60.0..90.0).contains(&reduction),
+        "on-chip reduction {reduction:.1}% out of ballpark"
+    );
+
+    // ---- batch scaling series ----
+    println!("batch scaling (who wins at every batch):\n");
+    let mut t = report::Table::new(&[
+        "batch",
+        "local on-chip copies",
+        "global on-chip copies",
+        "reduction",
+        "local lat",
+        "global lat",
+    ]);
+    for batch in [1i64, 2, 4, 8] {
+        let (_, l) = run_mode(BankMode::Local, batch, &cfg);
+        let (_, g) = run_mode(BankMode::Global, batch, &cfg);
+        t.row(&[
+            batch.to_string(),
+            report::mb(l.onchip_copy_total()),
+            report::mb(g.onchip_copy_total()),
+            format!(
+                "{:.1}%",
+                report::pct_reduction(l.onchip_copy_total(), g.onchip_copy_total())
+            ),
+            format!("{:.2} ms", l.seconds * 1e3),
+            format!("{:.2} ms", g.seconds * 1e3),
+        ]);
+        assert!(g.onchip_copy_total() < l.onchip_copy_total());
+    }
+    println!("{}", t.render());
+
+    // ---- timing ----
+    let mut suite = Suite::new("E2 timing");
+    suite.add(
+        Bench::new("bank_local(resnet50)")
+            .samples(10)
+            .run(|| {
+                let pm = PassManager { bank_mode: BankMode::Local, ..Default::default() };
+                black_box(pm.run(polymem::models::resnet50(1)).unwrap())
+            }),
+    );
+    suite.add(
+        Bench::new("bank_global(resnet50)")
+            .samples(10)
+            .run(|| {
+                let pm = PassManager { bank_mode: BankMode::Global, ..Default::default() };
+                black_box(pm.run(polymem::models::resnet50(1)).unwrap())
+            }),
+    );
+    suite.finish();
+}

@@ -1,0 +1,56 @@
+//! Compile-time scaling: the optimizer must stay a negligible part of
+//! a production toolchain run across every model in the zoo.
+//!
+//! Run: `cargo bench --bench bench_compile_time`
+
+use polymem::ir::Graph;
+use polymem::passes::manager::{BankMode, PassManager};
+use polymem::util::bench::{black_box, Bench, Suite};
+
+fn zoo() -> Vec<(&'static str, Box<dyn Fn() -> Graph>)> {
+    vec![
+        ("mlp", Box::new(|| polymem::models::mlp(8, 784, 512, 10, 4))),
+        ("transformer", Box::new(|| polymem::models::transformer_block(128, 256, 8, 1024))),
+        ("resnet18", Box::new(|| polymem::models::resnet18(1))),
+        ("resnet50", Box::new(|| polymem::models::resnet50(1))),
+        ("wavenet", Box::new(polymem::models::parallel_wavenet)),
+    ]
+}
+
+fn main() {
+    let mut suite = Suite::new("compile-time scaling (full pipeline: lower + DME + global bank mapping)");
+    for (name, build) in zoo() {
+        let nodes = build().nodes().len();
+        suite.add(
+            Bench::new(format!("{name} ({nodes} nodes)"))
+                .samples(10)
+                .throughput_items(nodes as f64)
+                .run(|| {
+                    let pm = PassManager::default();
+                    black_box(pm.run(build()).unwrap())
+                }),
+        );
+    }
+
+    // pass-phase breakdown on the largest model
+    println!("\nphase breakdown on resnet50:");
+    let pm = PassManager::default();
+    let rep = pm.run(polymem::models::resnet50(1)).unwrap();
+    println!("  dme:  {:?}", rep.dme_time);
+    println!("  bank: {:?}", rep.bank_time);
+
+    // verification cost
+    let mut suite2 = Suite::new("verification overhead (resnet50)");
+    for verify in [true, false] {
+        suite2.add(
+            Bench::new(if verify { "verify on" } else { "verify off" })
+                .samples(8)
+                .run(|| {
+                    let pm = PassManager { verify, ..Default::default() };
+                    black_box(pm.run(polymem::models::resnet50(1)).unwrap())
+                }),
+        );
+    }
+    suite2.finish();
+    suite.finish();
+}

@@ -1,0 +1,72 @@
+//! Bench E1: regenerates the paper's first evaluation paragraph
+//! (data-movement elimination on Parallel WaveNet) with timing.
+//!
+//! Run: `cargo bench --bench bench_dme_wavenet`
+
+use polymem::accel::{simulate, AccelConfig};
+use polymem::ir::Program;
+use polymem::models::parallel_wavenet;
+use polymem::models::wavenet::{parallel_wavenet_with, WaveNetConfig};
+use polymem::passes::dme::run_dme;
+use polymem::report;
+use polymem::util::bench::{black_box, Bench, Suite};
+
+fn main() {
+    let cfg = AccelConfig::inferentia_like();
+
+    // ---- the paper table ----
+    let graph = parallel_wavenet();
+    let before = simulate(&Program::lower(graph.clone()), &cfg, None);
+    let mut prog = Program::lower(graph.clone());
+    let stats = run_dme(&mut prog);
+    let after = simulate(&prog, &cfg, None);
+    println!("\nE1 — data-movement elimination on Parallel WaveNet\n");
+    println!("{}", report::e1_table(&stats, &before, &after));
+    assert_eq!(stats.pairs_eliminated, 123);
+    assert_eq!(stats.pairs_before, 124);
+
+    // ---- timing ----
+    let mut suite = Suite::new("E1 timing");
+    suite.add(
+        Bench::new("lower(wavenet)")
+            .samples(10)
+            .run(|| black_box(Program::lower(graph.clone()))),
+    );
+    suite.add(
+        Bench::new("dme(wavenet) full fixpoint")
+            .samples(10)
+            .run(|| {
+                let mut p = Program::lower(graph.clone());
+                black_box(run_dme(&mut p))
+            }),
+    );
+    suite.add(
+        Bench::new("simulate(wavenet, post-DME)")
+            .samples(10)
+            .run(|| black_box(simulate(&prog, &cfg, None))),
+    );
+
+    // ---- scaling series: DME time vs model size ----
+    println!("\nDME scaling with layer count (flows x layers):");
+    let mut t = report::Table::new(&["layers", "pairs", "eliminated", "time"]);
+    for layers in [2usize, 5, 10, 20] {
+        let wcfg = WaveNetConfig {
+            layers_per_flow: layers,
+            time: 6350 + 8200, // headroom for deeper stacks' receptive field
+            ..Default::default()
+        };
+        let g = parallel_wavenet_with(wcfg);
+        let t0 = std::time::Instant::now();
+        let mut p = Program::lower(g);
+        let s = run_dme(&mut p);
+        let dt = t0.elapsed();
+        t.row(&[
+            format!("4 x {layers}"),
+            s.pairs_before.to_string(),
+            s.pairs_eliminated.to_string(),
+            format!("{dt:?}"),
+        ]);
+    }
+    println!("{}", t.render());
+    suite.finish();
+}

@@ -1,0 +1,101 @@
+//! Serving-layer benchmarks: batching policy overhead and end-to-end
+//! throughput/latency. Uses the AOT artifact when present (run
+//! `make artifacts` first), otherwise falls back to the echo backend
+//! so the coordinator numbers are always measurable.
+//!
+//! Run: `cargo bench --bench bench_serving`
+
+use polymem::coordinator::{EchoBackend, PjrtBackend, Server, ServerConfig};
+use polymem::runtime::RuntimeClient;
+use polymem::util::bench::Suite;
+use polymem::util::rng::SplitMix64;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const CLASSES: usize = 10;
+
+fn drive(srv: &Server, requests: usize, in_len: usize, seed: u64) -> Duration {
+    let mut rng = SplitMix64::new(seed);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let img: Vec<f32> = (0..in_len).map(|_| rng.next_f64() as f32).collect();
+            srv.submit(img).expect("submit")
+        })
+        .collect();
+    for h in handles {
+        h.wait().expect("inference");
+    }
+    t0.elapsed()
+}
+
+fn main() {
+    let suite = Suite::new("serving coordinator");
+
+    // ---- coordinator overhead with a zero-cost backend ----
+    println!("\nbatching-policy overhead (echo backend, 4096 requests):");
+    for max_batch in [1usize, 4, 16, 64] {
+        let cfg = ServerConfig {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1 << 16,
+        };
+        let srv = Server::start(EchoBackend::new(64, max_batch), cfg);
+        let elapsed = drive(&srv, 4096, 64, 1);
+        let snap = srv.metrics().snapshot();
+        println!(
+            "  max_batch {max_batch:>3}: {:>9.0} req/s, mean batch {:.2}, p99 {:?}",
+            4096.0 / elapsed.as_secs_f64(),
+            snap.mean_batch,
+            snap.p99_latency
+        );
+        srv.shutdown();
+    }
+
+    // ---- end-to-end on the real artifact ----
+    let artifact = "artifacts/model.hlo.txt";
+    if Path::new(artifact).exists() {
+        println!("\nend-to-end PJRT serving (batch sweep, 512 requests each):");
+        for batch in [1usize, 4, 8] {
+            // batch-1 artifact for batch 1, batch-8 artifact otherwise;
+            // the PjrtBackend pads partial batches.
+            let path = if batch == 1 {
+                "artifacts/model.b1.hlo.txt".to_string()
+            } else {
+                artifact.to_string()
+            };
+            let compiled_batch = if batch == 1 { 1 } else { 8 };
+            if !Path::new(&path).exists() {
+                continue;
+            }
+            let cfg = ServerConfig {
+                max_batch: batch,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 4096,
+            };
+            let srv = Server::start_with(
+                move || {
+                    let rt = RuntimeClient::cpu()?;
+                    let model = rt.load_hlo_text(Path::new(&path))?;
+                    Ok(PjrtBackend::new(model, compiled_batch, &[3, 32, 32], CLASSES))
+                },
+                cfg,
+            )
+            .expect("server");
+            let elapsed = drive(&srv, 512, 3 * 32 * 32, 2);
+            let snap = srv.metrics().snapshot();
+            println!(
+                "  client batch {batch}: {:>7.1} req/s, latency mean {:?} p99 {:?}, mean batch {:.2}",
+                512.0 / elapsed.as_secs_f64(),
+                snap.mean_latency,
+                snap.p99_latency,
+                snap.mean_batch
+            );
+            srv.shutdown();
+        }
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` for the PJRT end-to-end rows)");
+    }
+
+    suite.finish();
+}

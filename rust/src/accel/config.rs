@@ -1,0 +1,158 @@
+//! Accelerator configuration.
+//!
+//! Parameters are modeled after what is publicly known about a
+//! NeuronCore-class inference chip: a 128×128 systolic array, a
+//! software-managed multi-bank scratchpad of a few MiB, and DRAM
+//! reachable over a DMA fabric. Absolute numbers are *model* constants
+//! (the real chip's are not public); every experiment reports ratios,
+//! which are robust to the absolute scale.
+
+use crate::util::json::Json;
+
+/// Chip parameters for the traffic/cycle model.
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    pub name: String,
+    /// Scratchpad banks per group (Row group and Col group each).
+    pub banks: usize,
+    /// Bytes per bank.
+    pub bank_bytes: i64,
+    /// Systolic array height (rows = contraction lanes).
+    pub pe_rows: usize,
+    /// Systolic array width (columns = output lanes).
+    pub pe_cols: usize,
+    /// Vector engine lanes.
+    pub vector_lanes: usize,
+    /// Core clock, Hz.
+    pub clock_hz: f64,
+    /// DRAM bandwidth, bytes/second.
+    pub dram_bps: f64,
+    /// On-chip bank-to-bank copy bandwidth, bytes/second (the slow
+    /// shared path the paper refers to).
+    pub onchip_copy_bps: f64,
+}
+
+impl AccelConfig {
+    /// Inferentia-like default used by all experiments.
+    pub fn inferentia_like() -> Self {
+        AccelConfig {
+            name: "inferentia-like".into(),
+            banks: 16,
+            bank_bytes: 256 * 1024, // 2 groups × 16 × 256 KiB = 8 MiB scratchpad
+            pe_rows: 128,
+            pe_cols: 128,
+            vector_lanes: 256,
+            clock_hz: 1.4e9,
+            dram_bps: 50e9,
+            onchip_copy_bps: 200e9,
+        }
+    }
+
+    /// Tiny configuration for unit tests (forces spills on small data).
+    /// `scratchpad_bytes` is the TOTAL capacity across both bank groups.
+    pub fn tiny(scratchpad_bytes: i64) -> Self {
+        AccelConfig {
+            name: "tiny-test".into(),
+            banks: 4,
+            bank_bytes: scratchpad_bytes / 8, // 2 groups × 4 banks
+            pe_rows: 8,
+            pe_cols: 8,
+            vector_lanes: 16,
+            clock_hz: 1e9,
+            dram_bps: 1e9,
+            onchip_copy_bps: 4e9,
+        }
+    }
+
+    /// Total scratchpad capacity in bytes (both groups).
+    pub fn scratchpad_bytes(&self) -> i64 {
+        2 * self.banks as i64 * self.bank_bytes
+    }
+
+    /// Serialize for reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("banks", Json::Int(self.banks as i64)),
+            ("bank_bytes", Json::Int(self.bank_bytes)),
+            ("pe_rows", Json::Int(self.pe_rows as i64)),
+            ("pe_cols", Json::Int(self.pe_cols as i64)),
+            ("vector_lanes", Json::Int(self.vector_lanes as i64)),
+            ("clock_hz", Json::Num(self.clock_hz)),
+            ("dram_bps", Json::Num(self.dram_bps)),
+            ("onchip_copy_bps", Json::Num(self.onchip_copy_bps)),
+        ])
+    }
+
+    /// Parse from a JSON config (the `polymem --accel-config` file).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut cfg = AccelConfig::inferentia_like();
+        if let Some(v) = j.get("name").and_then(|v| v.as_str()) {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = j.get("banks").and_then(|v| v.as_i64()) {
+            cfg.banks = v as usize;
+        }
+        if let Some(v) = j.get("bank_bytes").and_then(|v| v.as_i64()) {
+            cfg.bank_bytes = v;
+        }
+        if let Some(v) = j.get("pe_rows").and_then(|v| v.as_i64()) {
+            cfg.pe_rows = v as usize;
+        }
+        if let Some(v) = j.get("pe_cols").and_then(|v| v.as_i64()) {
+            cfg.pe_cols = v as usize;
+        }
+        if let Some(v) = j.get("vector_lanes").and_then(|v| v.as_i64()) {
+            cfg.vector_lanes = v as usize;
+        }
+        if let Some(v) = j.get("clock_hz").and_then(|v| v.as_f64()) {
+            cfg.clock_hz = v;
+        }
+        if let Some(v) = j.get("dram_bps").and_then(|v| v.as_f64()) {
+            cfg.dram_bps = v;
+        }
+        if let Some(v) = j.get("onchip_copy_bps").and_then(|v| v.as_f64()) {
+            cfg.onchip_copy_bps = v;
+        }
+        if cfg.banks == 0 || cfg.bank_bytes <= 0 {
+            return Err("accel config: banks/bank_bytes must be positive".into());
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = AccelConfig::inferentia_like();
+        assert_eq!(c.scratchpad_bytes(), 8 * 1024 * 1024);
+        assert!(c.dram_bps < c.onchip_copy_bps);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = AccelConfig::inferentia_like();
+        let j = c.to_json();
+        let c2 = AccelConfig::from_json(&j).unwrap();
+        assert_eq!(c2.banks, c.banks);
+        assert_eq!(c2.bank_bytes, c.bank_bytes);
+        assert_eq!(c2.name, c.name);
+    }
+
+    #[test]
+    fn json_partial_overrides() {
+        let j = crate::util::json::parse(r#"{"banks": 8}"#).unwrap();
+        let c = AccelConfig::from_json(&j).unwrap();
+        assert_eq!(c.banks, 8);
+        assert_eq!(c.pe_rows, 128); // default kept
+    }
+
+    #[test]
+    fn json_rejects_zero_banks() {
+        let j = crate::util::json::parse(r#"{"banks": 0}"#).unwrap();
+        assert!(AccelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! DMA traffic accounting — the measurement the paper's evaluation is
+//! built on ("measured in bytes").
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Why bytes moved. Off-chip classes transit DRAM; on-chip classes stay
+/// inside the scratchpad.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum TrafficClass {
+    // ---- off-chip (DRAM) ----
+    /// Weights staged from DRAM.
+    WeightLoad,
+    /// Model inputs staged from DRAM/host.
+    InputLoad,
+    /// Model outputs written back.
+    OutputStore,
+    /// Live intermediate evicted under pressure.
+    Spill,
+    /// Previously spilled intermediate staged back.
+    Reload,
+    /// Copy nest executed through DRAM (operands not resident).
+    OffchipCopy,
+    /// Inter-bank remap that had to round-trip DRAM.
+    OffchipRemap,
+    // ---- on-chip (scratchpad) ----
+    /// Copy nest executed bank-local (memory-bound operator).
+    OnchipCopy,
+    /// Inter-bank remap inside the scratchpad (`MemCopy` node).
+    OnchipRemap,
+}
+
+impl TrafficClass {
+    pub fn is_offchip(self) -> bool {
+        !matches!(self, TrafficClass::OnchipCopy | TrafficClass::OnchipRemap)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            TrafficClass::WeightLoad => "weight_load",
+            TrafficClass::InputLoad => "input_load",
+            TrafficClass::OutputStore => "output_store",
+            TrafficClass::Spill => "spill",
+            TrafficClass::Reload => "reload",
+            TrafficClass::OffchipCopy => "offchip_copy",
+            TrafficClass::OffchipRemap => "offchip_remap",
+            TrafficClass::OnchipCopy => "onchip_copy",
+            TrafficClass::OnchipRemap => "onchip_remap",
+        }
+    }
+
+    pub const ALL: [TrafficClass; 9] = [
+        TrafficClass::WeightLoad,
+        TrafficClass::InputLoad,
+        TrafficClass::OutputStore,
+        TrafficClass::Spill,
+        TrafficClass::Reload,
+        TrafficClass::OffchipCopy,
+        TrafficClass::OffchipRemap,
+        TrafficClass::OnchipCopy,
+        TrafficClass::OnchipRemap,
+    ];
+}
+
+/// Byte counters by class.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TrafficCounters {
+    counts: BTreeMap<TrafficClass, i64>,
+}
+
+impl TrafficCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, class: TrafficClass, bytes: i64) {
+        debug_assert!(bytes >= 0);
+        *self.counts.entry(class).or_insert(0) += bytes;
+    }
+
+    pub fn get(&self, class: TrafficClass) -> i64 {
+        self.counts.get(&class).copied().unwrap_or(0)
+    }
+
+    /// Total bytes over DRAM.
+    pub fn offchip_total(&self) -> i64 {
+        self.counts
+            .iter()
+            .filter(|(c, _)| c.is_offchip())
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Total bytes moved inside the scratchpad by copies/remaps.
+    pub fn onchip_total(&self) -> i64 {
+        self.counts
+            .iter()
+            .filter(|(c, _)| !c.is_offchip())
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Off-chip bytes attributable to *copies* (the paper's "off-chip
+    /// memory copies"): copy nests, remaps, and the spill/reload churn
+    /// they cause — as opposed to compulsory weight/input/output moves.
+    pub fn offchip_copy_total(&self) -> i64 {
+        self.get(TrafficClass::OffchipCopy)
+            + self.get(TrafficClass::OffchipRemap)
+            + self.get(TrafficClass::Spill)
+            + self.get(TrafficClass::Reload)
+    }
+
+    pub fn merged(&self, other: &TrafficCounters) -> TrafficCounters {
+        let mut out = self.clone();
+        for (c, v) in &other.counts {
+            out.add(*c, *v);
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = TrafficClass::ALL
+            .iter()
+            .map(|c| (c.label(), Json::Int(self.get(*c))))
+            .collect();
+        pairs.push(("offchip_total", Json::Int(self.offchip_total())));
+        pairs.push(("onchip_total", Json::Int(self.onchip_total())));
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_partition() {
+        let mut t = TrafficCounters::new();
+        t.add(TrafficClass::WeightLoad, 100);
+        t.add(TrafficClass::OnchipCopy, 40);
+        t.add(TrafficClass::OnchipRemap, 2);
+        t.add(TrafficClass::Spill, 10);
+        assert_eq!(t.offchip_total(), 110);
+        assert_eq!(t.onchip_total(), 42);
+        assert_eq!(t.offchip_copy_total(), 10);
+        assert_eq!(t.get(TrafficClass::Reload), 0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TrafficCounters::new();
+        a.add(TrafficClass::InputLoad, 5);
+        let mut b = TrafficCounters::new();
+        b.add(TrafficClass::InputLoad, 7);
+        b.add(TrafficClass::OnchipCopy, 1);
+        let m = a.merged(&b);
+        assert_eq!(m.get(TrafficClass::InputLoad), 12);
+        assert_eq!(m.onchip_total(), 1);
+    }
+
+    #[test]
+    fn json_has_all_classes() {
+        let t = TrafficCounters::new();
+        let j = t.to_json();
+        for c in TrafficClass::ALL {
+            assert!(j.get(c.label()).is_some(), "missing {}", c.label());
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Simulated Inferentia-class accelerator.
+//!
+//! The paper measures its two optimizations in **bytes of on-chip and
+//! off-chip memory copies** on Inferentia silicon. That metric is a
+//! property of the compiled schedule, not of the silicon, so this
+//! module replays a lowered [`crate::ir::Program`] against a byte-exact
+//! traffic model:
+//!
+//! * [`config`] — chip parameters (banked scratchpad geometry, PE
+//!   array, DRAM bandwidth, clock);
+//! * [`scratchpad`] — software-managed residency with
+//!   furthest-next-use eviction (what the real chip's compiler-managed
+//!   scratchpad allocator approximates);
+//! * [`dma`] — traffic counters by cause (weights, inputs, outputs,
+//!   spills, reloads, copy nests, bank remaps);
+//! * [`engine`] — a coarse cycle model (systolic array compute vs DMA
+//!   overlap) for end-to-end latency estimates;
+//! * [`sim`] — the schedule replayer producing a [`sim::SimReport`];
+//! * [`trace`] — optional event tracing for tests and debugging.
+
+pub mod config;
+pub mod dma;
+pub mod engine;
+pub mod scratchpad;
+pub mod sim;
+pub mod trace;
+
+pub use config::AccelConfig;
+pub use dma::{TrafficClass, TrafficCounters};
+pub use sim::{simulate, SimReport};

@@ -1,0 +1,196 @@
+//! Software-managed scratchpad residency.
+//!
+//! The compiler (here: the simulator standing in for the compiler's
+//! allocator) decides which tensors live in the banked scratchpad at
+//! each schedule point. Eviction picks the resident victim with the
+//! furthest next use (Belady-style, computable because the schedule is
+//! static — exactly the advantage a compiler-managed scratchpad has
+//! over a hardware cache).
+
+use crate::ir::tensor::TensorId;
+use std::collections::BTreeMap;
+
+/// What happened when making room.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EvictEvent {
+    /// Victim was dead (no future use): dropped silently.
+    Dropped { tensor: TensorId, bytes: i64 },
+    /// Victim still live: must be spilled to DRAM.
+    Spilled { tensor: TensorId, bytes: i64 },
+}
+
+/// Residency tracker.
+#[derive(Clone, Debug)]
+pub struct Scratchpad {
+    capacity: i64,
+    used: i64,
+    resident: BTreeMap<TensorId, i64>,
+    /// High-water mark.
+    peak: i64,
+}
+
+impl Scratchpad {
+    pub fn new(capacity: i64) -> Self {
+        assert!(capacity > 0);
+        Scratchpad { capacity, used: 0, resident: BTreeMap::new(), peak: 0 }
+    }
+
+    pub fn capacity(&self) -> i64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> i64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> i64 {
+        self.peak
+    }
+
+    pub fn is_resident(&self, t: TensorId) -> bool {
+        self.resident.contains_key(&t)
+    }
+
+    pub fn resident_bytes(&self, t: TensorId) -> Option<i64> {
+        self.resident.get(&t).copied()
+    }
+
+    /// Tensors currently resident.
+    pub fn residents(&self) -> impl Iterator<Item = (&TensorId, &i64)> {
+        self.resident.iter()
+    }
+
+    /// Drop a tensor without spilling (it is dead).
+    pub fn release(&mut self, t: TensorId) {
+        if let Some(b) = self.resident.remove(&t) {
+            self.used -= b;
+        }
+    }
+
+    /// Ensure `t` (of `bytes`) is resident, evicting by furthest next
+    /// use as needed. `next_use` gives each *other* resident tensor's
+    /// next use position (`None` = dead, `usize::MAX` = model output /
+    /// far future). Returns eviction events. A tensor larger than the
+    /// whole scratchpad is not admitted (callers stream it from DRAM)
+    /// and `false` is returned as the second tuple element.
+    pub fn admit(
+        &mut self,
+        t: TensorId,
+        bytes: i64,
+        next_use: &dyn Fn(TensorId) -> Option<usize>,
+    ) -> (Vec<EvictEvent>, bool) {
+        if self.is_resident(t) {
+            return (vec![], true);
+        }
+        if bytes > self.capacity {
+            return (vec![], false);
+        }
+        let mut events = Vec::new();
+        while self.used + bytes > self.capacity {
+            // victim: dead tensors first, else furthest next use
+            let victim = self
+                .resident
+                .keys()
+                .copied()
+                .map(|r| (r, next_use(r)))
+                .max_by_key(|(_, nu)| match nu {
+                    None => (2, usize::MAX), // dead: best victim
+                    Some(p) => (1, *p),      // live: furthest next use
+                })
+                .map(|(r, nu)| (r, nu));
+            let Some((victim, nu)) = victim else { break };
+            let vbytes = self.resident.remove(&victim).unwrap();
+            self.used -= vbytes;
+            events.push(match nu {
+                None => EvictEvent::Dropped { tensor: victim, bytes: vbytes },
+                Some(_) => EvictEvent::Spilled { tensor: victim, bytes: vbytes },
+            });
+        }
+        self.resident.insert(t, bytes);
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        (events, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(n: u32) -> TensorId {
+        TensorId(n)
+    }
+
+    #[test]
+    fn admit_and_release() {
+        let mut sp = Scratchpad::new(100);
+        let (ev, ok) = sp.admit(t(1), 60, &|_| None);
+        assert!(ok && ev.is_empty());
+        assert!(sp.is_resident(t(1)));
+        assert_eq!(sp.used(), 60);
+        sp.release(t(1));
+        assert_eq!(sp.used(), 0);
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut sp = Scratchpad::new(100);
+        let (ev, ok) = sp.admit(t(1), 150, &|_| None);
+        assert!(!ok && ev.is_empty());
+        assert!(!sp.is_resident(t(1)));
+    }
+
+    #[test]
+    fn evicts_dead_before_live() {
+        let mut sp = Scratchpad::new(100);
+        sp.admit(t(1), 50, &|_| None).1.then_some(()).unwrap();
+        sp.admit(t(2), 40, &|_| None).1.then_some(()).unwrap();
+        // t1 dead, t2 live at 5
+        let nu = |r: TensorId| -> Option<usize> {
+            if r == t(2) {
+                Some(5)
+            } else {
+                None
+            }
+        };
+        let (ev, ok) = sp.admit(t(3), 30, &nu);
+        assert!(ok);
+        assert_eq!(ev, vec![EvictEvent::Dropped { tensor: t(1), bytes: 50 }]);
+        assert!(sp.is_resident(t(2)));
+    }
+
+    #[test]
+    fn evicts_furthest_live() {
+        let mut sp = Scratchpad::new(100);
+        sp.admit(t(1), 50, &|_| Some(10)).1.then_some(()).unwrap();
+        sp.admit(t(2), 40, &|_| Some(10)).1.then_some(()).unwrap();
+        let nu = |r: TensorId| -> Option<usize> {
+            match r.0 {
+                1 => Some(3),  // near use
+                2 => Some(99), // far use
+                _ => None,
+            }
+        };
+        let (ev, ok) = sp.admit(t(3), 30, &nu);
+        assert!(ok);
+        assert_eq!(ev, vec![EvictEvent::Spilled { tensor: t(2), bytes: 40 }]);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut sp = Scratchpad::new(100);
+        sp.admit(t(1), 70, &|_| None);
+        sp.release(t(1));
+        sp.admit(t(2), 30, &|_| None);
+        assert_eq!(sp.peak(), 70);
+    }
+
+    #[test]
+    fn double_admit_idempotent() {
+        let mut sp = Scratchpad::new(100);
+        sp.admit(t(1), 60, &|_| None);
+        let (ev, ok) = sp.admit(t(1), 60, &|_| None);
+        assert!(ok && ev.is_empty());
+        assert_eq!(sp.used(), 60);
+    }
+}

@@ -1,0 +1,349 @@
+//! Schedule replay: byte-exact traffic accounting + coarse latency.
+//!
+//! Replays a lowered [`Program`] nest by nest against the scratchpad
+//! residency model and produces a [`SimReport`]. All quantities are
+//! deterministic functions of the schedule — this is the measurement
+//! substrate standing in for Inferentia hardware counters.
+//!
+//! ## Metrics (see EXPERIMENTS.md for how they map to the paper)
+//!
+//! * **off-chip bytes** — every DRAM transfer: weight/input staging,
+//!   output write-back, spills/reloads, copy nests and bank remaps that
+//!   round-trip DRAM.
+//! * **on-chip movement bytes** — every byte a DMA queue or copy engine
+//!   writes into / reads out of the scratchpad: staging deposits,
+//!   copy-nest moves, bank remaps. (Compute-engine operand reads are
+//!   *not* movement — they are the useful work.)
+//! * **copy-only subsets** — the same totals restricted to copy nests
+//!   and remaps, i.e. the traffic the paper's passes attack.
+
+use super::config::AccelConfig;
+use super::dma::{TrafficClass, TrafficCounters};
+use super::engine;
+use super::scratchpad::{EvictEvent, Scratchpad};
+use super::trace::{Trace, TraceEvent};
+use crate::ir::loopnest::{Body, Program};
+use crate::ir::op::OpKind;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::passes::liveness::Liveness;
+use std::collections::HashSet;
+
+/// Simulation result.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub traffic: TrafficCounters,
+    /// End-to-end latency estimate (seconds) with compute/DMA overlap.
+    pub seconds: f64,
+    /// Scratchpad high-water mark (bytes).
+    pub peak_scratchpad: i64,
+    pub nests_executed: usize,
+    pub copy_nests_executed: usize,
+    /// Scratchpad deposit bytes from staging DMA (weights/inputs/reloads).
+    pub staging_deposit_bytes: i64,
+}
+
+impl SimReport {
+    /// All DRAM bytes.
+    pub fn offchip_total(&self) -> i64 {
+        self.traffic.offchip_total()
+    }
+
+    /// DRAM bytes attributable to copies (paper E2 off-chip metric).
+    pub fn offchip_copy_total(&self) -> i64 {
+        self.traffic.offchip_copy_total()
+    }
+
+    /// All data-movement bytes touching the scratchpad (paper E1
+    /// on-chip metric): staging deposits + on-chip copies/remaps.
+    pub fn onchip_movement_total(&self) -> i64 {
+        self.staging_deposit_bytes + self.traffic.onchip_total()
+    }
+
+    /// On-chip copy/remap bytes only (paper E2 on-chip metric).
+    pub fn onchip_copy_total(&self) -> i64 {
+        self.traffic.onchip_total()
+    }
+}
+
+/// Replay a program. `trace` may be `None` for speed.
+pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>) -> SimReport {
+    let liveness = Liveness::analyze(prog);
+    let mut sp = Scratchpad::new(cfg.scratchpad_bytes());
+    let mut traffic = TrafficCounters::new();
+    let mut seconds = 0.0f64;
+    let mut staging_deposit_bytes = 0i64;
+    let mut copy_nests = 0usize;
+    // intermediates currently only in DRAM (spilled or streamed)
+    let mut in_dram: HashSet<TensorId> = HashSet::new();
+    // node lookup index (§Perf: Graph::node is a linear scan)
+    let node_by_id: std::collections::HashMap<_, _> =
+        prog.graph.nodes().iter().map(|n| (n.id, n)).collect();
+
+    for (pos, nest) in prog.nests.iter().enumerate() {
+        let node = node_by_id[&nest.node];
+        let mut off_bytes = 0i64;
+        let mut on_bytes = 0i64;
+
+        // ---- stage operands ----
+        let mut operand_resident = true;
+        let mut operands: Vec<TensorId> = nest
+            .body
+            .loads()
+            .iter()
+            .flat_map(|l| l.pieces.iter().filter_map(|p| p.tensor))
+            .collect();
+        operands.sort();
+        operands.dedup();
+        for &t in &operands {
+            if sp.is_resident(t) {
+                continue;
+            }
+            let info = prog.graph.tensor(t);
+            let bytes = info.size_bytes();
+            let class = match info.kind {
+                TensorKind::Weight => TrafficClass::WeightLoad,
+                TensorKind::Input => TrafficClass::InputLoad,
+                _ => TrafficClass::Reload,
+            };
+            let next_use = |r: TensorId| liveness.next_use_after(prog, r, pos);
+            let (events, admitted) = sp.admit(t, bytes, &next_use);
+            record_evictions(&mut traffic, &mut in_dram, &events, &mut off_bytes);
+            traffic.add(class, bytes);
+            off_bytes += bytes;
+            staging_deposit_bytes += bytes; // DMA writes the scratchpad
+            if admitted {
+                in_dram.remove(&t);
+            } else {
+                operand_resident = false; // streamed
+            }
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(TraceEvent::Stage { pos, tensor: t, bytes, class });
+            }
+        }
+
+        // ---- allocate output ----
+        let out = nest.store.tensor;
+        let out_info = prog.graph.tensor(out);
+        let out_bytes = out_info.size_bytes();
+        let next_use = |r: TensorId| liveness.next_use_after(prog, r, pos);
+        let (events, out_resident) = sp.admit(out, out_bytes, &next_use);
+        record_evictions(&mut traffic, &mut in_dram, &events, &mut off_bytes);
+
+        // ---- execute ----
+        let elem = out_info.dtype.size_bytes();
+        match &nest.body {
+            Body::Copy { .. } => {
+                copy_nests += 1;
+                let moved = nest.domain.cardinality() * elem;
+                let is_remap = matches!(node.kind, OpKind::MemCopy);
+                if operand_resident && out_resident {
+                    traffic.add(
+                        if is_remap {
+                            TrafficClass::OnchipRemap
+                        } else {
+                            TrafficClass::OnchipCopy
+                        },
+                        moved,
+                    );
+                    on_bytes += moved;
+                } else {
+                    // round-trips DRAM (either side not on chip)
+                    traffic.add(
+                        if is_remap {
+                            TrafficClass::OffchipRemap
+                        } else {
+                            TrafficClass::OffchipCopy
+                        },
+                        2 * moved,
+                    );
+                    off_bytes += 2 * moved;
+                }
+            }
+            Body::Compute { .. } => {
+                if !out_resident {
+                    // result streamed straight to DRAM
+                    traffic.add(TrafficClass::Spill, out_bytes);
+                    off_bytes += out_bytes;
+                    in_dram.insert(out);
+                }
+            }
+        }
+
+        // ---- latency ----
+        let comp_s = engine::compute_seconds(cfg, nest, &node.kind);
+        let dma_s = engine::dma_seconds(cfg, off_bytes, true)
+            + engine::dma_seconds(cfg, on_bytes, false);
+        seconds += engine::step_seconds(comp_s, dma_s);
+
+        // ---- release tensors dead after this step ----
+        let dead: Vec<TensorId> = sp
+            .residents()
+            .map(|(t, _)| *t)
+            .filter(|t| liveness.next_use_after(prog, *t, pos).is_none())
+            .filter(|t| prog.graph.tensor(*t).kind != TensorKind::Output)
+            .collect();
+        for t in dead {
+            sp.release(t);
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(TraceEvent::Release { pos, tensor: t });
+            }
+        }
+    }
+
+    // ---- write model outputs back ----
+    for out in prog.graph.outputs() {
+        let bytes = prog.graph.tensor(out).size_bytes();
+        traffic.add(TrafficClass::OutputStore, bytes);
+        seconds += engine::dma_seconds(cfg, bytes, true);
+    }
+
+    SimReport {
+        traffic,
+        seconds,
+        peak_scratchpad: sp.peak(),
+        nests_executed: prog.nests.len(),
+        copy_nests_executed: copy_nests,
+        staging_deposit_bytes,
+    }
+}
+
+fn record_evictions(
+    traffic: &mut TrafficCounters,
+    in_dram: &mut HashSet<TensorId>,
+    events: &[EvictEvent],
+    off_bytes: &mut i64,
+) {
+    for ev in events {
+        if let EvictEvent::Spilled { tensor, bytes } = ev {
+            traffic.add(TrafficClass::Spill, *bytes);
+            *off_bytes += bytes;
+            in_dram.insert(*tensor);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::loopnest::Program;
+
+    fn run(g: crate::ir::Graph, cfg: &AccelConfig) -> SimReport {
+        simulate(&Program::lower(g), cfg, None)
+    }
+
+    #[test]
+    fn compulsory_traffic_only() {
+        // relu(x): input staged in, output written back — no copies.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 8, 8, 8]);
+        let r = b.relu("r", x);
+        b.mark_output(r);
+        let rep = run(b.finish(), &AccelConfig::inferentia_like());
+        let bytes = 8 * 8 * 8 * 4;
+        assert_eq!(rep.traffic.get(TrafficClass::InputLoad), bytes);
+        assert_eq!(rep.traffic.get(TrafficClass::OutputStore), bytes);
+        assert_eq!(rep.onchip_copy_total(), 0);
+        assert_eq!(rep.offchip_copy_total(), 0);
+        assert!(rep.seconds > 0.0);
+    }
+
+    #[test]
+    fn copy_nest_counts_onchip_when_resident() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t = b.transpose("t", x, &[1, 0]);
+        let r = b.relu("r", t);
+        b.mark_output(r);
+        let rep = run(b.finish(), &AccelConfig::inferentia_like());
+        assert_eq!(rep.traffic.get(TrafficClass::OnchipCopy), 32 * 32 * 4);
+        assert_eq!(rep.traffic.get(TrafficClass::OffchipCopy), 0);
+        assert_eq!(rep.copy_nests_executed, 1);
+    }
+
+    #[test]
+    fn copy_nest_spills_when_too_big() {
+        // scratchpad of 1 KiB, tensors of 4 KiB: copies round-trip DRAM
+        let cfg = AccelConfig::tiny(1024);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t = b.transpose("t", x, &[1, 0]);
+        let r = b.relu("r", t);
+        b.mark_output(r);
+        let rep = run(b.finish(), &cfg);
+        assert_eq!(rep.traffic.get(TrafficClass::OnchipCopy), 0);
+        assert_eq!(rep.traffic.get(TrafficClass::OffchipCopy), 2 * 32 * 32 * 4);
+    }
+
+    #[test]
+    fn memcopy_classified_as_remap() {
+        use crate::passes::manager::{BankMode, PassManager};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 16, 8, 8]);
+        let w1 = b.weight("w1", &[16, 16, 3, 3]);
+        let c1 = b.conv2d("c1", x, w1, 1, 1);
+        let r = b.relu("r", c1);
+        let w2 = b.weight("w2", &[16, 16, 3, 3]);
+        let c2 = b.conv2d("c2", r, w2, 1, 1);
+        b.mark_output(c2);
+        let pm = PassManager { bank_mode: BankMode::Local, ..Default::default() };
+        let report = pm.run(b.finish()).unwrap();
+        let rep = simulate(&report.program, &AccelConfig::inferentia_like(), None);
+        assert_eq!(rep.traffic.get(TrafficClass::OnchipRemap), 16 * 8 * 8 * 4);
+    }
+
+    #[test]
+    fn dme_reduces_traffic() {
+        use crate::passes::dme::run_dme;
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]);
+        let mut cur = x;
+        for k in 0..4 {
+            cur = b.transpose(&format!("t{k}"), cur, &[1, 0]);
+        }
+        let y = b.relu("y", cur);
+        b.mark_output(y);
+        let g = b.finish();
+        let cfg = AccelConfig::inferentia_like();
+        let before = simulate(&Program::lower(g.clone()), &cfg, None);
+        let mut prog = Program::lower(g);
+        run_dme(&mut prog);
+        let after = simulate(&prog, &cfg, None);
+        assert!(after.onchip_movement_total() < before.onchip_movement_total());
+        assert_eq!(after.onchip_copy_total(), 0);
+        assert_eq!(before.onchip_copy_total(), 4 * 64 * 64 * 4);
+        // compulsory traffic unchanged
+        assert_eq!(
+            after.traffic.get(TrafficClass::InputLoad),
+            before.traffic.get(TrafficClass::InputLoad)
+        );
+    }
+
+    #[test]
+    fn spill_and_reload_under_pressure() {
+        // capacity holds only one 6.4 KB tensor at a time, but x is
+        // needed again at the end: it must spill and reload.
+        let cfg = AccelConfig::tiny(8 * 1024); // 8 KiB
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[40, 40]); // 6.4 KB
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", t1, &[1, 0]);
+        let a = b.add("a", t2, x); // x live across the whole chain
+        b.mark_output(a);
+        let rep = run(b.finish(), &cfg);
+        assert!(rep.traffic.get(TrafficClass::Spill) > 0, "{:?}", rep.traffic);
+        assert!(rep.traffic.get(TrafficClass::Reload) > 0, "{:?}", rep.traffic);
+    }
+
+    #[test]
+    fn peak_scratchpad_bounded() {
+        let cfg = AccelConfig::inferentia_like();
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let rep = run(b.finish(), &cfg);
+        assert!(rep.peak_scratchpad <= cfg.scratchpad_bytes());
+        assert_eq!(rep.peak_scratchpad, 2 * 64 * 64 * 4);
+    }
+}

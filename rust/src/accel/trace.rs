@@ -1,0 +1,102 @@
+//! Event tracing for the simulator (tests, debugging, and the
+//! `polymem simulate --trace` flag).
+
+use super::dma::TrafficClass;
+use crate::ir::tensor::TensorId;
+
+/// One simulator event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A tensor was staged into the scratchpad.
+    Stage { pos: usize, tensor: TensorId, bytes: i64, class: TrafficClass },
+    /// A dead tensor's space was released.
+    Release { pos: usize, tensor: TensorId },
+}
+
+/// Bounded event log.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    limit: usize,
+    dropped: usize,
+}
+
+impl Trace {
+    pub fn new(limit: usize) -> Self {
+        Trace { events: Vec::new(), limit, dropped: 0 }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.limit {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Render a human-readable dump.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Stage { pos, tensor, bytes, class } => {
+                    s.push_str(&format!(
+                        "[{pos:>4}] stage   {tensor:?} {bytes}B ({})\n",
+                        class.label()
+                    ));
+                }
+                TraceEvent::Release { pos, tensor } => {
+                    s.push_str(&format!("[{pos:>4}] release {tensor:?}\n"));
+                }
+            }
+        }
+        if self.dropped > 0 {
+            s.push_str(&format!("... {} events dropped\n", self.dropped));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::config::AccelConfig;
+    use crate::accel::sim::simulate;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::loopnest::Program;
+
+    #[test]
+    fn trace_records_staging() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let prog = Program::lower(b.finish());
+        let mut tr = Trace::new(100);
+        simulate(&prog, &AccelConfig::inferentia_like(), Some(&mut tr));
+        assert!(tr
+            .events()
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Stage { class: TrafficClass::InputLoad, .. })));
+        assert!(!tr.dump().is_empty());
+    }
+
+    #[test]
+    fn trace_bounded() {
+        let mut tr = Trace::new(2);
+        for k in 0..5 {
+            tr.push(TraceEvent::Release { pos: k, tensor: TensorId(0) });
+        }
+        assert_eq!(tr.events().len(), 2);
+        assert_eq!(tr.dropped(), 3);
+        assert!(tr.dump().contains("3 events dropped"));
+    }
+}

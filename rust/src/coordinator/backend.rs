@@ -1,0 +1,158 @@
+//! Execution backends for the serving coordinator.
+
+use crate::runtime::LoadedModel;
+use anyhow::Result;
+
+/// Executes a batch of same-shaped requests. The coordinator owns
+/// exactly one backend per worker thread. Backends need not be `Send`
+/// (PJRT executables are not): [`crate::coordinator::Server::start`]
+/// takes a factory closure and constructs the backend *on* the worker
+/// thread.
+pub trait Backend: 'static {
+    /// Flattened per-request input length.
+    fn input_len(&self) -> usize;
+    /// Flattened per-request output length.
+    fn output_len(&self) -> usize;
+    /// Largest batch the backend can execute at once.
+    fn max_batch(&self) -> usize;
+    /// Execute `n` requests packed row-major into `batch`
+    /// (`n × input_len` elements); returns `n × output_len` elements.
+    fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>>;
+}
+
+/// Test/bench backend: output = input scaled by a constant, with an
+/// optional artificial latency to exercise batching behaviour.
+pub struct EchoBackend {
+    pub len: usize,
+    pub max_batch: usize,
+    pub scale: f32,
+    pub delay: std::time::Duration,
+}
+
+impl EchoBackend {
+    pub fn new(len: usize, max_batch: usize) -> Self {
+        EchoBackend { len, max_batch, scale: 2.0, delay: std::time::Duration::ZERO }
+    }
+}
+
+impl Backend for EchoBackend {
+    fn input_len(&self) -> usize {
+        self.len
+    }
+
+    fn output_len(&self) -> usize {
+        self.len
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(batch.len() == n * self.len, "bad batch packing");
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(batch.iter().map(|v| v * self.scale).collect())
+    }
+}
+
+/// Production backend: a PJRT executable compiled for a fixed batch
+/// size `compiled_batch`. Smaller batches are zero-padded (standard
+/// static-shape serving practice).
+pub struct PjrtBackend {
+    model: LoadedModel,
+    compiled_batch: usize,
+    in_len: usize,
+    out_len: usize,
+    in_shape: Vec<i64>,
+}
+
+impl PjrtBackend {
+    /// `in_shape` is the per-request input shape (without batch dim);
+    /// `out_len` the per-request flattened output length.
+    pub fn new(
+        model: LoadedModel,
+        compiled_batch: usize,
+        in_shape: &[i64],
+        out_len: usize,
+    ) -> Self {
+        let in_len: i64 = in_shape.iter().product();
+        let mut full_shape = vec![compiled_batch as i64];
+        full_shape.extend_from_slice(in_shape);
+        PjrtBackend {
+            model,
+            compiled_batch,
+            in_len: in_len as usize,
+            out_len,
+            in_shape: full_shape,
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.in_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn max_batch(&self) -> usize {
+        self.compiled_batch
+    }
+
+    fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(n <= self.compiled_batch, "batch exceeds compiled size");
+        anyhow::ensure!(batch.len() == n * self.in_len, "bad batch packing");
+        // zero-pad to the compiled batch
+        let mut padded = vec![0f32; self.compiled_batch * self.in_len];
+        padded[..batch.len()].copy_from_slice(batch);
+        let out = self.model.run_f32(&[(&padded, &self.in_shape)])?;
+        anyhow::ensure!(
+            out.len() >= n * self.out_len,
+            "model returned {} elements, need {}",
+            out.len(),
+            n * self.out_len
+        );
+        Ok(out[..n * self.out_len].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_scales() {
+        let mut b = EchoBackend::new(3, 8);
+        let out = b.infer(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn echo_rejects_bad_packing() {
+        let mut b = EchoBackend::new(3, 8);
+        assert!(b.infer(&[1.0, 2.0], 1).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_pads_batches() {
+        const HLO: &str = r#"
+HloModule batch_double
+
+ENTRY main {
+  p0 = f32[4,2]{1,0} parameter(0)
+  ROOT d = f32[4,2]{1,0} add(p0, p0)
+}
+"#;
+        let rt = crate::runtime::RuntimeClient::cpu().unwrap();
+        let model = rt.load_hlo_str("batch_double", HLO).unwrap();
+        let mut b = PjrtBackend::new(model, 4, &[2], 2);
+        // 2 live requests in a batch-4 executable
+        let out = b.infer(&[1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
+        assert!(b.infer(&[0.0; 12], 6).is_err()); // over compiled batch
+    }
+}

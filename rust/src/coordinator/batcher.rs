@@ -1,0 +1,154 @@
+//! Dynamic batching policy — pure logic, unit-testable without threads.
+//!
+//! The policy is the standard serving trade-off: flush when the batch
+//! is full, or when the oldest queued request has waited `max_wait`,
+//! or (in eager mode) as soon as the queue drains.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush at this many requests.
+    pub max_batch: usize,
+    /// Flush when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        BatchPolicy { max_batch, max_wait }
+    }
+}
+
+/// Decision produced by [`Batcher::poll`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flush {
+    /// Keep accumulating; re-poll within the given duration.
+    Wait(Duration),
+    /// Execute the current batch now.
+    Now,
+    /// Nothing queued.
+    Empty,
+}
+
+/// Accumulates request timestamps and decides when to flush.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: usize,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: 0, oldest: None }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Record an enqueued request.
+    pub fn push(&mut self, now: Instant) {
+        if self.pending == 0 {
+            self.oldest = Some(now);
+        }
+        self.pending += 1;
+    }
+
+    /// Should the worker flush?
+    pub fn poll(&self, now: Instant) -> Flush {
+        if self.pending == 0 {
+            return Flush::Empty;
+        }
+        if self.pending >= self.policy.max_batch {
+            return Flush::Now;
+        }
+        let waited = now.duration_since(self.oldest.unwrap());
+        if waited >= self.policy.max_wait {
+            Flush::Now
+        } else {
+            Flush::Wait(self.policy.max_wait - waited)
+        }
+    }
+
+    /// Remove up to `max_batch` requests from the accounting; returns
+    /// the batch size taken. Caller drains the actual queue.
+    pub fn take(&mut self, now: Instant) -> usize {
+        let n = self.pending.min(self.policy.max_batch);
+        self.pending -= n;
+        self.oldest = if self.pending > 0 { Some(now) } else { None };
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pol(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy::new(max_batch, Duration::from_millis(wait_ms))
+    }
+
+    #[test]
+    fn empty_queue() {
+        let b = Batcher::new(pol(4, 10));
+        assert_eq!(b.poll(Instant::now()), Flush::Empty);
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = Batcher::new(pol(3, 1000));
+        let t = Instant::now();
+        b.push(t);
+        b.push(t);
+        assert!(matches!(b.poll(t), Flush::Wait(_)));
+        b.push(t);
+        assert_eq!(b.poll(t), Flush::Now);
+        assert_eq!(b.take(t), 3);
+        assert_eq!(b.poll(t), Flush::Empty);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(pol(100, 10));
+        let t0 = Instant::now();
+        b.push(t0);
+        match b.poll(t0) {
+            Flush::Wait(d) => assert!(d <= Duration::from_millis(10)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        let later = t0 + Duration::from_millis(11);
+        assert_eq!(b.poll(later), Flush::Now);
+        assert_eq!(b.take(later), 1);
+    }
+
+    #[test]
+    fn take_caps_at_max_batch() {
+        let mut b = Batcher::new(pol(4, 1));
+        let t = Instant::now();
+        for _ in 0..10 {
+            b.push(t);
+        }
+        assert_eq!(b.take(t), 4);
+        assert_eq!(b.pending(), 6);
+        // remaining requests restart the wait clock
+        assert!(matches!(b.poll(t), Flush::Now | Flush::Wait(_)));
+    }
+
+    #[test]
+    fn wait_decreases_over_time() {
+        let mut b = Batcher::new(pol(10, 100));
+        let t0 = Instant::now();
+        b.push(t0);
+        let Flush::Wait(d1) = b.poll(t0 + Duration::from_millis(10)) else {
+            panic!()
+        };
+        let Flush::Wait(d2) = b.poll(t0 + Duration::from_millis(50)) else {
+            panic!()
+        };
+        assert!(d2 < d1);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator.
+//!
+//! A batching inference server in the vLLM-router mold, scaled to this
+//! repo's inference-compiler scope: requests enter a bounded queue, a
+//! batcher thread groups them under a size/deadline policy, a worker
+//! executes each batch on a [`Backend`] (the PJRT runtime in
+//! production, mocks in tests), and metrics record the latency
+//! distribution. Built on std threads + channels (tokio is not in the
+//! offline crate cache; the request path is compute-bound, not
+//! I/O-bound, so threads are a faithful substitute).
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{Backend, EchoBackend, PjrtBackend};
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use server::{Server, ServerConfig};

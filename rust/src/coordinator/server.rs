@@ -1,0 +1,370 @@
+//! The serving loop: submission queue → batcher → backend worker.
+//!
+//! One worker thread owns the backend (PJRT executables are not Sync);
+//! callers submit from any thread and block on (or poll) a per-request
+//! response channel.
+
+use super::backend::Backend;
+use super::batcher::{BatchPolicy, Batcher, Flush};
+use super::metrics::Metrics;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Bound on queued requests (backpressure): submits fail fast
+    /// beyond it.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    respond: Sender<anyhow::Result<Vec<f32>>>,
+}
+
+/// Handle to a response.
+pub struct ResponseHandle {
+    rx: Receiver<anyhow::Result<Vec<f32>>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives.
+    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<anyhow::Result<Vec<f32>>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(Err(anyhow::anyhow!("server dropped the request")))
+            }
+        }
+    }
+}
+
+/// Batching inference server.
+pub struct Server {
+    tx: Sender<Request>,
+    queued: Arc<Mutex<usize>>,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    input_len: usize,
+}
+
+impl Server {
+    /// Start the worker thread over a backend built by `factory` *on*
+    /// the worker thread (PJRT executables are not `Send`, so they must
+    /// be created where they run). The factory returns the backend plus
+    /// its per-request input length.
+    pub fn start_with<B, F>(factory: F, cfg: ServerConfig) -> anyhow::Result<Server>
+    where
+        B: Backend,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<usize>>();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let queued = Arc::new(Mutex::new(0usize));
+        let worker = std::thread::Builder::new()
+            .name("polymem-serve".into())
+            .spawn({
+                let metrics = metrics.clone();
+                let stop = stop.clone();
+                let queued = queued.clone();
+                move || {
+                    let backend = match factory() {
+                        Ok(b) => {
+                            let _ = ready_tx.send(Ok(b.input_len()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    worker_loop(backend, cfg, rx, metrics, stop, queued)
+                }
+            })
+            .expect("spawning server worker");
+        let input_len = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(Server {
+            tx,
+            queued,
+            cfg,
+            metrics,
+            stop,
+            worker: Some(worker),
+            input_len,
+        })
+    }
+
+    /// Start over an already-constructed (Send) backend.
+    pub fn start<B: Backend + Send>(backend: B, cfg: ServerConfig) -> Server {
+        Server::start_with(move || Ok(backend), cfg).expect("infallible factory")
+    }
+
+    /// Submit one request. Fails fast when the queue is saturated
+    /// (backpressure) or the input length is wrong.
+    pub fn submit(&self, input: Vec<f32>) -> anyhow::Result<ResponseHandle> {
+        anyhow::ensure!(
+            input.len() == self.input_len,
+            "input length {} != expected {}",
+            input.len(),
+            self.input_len
+        );
+        {
+            let mut q = self.queued.lock().unwrap();
+            anyhow::ensure!(*q < self.cfg.queue_cap, "queue full ({} requests)", *q);
+            *q += 1;
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), respond: rtx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(ResponseHandle { rx: rrx })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop the worker and wait for it to drain.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<B: Backend>(
+    mut backend: B,
+    cfg: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    queued: Arc<Mutex<usize>>,
+) {
+    let policy = BatchPolicy::new(cfg.max_batch.min(backend.max_batch()), cfg.max_wait);
+    let mut batcher = Batcher::new(policy);
+    let mut pending: Vec<Request> = Vec::new();
+
+    loop {
+        // pull everything currently queued
+        loop {
+            match rx.try_recv() {
+                Ok(req) => {
+                    batcher.push(req.enqueued);
+                    pending.push(req);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // all senders gone: drain and exit
+                    flush_all(&mut backend, &mut pending, &metrics, &queued);
+                    return;
+                }
+            }
+        }
+        match batcher.poll(Instant::now()) {
+            Flush::Now => {
+                let n = batcher.take(Instant::now());
+                execute_batch(&mut backend, &mut pending, n, &metrics, &queued);
+            }
+            Flush::Wait(d) => {
+                // sleep until deadline or next arrival
+                match rx.recv_timeout(d.min(Duration::from_millis(5))) {
+                    Ok(req) => {
+                        batcher.push(req.enqueued);
+                        pending.push(req);
+                    }
+                    Err(_) => {}
+                }
+            }
+            Flush::Empty => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                match rx.recv_timeout(Duration::from_millis(5)) {
+                    Ok(req) => {
+                        batcher.push(req.enqueued);
+                        pending.push(req);
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+}
+
+fn flush_all<B: Backend>(
+    backend: &mut B,
+    pending: &mut Vec<Request>,
+    metrics: &Metrics,
+    queued: &Mutex<usize>,
+) {
+    while !pending.is_empty() {
+        let n = pending.len().min(backend.max_batch());
+        execute_batch(backend, pending, n, metrics, queued);
+    }
+}
+
+fn execute_batch<B: Backend>(
+    backend: &mut B,
+    pending: &mut Vec<Request>,
+    n: usize,
+    metrics: &Metrics,
+    queued: &Mutex<usize>,
+) {
+    if n == 0 {
+        return;
+    }
+    let batch: Vec<Request> = pending.drain(..n).collect();
+    {
+        let mut q = queued.lock().unwrap();
+        *q = q.saturating_sub(n);
+    }
+    let in_len = backend.input_len();
+    let out_len = backend.output_len();
+    let mut packed = Vec::with_capacity(n * in_len);
+    for r in &batch {
+        packed.extend_from_slice(&r.input);
+    }
+    match backend.infer(&packed, n) {
+        Ok(out) => {
+            let now = Instant::now();
+            let latencies: Vec<Duration> =
+                batch.iter().map(|r| now.duration_since(r.enqueued)).collect();
+            metrics.record_batch(n, &latencies);
+            for (k, r) in batch.into_iter().enumerate() {
+                let slice = out[k * out_len..(k + 1) * out_len].to_vec();
+                let _ = r.respond.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            metrics.record_error(n);
+            for r in batch {
+                let _ = r.respond.send(Err(anyhow::anyhow!("inference failed: {e}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::EchoBackend;
+
+    #[test]
+    fn roundtrip_single() {
+        let srv = Server::start(EchoBackend::new(3, 8), ServerConfig::default());
+        let h = srv.submit(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(h.wait().unwrap(), vec![2.0, 4.0, 6.0]);
+        let s = srv.metrics().snapshot();
+        assert_eq!(s.requests, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            queue_cap: 1024,
+        };
+        let mut be = EchoBackend::new(2, 8);
+        be.delay = Duration::from_millis(2); // slow enough to queue up
+        let srv = Server::start(be, cfg);
+        let handles: Vec<_> = (0..64)
+            .map(|k| srv.submit(vec![k as f32, 0.0]).unwrap())
+            .collect();
+        for (k, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.wait().unwrap(), vec![2.0 * k as f32, 0.0]);
+        }
+        let s = srv.metrics().snapshot();
+        assert_eq!(s.requests, 64);
+        assert!(s.mean_batch > 1.0, "no batching happened: {s:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn wrong_input_len_rejected() {
+        let srv = Server::start(EchoBackend::new(3, 8), ServerConfig::default());
+        assert!(srv.submit(vec![1.0]).is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn ordering_preserved_within_stream() {
+        let srv = Server::start(EchoBackend::new(1, 4), ServerConfig::default());
+        let hs: Vec<_> = (0..20).map(|k| srv.submit(vec![k as f32]).unwrap()).collect();
+        for (k, h) in hs.into_iter().enumerate() {
+            assert_eq!(h.wait().unwrap(), vec![2.0 * k as f32]);
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_over_cap() {
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 4,
+        };
+        let mut be = EchoBackend::new(1, 1);
+        be.delay = Duration::from_millis(50);
+        let srv = Server::start(be, cfg);
+        let mut oks = 0;
+        let mut rejects = 0;
+        let mut handles = vec![];
+        for k in 0..32 {
+            match srv.submit(vec![k as f32]) {
+                Ok(h) => {
+                    oks += 1;
+                    handles.push(h);
+                }
+                Err(_) => rejects += 1,
+            }
+        }
+        assert!(rejects > 0, "queue cap never hit");
+        assert!(oks >= 4);
+        for h in handles {
+            let _ = h.wait();
+        }
+        srv.shutdown();
+    }
+}

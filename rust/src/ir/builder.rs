@@ -1,0 +1,248 @@
+//! Fluent graph construction with shape inference.
+//!
+//! Model builders (`models/*`) use this API; it guarantees topological
+//! insertion order, infers every output shape through
+//! [`OpKind::infer_shape`], and names intermediate tensors after the
+//! producing node.
+
+use super::graph::{Graph, NodeId};
+use super::op::{BinaryFn, OpKind, PoolKind, UnaryFn};
+use super::tensor::{DType, TensorId, TensorKind};
+
+/// Builder over an owned [`Graph`].
+pub struct GraphBuilder {
+    g: Graph,
+    default_dtype: DType,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { g: Graph::new(), default_dtype: DType::F32 }
+    }
+
+    pub fn with_dtype(dtype: DType) -> Self {
+        GraphBuilder { g: Graph::new(), default_dtype: dtype }
+    }
+
+    /// Declare a model input.
+    pub fn input(&mut self, name: &str, shape: &[i64]) -> TensorId {
+        self.g.add_tensor(name, shape, self.default_dtype, TensorKind::Input)
+    }
+
+    /// Declare a weight/constant.
+    pub fn weight(&mut self, name: &str, shape: &[i64]) -> TensorId {
+        self.g.add_tensor(name, shape, self.default_dtype, TensorKind::Weight)
+    }
+
+    /// Apply an operator; infers the output shape.
+    pub fn apply(&mut self, name: &str, kind: OpKind, inputs: &[TensorId]) -> TensorId {
+        let shapes: Vec<Vec<i64>> = inputs
+            .iter()
+            .map(|t| self.g.tensor(*t).shape.clone())
+            .collect();
+        let shape_refs: Vec<&[i64]> = shapes.iter().map(|s| s.as_slice()).collect();
+        let out_shape = kind
+            .infer_shape(&shape_refs)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let out = self.g.add_tensor(
+            format!("{name}_out"),
+            &out_shape,
+            self.default_dtype,
+            TensorKind::Intermediate,
+        );
+        self.g.add_node(name, kind, inputs.to_vec(), out);
+        out
+    }
+
+    /// Mark a tensor as a graph output.
+    pub fn mark_output(&mut self, t: TensorId) {
+        self.g.tensor_mut(t).kind = TensorKind::Output;
+    }
+
+    pub fn finish(self) -> Graph {
+        self.g
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+
+    pub fn last_node(&self) -> Option<NodeId> {
+        self.g.nodes().last().map(|n| n.id)
+    }
+
+    // ---- convenience wrappers used throughout models/ ----
+
+    pub fn conv2d(&mut self, name: &str, x: TensorId, w: TensorId, stride: i64, pad: i64) -> TensorId {
+        self.apply(name, OpKind::Conv2d { stride, pad }, &[x, w])
+    }
+
+    pub fn conv1d(&mut self, name: &str, x: TensorId, w: TensorId, dilation: i64) -> TensorId {
+        self.apply(name, OpKind::Conv1d { dilation }, &[x, w])
+    }
+
+    pub fn matmul(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.apply(name, OpKind::MatMul, &[a, b])
+    }
+
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.apply(name, OpKind::Unary(UnaryFn::Relu), &[x])
+    }
+
+    pub fn sigmoid(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.apply(name, OpKind::Unary(UnaryFn::Sigmoid), &[x])
+    }
+
+    pub fn tanh(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.apply(name, OpKind::Unary(UnaryFn::Tanh), &[x])
+    }
+
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.apply(name, OpKind::Binary(BinaryFn::Add), &[a, b])
+    }
+
+    pub fn mul(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.apply(name, OpKind::Binary(BinaryFn::Mul), &[a, b])
+    }
+
+    pub fn batchnorm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let c = self.g.tensor(x).shape[1];
+        let scale = self.weight(&format!("{name}_scale"), &[c]);
+        let shift = self.weight(&format!("{name}_shift"), &[c]);
+        self.apply(name, OpKind::BatchNorm, &[x, scale, shift])
+    }
+
+    pub fn maxpool(&mut self, name: &str, x: TensorId, window: i64, stride: i64) -> TensorId {
+        self.apply(name, OpKind::Pool { kind: PoolKind::Max, window, stride }, &[x])
+    }
+
+    pub fn gap(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.apply(name, OpKind::GlobalAvgPool, &[x])
+    }
+
+    pub fn transpose(&mut self, name: &str, x: TensorId, perm: &[usize]) -> TensorId {
+        self.apply(name, OpKind::Transpose { perm: perm.to_vec() }, &[x])
+    }
+
+    pub fn reshape(&mut self, name: &str, x: TensorId, shape: &[i64]) -> TensorId {
+        self.apply(name, OpKind::Reshape { shape: shape.to_vec() }, &[x])
+    }
+
+    pub fn tile(&mut self, name: &str, x: TensorId, reps: &[i64]) -> TensorId {
+        self.apply(name, OpKind::Tile { reps: reps.to_vec() }, &[x])
+    }
+
+    pub fn repeat(&mut self, name: &str, x: TensorId, axis: usize, n: i64) -> TensorId {
+        self.apply(name, OpKind::Repeat { axis, n }, &[x])
+    }
+
+    pub fn slice(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        begin: &[i64],
+        end: &[i64],
+        stride: &[i64],
+    ) -> TensorId {
+        self.apply(
+            name,
+            OpKind::StridedSlice {
+                begin: begin.to_vec(),
+                end: end.to_vec(),
+                stride: stride.to_vec(),
+            },
+            &[x],
+        )
+    }
+
+    /// NumPy-style `split` along an axis into `parts` equal pieces —
+    /// lowered, as in most importers, to `parts` strided-slice nodes.
+    pub fn split(&mut self, name: &str, x: TensorId, axis: usize, parts: i64) -> Vec<TensorId> {
+        let shape = self.g.tensor(x).shape.clone();
+        assert_eq!(shape[axis] % parts, 0, "split: uneven");
+        let step = shape[axis] / parts;
+        (0..parts)
+            .map(|k| {
+                let mut begin = vec![0; shape.len()];
+                let mut end = shape.clone();
+                begin[axis] = k * step;
+                end[axis] = (k + 1) * step;
+                self.slice(
+                    &format!("{name}.{k}"),
+                    x,
+                    &begin,
+                    &end,
+                    &vec![1; shape.len()],
+                )
+            })
+            .collect()
+    }
+
+    pub fn concat(&mut self, name: &str, xs: &[TensorId], axis: usize) -> TensorId {
+        self.apply(name, OpKind::Concat { axis }, xs)
+    }
+
+    pub fn pad(&mut self, name: &str, x: TensorId, lo: &[i64], hi: &[i64]) -> TensorId {
+        self.apply(name, OpKind::Pad { lo: lo.to_vec(), hi: hi.to_vec() }, &[x])
+    }
+
+    pub fn identity(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.apply(name, OpKind::Identity, &[x])
+    }
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        GraphBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_conv_chain() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 3, 32, 32]);
+        let w = b.weight("w1", &[16, 3, 3, 3]);
+        let c = b.conv2d("conv1", x, w, 1, 1);
+        let r = b.relu("relu1", c);
+        b.mark_output(r);
+        let g = b.finish();
+        assert_eq!(g.nodes().len(), 2);
+        assert_eq!(g.tensor(r).shape, vec![1, 16, 32, 32]);
+        assert_eq!(g.outputs().len(), 1);
+    }
+
+    #[test]
+    fn split_makes_slices() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[2, 8]);
+        let parts = b.split("s", x, 1, 4);
+        assert_eq!(parts.len(), 4);
+        for p in &parts {
+            assert_eq!(b.graph().tensor(*p).shape, vec![2, 2]);
+        }
+        assert_eq!(b.graph().nodes().len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "Cin mismatch")]
+    fn shape_errors_panic_with_name() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 3, 8, 8]);
+        let w = b.weight("w", &[4, 5, 3, 3]);
+        b.conv2d("bad", x, w, 1, 1);
+    }
+
+    #[test]
+    fn batchnorm_creates_weights() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 8, 4, 4]);
+        let y = b.batchnorm("bn", x);
+        let g = b.finish();
+        assert_eq!(g.tensor(y).shape, vec![1, 8, 4, 4]);
+        assert_eq!(g.bytes_of_kind(TensorKind::Weight), 2 * 8 * 4);
+    }
+}

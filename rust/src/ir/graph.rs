@@ -1,0 +1,254 @@
+//! The operator graph: SSA tensors, nodes, def-use indexes, topological
+//! order.
+
+use super::op::OpKind;
+use super::tensor::{DType, TensorId, TensorInfo, TensorKind};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Stable node identity within one [`Graph`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Debug for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// One operator application.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+    /// Set by DME when the node's loads were rewritten to bypass an
+    /// eliminated tensor: `kind` then describes the *original* operator
+    /// while the true access pattern lives in the node's loop nests, so
+    /// shape inference no longer applies and bank-mapping transfer
+    /// functions treat the node as opaque.
+    pub rewritten: bool,
+}
+
+/// The model graph. Nodes are stored in insertion order, which builders
+/// guarantee to be topological (verified by [`crate::ir::verify`]).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub(crate) tensors: BTreeMap<TensorId, TensorInfo>,
+    pub(crate) nodes: Vec<Node>,
+    next_tensor: u32,
+    next_node: u32,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    /// Register a new tensor.
+    pub fn add_tensor(
+        &mut self,
+        name: impl Into<String>,
+        shape: &[i64],
+        dtype: DType,
+        kind: TensorKind,
+    ) -> TensorId {
+        assert!(shape.iter().all(|&e| e >= 1), "tensor with empty dim: {shape:?}");
+        let id = TensorId(self.next_tensor);
+        self.next_tensor += 1;
+        self.tensors.insert(
+            id,
+            TensorInfo { id, name: name.into(), shape: shape.to_vec(), dtype, kind },
+        );
+        id
+    }
+
+    /// Append a node (inputs must exist; output shape is the caller's
+    /// responsibility — [`crate::ir::GraphBuilder`] always infers it).
+    pub fn add_node(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        output: TensorId,
+    ) -> NodeId {
+        for t in &inputs {
+            assert!(self.tensors.contains_key(t), "add_node: unknown input {t:?}");
+        }
+        assert!(self.tensors.contains_key(&output), "add_node: unknown output");
+        let id = NodeId(self.next_node);
+        self.next_node += 1;
+        self.nodes.push(Node { id, name: name.into(), kind, inputs, output, rewritten: false });
+        id
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[&id]
+    }
+
+    pub fn tensor_mut(&mut self, id: TensorId) -> &mut TensorInfo {
+        self.tensors.get_mut(&id).unwrap()
+    }
+
+    pub fn tensors(&self) -> impl Iterator<Item = &TensorInfo> {
+        self.tensors.values()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        self.nodes.iter().find(|n| n.id == id).expect("node not found")
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes.iter_mut().find(|n| n.id == id).expect("node not found")
+    }
+
+    /// Producer node of a tensor (None for inputs/weights).
+    pub fn producer(&self, t: TensorId) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.output == t)
+    }
+
+    /// All nodes reading a tensor.
+    pub fn consumers(&self, t: TensorId) -> Vec<&Node> {
+        self.nodes.iter().filter(|n| n.inputs.contains(&t)).collect()
+    }
+
+    /// Graph output tensors.
+    pub fn outputs(&self) -> Vec<TensorId> {
+        self.tensors
+            .values()
+            .filter(|t| t.kind == TensorKind::Output)
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Graph input tensors (activations only, not weights).
+    pub fn inputs(&self) -> Vec<TensorId> {
+        self.tensors
+            .values()
+            .filter(|t| t.kind == TensorKind::Input)
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Remove a node and (if now dead) its output tensor. Panics if the
+    /// output still has consumers or is a graph output.
+    pub fn remove_node(&mut self, id: NodeId) {
+        let idx = self
+            .nodes
+            .iter()
+            .position(|n| n.id == id)
+            .expect("remove_node: not found");
+        let out = self.nodes[idx].output;
+        assert!(
+            self.consumers(out).is_empty(),
+            "remove_node: output {out:?} still has consumers"
+        );
+        assert!(
+            self.tensor(out).kind != TensorKind::Output,
+            "remove_node: output {out:?} is a graph output"
+        );
+        self.nodes.remove(idx);
+        self.tensors.remove(&out);
+    }
+
+    /// Insert a node immediately before another node (preserves
+    /// topological order when the new node feeds `before`). Used by the
+    /// bank-mapping passes to materialize `MemCopy` nodes.
+    pub fn insert_node_before(
+        &mut self,
+        before: NodeId,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        output: TensorId,
+    ) -> NodeId {
+        for t in &inputs {
+            assert!(self.tensors.contains_key(t), "insert_node: unknown input {t:?}");
+        }
+        let pos = self
+            .nodes
+            .iter()
+            .position(|n| n.id == before)
+            .expect("insert_node_before: anchor not found");
+        let id = NodeId(self.next_node);
+        self.next_node += 1;
+        self.nodes.insert(pos, Node { id, name: name.into(), kind, inputs, output, rewritten: false });
+        id
+    }
+
+    /// Total bytes of tensors of a given kind.
+    pub fn bytes_of_kind(&self, kind: TensorKind) -> i64 {
+        self.tensors
+            .values()
+            .filter(|t| t.kind == kind)
+            .map(|t| t.size_bytes())
+            .sum()
+    }
+
+    /// Count nodes matching a predicate.
+    pub fn count_nodes(&self, pred: impl Fn(&Node) -> bool) -> usize {
+        self.nodes.iter().filter(|n| pred(n)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::UnaryFn;
+
+    fn tiny() -> (Graph, TensorId, TensorId, NodeId) {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[1, 8], DType::F32, TensorKind::Input);
+        let y = g.add_tensor("y", &[1, 8], DType::F32, TensorKind::Output);
+        let n = g.add_node("relu", OpKind::Unary(UnaryFn::Relu), vec![x], y);
+        (g, x, y, n)
+    }
+
+    #[test]
+    fn def_use_indexes() {
+        let (g, x, y, n) = tiny();
+        assert_eq!(g.producer(y).unwrap().id, n);
+        assert!(g.producer(x).is_none());
+        assert_eq!(g.consumers(x).len(), 1);
+        assert!(g.consumers(y).is_empty());
+        assert_eq!(g.inputs(), vec![x]);
+        assert_eq!(g.outputs(), vec![y]);
+    }
+
+    #[test]
+    fn remove_node_cleans_tensor() {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[4], DType::F32, TensorKind::Input);
+        let t = g.add_tensor("t", &[4], DType::F32, TensorKind::Intermediate);
+        let id = g.add_node("id", OpKind::Identity, vec![x], t);
+        g.remove_node(id);
+        assert_eq!(g.nodes().len(), 0);
+        assert_eq!(g.tensors().count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "still has consumers")]
+    fn remove_live_node_panics() {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[4], DType::F32, TensorKind::Input);
+        let t = g.add_tensor("t", &[4], DType::F32, TensorKind::Intermediate);
+        let y = g.add_tensor("y", &[4], DType::F32, TensorKind::Output);
+        let id = g.add_node("id", OpKind::Identity, vec![x], t);
+        g.add_node("relu", OpKind::Unary(UnaryFn::Relu), vec![t], y);
+        g.remove_node(id);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let (g, ..) = tiny();
+        assert_eq!(g.bytes_of_kind(TensorKind::Input), 32);
+        assert_eq!(g.bytes_of_kind(TensorKind::Output), 32);
+        assert_eq!(g.bytes_of_kind(TensorKind::Weight), 0);
+    }
+}

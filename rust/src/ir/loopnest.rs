@@ -1,0 +1,849 @@
+//! Loop-nest lowering: the paper's §2 program representation.
+//!
+//! Every operator lowers to one or more *normalized* loop nests: the
+//! iteration domain is a box `[0,e0)×…×[0,en-1)` and the body consists
+//! of element-wise loads `v = t[f(i)]` and one store `t_out[f_s(i)] = v`
+//! with quasi-affine access functions (`poly::AccessMap`).
+//!
+//! * Memory-bound operators lower to **copy nests** ([`Body::Copy`]):
+//!   the loaded value feeds the store directly — exactly the
+//!   `(v = t_l[f_l(i)], t_s[f_s(i)] = v)` pattern §2.1 eliminates.
+//! * Compute operators lower to nests with [`Body::Compute`]; DME never
+//!   removes them but *does* rewrite their loads when the tensor they
+//!   read is eliminated.
+//!
+//! Loads are **piecewise** ([`LoadStmt::pieces`]): `pad` reads the
+//! input on its interior and a synthesized zero elsewhere, and DME
+//! rewrites through `concat` produce multi-source piecewise loads.
+
+use super::graph::{Graph, Node, NodeId};
+use super::op::{OpKind, PoolKind};
+use super::tensor::TensorId;
+use crate::poly::piecewise::Guard;
+use crate::poly::{AccessMap, Expr, IterDomain};
+
+/// One piece of a (piecewise) load: under `guards`, read
+/// `tensor[map(i)]`; `tensor == None` means the piece evaluates to a
+/// constant zero (pad border). `oob_zero` marks hardware-padded compute
+/// reads (conv with implicit padding) whose map may step outside the
+/// tensor box — such reads return 0 and are exempt from bounds
+/// verification.
+#[derive(Clone, Debug)]
+pub struct Access {
+    pub guards: Vec<Guard>,
+    pub tensor: Option<TensorId>,
+    pub map: AccessMap,
+    pub oob_zero: bool,
+}
+
+impl Access {
+    pub fn total(tensor: TensorId, map: AccessMap) -> Self {
+        Access { guards: vec![], tensor: Some(tensor), map, oob_zero: false }
+    }
+
+    pub fn holds(&self, p: &[i64]) -> bool {
+        self.guards.iter().all(|g| g.holds(p))
+    }
+}
+
+/// A load statement: disjoint pieces covering the loop domain.
+#[derive(Clone, Debug)]
+pub struct LoadStmt {
+    pub pieces: Vec<Access>,
+}
+
+impl LoadStmt {
+    pub fn total(tensor: TensorId, map: AccessMap) -> Self {
+        LoadStmt { pieces: vec![Access::total(tensor, map)] }
+    }
+
+    /// The single source tensor if this load is non-piecewise.
+    pub fn single(&self) -> Option<(TensorId, &AccessMap)> {
+        match &self.pieces[..] {
+            [a] if a.guards.is_empty() => a.tensor.map(|t| (t, &a.map)),
+            _ => None,
+        }
+    }
+
+    /// All tensors this load may read.
+    pub fn tensors(&self) -> Vec<TensorId> {
+        let mut ts: Vec<TensorId> = self.pieces.iter().filter_map(|p| p.tensor).collect();
+        ts.sort();
+        ts.dedup();
+        ts
+    }
+
+    /// Resolve the piece applying at a point (tests / replay).
+    pub fn at(&self, p: &[i64]) -> Option<(Option<TensorId>, Vec<i64>)> {
+        self.pieces
+            .iter()
+            .find(|piece| piece.holds(p))
+            .map(|piece| (piece.tensor, piece.map.apply(p)))
+    }
+}
+
+/// The store statement: `tensor[map(i)] = v`.
+#[derive(Clone, Debug)]
+pub struct StoreStmt {
+    pub tensor: TensorId,
+    pub map: AccessMap,
+}
+
+/// Loop-nest body.
+#[derive(Clone, Debug)]
+pub enum Body {
+    /// Pure data movement: store(load(i)). The §2.1 DME target.
+    Copy { load: LoadStmt },
+    /// Opaque compute over the listed loads (matmul/conv/pool/…).
+    Compute { loads: Vec<LoadStmt>, flops_per_point: i64 },
+}
+
+impl Body {
+    pub fn loads(&self) -> &[LoadStmt] {
+        match self {
+            Body::Copy { load } => std::slice::from_ref(load),
+            Body::Compute { loads, .. } => loads,
+        }
+    }
+
+    pub fn loads_mut(&mut self) -> &mut [LoadStmt] {
+        match self {
+            Body::Copy { load } => std::slice::from_mut(load),
+            Body::Compute { loads, .. } => loads,
+        }
+    }
+
+    pub fn is_copy(&self) -> bool {
+        matches!(self, Body::Copy { .. })
+    }
+}
+
+/// A normalized loop nest.
+#[derive(Clone, Debug)]
+pub struct LoopNest {
+    /// Node this nest was lowered from.
+    pub node: NodeId,
+    pub name: String,
+    pub domain: IterDomain,
+    pub store: StoreStmt,
+    pub body: Body,
+}
+
+impl LoopNest {
+    /// Bytes moved by this nest if executed as-is (elements × loads+store).
+    pub fn copied_elems(&self) -> i64 {
+        self.domain.cardinality()
+    }
+}
+
+/// A lowered program: the graph plus its loop nests in topological
+/// order. Passes transform `nests` (DME) and `graph` (bank mapping).
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub graph: Graph,
+    pub nests: Vec<LoopNest>,
+}
+
+impl Program {
+    /// Lower every node of a graph.
+    pub fn lower(graph: Graph) -> Program {
+        let mut nests = Vec::new();
+        for node in graph.nodes() {
+            nests.extend(lower_node(&graph, node));
+        }
+        Program { graph, nests }
+    }
+
+    /// Copy nests currently in the program (DME candidates).
+    pub fn copy_nests(&self) -> impl Iterator<Item = &LoopNest> {
+        self.nests.iter().filter(|n| n.body.is_copy())
+    }
+
+    /// Count of load-store pairs (≡ copy nests).
+    pub fn load_store_pairs(&self) -> usize {
+        self.copy_nests().count()
+    }
+
+    /// All nests writing tensor `t`.
+    pub fn writers(&self, t: TensorId) -> Vec<usize> {
+        self.nests
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.store.tensor == t)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// All nests with a load piece reading tensor `t`.
+    pub fn readers(&self, t: TensorId) -> Vec<usize> {
+        self.nests
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                n.body
+                    .loads()
+                    .iter()
+                    .any(|l| l.pieces.iter().any(|p| p.tensor == Some(t)))
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Lower one node to its loop nests.
+pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
+    let out = node.output;
+    let out_shape = g.tensor(out).shape.clone();
+    let nd = out_shape.len();
+    let ident_store = |t| StoreStmt { tensor: t, map: AccessMap::identity(nd) };
+    let dom_out = IterDomain::new(&out_shape);
+
+    match &node.kind {
+        // ---------------- memory-bound: copy nests ----------------
+        OpKind::Identity | OpKind::MemCopy => {
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy { load: LoadStmt::total(node.inputs[0], AccessMap::identity(nd)) },
+            }]
+        }
+        OpKind::Transpose { perm } => {
+            // out[i] = in[perm applied]: out axis k comes from in axis perm[k],
+            // so reading uses map placing loop dim k at input dim perm[k]:
+            // in_idx[d] = i[pos of d in perm]
+            let mut exprs = vec![Expr::cst(0); nd];
+            for (k, &p) in perm.iter().enumerate() {
+                exprs[p] = Expr::dim(k);
+            }
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy {
+                    load: LoadStmt::total(node.inputs[0], AccessMap::new(nd, exprs)),
+                },
+            }]
+        }
+        OpKind::Reshape { .. } => {
+            // row-major: linearize output index, delinearize by input shape
+            let in_shape = &g.tensor(node.inputs[0]).shape;
+            let lin = linearize_expr(&out_shape);
+            let exprs = delinearize_exprs(lin, in_shape);
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy {
+                    load: LoadStmt::total(node.inputs[0], AccessMap::new(nd, exprs)),
+                },
+            }]
+        }
+        OpKind::Tile { .. } => {
+            let in_shape = &g.tensor(node.inputs[0]).shape;
+            let exprs = (0..nd)
+                .map(|d| Expr::dim(d).modulo(in_shape[d]))
+                .collect();
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy {
+                    load: LoadStmt::total(node.inputs[0], AccessMap::new(nd, exprs)),
+                },
+            }]
+        }
+        OpKind::Repeat { axis, n } => {
+            let exprs = (0..nd)
+                .map(|d| {
+                    if d == *axis {
+                        Expr::dim(d).floordiv(*n)
+                    } else {
+                        Expr::dim(d)
+                    }
+                })
+                .collect();
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy {
+                    load: LoadStmt::total(node.inputs[0], AccessMap::new(nd, exprs)),
+                },
+            }]
+        }
+        OpKind::StridedSlice { begin, stride, .. } => {
+            let exprs = (0..nd)
+                .map(|d| Expr::dim(d).scale(stride[d]).add(Expr::cst(begin[d])))
+                .collect();
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy {
+                    load: LoadStmt::total(node.inputs[0], AccessMap::new(nd, exprs)),
+                },
+            }]
+        }
+        OpKind::Concat { axis } => {
+            // one source-indexed nest per input: store through an offset map
+            let mut nests = Vec::with_capacity(node.inputs.len());
+            let mut offset = 0i64;
+            for (k, &inp) in node.inputs.iter().enumerate() {
+                let in_shape = g.tensor(inp).shape.clone();
+                let store_exprs = (0..nd)
+                    .map(|d| {
+                        if d == *axis {
+                            Expr::dim(d).add(Expr::cst(offset))
+                        } else {
+                            Expr::dim(d)
+                        }
+                    })
+                    .collect();
+                nests.push(LoopNest {
+                    node: node.id,
+                    name: format!("{}#{k}", node.name),
+                    domain: IterDomain::new(&in_shape),
+                    store: StoreStmt { tensor: out, map: AccessMap::new(nd, store_exprs) },
+                    body: Body::Copy {
+                        load: LoadStmt::total(inp, AccessMap::identity(nd)),
+                    },
+                });
+                offset += in_shape[*axis];
+            }
+            nests
+        }
+        OpKind::Pad { lo, .. } => {
+            // destination-indexed with a piecewise load: the interior
+            // reads in[i - lo]; the border pieces synthesize zero.
+            let in_shape = g.tensor(node.inputs[0]).shape.clone();
+            let interior_map = AccessMap::new(
+                nd,
+                (0..nd)
+                    .map(|d| Expr::dim(d).add(Expr::cst(-lo[d])))
+                    .collect(),
+            );
+            let interior_guards: Vec<Guard> = (0..nd)
+                .filter(|&d| lo[d] != 0 || in_shape[d] != out_shape[d] - lo[d])
+                .map(|d| Guard { dim: d, lo: lo[d], hi: lo[d] + in_shape[d] })
+                .collect();
+            let mut pieces = vec![Access {
+                guards: interior_guards.clone(),
+                tensor: Some(node.inputs[0]),
+                map: interior_map,
+                oob_zero: false,
+            }];
+            // border = complement of the interior box, decomposed into
+            // disjoint slabs: for each guarded dim d, the parts below and
+            // above it (with earlier guarded dims constrained to interior).
+            let mut prefix: Vec<Guard> = vec![];
+            for gd in &interior_guards {
+                let d = gd.dim;
+                if gd.lo > 0 {
+                    let mut gs = prefix.clone();
+                    gs.push(Guard { dim: d, lo: 0, hi: gd.lo });
+                    pieces.push(zero_piece(gs, nd));
+                }
+                if gd.hi < out_shape[d] {
+                    let mut gs = prefix.clone();
+                    gs.push(Guard { dim: d, lo: gd.hi, hi: out_shape[d] });
+                    pieces.push(zero_piece(gs, nd));
+                }
+                prefix.push(*gd);
+            }
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Copy { load: LoadStmt { pieces } },
+            }]
+        }
+
+        // ---------------- compute-bound ----------------
+        OpKind::Conv2d { stride, pad } => {
+            let w_shape = g.tensor(node.inputs[1]).shape.clone();
+            let (ci, kh, kw) = (w_shape[1], w_shape[2], w_shape[3]);
+            // domain: n, co, oh, ow, ci, kh, kw
+            let dom = IterDomain::new(&[out_shape[0], out_shape[1], out_shape[2], out_shape[3], ci, kh, kw]);
+            let x_map = AccessMap::new(
+                7,
+                vec![
+                    Expr::dim(0),
+                    Expr::dim(4),
+                    Expr::dim(2).scale(*stride).add(Expr::dim(5)).add(Expr::cst(-pad)),
+                    Expr::dim(3).scale(*stride).add(Expr::dim(6)).add(Expr::cst(-pad)),
+                ],
+            );
+            let w_map = AccessMap::new(
+                7,
+                vec![Expr::dim(1), Expr::dim(4), Expr::dim(5), Expr::dim(6)],
+            );
+            let store_map = AccessMap::new(
+                7,
+                vec![Expr::dim(0), Expr::dim(1), Expr::dim(2), Expr::dim(3)],
+            );
+            let mut x_load = LoadStmt::total(node.inputs[0], x_map);
+            x_load.pieces[0].oob_zero = *pad > 0;
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom,
+                store: StoreStmt { tensor: out, map: store_map },
+                body: Body::Compute {
+                    loads: vec![x_load, LoadStmt::total(node.inputs[1], w_map)],
+                    flops_per_point: 2,
+                },
+            }]
+        }
+        OpKind::DepthwiseConv2d { stride, pad } => {
+            let w_shape = g.tensor(node.inputs[1]).shape.clone();
+            let (kh, kw) = (w_shape[2], w_shape[3]);
+            let dom = IterDomain::new(&[out_shape[0], out_shape[1], out_shape[2], out_shape[3], kh, kw]);
+            let x_map = AccessMap::new(
+                6,
+                vec![
+                    Expr::dim(0),
+                    Expr::dim(1),
+                    Expr::dim(2).scale(*stride).add(Expr::dim(4)).add(Expr::cst(-pad)),
+                    Expr::dim(3).scale(*stride).add(Expr::dim(5)).add(Expr::cst(-pad)),
+                ],
+            );
+            let w_map = AccessMap::new(
+                6,
+                vec![Expr::dim(1), Expr::cst(0), Expr::dim(4), Expr::dim(5)],
+            );
+            let store_map = AccessMap::new(
+                6,
+                vec![Expr::dim(0), Expr::dim(1), Expr::dim(2), Expr::dim(3)],
+            );
+            let mut x_load = LoadStmt::total(node.inputs[0], x_map);
+            x_load.pieces[0].oob_zero = *pad > 0;
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom,
+                store: StoreStmt { tensor: out, map: store_map },
+                body: Body::Compute {
+                    loads: vec![x_load, LoadStmt::total(node.inputs[1], w_map)],
+                    flops_per_point: 2,
+                },
+            }]
+        }
+        OpKind::MatMul => {
+            let k = g.tensor(node.inputs[0]).shape[1];
+            let dom = IterDomain::new(&[out_shape[0], out_shape[1], k]);
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom,
+                store: StoreStmt {
+                    tensor: out,
+                    map: AccessMap::new(3, vec![Expr::dim(0), Expr::dim(1)]),
+                },
+                body: Body::Compute {
+                    loads: vec![
+                        LoadStmt::total(
+                            node.inputs[0],
+                            AccessMap::new(3, vec![Expr::dim(0), Expr::dim(2)]),
+                        ),
+                        LoadStmt::total(
+                            node.inputs[1],
+                            AccessMap::new(3, vec![Expr::dim(2), Expr::dim(1)]),
+                        ),
+                    ],
+                    flops_per_point: 2,
+                },
+            }]
+        }
+        OpKind::Pool { window, stride, kind } => {
+            let dom = IterDomain::new(&[out_shape[0], out_shape[1], out_shape[2], out_shape[3], *window, *window]);
+            let x_map = AccessMap::new(
+                6,
+                vec![
+                    Expr::dim(0),
+                    Expr::dim(1),
+                    Expr::dim(2).scale(*stride).add(Expr::dim(4)),
+                    Expr::dim(3).scale(*stride).add(Expr::dim(5)),
+                ],
+            );
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom,
+                store: StoreStmt {
+                    tensor: out,
+                    map: AccessMap::new(
+                        6,
+                        vec![Expr::dim(0), Expr::dim(1), Expr::dim(2), Expr::dim(3)],
+                    ),
+                },
+                body: Body::Compute {
+                    loads: vec![LoadStmt::total(node.inputs[0], x_map)],
+                    flops_per_point: if *kind == PoolKind::Avg { 2 } else { 1 },
+                },
+            }]
+        }
+        OpKind::GlobalAvgPool => {
+            let in_shape = g.tensor(node.inputs[0]).shape.clone();
+            let dom = IterDomain::new(&in_shape);
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom,
+                store: StoreStmt {
+                    tensor: out,
+                    map: AccessMap::new(
+                        4,
+                        vec![Expr::dim(0), Expr::dim(1), Expr::cst(0), Expr::cst(0)],
+                    ),
+                },
+                body: Body::Compute {
+                    loads: vec![LoadStmt::total(node.inputs[0], AccessMap::identity(4))],
+                    flops_per_point: 1,
+                },
+            }]
+        }
+        OpKind::Conv1d { dilation } => {
+            let w_shape = g.tensor(node.inputs[1]).shape.clone();
+            let (ci, kk) = (w_shape[1], w_shape[2]);
+            // domain: n, co, t, ci, k
+            let dom = IterDomain::new(&[out_shape[0], out_shape[1], out_shape[2], ci, kk]);
+            let x_map = AccessMap::new(
+                5,
+                vec![
+                    Expr::dim(0),
+                    Expr::dim(3),
+                    Expr::dim(2).add(Expr::dim(4).scale(*dilation)),
+                ],
+            );
+            let w_map = AccessMap::new(5, vec![Expr::dim(1), Expr::dim(3), Expr::dim(4)]);
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom,
+                store: StoreStmt {
+                    tensor: out,
+                    map: AccessMap::new(5, vec![Expr::dim(0), Expr::dim(1), Expr::dim(2)]),
+                },
+                body: Body::Compute {
+                    loads: vec![
+                        LoadStmt::total(node.inputs[0], x_map),
+                        LoadStmt::total(node.inputs[1], w_map),
+                    ],
+                    flops_per_point: 2,
+                },
+            }]
+        }
+        OpKind::Unary(_) | OpKind::Softmax => {
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Compute {
+                    loads: vec![LoadStmt::total(node.inputs[0], AccessMap::identity(nd))],
+                    flops_per_point: if matches!(node.kind, OpKind::Softmax) { 6 } else { 1 },
+                },
+            }]
+        }
+        OpKind::Binary(_) => {
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Compute {
+                    loads: vec![
+                        LoadStmt::total(node.inputs[0], AccessMap::identity(nd)),
+                        LoadStmt::total(node.inputs[1], AccessMap::identity(nd)),
+                    ],
+                    flops_per_point: 1,
+                },
+            }]
+        }
+        OpKind::BatchNorm => {
+            let c_map = AccessMap::new(nd, vec![Expr::dim(1)]);
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Compute {
+                    loads: vec![
+                        LoadStmt::total(node.inputs[0], AccessMap::identity(nd)),
+                        LoadStmt::total(node.inputs[1], c_map.clone()),
+                        LoadStmt::total(node.inputs[2], c_map),
+                    ],
+                    flops_per_point: 2,
+                },
+            }]
+        }
+        OpKind::BiasAdd => {
+            let b_map = AccessMap::new(nd, vec![Expr::dim(nd - 1)]);
+            vec![LoopNest {
+                node: node.id,
+                name: node.name.clone(),
+                domain: dom_out,
+                store: ident_store(out),
+                body: Body::Compute {
+                    loads: vec![
+                        LoadStmt::total(node.inputs[0], AccessMap::identity(nd)),
+                        LoadStmt::total(node.inputs[1], b_map),
+                    ],
+                    flops_per_point: 1,
+                },
+            }]
+        }
+    }
+}
+
+fn zero_piece(guards: Vec<Guard>, nd: usize) -> Access {
+    Access { guards, tensor: None, map: AccessMap::identity(nd), oob_zero: false }
+}
+
+/// Row-major linearization expression of an index vector of `shape`.
+fn linearize_expr(shape: &[i64]) -> Expr {
+    let mut e = Expr::cst(0);
+    for (d, &s) in shape.iter().enumerate() {
+        e = e.scale(s).add(Expr::dim(d));
+    }
+    e
+}
+
+/// Delinearize a flat expression into indices of `shape` (row-major).
+fn delinearize_exprs(lin: Expr, shape: &[i64]) -> Vec<Expr> {
+    let mut exprs = vec![Expr::cst(0); shape.len()];
+    let mut stride = 1i64;
+    for d in (0..shape.len()).rev() {
+        let e = lin.clone().floordiv(stride).modulo(shape[d]);
+        exprs[d] = e;
+        stride *= shape[d];
+    }
+    // outermost dim needs no mod (value already < shape[0]) but keeping
+    // it is harmless; simplified_in removes it when provable.
+    exprs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{BinaryFn, UnaryFn};
+    use crate::ir::tensor::{DType, TensorKind};
+
+    fn g_with(shape: &[i64]) -> (Graph, TensorId) {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", shape, DType::F32, TensorKind::Input);
+        (g, x)
+    }
+
+    /// Execute a copy nest interpretively: returns out[idx] = source idx.
+    fn run_copy(_g: &Graph, nest: &LoopNest) -> Vec<(Vec<i64>, Option<TensorId>, Vec<i64>)> {
+        let Body::Copy { load } = &nest.body else { panic!("not a copy") };
+        nest.domain
+            .points()
+            .map(|p| {
+                let (t, src) = load.at(&p).expect("load not covered");
+                (nest.store.map.apply(&p), t, src)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn transpose_lowering_semantics() {
+        let (mut g, x) = g_with(&[2, 3, 4]);
+        let y = g.add_tensor("y", &[4, 2, 3], DType::F32, TensorKind::Output);
+        let n = g.add_node(
+            "t",
+            OpKind::Transpose { perm: vec![2, 0, 1] },
+            vec![x],
+            y,
+        );
+        let nests = lower_node(&g, g.node(n));
+        assert_eq!(nests.len(), 1);
+        for (out_idx, t, src_idx) in run_copy(&g, &nests[0]) {
+            assert_eq!(t, Some(x));
+            // out[a,b,c] = in[b,c,a]
+            assert_eq!(src_idx, vec![out_idx[1], out_idx[2], out_idx[0]]);
+        }
+    }
+
+    #[test]
+    fn reshape_lowering_row_major() {
+        let (mut g, x) = g_with(&[2, 6]);
+        let y = g.add_tensor("y", &[3, 4], DType::F32, TensorKind::Output);
+        let n = g.add_node("r", OpKind::Reshape { shape: vec![3, 4] }, vec![x], y);
+        let nests = lower_node(&g, g.node(n));
+        let in_dom = IterDomain::new(&[2, 6]);
+        let out_dom = IterDomain::new(&[3, 4]);
+        for (out_idx, t, src_idx) in run_copy(&g, &nests[0]) {
+            assert_eq!(t, Some(x));
+            assert_eq!(in_dom.linearize(&src_idx), out_dom.linearize(&out_idx));
+        }
+    }
+
+    #[test]
+    fn tile_and_repeat_semantics() {
+        let (mut g, x) = g_with(&[3]);
+        let y = g.add_tensor("y", &[6], DType::F32, TensorKind::Output);
+        let n = g.add_node("tile", OpKind::Tile { reps: vec![2] }, vec![x], y);
+        let nests = lower_node(&g, g.node(n));
+        for (out_idx, _, src_idx) in run_copy(&g, &nests[0]) {
+            assert_eq!(src_idx[0], out_idx[0] % 3);
+        }
+
+        let (mut g2, x2) = g_with(&[3]);
+        let y2 = g2.add_tensor("y", &[6], DType::F32, TensorKind::Output);
+        let n2 = g2.add_node("rep", OpKind::Repeat { axis: 0, n: 2 }, vec![x2], y2);
+        let nests2 = lower_node(&g2, g2.node(n2));
+        for (out_idx, _, src_idx) in run_copy(&g2, &nests2[0]) {
+            assert_eq!(src_idx[0], out_idx[0] / 2);
+        }
+    }
+
+    #[test]
+    fn strided_slice_semantics() {
+        let (mut g, x) = g_with(&[10]);
+        let y = g.add_tensor("y", &[4], DType::F32, TensorKind::Output);
+        let n = g.add_node(
+            "ss",
+            OpKind::StridedSlice { begin: vec![2], end: vec![10], stride: vec![2] },
+            vec![x],
+            y,
+        );
+        let nests = lower_node(&g, g.node(n));
+        for (out_idx, _, src_idx) in run_copy(&g, &nests[0]) {
+            assert_eq!(src_idx[0], 2 + 2 * out_idx[0]);
+        }
+    }
+
+    #[test]
+    fn concat_offset_stores() {
+        let mut g = Graph::new();
+        let a = g.add_tensor("a", &[2, 3], DType::F32, TensorKind::Input);
+        let b = g.add_tensor("b", &[2, 5], DType::F32, TensorKind::Input);
+        let y = g.add_tensor("y", &[2, 8], DType::F32, TensorKind::Output);
+        let n = g.add_node("c", OpKind::Concat { axis: 1 }, vec![a, b], y);
+        let nests = lower_node(&g, g.node(n));
+        assert_eq!(nests.len(), 2);
+        // every output element written exactly once
+        let mut written = std::collections::HashSet::new();
+        for nest in &nests {
+            for (out_idx, t, src_idx) in run_copy(&g, nest) {
+                assert!(written.insert(out_idx.clone()), "double write {out_idx:?}");
+                if t == Some(a) {
+                    assert_eq!(out_idx, src_idx);
+                } else {
+                    assert_eq!(out_idx[1], src_idx[1] + 3);
+                }
+            }
+        }
+        assert_eq!(written.len(), 16);
+    }
+
+    #[test]
+    fn pad_piecewise_covers_domain() {
+        let (mut g, x) = g_with(&[2, 3]);
+        let y = g.add_tensor("y", &[4, 7], DType::F32, TensorKind::Output);
+        let n = g.add_node(
+            "p",
+            OpKind::Pad { lo: vec![1, 2], hi: vec![1, 2] },
+            vec![x],
+            y,
+        );
+        let nests = lower_node(&g, g.node(n));
+        let Body::Copy { load } = &nests[0].body else { panic!() };
+        let mut zeros = 0;
+        let mut reads = 0;
+        for p in nests[0].domain.points() {
+            let covering: Vec<_> = load.pieces.iter().filter(|a| a.holds(&p)).collect();
+            assert_eq!(covering.len(), 1, "point {p:?} covered {} times", covering.len());
+            match covering[0].tensor {
+                Some(t) => {
+                    assert_eq!(t, x);
+                    let src = covering[0].map.apply(&p);
+                    assert_eq!(src, vec![p[0] - 1, p[1] - 2]);
+                    reads += 1;
+                }
+                None => zeros += 1,
+            }
+        }
+        assert_eq!(reads, 6);
+        assert_eq!(zeros, 28 - 6);
+    }
+
+    #[test]
+    fn conv2d_lowering_accesses() {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[1, 2, 5, 5], DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", &[4, 2, 3, 3], DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", &[1, 4, 5, 5], DType::F32, TensorKind::Output);
+        let n = g.add_node("cv", OpKind::Conv2d { stride: 1, pad: 1 }, vec![x, w], y);
+        let nests = lower_node(&g, g.node(n));
+        assert_eq!(nests.len(), 1);
+        let nest = &nests[0];
+        assert_eq!(nest.domain.extents(), &[1, 4, 5, 5, 2, 3, 3]);
+        let Body::Compute { loads, .. } = &nest.body else { panic!() };
+        assert!(loads[0].pieces[0].oob_zero);
+        // spot-check x access: p = (n,co,oh,ow,ci,kh,kw)
+        let p = vec![0, 1, 2, 3, 1, 0, 2];
+        let (t, idx) = loads[0].at(&p).unwrap();
+        assert_eq!(t, Some(x));
+        assert_eq!(idx, vec![0, 1, 2 + 0 - 1, 3 + 2 - 1]);
+        let (tw, widx) = loads[1].at(&p).unwrap();
+        assert_eq!(tw, Some(w));
+        assert_eq!(widx, vec![1, 1, 0, 2]);
+        assert_eq!(nest.store.map.apply(&p), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn conv1d_dilated_access() {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[1, 2, 12], DType::F32, TensorKind::Input);
+        let w = g.add_tensor("w", &[3, 2, 2], DType::F32, TensorKind::Weight);
+        let y = g.add_tensor("y", &[1, 3, 8], DType::F32, TensorKind::Output);
+        let n = g.add_node("cv1", OpKind::Conv1d { dilation: 4 }, vec![x, w], y);
+        let nests = lower_node(&g, g.node(n));
+        let Body::Compute { loads, .. } = &nests[0].body else { panic!() };
+        // p = (n, co, t, ci, k): x[t + 4k]
+        let (_, idx) = loads[0].at(&[0, 2, 3, 1, 1]).unwrap();
+        assert_eq!(idx, vec![0, 1, 7]);
+    }
+
+    #[test]
+    fn program_lowering_and_indexes() {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[4, 4], DType::F32, TensorKind::Input);
+        let t = g.add_tensor("t", &[4, 4], DType::F32, TensorKind::Intermediate);
+        let y = g.add_tensor("y", &[4, 4], DType::F32, TensorKind::Output);
+        g.add_node("tr", OpKind::Transpose { perm: vec![1, 0] }, vec![x], t);
+        g.add_node("relu", OpKind::Unary(UnaryFn::Relu), vec![t], y);
+        let prog = Program::lower(g);
+        assert_eq!(prog.nests.len(), 2);
+        assert_eq!(prog.load_store_pairs(), 1);
+        let tid = t;
+        assert_eq!(prog.writers(tid).len(), 1);
+        assert_eq!(prog.readers(tid).len(), 1);
+        assert_eq!(prog.readers(x).len(), 1);
+    }
+
+    #[test]
+    fn binary_loads_two_tensors() {
+        let mut g = Graph::new();
+        let a = g.add_tensor("a", &[4], DType::F32, TensorKind::Input);
+        let b = g.add_tensor("b", &[4], DType::F32, TensorKind::Input);
+        let y = g.add_tensor("y", &[4], DType::F32, TensorKind::Output);
+        let n = g.add_node("add", OpKind::Binary(BinaryFn::Add), vec![a, b], y);
+        let nests = lower_node(&g, g.node(n));
+        let Body::Compute { loads, .. } = &nests[0].body else { panic!() };
+        assert_eq!(loads.len(), 2);
+        assert_eq!(loads[0].single().unwrap().0, a);
+        assert_eq!(loads[1].single().unwrap().0, b);
+    }
+}

@@ -1,0 +1,32 @@
+//! Tensor-operator IR.
+//!
+//! The compiler front end of the reproduction: a DL model is a directed
+//! graph of operator [`Node`]s over SSA [`TensorInfo`] values
+//! ([`graph::Graph`]), and every operator lowers to one or more
+//! normalized affine [`loopnest::LoopNest`]s with explicit load/store
+//! statements — the paper's §2 program representation on which both
+//! passes operate.
+//!
+//! Conventions:
+//! * Feature maps are NCHW; weights are `[Cout, Cin, Kh, Kw]`.
+//! * Tensors are SSA: written only by their producing node (a node may
+//!   lower to several nests writing disjoint regions, e.g. `concat`).
+//! * Loop nests are destination-indexed where natural (`transpose`,
+//!   `slice`, `tile`, … iterate the output box with an identity store)
+//!   and source-indexed for scatter ops (`concat`, `pad` iterate each
+//!   input box and store through an offset map) — this is what makes
+//!   the paper's store-reversal step (`f_s'`) non-trivial.
+
+pub mod builder;
+pub mod graph;
+pub mod loopnest;
+pub mod op;
+pub mod serde;
+pub mod tensor;
+pub mod verify;
+
+pub use builder::GraphBuilder;
+pub use graph::{Graph, Node, NodeId};
+pub use loopnest::{Access, Body, LoopNest, Program, StoreStmt};
+pub use op::OpKind;
+pub use tensor::{DType, TensorId, TensorInfo, TensorKind};

@@ -1,0 +1,439 @@
+//! Operator kinds with shape inference.
+//!
+//! Two families, mirroring the paper's distinction:
+//! * **compute-bound** operators (conv/matmul/pool/elementwise/…)
+//!   execute on the systolic array or the vector engine; their loop
+//!   nests carry opaque compute bodies and bank-mapping constraints;
+//! * **memory-bound** operators (`transpose`, `reshape`, `tile`,
+//!   `repeat`, `strided_slice`, `split`→slices, `concat`, `pad`,
+//!   `identity`) lower to pure copy nests — the targets of §2.1 DME.
+
+/// Pooling flavor.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Elementwise unary functions (vector engine).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnaryFn {
+    Relu,
+    Sigmoid,
+    Tanh,
+    Exp,
+    Neg,
+}
+
+/// Elementwise binary functions (vector engine).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BinaryFn {
+    Add,
+    Sub,
+    Mul,
+    Max,
+}
+
+/// Operator kind. Shapes below refer to the op's input tensors in order.
+#[derive(Clone, PartialEq, Debug)]
+pub enum OpKind {
+    // ---- compute-bound ----
+    /// 2-D convolution, NCHW × [Cout, Cin, Kh, Kw], symmetric padding.
+    Conv2d { stride: i64, pad: i64 },
+    /// Depthwise variant (per-channel), weights [C, 1, Kh, Kw].
+    DepthwiseConv2d { stride: i64, pad: i64 },
+    /// `[M, K] · [K, N] → [M, N]`.
+    MatMul,
+    /// Window pooling over NCHW spatial dims.
+    Pool { kind: PoolKind, window: i64, stride: i64 },
+    /// Global average pool → [N, C, 1, 1].
+    GlobalAvgPool,
+    /// Elementwise unary.
+    Unary(UnaryFn),
+    /// Elementwise binary (same-shape operands).
+    Binary(BinaryFn),
+    /// Folded batch-norm: per-channel scale+shift on NCHW (weights
+    /// [C] scale, [C] shift).
+    BatchNorm,
+    /// Bias add over the last dim of a matmul output ([N] bias).
+    BiasAdd,
+    /// Softmax over the last dim.
+    Softmax,
+    /// 1-D dilated causal convolution for WaveNet stacks:
+    /// input [N, C, T] × weights [Cout, Cin, K] with dilation.
+    Conv1d { dilation: i64 },
+
+    // ---- memory-bound (copy nests; DME targets) ----
+    /// Output axis `k` takes input axis `perm[k]`.
+    Transpose { perm: Vec<usize> },
+    /// Row-major reinterpretation to `shape` (same numel).
+    Reshape { shape: Vec<i64> },
+    /// Repeat the whole tensor `reps[d]` times along each axis
+    /// (NumPy `tile`): out[i] = in[i mod shape].
+    Tile { reps: Vec<i64> },
+    /// Repeat each element `n` times along `axis`
+    /// (NumPy `repeat`): out[.., i, ..] = in[.., i div n, ..].
+    Repeat { axis: usize, n: i64 },
+    /// out[i] = in[begin + i*stride] per axis.
+    StridedSlice { begin: Vec<i64>, end: Vec<i64>, stride: Vec<i64> },
+    /// Concatenate along `axis` (2+ inputs).
+    Concat { axis: usize },
+    /// Zero-pad `lo`/`hi` per axis. Lowers to a copy of the interior;
+    /// the zero fill is a compute (memset) statement.
+    Pad { lo: Vec<i64>, hi: Vec<i64> },
+    /// Pure copy (layout change placeholder / graph glue).
+    Identity,
+    /// Inter-bank relocation inserted by the bank-mapping passes —
+    /// never created by model builders, never eliminated by DME.
+    MemCopy,
+}
+
+impl OpKind {
+    /// True for operators that lower to pure copy nests (DME targets).
+    pub fn is_memory_bound(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Transpose { .. }
+                | OpKind::Reshape { .. }
+                | OpKind::Tile { .. }
+                | OpKind::Repeat { .. }
+                | OpKind::StridedSlice { .. }
+                | OpKind::Concat { .. }
+                | OpKind::Pad { .. }
+                | OpKind::Identity
+                | OpKind::MemCopy
+        )
+    }
+
+    /// Short mnemonic for debugging and reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::DepthwiseConv2d { .. } => "dwconv2d",
+            OpKind::MatMul => "matmul",
+            OpKind::Pool { .. } => "pool",
+            OpKind::GlobalAvgPool => "gap",
+            OpKind::Unary(_) => "unary",
+            OpKind::Binary(_) => "binary",
+            OpKind::BatchNorm => "batchnorm",
+            OpKind::BiasAdd => "biasadd",
+            OpKind::Softmax => "softmax",
+            OpKind::Conv1d { .. } => "conv1d",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Reshape { .. } => "reshape",
+            OpKind::Tile { .. } => "tile",
+            OpKind::Repeat { .. } => "repeat",
+            OpKind::StridedSlice { .. } => "strided_slice",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Pad { .. } => "pad",
+            OpKind::Identity => "identity",
+            OpKind::MemCopy => "memcopy",
+        }
+    }
+
+    /// Infer the output shape from input shapes. Returns `Err` with a
+    /// description on rank/shape mismatch.
+    pub fn infer_shape(&self, inputs: &[&[i64]]) -> Result<Vec<i64>, String> {
+        let need = |n: usize| -> Result<(), String> {
+            if inputs.len() != n {
+                Err(format!("{}: expected {n} inputs, got {}", self.mnemonic(), inputs.len()))
+            } else {
+                Ok(())
+            }
+        };
+        match self {
+            OpKind::Conv2d { stride, pad } => {
+                need(2)?;
+                let (x, w) = (inputs[0], inputs[1]);
+                if x.len() != 4 || w.len() != 4 {
+                    return Err("conv2d: need NCHW input and OIHW weights".into());
+                }
+                if x[1] != w[1] {
+                    return Err(format!("conv2d: Cin mismatch {} vs {}", x[1], w[1]));
+                }
+                let oh = conv_out(x[2], w[2], *stride, *pad)?;
+                let ow = conv_out(x[3], w[3], *stride, *pad)?;
+                Ok(vec![x[0], w[0], oh, ow])
+            }
+            OpKind::DepthwiseConv2d { stride, pad } => {
+                need(2)?;
+                let (x, w) = (inputs[0], inputs[1]);
+                if x.len() != 4 || w.len() != 4 || w[1] != 1 {
+                    return Err("dwconv2d: need NCHW and [C,1,Kh,Kw]".into());
+                }
+                if x[1] != w[0] {
+                    return Err("dwconv2d: channel mismatch".into());
+                }
+                let oh = conv_out(x[2], w[2], *stride, *pad)?;
+                let ow = conv_out(x[3], w[3], *stride, *pad)?;
+                Ok(vec![x[0], x[1], oh, ow])
+            }
+            OpKind::MatMul => {
+                need(2)?;
+                let (a, b) = (inputs[0], inputs[1]);
+                if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+                    return Err(format!("matmul: bad shapes {a:?} x {b:?}"));
+                }
+                Ok(vec![a[0], b[1]])
+            }
+            OpKind::Pool { window, stride, .. } => {
+                need(1)?;
+                let x = inputs[0];
+                if x.len() != 4 {
+                    return Err("pool: need NCHW".into());
+                }
+                let oh = conv_out(x[2], *window, *stride, 0)?;
+                let ow = conv_out(x[3], *window, *stride, 0)?;
+                Ok(vec![x[0], x[1], oh, ow])
+            }
+            OpKind::GlobalAvgPool => {
+                need(1)?;
+                let x = inputs[0];
+                if x.len() != 4 {
+                    return Err("gap: need NCHW".into());
+                }
+                Ok(vec![x[0], x[1], 1, 1])
+            }
+            OpKind::Unary(_) | OpKind::Identity | OpKind::MemCopy | OpKind::Softmax => {
+                need(1)?;
+                Ok(inputs[0].to_vec())
+            }
+            OpKind::Binary(_) => {
+                need(2)?;
+                if inputs[0] != inputs[1] {
+                    return Err(format!(
+                        "binary: shape mismatch {:?} vs {:?}",
+                        inputs[0], inputs[1]
+                    ));
+                }
+                Ok(inputs[0].to_vec())
+            }
+            OpKind::BatchNorm => {
+                need(3)?;
+                let x = inputs[0];
+                if x.len() != 4 || inputs[1] != &[x[1]] || inputs[2] != &[x[1]] {
+                    return Err("batchnorm: need NCHW + [C] scale + [C] shift".into());
+                }
+                Ok(x.to_vec())
+            }
+            OpKind::BiasAdd => {
+                need(2)?;
+                let x = inputs[0];
+                if inputs[1] != &[x[x.len() - 1]] {
+                    return Err("biasadd: bias must match last dim".into());
+                }
+                Ok(x.to_vec())
+            }
+            OpKind::Conv1d { dilation } => {
+                need(2)?;
+                let (x, w) = (inputs[0], inputs[1]);
+                if x.len() != 3 || w.len() != 3 || x[1] != w[1] {
+                    return Err("conv1d: need [N,C,T] and [Cout,Cin,K]".into());
+                }
+                // causal: output length preserved (left pad (K-1)*dilation
+                // is materialized by an explicit Pad op in model builders)
+                let k_span = (w[2] - 1) * dilation + 1;
+                if x[2] < k_span {
+                    return Err("conv1d: input shorter than dilated kernel".into());
+                }
+                Ok(vec![x[0], w[0], x[2] - k_span + 1])
+            }
+            OpKind::Transpose { perm } => {
+                need(1)?;
+                let x = inputs[0];
+                if perm.len() != x.len() {
+                    return Err("transpose: perm rank mismatch".into());
+                }
+                let mut seen = vec![false; x.len()];
+                for &p in perm {
+                    if p >= x.len() || seen[p] {
+                        return Err("transpose: invalid perm".into());
+                    }
+                    seen[p] = true;
+                }
+                Ok(perm.iter().map(|&p| x[p]).collect())
+            }
+            OpKind::Reshape { shape } => {
+                need(1)?;
+                let n: i64 = inputs[0].iter().product();
+                let m: i64 = shape.iter().product();
+                if n != m {
+                    return Err(format!("reshape: numel {n} != {m}"));
+                }
+                Ok(shape.clone())
+            }
+            OpKind::Tile { reps } => {
+                need(1)?;
+                let x = inputs[0];
+                if reps.len() != x.len() || reps.iter().any(|&r| r < 1) {
+                    return Err("tile: bad reps".into());
+                }
+                Ok(x.iter().zip(reps).map(|(&s, &r)| s * r).collect())
+            }
+            OpKind::Repeat { axis, n } => {
+                need(1)?;
+                let x = inputs[0];
+                if *axis >= x.len() || *n < 1 {
+                    return Err("repeat: bad axis/n".into());
+                }
+                let mut out = x.to_vec();
+                out[*axis] *= n;
+                Ok(out)
+            }
+            OpKind::StridedSlice { begin, end, stride } => {
+                need(1)?;
+                let x = inputs[0];
+                if begin.len() != x.len() || end.len() != x.len() || stride.len() != x.len() {
+                    return Err("strided_slice: rank mismatch".into());
+                }
+                let mut out = Vec::with_capacity(x.len());
+                for d in 0..x.len() {
+                    if stride[d] < 1 || begin[d] < 0 || end[d] > x[d] || begin[d] >= end[d] {
+                        return Err(format!("strided_slice: bad range on dim {d}"));
+                    }
+                    out.push((end[d] - begin[d] + stride[d] - 1) / stride[d]);
+                }
+                Ok(out)
+            }
+            OpKind::Concat { axis } => {
+                if inputs.len() < 2 {
+                    return Err("concat: need 2+ inputs".into());
+                }
+                let first = inputs[0];
+                if *axis >= first.len() {
+                    return Err("concat: bad axis".into());
+                }
+                let mut total = 0;
+                for x in inputs {
+                    if x.len() != first.len() {
+                        return Err("concat: rank mismatch".into());
+                    }
+                    for d in 0..first.len() {
+                        if d != *axis && x[d] != first[d] {
+                            return Err("concat: non-axis dim mismatch".into());
+                        }
+                    }
+                    total += x[*axis];
+                }
+                let mut out = first.to_vec();
+                out[*axis] = total;
+                Ok(out)
+            }
+            OpKind::Pad { lo, hi } => {
+                need(1)?;
+                let x = inputs[0];
+                if lo.len() != x.len() || hi.len() != x.len() {
+                    return Err("pad: rank mismatch".into());
+                }
+                if lo.iter().chain(hi).any(|&p| p < 0) {
+                    return Err("pad: negative padding".into());
+                }
+                Ok(x.iter()
+                    .zip(lo.iter().zip(hi))
+                    .map(|(&s, (&l, &h))| s + l + h)
+                    .collect())
+            }
+        }
+    }
+}
+
+fn conv_out(size: i64, k: i64, stride: i64, pad: i64) -> Result<i64, String> {
+    if stride < 1 {
+        return Err("conv: stride < 1".into());
+    }
+    let padded = size + 2 * pad;
+    if padded < k {
+        return Err(format!("conv: size {size}+2*{pad} < kernel {k}"));
+    }
+    Ok((padded - k) / stride + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_shapes() {
+        let k = OpKind::Conv2d { stride: 2, pad: 3 };
+        let out = k.infer_shape(&[&[1, 3, 224, 224], &[64, 3, 7, 7]]).unwrap();
+        assert_eq!(out, vec![1, 64, 112, 112]);
+        let k1 = OpKind::Conv2d { stride: 1, pad: 1 };
+        assert_eq!(
+            k1.infer_shape(&[&[1, 64, 56, 56], &[64, 64, 3, 3]]).unwrap(),
+            vec![1, 64, 56, 56]
+        );
+        assert!(k1.infer_shape(&[&[1, 32, 56, 56], &[64, 64, 3, 3]]).is_err());
+    }
+
+    #[test]
+    fn matmul_pool_gap() {
+        assert_eq!(
+            OpKind::MatMul.infer_shape(&[&[8, 512], &[512, 1000]]).unwrap(),
+            vec![8, 1000]
+        );
+        assert!(OpKind::MatMul.infer_shape(&[&[8, 512], &[256, 1000]]).is_err());
+        let p = OpKind::Pool { kind: PoolKind::Max, window: 3, stride: 2 };
+        assert_eq!(
+            p.infer_shape(&[&[1, 64, 112, 112]]).unwrap(),
+            vec![1, 64, 55, 55]
+        );
+        assert_eq!(
+            OpKind::GlobalAvgPool.infer_shape(&[&[1, 2048, 7, 7]]).unwrap(),
+            vec![1, 2048, 1, 1]
+        );
+    }
+
+    #[test]
+    fn memory_ops_shapes() {
+        let t = OpKind::Transpose { perm: vec![0, 2, 3, 1] };
+        assert_eq!(
+            t.infer_shape(&[&[1, 64, 56, 48]]).unwrap(),
+            vec![1, 56, 48, 64]
+        );
+        let r = OpKind::Reshape { shape: vec![4, 6] };
+        assert_eq!(r.infer_shape(&[&[2, 12]]).unwrap(), vec![4, 6]);
+        assert!(r.infer_shape(&[&[2, 11]]).is_err());
+        let tile = OpKind::Tile { reps: vec![2, 3] };
+        assert_eq!(tile.infer_shape(&[&[4, 5]]).unwrap(), vec![8, 15]);
+        let rep = OpKind::Repeat { axis: 1, n: 4 };
+        assert_eq!(rep.infer_shape(&[&[2, 3]]).unwrap(), vec![2, 12]);
+        let ss = OpKind::StridedSlice {
+            begin: vec![0, 2],
+            end: vec![4, 10],
+            stride: vec![1, 2],
+        };
+        assert_eq!(ss.infer_shape(&[&[4, 10]]).unwrap(), vec![4, 4]);
+        let c = OpKind::Concat { axis: 1 };
+        assert_eq!(
+            c.infer_shape(&[&[2, 3], &[2, 5]]).unwrap(),
+            vec![2, 8]
+        );
+        let pd = OpKind::Pad { lo: vec![0, 2], hi: vec![0, 2] };
+        assert_eq!(pd.infer_shape(&[&[1, 10]]).unwrap(), vec![1, 14]);
+    }
+
+    #[test]
+    fn conv1d_dilated() {
+        let k = OpKind::Conv1d { dilation: 4 };
+        // K=2 dilated by 4: span 5 → T_out = T - 4
+        assert_eq!(
+            k.infer_shape(&[&[1, 64, 104], &[64, 64, 2]]).unwrap(),
+            vec![1, 64, 100]
+        );
+    }
+
+    #[test]
+    fn memory_bound_classification() {
+        assert!(OpKind::Transpose { perm: vec![0] }.is_memory_bound());
+        assert!(OpKind::Identity.is_memory_bound());
+        assert!(OpKind::MemCopy.is_memory_bound());
+        assert!(!OpKind::MatMul.is_memory_bound());
+        assert!(!OpKind::Unary(UnaryFn::Relu).is_memory_bound());
+    }
+
+    #[test]
+    fn transpose_rejects_bad_perm() {
+        let t = OpKind::Transpose { perm: vec![0, 0] };
+        assert!(t.infer_shape(&[&[2, 3]]).is_err());
+    }
+}

@@ -1,0 +1,419 @@
+//! Graph ⇄ JSON serialization: the model-exchange format of the CLI
+//! (`polymem compile --graph model.json`) and of downstream tooling.
+//!
+//! Schema:
+//! ```json
+//! {
+//!   "tensors": [{"id": 0, "name": "x", "shape": [1,3,32,32],
+//!                "dtype": "f32", "kind": "input"}, …],
+//!   "nodes":   [{"name": "conv1", "op": "conv2d",
+//!                "attrs": {"stride": 1, "pad": 1},
+//!                "inputs": [0, 1], "output": 2}, …]
+//! }
+//! ```
+
+use super::graph::Graph;
+use super::op::{BinaryFn, OpKind, PoolKind, UnaryFn};
+use super::tensor::{DType, TensorId, TensorKind};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Serialization/deserialization error.
+#[derive(Debug, Clone)]
+pub struct SerdeError(pub String);
+
+impl std::fmt::Display for SerdeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "graph serde: {}", self.0)
+    }
+}
+
+impl std::error::Error for SerdeError {}
+
+fn err<T>(m: impl Into<String>) -> Result<T, SerdeError> {
+    Err(SerdeError(m.into()))
+}
+
+fn dtype_str(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::BF16 => "bf16",
+        DType::F16 => "f16",
+        DType::I32 => "i32",
+        DType::I8 => "i8",
+    }
+}
+
+fn dtype_parse(s: &str) -> Result<DType, SerdeError> {
+    Ok(match s {
+        "f32" => DType::F32,
+        "bf16" => DType::BF16,
+        "f16" => DType::F16,
+        "i32" => DType::I32,
+        "i8" => DType::I8,
+        other => return err(format!("unknown dtype '{other}'")),
+    })
+}
+
+fn kind_str(k: TensorKind) -> &'static str {
+    match k {
+        TensorKind::Input => "input",
+        TensorKind::Weight => "weight",
+        TensorKind::Intermediate => "intermediate",
+        TensorKind::Output => "output",
+    }
+}
+
+fn kind_parse(s: &str) -> Result<TensorKind, SerdeError> {
+    Ok(match s {
+        "input" => TensorKind::Input,
+        "weight" => TensorKind::Weight,
+        "intermediate" => TensorKind::Intermediate,
+        "output" => TensorKind::Output,
+        other => return err(format!("unknown tensor kind '{other}'")),
+    })
+}
+
+fn ints(v: &[i64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Int(x)).collect())
+}
+
+fn usizes(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Int(x as i64)).collect())
+}
+
+fn get_ints(j: &Json, key: &str) -> Result<Vec<i64>, SerdeError> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_i64()).collect::<Vec<_>>())
+        .ok_or_else(|| SerdeError(format!("missing int array '{key}'")))
+}
+
+fn get_i64(j: &Json, key: &str) -> Result<i64, SerdeError> {
+    j.get(key)
+        .and_then(|v| v.as_i64())
+        .ok_or_else(|| SerdeError(format!("missing int '{key}'")))
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, SerdeError> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| SerdeError(format!("missing string '{key}'")))
+}
+
+fn op_to_json(kind: &OpKind) -> (&'static str, Json) {
+    let empty = Json::obj(vec![]);
+    match kind {
+        OpKind::Conv2d { stride, pad } => (
+            "conv2d",
+            Json::obj(vec![("stride", Json::Int(*stride)), ("pad", Json::Int(*pad))]),
+        ),
+        OpKind::DepthwiseConv2d { stride, pad } => (
+            "depthwise_conv2d",
+            Json::obj(vec![("stride", Json::Int(*stride)), ("pad", Json::Int(*pad))]),
+        ),
+        OpKind::MatMul => ("matmul", empty),
+        OpKind::Pool { kind, window, stride } => (
+            "pool",
+            Json::obj(vec![
+                (
+                    "kind",
+                    Json::Str(if *kind == PoolKind::Max { "max" } else { "avg" }.into()),
+                ),
+                ("window", Json::Int(*window)),
+                ("stride", Json::Int(*stride)),
+            ]),
+        ),
+        OpKind::GlobalAvgPool => ("global_avg_pool", empty),
+        OpKind::Unary(f) => (
+            "unary",
+            Json::obj(vec![(
+                "fn",
+                Json::Str(
+                    match f {
+                        UnaryFn::Relu => "relu",
+                        UnaryFn::Sigmoid => "sigmoid",
+                        UnaryFn::Tanh => "tanh",
+                        UnaryFn::Exp => "exp",
+                        UnaryFn::Neg => "neg",
+                    }
+                    .into(),
+                ),
+            )]),
+        ),
+        OpKind::Binary(f) => (
+            "binary",
+            Json::obj(vec![(
+                "fn",
+                Json::Str(
+                    match f {
+                        BinaryFn::Add => "add",
+                        BinaryFn::Sub => "sub",
+                        BinaryFn::Mul => "mul",
+                        BinaryFn::Max => "max",
+                    }
+                    .into(),
+                ),
+            )]),
+        ),
+        OpKind::BatchNorm => ("batchnorm", empty),
+        OpKind::BiasAdd => ("bias_add", empty),
+        OpKind::Softmax => ("softmax", empty),
+        OpKind::Conv1d { dilation } => (
+            "conv1d",
+            Json::obj(vec![("dilation", Json::Int(*dilation))]),
+        ),
+        OpKind::Transpose { perm } => ("transpose", Json::obj(vec![("perm", usizes(perm))])),
+        OpKind::Reshape { shape } => ("reshape", Json::obj(vec![("shape", ints(shape))])),
+        OpKind::Tile { reps } => ("tile", Json::obj(vec![("reps", ints(reps))])),
+        OpKind::Repeat { axis, n } => (
+            "repeat",
+            Json::obj(vec![("axis", Json::Int(*axis as i64)), ("n", Json::Int(*n))]),
+        ),
+        OpKind::StridedSlice { begin, end, stride } => (
+            "strided_slice",
+            Json::obj(vec![
+                ("begin", ints(begin)),
+                ("end", ints(end)),
+                ("stride", ints(stride)),
+            ]),
+        ),
+        OpKind::Concat { axis } => (
+            "concat",
+            Json::obj(vec![("axis", Json::Int(*axis as i64))]),
+        ),
+        OpKind::Pad { lo, hi } => (
+            "pad",
+            Json::obj(vec![("lo", ints(lo)), ("hi", ints(hi))]),
+        ),
+        OpKind::Identity => ("identity", empty),
+        OpKind::MemCopy => ("memcopy", empty),
+    }
+}
+
+fn op_from_json(op: &str, attrs: &Json) -> Result<OpKind, SerdeError> {
+    Ok(match op {
+        "conv2d" => OpKind::Conv2d {
+            stride: get_i64(attrs, "stride")?,
+            pad: get_i64(attrs, "pad")?,
+        },
+        "depthwise_conv2d" => OpKind::DepthwiseConv2d {
+            stride: get_i64(attrs, "stride")?,
+            pad: get_i64(attrs, "pad")?,
+        },
+        "matmul" => OpKind::MatMul,
+        "pool" => OpKind::Pool {
+            kind: match get_str(attrs, "kind")? {
+                "max" => PoolKind::Max,
+                "avg" => PoolKind::Avg,
+                other => return err(format!("unknown pool kind '{other}'")),
+            },
+            window: get_i64(attrs, "window")?,
+            stride: get_i64(attrs, "stride")?,
+        },
+        "global_avg_pool" => OpKind::GlobalAvgPool,
+        "unary" => OpKind::Unary(match get_str(attrs, "fn")? {
+            "relu" => UnaryFn::Relu,
+            "sigmoid" => UnaryFn::Sigmoid,
+            "tanh" => UnaryFn::Tanh,
+            "exp" => UnaryFn::Exp,
+            "neg" => UnaryFn::Neg,
+            other => return err(format!("unknown unary fn '{other}'")),
+        }),
+        "binary" => OpKind::Binary(match get_str(attrs, "fn")? {
+            "add" => BinaryFn::Add,
+            "sub" => BinaryFn::Sub,
+            "mul" => BinaryFn::Mul,
+            "max" => BinaryFn::Max,
+            other => return err(format!("unknown binary fn '{other}'")),
+        }),
+        "batchnorm" => OpKind::BatchNorm,
+        "bias_add" => OpKind::BiasAdd,
+        "softmax" => OpKind::Softmax,
+        "conv1d" => OpKind::Conv1d { dilation: get_i64(attrs, "dilation")? },
+        "transpose" => OpKind::Transpose {
+            perm: get_ints(attrs, "perm")?.iter().map(|&x| x as usize).collect(),
+        },
+        "reshape" => OpKind::Reshape { shape: get_ints(attrs, "shape")? },
+        "tile" => OpKind::Tile { reps: get_ints(attrs, "reps")? },
+        "repeat" => OpKind::Repeat {
+            axis: get_i64(attrs, "axis")? as usize,
+            n: get_i64(attrs, "n")?,
+        },
+        "strided_slice" => OpKind::StridedSlice {
+            begin: get_ints(attrs, "begin")?,
+            end: get_ints(attrs, "end")?,
+            stride: get_ints(attrs, "stride")?,
+        },
+        "concat" => OpKind::Concat { axis: get_i64(attrs, "axis")? as usize },
+        "pad" => OpKind::Pad {
+            lo: get_ints(attrs, "lo")?,
+            hi: get_ints(attrs, "hi")?,
+        },
+        "identity" => OpKind::Identity,
+        "memcopy" => OpKind::MemCopy,
+        other => return err(format!("unknown op '{other}'")),
+    })
+}
+
+/// Serialize a graph to the JSON exchange format.
+pub fn graph_to_json(g: &Graph) -> Json {
+    let tensors: Vec<Json> = g
+        .tensors()
+        .map(|t| {
+            Json::obj(vec![
+                ("id", Json::Int(t.id.0 as i64)),
+                ("name", Json::Str(t.name.clone())),
+                ("shape", ints(&t.shape)),
+                ("dtype", Json::Str(dtype_str(t.dtype).into())),
+                ("kind", Json::Str(kind_str(t.kind).into())),
+            ])
+        })
+        .collect();
+    let nodes: Vec<Json> = g
+        .nodes()
+        .iter()
+        .map(|n| {
+            let (op, attrs) = op_to_json(&n.kind);
+            Json::obj(vec![
+                ("name", Json::Str(n.name.clone())),
+                ("op", Json::Str(op.into())),
+                ("attrs", attrs),
+                (
+                    "inputs",
+                    Json::Arr(n.inputs.iter().map(|t| Json::Int(t.0 as i64)).collect()),
+                ),
+                ("output", Json::Int(n.output.0 as i64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("tensors", Json::Arr(tensors)),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+/// Deserialize a graph from the JSON exchange format. Tensor ids are
+/// remapped densely; node order must be topological (verified by the
+/// caller via [`crate::ir::verify::verify_graph`]).
+pub fn graph_from_json(j: &Json) -> Result<Graph, SerdeError> {
+    let mut g = Graph::new();
+    let mut idmap: BTreeMap<i64, TensorId> = BTreeMap::new();
+    let tensors = j
+        .get("tensors")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| SerdeError("missing 'tensors'".into()))?;
+    for t in tensors {
+        let ext_id = get_i64(t, "id")?;
+        let name = get_str(t, "name")?;
+        let shape = get_ints(t, "shape")?;
+        let dtype = dtype_parse(get_str(t, "dtype")?)?;
+        let kind = kind_parse(get_str(t, "kind")?)?;
+        if shape.iter().any(|&e| e < 1) {
+            return err(format!("tensor '{name}': bad shape {shape:?}"));
+        }
+        let id = g.add_tensor(name, &shape, dtype, kind);
+        if idmap.insert(ext_id, id).is_some() {
+            return err(format!("duplicate tensor id {ext_id}"));
+        }
+    }
+    let nodes = j
+        .get("nodes")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| SerdeError("missing 'nodes'".into()))?;
+    for n in nodes {
+        let name = get_str(n, "name")?;
+        let op = get_str(n, "op")?;
+        let attrs = n.get("attrs").cloned().unwrap_or(Json::obj(vec![]));
+        let kind = op_from_json(op, &attrs)?;
+        let inputs: Vec<TensorId> = get_ints(n, "inputs")?
+            .iter()
+            .map(|x| {
+                idmap
+                    .get(x)
+                    .copied()
+                    .ok_or_else(|| SerdeError(format!("node '{name}': unknown input {x}")))
+            })
+            .collect::<Result<_, _>>()?;
+        let output = idmap
+            .get(&get_i64(n, "output")?)
+            .copied()
+            .ok_or_else(|| SerdeError(format!("node '{name}': unknown output tensor")))?;
+        g.add_node(name, kind, inputs, output);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::verify_graph;
+    use crate::util::json::parse;
+
+    fn roundtrip(g: &Graph) {
+        let j = graph_to_json(g);
+        let text = j.to_string_pretty();
+        let back = graph_from_json(&parse(&text).unwrap()).unwrap();
+        verify_graph(&back).unwrap();
+        assert_eq!(back.nodes().len(), g.nodes().len());
+        assert_eq!(back.tensors().count(), g.tensors().count());
+        for (a, b) in g.nodes().iter().zip(back.nodes()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.inputs.len(), b.inputs.len());
+        }
+        for (a, b) in g.tensors().zip(back.tensors()) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.dtype, b.dtype);
+        }
+    }
+
+    #[test]
+    fn roundtrips_model_zoo() {
+        roundtrip(&crate::models::mlp(2, 16, 8, 4, 2));
+        roundtrip(&crate::models::resnet18(1));
+        roundtrip(&crate::models::transformer_block(16, 32, 2, 64));
+        roundtrip(&crate::models::inception_stack(1, 1));
+        roundtrip(&crate::models::wavenet::parallel_wavenet_with(
+            crate::models::wavenet::WaveNetConfig {
+                flows: 1,
+                layers_per_flow: 2,
+                channels: 4,
+                time: 16,
+                kernel: 2,
+                dilation_cycle: 2,
+            },
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(graph_from_json(&parse("{}").unwrap()).is_err());
+        let bad_op = r#"{"tensors": [{"id":0,"name":"x","shape":[2],"dtype":"f32","kind":"input"}],
+                          "nodes": [{"name":"n","op":"warp","attrs":{},"inputs":[0],"output":0}]}"#;
+        assert!(graph_from_json(&parse(bad_op).unwrap()).is_err());
+        let bad_ref = r#"{"tensors": [{"id":0,"name":"x","shape":[2],"dtype":"f32","kind":"input"}],
+                          "nodes": [{"name":"n","op":"identity","attrs":{},"inputs":[9],"output":0}]}"#;
+        assert!(graph_from_json(&parse(bad_ref).unwrap()).is_err());
+        let bad_shape = r#"{"tensors": [{"id":0,"name":"x","shape":[0],"dtype":"f32","kind":"input"}],
+                            "nodes": []}"#;
+        assert!(graph_from_json(&parse(bad_shape).unwrap()).is_err());
+    }
+
+    #[test]
+    fn external_ids_remapped() {
+        let text = r#"{
+          "tensors": [
+            {"id": 100, "name": "x", "shape": [4], "dtype": "f32", "kind": "input"},
+            {"id": 7,   "name": "y", "shape": [4], "dtype": "f32", "kind": "output"}
+          ],
+          "nodes": [
+            {"name": "id", "op": "identity", "attrs": {}, "inputs": [100], "output": 7}
+          ]
+        }"#;
+        let g = graph_from_json(&parse(text).unwrap()).unwrap();
+        verify_graph(&g).unwrap();
+        assert_eq!(g.nodes().len(), 1);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tensor metadata: identity, shape, element type, role.
+
+use std::fmt;
+
+/// Stable tensor identity within one [`crate::ir::Graph`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+impl fmt::Debug for TensorId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Element types supported by the accelerator model.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I32,
+    I8,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size_bytes(self) -> i64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// Role of a tensor in the model graph.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum TensorKind {
+    /// External model input (activations fed at inference time).
+    Input,
+    /// Constant parameter resident in DRAM (weights, folded BN scales).
+    Weight,
+    /// Produced and consumed inside the graph.
+    Intermediate,
+    /// External model output; never eliminable by DME.
+    Output,
+}
+
+/// Full tensor record.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+    pub kind: TensorKind,
+}
+
+impl TensorInfo {
+    /// Number of elements.
+    pub fn numel(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// Total bytes.
+    pub fn size_bytes(&self) -> i64 {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        let t = TensorInfo {
+            id: TensorId(0),
+            name: "x".into(),
+            shape: vec![1, 64, 56, 56],
+            dtype: DType::F32,
+            kind: TensorKind::Intermediate,
+        };
+        assert_eq!(t.numel(), 64 * 56 * 56);
+        assert_eq!(t.size_bytes(), 64 * 56 * 56 * 4);
+        assert_eq!(t.ndim(), 4);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::I8.size_bytes(), 1);
+        assert_eq!(DType::I32.size_bytes(), 4);
+    }
+}

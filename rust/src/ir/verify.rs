@@ -1,0 +1,304 @@
+//! Structural verification of graphs and lowered programs.
+//!
+//! Run by tests and by the pass manager between passes: a pass that
+//! produces an inconsistent program is a bug, and catching it at the
+//! pass boundary localizes the fault.
+
+use super::graph::Graph;
+use super::loopnest::Program;
+use super::tensor::TensorKind;
+use std::collections::HashSet;
+
+/// A verification failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyError(pub String);
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "verify: {}", self.0)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Verify graph-level invariants:
+/// * SSA: every tensor has at most one producing node (`concat`'s
+///   multiple nests still belong to a single node);
+/// * topological node order (inputs produced before use);
+/// * every intermediate tensor has a producer and at least one consumer;
+/// * outputs have producers; inputs/weights have none;
+/// * all shapes agree with `OpKind::infer_shape`.
+pub fn verify_graph(g: &Graph) -> Result<(), VerifyError> {
+    // one-pass consumer counts (§Perf: replaces per-tensor
+    // `consumers()` scans, which made verification O(tensors × nodes))
+    let mut consumed: HashSet<crate::ir::TensorId> = HashSet::new();
+    for node in g.nodes() {
+        consumed.extend(node.inputs.iter().copied());
+    }
+    let mut produced = HashSet::new();
+    for node in g.nodes() {
+        for inp in &node.inputs {
+            let info = g.tensor(*inp);
+            match info.kind {
+                TensorKind::Input | TensorKind::Weight => {}
+                _ => {
+                    if !produced.contains(inp) {
+                        return Err(VerifyError(format!(
+                            "node {} uses {:?} before production (topo order broken)",
+                            node.name, inp
+                        )));
+                    }
+                }
+            }
+        }
+        if !produced.insert(node.output) {
+            return Err(VerifyError(format!(
+                "tensor {:?} produced by more than one node (SSA broken at {})",
+                node.output, node.name
+            )));
+        }
+        // shape check — skipped for DME-rewritten nodes, whose OpKind no
+        // longer describes their (composed) access pattern
+        if !node.rewritten {
+            let shapes: Vec<Vec<i64>> = node
+                .inputs
+                .iter()
+                .map(|t| g.tensor(*t).shape.clone())
+                .collect();
+            let refs: Vec<&[i64]> = shapes.iter().map(|s| s.as_slice()).collect();
+            let inferred = node
+                .kind
+                .infer_shape(&refs)
+                .map_err(|e| VerifyError(format!("node {}: {e}", node.name)))?;
+            if inferred != g.tensor(node.output).shape {
+                return Err(VerifyError(format!(
+                    "node {}: output shape {:?} != inferred {:?}",
+                    node.name,
+                    g.tensor(node.output).shape,
+                    inferred
+                )));
+            }
+        }
+    }
+    for t in g.tensors() {
+        match t.kind {
+            TensorKind::Input | TensorKind::Weight => {
+                if produced.contains(&t.id) {
+                    return Err(VerifyError(format!(
+                        "input/weight {:?} has a producer",
+                        t.id
+                    )));
+                }
+            }
+            TensorKind::Intermediate => {
+                if !produced.contains(&t.id) {
+                    return Err(VerifyError(format!(
+                        "intermediate {:?} ({}) has no producer",
+                        t.id, t.name
+                    )));
+                }
+                if !consumed.contains(&t.id) {
+                    return Err(VerifyError(format!(
+                        "intermediate {:?} ({}) is dead (no consumers)",
+                        t.id, t.name
+                    )));
+                }
+            }
+            TensorKind::Output => {
+                if !produced.contains(&t.id) {
+                    return Err(VerifyError(format!("output {:?} has no producer", t.id)));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Verify program-level invariants on the lowered nests:
+/// * every nest's store tensor exists; its map arity matches the domain
+///   and its image stays inside the tensor box;
+/// * every load piece's map arity matches; in-bounds unless `oob_zero`;
+/// * copy-nest load pieces cover the domain disjointly;
+/// * every tensor read by a nest is a graph input/weight or written by
+///   an earlier nest (schedule order).
+pub fn verify_program(p: &Program) -> Result<(), VerifyError> {
+    let g = &p.graph;
+    let mut written: HashSet<_> = g
+        .tensors()
+        .filter(|t| matches!(t.kind, TensorKind::Input | TensorKind::Weight))
+        .map(|t| t.id)
+        .collect();
+
+    for nest in &p.nests {
+        let dom = &nest.domain;
+        // store checks
+        let out_info = g.tensor(nest.store.tensor);
+        if nest.store.map.in_dims() != dom.ndim() {
+            return Err(VerifyError(format!(
+                "nest {}: store arity {} != domain {}",
+                nest.name,
+                nest.store.map.in_dims(),
+                dom.ndim()
+            )));
+        }
+        if nest.store.map.out_dims() != out_info.ndim() {
+            return Err(VerifyError(format!(
+                "nest {}: store rank {} != tensor rank {}",
+                nest.name,
+                nest.store.map.out_dims(),
+                out_info.ndim()
+            )));
+        }
+        if !nest.store.map.image_within(dom, &out_info.shape) {
+            return Err(VerifyError(format!(
+                "nest {}: store image escapes {:?}",
+                nest.name, out_info.shape
+            )));
+        }
+        // load checks
+        for load in nest.body.loads() {
+            if load.pieces.is_empty() {
+                return Err(VerifyError(format!("nest {}: empty load", nest.name)));
+            }
+            for piece in &load.pieces {
+                if piece.map.in_dims() != dom.ndim() {
+                    return Err(VerifyError(format!(
+                        "nest {}: load arity mismatch",
+                        nest.name
+                    )));
+                }
+                if let Some(t) = piece.tensor {
+                    if !written.contains(&t) {
+                        return Err(VerifyError(format!(
+                            "nest {}: reads {:?} before any writer",
+                            nest.name, t
+                        )));
+                    }
+                    let t_info = g.tensor(t);
+                    if piece.map.out_dims() != t_info.ndim() {
+                        return Err(VerifyError(format!(
+                            "nest {}: load rank mismatch on {:?}",
+                            nest.name, t
+                        )));
+                    }
+                    if !piece.oob_zero
+                        && piece.guards.is_empty()
+                        && !piece.map.image_within(dom, &t_info.shape)
+                    {
+                        return Err(VerifyError(format!(
+                            "nest {}: load image escapes {:?} {:?}",
+                            nest.name, t, t_info.shape
+                        )));
+                    }
+                }
+            }
+            // piecewise coverage (sampled for big domains)
+            if load.pieces.len() > 1 || !load.pieces[0].guards.is_empty() {
+                let pts: Vec<Vec<i64>> = if dom.cardinality() <= 2048 {
+                    dom.points().collect()
+                } else {
+                    dom.sample(256, 0xdead_beef)
+                };
+                for pt in &pts {
+                    let n = load.pieces.iter().filter(|a| a.holds(pt)).count();
+                    if n != 1 {
+                        return Err(VerifyError(format!(
+                            "nest {}: load pieces cover {pt:?} {n} times",
+                            nest.name
+                        )));
+                    }
+                }
+            }
+        }
+        written.insert(nest.store.tensor);
+    }
+
+    // every output tensor must be written by some nest
+    for out in g.outputs() {
+        if !written.contains(&out) {
+            return Err(VerifyError(format!("output {out:?} never written")));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::op::OpKind;
+    use crate::ir::tensor::DType;
+
+    fn sample_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 8, 8]);
+        let w = b.weight("w", &[8, 4, 3, 3]);
+        let c = b.conv2d("conv", x, w, 1, 1);
+        let t = b.transpose("tr", c, &[0, 2, 3, 1]);
+        let r = b.reshape("rs", t, &[1, 64, 8]);
+        b.mark_output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn good_graph_passes() {
+        let g = sample_graph();
+        verify_graph(&g).unwrap();
+        let p = Program::lower(g);
+        verify_program(&p).unwrap();
+    }
+
+    #[test]
+    fn detects_bad_shape() {
+        let mut g = sample_graph();
+        // corrupt a shape
+        let out = g.outputs()[0];
+        g.tensor_mut(out).shape = vec![1, 64, 9];
+        assert!(verify_graph(&g).is_err());
+    }
+
+    #[test]
+    fn detects_dead_intermediate() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4]);
+        let dead = b.identity("dead", x);
+        let live = b.identity("live", x);
+        b.mark_output(live);
+        let g = b.finish();
+        let err = verify_graph(&g).unwrap_err();
+        assert!(err.0.contains("dead"), "{err}");
+        let _ = dead;
+    }
+
+    #[test]
+    fn detects_out_of_order_reads() {
+        // hand-build a program whose nest order violates def-before-use
+        let g = sample_graph();
+        let mut p = Program::lower(g);
+        p.nests.swap(0, 2);
+        assert!(verify_program(&p).is_err());
+    }
+
+    #[test]
+    fn pad_and_concat_programs_verify() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 3, 10]);
+        let p1 = b.pad("pad", x, &[0, 0, 2], &[0, 0, 0]);
+        let s = b.split("sp", p1, 1, 3);
+        let c = b.concat("cat", &s, 2);
+        b.mark_output(c);
+        let g = b.finish();
+        verify_graph(&g).unwrap();
+        verify_program(&Program::lower(g)).unwrap();
+    }
+
+    #[test]
+    fn ssa_violation_detected() {
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[4], DType::F32, crate::ir::TensorKind::Input);
+        let y = g.add_tensor("y", &[4], DType::F32, crate::ir::TensorKind::Output);
+        g.add_node("a", OpKind::Identity, vec![x], y);
+        g.add_node("b", OpKind::Identity, vec![x], y);
+        assert!(verify_graph(&g).is_err());
+    }
+}

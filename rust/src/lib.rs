@@ -1,0 +1,39 @@
+//! # polymem — polyhedral memory-access optimization for DL accelerators
+//!
+//! A production-shaped reproduction of *"Optimizing Memory-Access
+//! Patterns for Deep Learning Accelerators"* (Zheng et al., AWS, 2020):
+//! the two global polyhedral optimizations of the Inferentia/Neuron
+//! compiler — **data-movement elimination** and **global memory-bank
+//! mapping** — together with everything they need to run and be
+//! evaluated end to end:
+//!
+//! * [`poly`] — integer quasi-affine algebra (the isl replacement):
+//!   access-map composition and exact reverse.
+//! * [`ir`] — a tensor-operator graph IR with per-operator affine
+//!   loop-nest lowering (the paper's §2 program representation).
+//! * [`passes`] — the paper's §2.1 DME and §2.2 bank-mapping passes,
+//!   plus the liveness/allocation support they depend on.
+//! * [`accel`] — a simulated Inferentia-class accelerator (banked
+//!   scratchpad + DMA byte accounting) used as the measurement
+//!   substrate for the paper's two experiments.
+//! * [`models`] — ResNet-50, a Parallel-WaveNet-shaped graph, and other
+//!   workload builders.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) from Rust.
+//! * [`coordinator`] — a batching inference server over the runtime.
+//! * [`report`] — paper-table formatting for the benchmark harness.
+//! * [`util`] — offline substitutes for clap/serde/criterion/proptest.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+
+pub mod accel;
+pub mod coordinator;
+pub mod ir;
+pub mod models;
+pub mod passes;
+pub mod poly;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,301 @@
+//! `polymem` — CLI for the compiler, simulator and serving layer.
+//!
+//! Commands:
+//! * `compile`  — run the pass pipeline on a model, print pass stats;
+//! * `simulate` — compile + replay on the accelerator model, print the
+//!   traffic report (optionally JSON);
+//! * `e1` / `e2` — regenerate the paper's two experiments as tables;
+//! * `serve`    — load an AOT artifact and run the batching server over
+//!   a synthetic request stream, printing latency/throughput.
+
+use polymem::accel::{simulate, AccelConfig};
+use polymem::coordinator::{PjrtBackend, Server, ServerConfig};
+use polymem::ir::Graph;
+use polymem::passes::manager::{BankMode, PassManager};
+use polymem::report;
+use polymem::runtime::RuntimeClient;
+use polymem::util::cli::{App, Command, Parsed};
+use std::time::{Duration, Instant};
+
+fn model_by_name(name: &str, batch: i64) -> Result<Graph, String> {
+    match name {
+        "resnet50" => Ok(polymem::models::resnet50(batch)),
+        "resnet18" => Ok(polymem::models::resnet18(batch)),
+        "wavenet" => Ok(polymem::models::parallel_wavenet()),
+        "mlp" => Ok(polymem::models::mlp(batch, 784, 512, 10, 4)),
+        "transformer" => Ok(polymem::models::transformer_block(128, 256, 8, 1024)),
+        "mobilenet" => Ok(polymem::models::mobilenet_v1(batch)),
+        "inception" => Ok(polymem::models::inception_stack(batch, 4)),
+        other => Err(format!(
+            "unknown model '{other}' (try resnet50|resnet18|wavenet|mlp|transformer|mobilenet|inception)"
+        )),
+    }
+}
+
+/// Resolve the workload: `--graph file.json` wins over `--model name`.
+fn graph_from_args(p: &Parsed) -> Result<Graph, String> {
+    let path = p.get("graph");
+    if !path.is_empty() {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let j = polymem::util::json::parse(&text).map_err(|e| e.to_string())?;
+        let g = polymem::ir::serde::graph_from_json(&j).map_err(|e| e.to_string())?;
+        polymem::ir::verify::verify_graph(&g).map_err(|e| e.to_string())?;
+        return Ok(g);
+    }
+    model_by_name(p.get("model"), p.get_usize("batch")? as i64)
+}
+
+fn accel_from_args(p: &Parsed) -> Result<AccelConfig, String> {
+    let mut cfg = AccelConfig::inferentia_like();
+    let path = p.get("accel-config");
+    if !path.is_empty() {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        let j = polymem::util::json::parse(&text).map_err(|e| e.to_string())?;
+        cfg = AccelConfig::from_json(&j)?;
+    }
+    if let Ok(b) = p.get_usize("banks") {
+        if b > 0 {
+            cfg.banks = b;
+        }
+    }
+    Ok(cfg)
+}
+
+fn pm_from_args(p: &Parsed) -> Result<PassManager, String> {
+    let mode = BankMode::parse(p.get("bank-mode"))
+        .ok_or_else(|| format!("bad --bank-mode '{}'", p.get("bank-mode")))?;
+    Ok(PassManager {
+        enable_dme: !p.has_flag("no-dme"),
+        bank_mode: mode,
+        verify: !p.has_flag("no-verify"),
+        ..Default::default()
+    })
+}
+
+fn cmd_compile(p: &Parsed) -> Result<(), String> {
+    let g = graph_from_args(p)?;
+    let pm = pm_from_args(p)?;
+    let t0 = Instant::now();
+    let rep = pm.run(g).map_err(|e| e.to_string())?;
+    println!("compiled '{}' in {:?}", p.get("model"), t0.elapsed());
+    if let Some(dme) = &rep.dme {
+        println!(
+            "  DME: {}/{} load-store pairs eliminated, {} freed, {} iterations ({:?})",
+            dme.pairs_eliminated,
+            dme.pairs_before,
+            report::mb(dme.bytes_eliminated),
+            dme.iterations,
+            rep.dme_time
+        );
+    }
+    if let Some(bank) = &rep.bank {
+        println!(
+            "  bank mapping ({:?}): {} remap copies, {} moved, {} edges clean ({:?})",
+            pm.bank_mode,
+            bank.stats.copies_inserted,
+            report::mb(bank.stats.copy_bytes),
+            bank.stats.edges_matched,
+            rep.bank_time
+        );
+    }
+    println!(
+        "  program: {} nests, {} copy nests, {} nodes",
+        rep.program.nests.len(),
+        rep.program.load_store_pairs(),
+        rep.program.graph.nodes().len()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(p: &Parsed) -> Result<(), String> {
+    let g = graph_from_args(p)?;
+    let pm = pm_from_args(p)?;
+    let cfg = accel_from_args(p)?;
+    let rep = pm.run(g).map_err(|e| e.to_string())?;
+    let sim = simulate(&rep.program, &cfg, None);
+    if p.has_flag("json") {
+        println!("{}", report::sim_to_json(&sim).to_string_pretty());
+    } else {
+        println!(
+            "model={} bank_mode={} accel={}",
+            p.get("model"),
+            p.get("bank-mode"),
+            cfg.name
+        );
+        println!("{}", sim.traffic.to_json().to_string_pretty());
+        println!("on-chip movement total: {}", report::mb(sim.onchip_movement_total()));
+        println!("off-chip total:         {}", report::mb(sim.offchip_total()));
+        println!("peak scratchpad:        {}", report::mb(sim.peak_scratchpad));
+        println!("estimated latency:      {:.3} ms", sim.seconds * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_export_graph(p: &Parsed) -> Result<(), String> {
+    let batch = p.get_usize("batch")? as i64;
+    let g = model_by_name(p.get("model"), batch)?;
+    let j = polymem::ir::serde::graph_to_json(&g);
+    std::fs::write(p.get("out"), j.to_string_pretty())
+        .map_err(|e| format!("writing {}: {e}", p.get("out")))?;
+    println!(
+        "wrote {} ({} nodes, {} tensors)",
+        p.get("out"),
+        g.nodes().len(),
+        g.tensors().count()
+    );
+    Ok(())
+}
+
+fn cmd_e1(_p: &Parsed) -> Result<(), String> {
+    let cfg = AccelConfig::inferentia_like();
+    let g = polymem::models::parallel_wavenet();
+    let before_prog = polymem::ir::Program::lower(g.clone());
+    let before = simulate(&before_prog, &cfg, None);
+    let mut prog = polymem::ir::Program::lower(g);
+    let stats = polymem::passes::dme::run_dme(&mut prog);
+    let after = simulate(&prog, &cfg, None);
+    println!("E1 — data-movement elimination on Parallel WaveNet\n");
+    println!("{}", report::e1_table(&stats, &before, &after));
+    Ok(())
+}
+
+fn cmd_e2(p: &Parsed) -> Result<(), String> {
+    let batch = p.get_usize("batch")? as i64;
+    let cfg = accel_from_args(p)?;
+    let mut results = vec![];
+    for mode in [BankMode::Local, BankMode::Global] {
+        let pm = PassManager { bank_mode: mode, ..Default::default() };
+        let rep = pm.run(polymem::models::resnet50(batch)).map_err(|e| e.to_string())?;
+        let sim = simulate(&rep.program, &cfg, None);
+        results.push((rep.bank.unwrap().stats, sim));
+    }
+    println!("E2 — global vs local bank mapping on ResNet-50 (batch {batch})\n");
+    println!(
+        "{}",
+        report::e2_table(&results[0].0, &results[1].0, &results[0].1, &results[1].1)
+    );
+    Ok(())
+}
+
+fn cmd_serve(p: &Parsed) -> Result<(), String> {
+    let artifact = p.get("artifact").to_string();
+    let batch = p.get_usize("batch")?;
+    let requests = p.get_usize("requests")?;
+    let side = p.get_usize("image-side")? as i64;
+    let channels = p.get_usize("channels")? as i64;
+    let classes = p.get_usize("classes")?;
+    let in_shape = vec![channels, side, side];
+    let cfg = ServerConfig {
+        max_batch: batch,
+        max_wait: Duration::from_millis(p.get_u64("max-wait-ms")?),
+        queue_cap: 4096,
+    };
+    let in_shape2 = in_shape.clone();
+    let srv = Server::start_with(
+        move || {
+            let rt = RuntimeClient::cpu()?;
+            println!("PJRT platform: {} ({} devices)", rt.platform(), rt.device_count());
+            let model = rt.load_hlo_text(std::path::Path::new(&artifact))?;
+            Ok(PjrtBackend::new(model, batch, &in_shape2, classes))
+        },
+        cfg,
+    )
+    .map_err(|e| e.to_string())?;
+
+    let in_len: i64 = in_shape.iter().product();
+    let mut rng = polymem::util::rng::SplitMix64::new(7);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let input: Vec<f32> =
+                (0..in_len).map(|_| rng.next_f64() as f32).collect();
+            srv.submit(input).map_err(|e| e.to_string())
+        })
+        .collect::<Result<_, _>>()?;
+    let mut checksum = 0f64;
+    for h in handles {
+        let out = h.wait().map_err(|e| e.to_string())?;
+        checksum += out.iter().map(|v| *v as f64).sum::<f64>();
+    }
+    let elapsed = t0.elapsed();
+    let snap = srv.metrics().snapshot();
+    println!(
+        "served {requests} requests in {elapsed:?} ({:.1} req/s)",
+        requests as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "latency mean {:?} p50 {:?} p99 {:?}; mean batch {:.2}; checksum {checksum:.4}",
+        snap.mean_latency, snap.p50_latency, snap.p99_latency, snap.mean_batch
+    );
+    srv.shutdown();
+    Ok(())
+}
+
+fn app() -> App {
+    App {
+        name: "polymem",
+        about: "polyhedral memory-access optimization for DL accelerators (Zheng et al. 2020 reproduction)",
+        commands: vec![
+            Command::new("compile", "run the pass pipeline on a model")
+                .opt("model", "resnet50", "model name")
+                .opt("graph", "", "JSON graph file (overrides --model)")
+                .opt("batch", "1", "batch size")
+                .opt("bank-mode", "global", "none|local|global")
+                .flag("no-dme", "disable data-movement elimination")
+                .flag("no-verify", "skip inter-pass verification"),
+            Command::new("simulate", "compile then replay on the accelerator model")
+                .opt("model", "resnet50", "model name")
+                .opt("graph", "", "JSON graph file (overrides --model)")
+                .opt("batch", "1", "batch size")
+                .opt("bank-mode", "global", "none|local|global")
+                .opt("banks", "0", "override bank count (0 = default)")
+                .opt("accel-config", "", "JSON accelerator config path")
+                .flag("no-dme", "disable data-movement elimination")
+                .flag("no-verify", "skip inter-pass verification")
+                .flag("json", "machine-readable output"),
+            Command::new("e1", "reproduce paper experiment 1 (WaveNet DME)"),
+            Command::new("export-graph", "write a built-in model as a JSON graph")
+                .opt("model", "resnet50", "model name")
+                .opt("batch", "1", "batch size")
+                .req("out", "output JSON path"),
+            Command::new("e2", "reproduce paper experiment 2 (ResNet-50 bank mapping)")
+                .opt("batch", "1", "batch size")
+                .opt("banks", "0", "override bank count (0 = default)")
+                .opt("accel-config", "", "JSON accelerator config path"),
+            Command::new("serve", "serve an AOT artifact with dynamic batching")
+                .opt("artifact", "artifacts/model.hlo.txt", "HLO text artifact")
+                .opt("batch", "8", "compiled batch size")
+                .opt("requests", "256", "synthetic requests to send")
+                .opt("image-side", "32", "input H=W")
+                .opt("channels", "3", "input channels")
+                .opt("classes", "10", "output classes")
+                .opt("max-wait-ms", "2", "batching deadline"),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let (cmd, parsed) = match app.dispatch(&argv) {
+        Ok(x) => x,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.name {
+        "compile" => cmd_compile(&parsed),
+        "simulate" => cmd_simulate(&parsed),
+        "e1" => cmd_e1(&parsed),
+        "export-graph" => cmd_export_graph(&parsed),
+        "e2" => cmd_e2(&parsed),
+        "serve" => cmd_serve(&parsed),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,103 @@
+//! Inception-style block stack — exercises `concat` (multi-writer
+//! tensors) through DME and bank mapping, the hardest memory-bound
+//! shape: a concatenated tensor's definition is piecewise and its
+//! placement must unify across all branch producers.
+
+use crate::ir::builder::GraphBuilder;
+use crate::ir::tensor::TensorId;
+use crate::ir::Graph;
+
+fn conv_relu(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    cin: i64,
+    cout: i64,
+    k: i64,
+) -> TensorId {
+    let w = b.weight(&format!("{name}_w"), &[cout, cin, k, k]);
+    let c = b.conv2d(name, x, w, 1, (k - 1) / 2);
+    b.relu(&format!("{name}_r"), c)
+}
+
+/// One inception block: 1×1 / 3×3 / 5×5 / pool-proj branches, channel
+/// concat.
+fn inception_block(b: &mut GraphBuilder, name: &str, x: TensorId, cin: i64) -> (TensorId, i64) {
+    let b1 = conv_relu(b, &format!("{name}_b1"), x, cin, 32, 1);
+    let b3a = conv_relu(b, &format!("{name}_b3a"), x, cin, 48, 1);
+    let b3 = conv_relu(b, &format!("{name}_b3"), b3a, 48, 64, 3);
+    let b5a = conv_relu(b, &format!("{name}_b5a"), x, cin, 16, 1);
+    let b5 = conv_relu(b, &format!("{name}_b5"), b5a, 16, 32, 5);
+    let pool = b.maxpool(&format!("{name}_pool"), x, 1, 1);
+    let pp = conv_relu(b, &format!("{name}_pp"), pool, cin, 32, 1);
+    let cat = b.concat(&format!("{name}_cat"), &[b1, b3, b5, pp], 1);
+    (cat, 32 + 64 + 32 + 32)
+}
+
+/// A small inception stack on 32×32 features.
+pub fn inception_stack(batch: i64, blocks: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input("image", &[batch, 3, 32, 32]);
+    let stem = conv_relu(&mut b, "stem", x, 3, 64, 3);
+    let mut cur = stem;
+    let mut c = 64;
+    for k in 0..blocks {
+        let (out, cout) = inception_block(&mut b, &format!("inc{k}"), cur, c);
+        cur = out;
+        c = cout;
+    }
+    let gap = b.gap("gap", cur);
+    let flat = b.reshape("flatten", gap, &[batch, c]);
+    let w = b.weight("fc_w", &[c, 10]);
+    let logits = b.matmul("fc", flat, w);
+    b.mark_output(logits);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::{verify_graph, verify_program};
+    use crate::ir::{OpKind, Program};
+    use crate::passes::dme::run_dme;
+    use crate::passes::manager::{BankMode, PassManager};
+
+    #[test]
+    fn builds_and_verifies() {
+        let g = inception_stack(1, 3);
+        verify_graph(&g).unwrap();
+        assert_eq!(
+            g.count_nodes(|n| matches!(n.kind, OpKind::Concat { .. })),
+            3
+        );
+        verify_program(&Program::lower(g)).unwrap();
+    }
+
+    #[test]
+    fn concat_feeding_convs_not_eliminable_but_flatten_is() {
+        // concats feed padded convs (oob_zero reads with multi-piece
+        // defs) → conservatively kept; the flatten reshape dies.
+        let mut prog = Program::lower(inception_stack(1, 2));
+        let stats = run_dme(&mut prog);
+        verify_program(&prog).unwrap();
+        assert!(stats.pairs_eliminated >= 1); // flatten at least
+    }
+
+    #[test]
+    fn concat_branches_unify_placement() {
+        let report = PassManager::default().run(inception_stack(1, 2)).unwrap();
+        let bank = report.bank.as_ref().unwrap();
+        // all four branch outputs of each concat share the concat's
+        // placement (transfer through concat along a non-banked axis is
+        // identity) — no remap copies needed anywhere in this topology
+        assert_eq!(bank.stats.copies_inserted, 0, "{:?}", bank.stats);
+    }
+
+    #[test]
+    fn local_pays_concat_branch_remaps() {
+        let pm = PassManager { bank_mode: BankMode::Local, ..Default::default() };
+        let report = pm.run(inception_stack(1, 2)).unwrap();
+        let bank = report.bank.as_ref().unwrap();
+        assert!(bank.stats.copies_inserted > 0);
+    }
+}

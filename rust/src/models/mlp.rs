@@ -1,0 +1,46 @@
+//! Small dense network — quickstart / smoke-test workload.
+
+use crate::ir::builder::GraphBuilder;
+use crate::ir::Graph;
+
+/// `depth` hidden layers of width `hidden` on a `[batch, input]` input.
+pub fn mlp(batch: i64, input: i64, hidden: i64, classes: i64, depth: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut x = b.input("x", &[batch, input]);
+    let mut cur = input;
+    for k in 0..depth {
+        let w = b.weight(&format!("w{k}"), &[cur, hidden]);
+        let h = b.matmul(&format!("fc{k}"), x, w);
+        let bias = b.weight(&format!("b{k}"), &[hidden]);
+        let hb = b.apply(&format!("bias{k}"), crate::ir::OpKind::BiasAdd, &[h, bias]);
+        x = b.relu(&format!("act{k}"), hb);
+        cur = hidden;
+    }
+    let w = b.weight("w_out", &[cur, classes]);
+    let logits = b.matmul("fc_out", x, w);
+    let sm = b.apply("probs", crate::ir::OpKind::Softmax, &[logits]);
+    b.mark_output(sm);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::{verify_graph, verify_program};
+    use crate::ir::Program;
+
+    #[test]
+    fn builds_and_verifies() {
+        let g = mlp(8, 784, 256, 10, 3);
+        verify_graph(&g).unwrap();
+        let out = g.outputs()[0];
+        assert_eq!(g.tensor(out).shape, vec![8, 10]);
+        verify_program(&Program::lower(g)).unwrap();
+    }
+
+    #[test]
+    fn no_copy_nests() {
+        let prog = Program::lower(mlp(4, 32, 16, 4, 2));
+        assert_eq!(prog.load_store_pairs(), 0);
+    }
+}

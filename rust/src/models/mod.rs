@@ -1,0 +1,25 @@
+//! Workload builders for the paper's evaluation and the extra examples.
+//!
+//! * [`resnet`] — ResNet-50 (and -18), the §3 global-bank-mapping
+//!   workload (E2).
+//! * [`wavenet`] — a Parallel-WaveNet-shaped flow stack, the §3
+//!   data-movement-elimination workload (E1): 124 load-store pairs of
+//!   which exactly one (the externally visible output layout copy)
+//!   is not eliminable.
+//! * [`mlp`] — small dense network (quickstart / smoke tests).
+//! * [`transformer`] — a transformer encoder block with the
+//!   transpose-heavy attention plumbing (extra DME workload).
+
+pub mod inception;
+pub mod mlp;
+pub mod mobilenet;
+pub mod resnet;
+pub mod transformer;
+pub mod wavenet;
+
+pub use inception::inception_stack;
+pub use mlp::mlp;
+pub use mobilenet::mobilenet_v1;
+pub use resnet::{resnet18, resnet50};
+pub use transformer::transformer_block;
+pub use wavenet::parallel_wavenet;

@@ -1,0 +1,187 @@
+//! ResNet-50 / ResNet-18 (He et al., CVPR 2016) inference graphs,
+//! NCHW, batch-norm folded to per-channel scale/shift, v1.5 strides
+//! (downsample on the 3×3 conv).
+//!
+//! The bank-mapping experiment (paper §3, E2) runs on `resnet50()`.
+
+use crate::ir::builder::GraphBuilder;
+use crate::ir::tensor::TensorId;
+use crate::ir::Graph;
+
+/// Conv + folded-BN + optional ReLU.
+fn conv_bn(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    cin: i64,
+    cout: i64,
+    k: i64,
+    stride: i64,
+    relu: bool,
+) -> TensorId {
+    let w = b.weight(&format!("{name}_w"), &[cout, cin, k, k]);
+    let c = b.conv2d(name, x, w, stride, (k - 1) / 2);
+    let bn = b.batchnorm(&format!("{name}_bn"), c);
+    if relu {
+        b.relu(&format!("{name}_relu"), bn)
+    } else {
+        bn
+    }
+}
+
+/// Bottleneck block (1×1 reduce → 3×3 → 1×1 expand) + shortcut.
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    cin: i64,
+    mid: i64,
+    cout: i64,
+    stride: i64,
+) -> TensorId {
+    let c1 = conv_bn(b, &format!("{name}_c1"), x, cin, mid, 1, 1, true);
+    let c2 = conv_bn(b, &format!("{name}_c2"), c1, mid, mid, 3, stride, true);
+    let c3 = conv_bn(b, &format!("{name}_c3"), c2, mid, cout, 1, 1, false);
+    let shortcut = if cin != cout || stride != 1 {
+        conv_bn(b, &format!("{name}_proj"), x, cin, cout, 1, stride, false)
+    } else {
+        x
+    };
+    let sum = b.add(&format!("{name}_add"), c3, shortcut);
+    b.relu(&format!("{name}_out"), sum)
+}
+
+/// Basic block (3×3 → 3×3) + shortcut, for ResNet-18.
+fn basic_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    cin: i64,
+    cout: i64,
+    stride: i64,
+) -> TensorId {
+    let c1 = conv_bn(b, &format!("{name}_c1"), x, cin, cout, 3, stride, true);
+    let c2 = conv_bn(b, &format!("{name}_c2"), c1, cout, cout, 3, 1, false);
+    let shortcut = if cin != cout || stride != 1 {
+        conv_bn(b, &format!("{name}_proj"), x, cin, cout, 1, stride, false)
+    } else {
+        x
+    };
+    let sum = b.add(&format!("{name}_add"), c2, shortcut);
+    b.relu(&format!("{name}_out"), sum)
+}
+
+fn stem(b: &mut GraphBuilder, batch: i64) -> TensorId {
+    let x = b.input("image", &[batch, 3, 224, 224]);
+    let c1 = conv_bn(b, "conv1", x, 3, 64, 7, 2, true);
+    b.maxpool("pool1", c1, 3, 2)
+}
+
+fn head(b: &mut GraphBuilder, x: TensorId, c: i64, batch: i64) -> TensorId {
+    let gap = b.gap("gap", x);
+    let flat = b.reshape("flatten", gap, &[batch, c]);
+    let wfc = b.weight("fc_w", &[c, 1000]);
+    let logits = b.matmul("fc", flat, wfc);
+    let bias = b.weight("fc_b", &[1000]);
+    b.apply("fc_bias", crate::ir::OpKind::BiasAdd, &[logits, bias])
+}
+
+/// Full ResNet-50 v1.5 inference graph.
+pub fn resnet50(batch: i64) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut x = stem(&mut b, batch);
+    // (blocks, mid, out, stride of first block)
+    let stages: [(usize, i64, i64, i64); 4] = [
+        (3, 64, 256, 1),
+        (4, 128, 512, 2),
+        (6, 256, 1024, 2),
+        (3, 512, 2048, 2),
+    ];
+    let mut cin = 64;
+    for (si, (blocks, mid, cout, stride)) in stages.iter().enumerate() {
+        for bi in 0..*blocks {
+            let s = if bi == 0 { *stride } else { 1 };
+            x = bottleneck(
+                &mut b,
+                &format!("s{}b{}", si + 1, bi),
+                x,
+                cin,
+                *mid,
+                *cout,
+                s,
+            );
+            cin = *cout;
+        }
+    }
+    let out = head(&mut b, x, 2048, batch);
+    b.mark_output(out);
+    b.finish()
+}
+
+/// ResNet-18 (basic blocks) — smaller bank-mapping workload.
+pub fn resnet18(batch: i64) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut x = stem(&mut b, batch);
+    let stages: [(usize, i64, i64); 4] =
+        [(2, 64, 1), (2, 128, 2), (2, 256, 2), (2, 512, 2)];
+    let mut cin = 64;
+    for (si, (blocks, cout, stride)) in stages.iter().enumerate() {
+        for bi in 0..*blocks {
+            let s = if bi == 0 { *stride } else { 1 };
+            x = basic_block(&mut b, &format!("s{}b{}", si + 1, bi), x, cin, *cout, s);
+            cin = *cout;
+        }
+    }
+    let out = head(&mut b, x, 512, batch);
+    b.mark_output(out);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tensor::TensorKind;
+    use crate::ir::verify::{verify_graph, verify_program};
+    use crate::ir::{OpKind, Program};
+
+    #[test]
+    fn resnet50_structure() {
+        let g = resnet50(1);
+        verify_graph(&g).unwrap();
+        let convs = g.count_nodes(|n| matches!(n.kind, OpKind::Conv2d { .. }));
+        // 1 stem + 3×(3+1) + 4×3+1 + 6×3+1 + 3×3+1 = 53
+        assert_eq!(convs, 53);
+        // ~25.5M params → ~102 MB fp32
+        let wb = g.bytes_of_kind(TensorKind::Weight);
+        assert!((90_000_000..115_000_000).contains(&wb), "weights {wb}B");
+        // output is [1, 1000]
+        let out = g.outputs()[0];
+        assert_eq!(g.tensor(out).shape, vec![1, 1000]);
+    }
+
+    #[test]
+    fn resnet50_lowers_and_verifies() {
+        let prog = Program::lower(resnet50(1));
+        verify_program(&prog).unwrap();
+        // only the flatten reshape is a copy nest
+        assert_eq!(prog.load_store_pairs(), 1);
+    }
+
+    #[test]
+    fn resnet18_structure() {
+        let g = resnet18(1);
+        verify_graph(&g).unwrap();
+        let convs = g.count_nodes(|n| matches!(n.kind, OpKind::Conv2d { .. }));
+        // 1 stem + 2×2×4 + 3 projections (stages 2-4) = 20
+        assert_eq!(convs, 20);
+        verify_program(&Program::lower(g)).unwrap();
+    }
+
+    #[test]
+    fn batch_dim_respected() {
+        let g = resnet50(4);
+        let out = g.outputs()[0];
+        assert_eq!(g.tensor(out).shape, vec![4, 1000]);
+        verify_graph(&g).unwrap();
+    }
+}

@@ -1,0 +1,364 @@
+//! Shared bank-mapping vocabulary (§2.2).
+//!
+//! ## The placement model
+//!
+//! The accelerator's scratchpad is organized as `B` banks with disjoint
+//! address spaces; each bank feeds one partition of the compute fabric.
+//! A tensor staged on chip is *spread* across banks along one of its
+//! dimensions — [`Placement::dim`] — and sits in one of two physical
+//! bank groups:
+//!
+//! * [`Align::Row`] — the banks wired to the systolic array's **row**
+//!   inputs. Operand tensors of matmul/conv **must** be Row-aligned on
+//!   their contraction/channel dimension (the paper: "data from
+//!   different channels of the feature map and weights must be mapped
+//!   to different memory banks").
+//! * [`Align::Col`] — the banks fed by the array's **column** outputs
+//!   (PSUM eviction side). Conv/matmul results arrive here, spread
+//!   along the output-channel dimension ("the result of the Conv2D
+//!   needs to be spread across several banks, guided by the different
+//!   output channels").
+//!
+//! Moving a tensor between placements is an inter-bank copy, which on
+//! this architecture transits the memory system (the paper: "data
+//! movement between different banks is very slow through the main
+//! memory").
+//!
+//! ## The compiler degree of freedom
+//!
+//! The eviction DMA can deposit a result into **either** group at equal
+//! cost — *if the destination is known when the operator is scheduled*.
+//! That is precisely what global propagation (§2.2) provides and local
+//! mapping lacks. The one hardware restriction we model: results wider
+//! than [`BankConfig::col_flex_limit`] output channels are streamed
+//! through more PSUM column groups than the crossbar can redirect, so
+//! their eviction is pinned to [`Align::Col`] — these are the residual
+//! copies that survive global mapping (the paper reports 24% of
+//! on-chip copy bytes remaining on ResNet-50).
+
+use crate::ir::graph::{Graph, Node};
+use crate::ir::op::OpKind;
+use crate::ir::tensor::TensorId;
+use std::collections::BTreeMap;
+
+/// Physical bank group.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Align {
+    Row,
+    Col,
+}
+
+/// How a tensor is spread across scratchpad banks.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Placement {
+    /// Tensor dimension distributed across banks.
+    pub dim: usize,
+    /// Bank group the tensor occupies.
+    pub align: Align,
+}
+
+impl Placement {
+    pub fn row(dim: usize) -> Placement {
+        Placement { dim, align: Align::Row }
+    }
+
+    pub fn col(dim: usize) -> Placement {
+        Placement { dim, align: Align::Col }
+    }
+}
+
+/// Bank-mapping configuration (chip parameters relevant to the passes).
+#[derive(Clone, Copy, Debug)]
+pub struct BankConfig {
+    /// Number of scratchpad banks per group.
+    pub banks: usize,
+    /// Above this output-channel count a conv/matmul result cannot be
+    /// redirected at eviction time and is pinned to `Col`.
+    pub col_flex_limit: i64,
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        // 16 banks per group; the eviction crossbar covers 4 column
+        // groups of 128 PEs → 512 output channels.
+        BankConfig { banks: 16, col_flex_limit: 512 }
+    }
+}
+
+/// The result of a bank-mapping pass: a placement per staged tensor and
+/// a graph extended with the `MemCopy` nodes realizing the remaining
+/// inter-bank moves. Both the local baseline and global mapping produce
+/// this, so the traffic simulator treats them identically.
+#[derive(Clone, Debug)]
+pub struct BankAssignment {
+    pub graph: Graph,
+    pub placements: BTreeMap<TensorId, Placement>,
+    pub stats: BankStats,
+}
+
+/// Pass statistics — inputs to the paper's E2 table.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BankStats {
+    /// Inter-bank remap copies inserted.
+    pub copies_inserted: usize,
+    /// Total bytes moved by those copies.
+    pub copy_bytes: i64,
+    /// Def-use edges whose placements agree (no copy).
+    pub edges_matched: usize,
+    /// Fixed-point iterations (global mapping only).
+    pub iterations: usize,
+}
+
+/// The hard placement requirement an operator imposes on one of its
+/// *activation* inputs (weights are staged by the DMA directly into the
+/// required arrangement and never pay a remap).
+pub fn input_requirement(node: &Node, input_pos: usize) -> Option<Placement> {
+    match &node.kind {
+        // MXU operators: activation operand must be Row-aligned on the
+        // contraction/channel dim.
+        OpKind::Conv2d { .. } | OpKind::DepthwiseConv2d { .. } => {
+            (input_pos == 0).then_some(Placement::row(1))
+        }
+        OpKind::Conv1d { .. } => (input_pos == 0).then_some(Placement::row(1)),
+        OpKind::MatMul => match input_pos {
+            0 => Some(Placement::row(1)), // [M, K] spread by K
+            _ => None,                    // weight operand
+        },
+        // Pooling engine reads channel-parallel, Row side.
+        OpKind::Pool { .. } | OpKind::GlobalAvgPool => Some(Placement::row(1)),
+        _ => None,
+    }
+}
+
+/// True when `input_pos` of this node is a weight-like operand
+/// (excluded from remap-copy accounting).
+pub fn is_weight_operand(g: &Graph, node: &Node, input_pos: usize) -> bool {
+    matches!(
+        g.tensor(node.inputs[input_pos]).kind,
+        crate::ir::tensor::TensorKind::Weight
+    )
+}
+
+/// The output-channel dimension of an MXU/pool operator, if any.
+pub fn out_channel_dim(kind: &OpKind) -> Option<usize> {
+    match kind {
+        OpKind::Conv2d { .. }
+        | OpKind::DepthwiseConv2d { .. }
+        | OpKind::Conv1d { .. }
+        | OpKind::Pool { .. }
+        | OpKind::GlobalAvgPool => Some(1),
+        OpKind::MatMul => Some(1),
+        _ => None,
+    }
+}
+
+/// Whether this node's result eviction is pinned to `Col`
+/// (output-channel count beyond the crossbar's flexibility).
+pub fn forced_col(g: &Graph, node: &Node, cfg: &BankConfig) -> bool {
+    match out_channel_dim(&node.kind) {
+        Some(d) if is_mxu(&node.kind) => {
+            g.tensor(node.output).shape[d] > cfg.col_flex_limit
+        }
+        _ => false,
+    }
+}
+
+/// MXU (systolic array) operators.
+pub fn is_mxu(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::Conv2d { .. }
+            | OpKind::DepthwiseConv2d { .. }
+            | OpKind::Conv1d { .. }
+            | OpKind::MatMul
+    )
+}
+
+/// Vector-engine operators: placement-transparent, but all activation
+/// operands and the result must share one placement.
+pub fn is_vector(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::Unary(_)
+            | OpKind::Binary(_)
+            | OpKind::BatchNorm
+            | OpKind::BiasAdd
+            | OpKind::Softmax
+    )
+}
+
+/// Transfer a placement **forward** through a memory-bound operator:
+/// given the placement of the input, the placement of the output that
+/// requires no inter-bank movement. `None` = the op inherently reshuffles
+/// the banked dim (a copy is unavoidable on this edge).
+pub fn transfer_forward(kind: &OpKind, in_shape: &[i64], p: Placement) -> Option<Placement> {
+    match kind {
+        OpKind::Identity | OpKind::MemCopy => Some(p),
+        OpKind::Transpose { perm } => {
+            // output dim d' reads input dim perm[d']; banked input dim p.dim
+            // appears at output position d' with perm[d'] == p.dim
+            let d2 = perm.iter().position(|&q| q == p.dim)?;
+            Some(Placement { dim: d2, align: p.align })
+        }
+        OpKind::Reshape { shape } => {
+            let d2 = reshape_dim_map(in_shape, shape, p.dim)?;
+            Some(Placement { dim: d2, align: p.align })
+        }
+        OpKind::Tile { reps } => {
+            // tiling along the banked dim replicates across banks → reshuffle
+            (reps[p.dim] == 1).then_some(p)
+        }
+        OpKind::Repeat { axis, .. } => (*axis != p.dim).then_some(p),
+        OpKind::StridedSlice { begin, stride, .. } => {
+            // slicing the banked dim keeps bank alignment only for a
+            // stride-1 prefix starting at a bank boundary (begin 0)
+            if begin[p.dim] == 0 && stride[p.dim] == 1 {
+                Some(p)
+            } else {
+                None
+            }
+        }
+        OpKind::Concat { axis } => (*axis != p.dim).then_some(p),
+        OpKind::Pad { lo, .. } => (lo[p.dim] == 0).then_some(p),
+        _ => None, // not a memory-bound op
+    }
+}
+
+/// Transfer a placement **backward** through a memory-bound operator:
+/// the input placement that produces the given output placement with no
+/// inter-bank movement.
+pub fn transfer_backward(kind: &OpKind, in_shape: &[i64], out_shape: &[i64], p: Placement) -> Option<Placement> {
+    match kind {
+        OpKind::Identity | OpKind::MemCopy => Some(p),
+        OpKind::Transpose { perm } => Some(Placement { dim: perm[p.dim], align: p.align }),
+        OpKind::Reshape { .. } => {
+            let d2 = reshape_dim_map(out_shape, in_shape, p.dim)?;
+            Some(Placement { dim: d2, align: p.align })
+        }
+        OpKind::Tile { reps } => (reps[p.dim] == 1).then_some(p),
+        OpKind::Repeat { axis, .. } => (*axis != p.dim).then_some(p),
+        OpKind::StridedSlice { begin, stride, .. } => {
+            if begin[p.dim] == 0 && stride[p.dim] == 1 {
+                Some(p)
+            } else {
+                None
+            }
+        }
+        OpKind::Concat { axis } => (*axis != p.dim).then_some(p),
+        OpKind::Pad { lo, .. } => (lo[p.dim] == 0).then_some(p),
+        _ => None,
+    }
+}
+
+/// Map a dimension through a reshape: dim `d` of `from` corresponds to a
+/// dim of `to` iff the row-major prefix products up to `d` and the
+/// extents match (the dimension survives as a whole unit).
+fn reshape_dim_map(from: &[i64], to: &[i64], d: usize) -> Option<usize> {
+    let prefix: i64 = from[..d].iter().product();
+    let mut acc = 1i64;
+    for (k, &e) in to.iter().enumerate() {
+        if acc == prefix && e == from[d] {
+            return Some(k);
+        }
+        acc *= e;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+
+    #[test]
+    fn requirements_for_conv_and_matmul() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 8, 8, 8]);
+        let w = b.weight("w", &[16, 8, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        let _ = c;
+        let g = b.finish();
+        let node = &g.nodes()[0];
+        assert_eq!(input_requirement(node, 0), Some(Placement::row(1)));
+        assert_eq!(input_requirement(node, 1), None);
+        assert!(is_weight_operand(&g, node, 1));
+        assert!(!is_weight_operand(&g, node, 0));
+        assert!(is_mxu(&node.kind));
+    }
+
+    #[test]
+    fn forced_col_thresholds() {
+        let cfg = BankConfig::default();
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 64, 8, 8]);
+        let w1 = b.weight("w1", &[256, 64, 1, 1]);
+        let c1 = b.conv2d("narrow", x, w1, 1, 0);
+        let w2 = b.weight("w2", &[1024, 256, 1, 1]);
+        let _c2 = b.conv2d("wide", c1, w2, 1, 0);
+        let g = b.finish();
+        let narrow = g.nodes().iter().find(|n| n.name == "narrow").unwrap();
+        let wide = g.nodes().iter().find(|n| n.name == "wide").unwrap();
+        assert!(!forced_col(&g, narrow, &cfg));
+        assert!(forced_col(&g, wide, &cfg));
+    }
+
+    #[test]
+    fn transpose_transfer_roundtrip() {
+        let kind = OpKind::Transpose { perm: vec![0, 2, 3, 1] };
+        let in_shape = [1, 64, 8, 8];
+        let out_shape = [1, 8, 8, 64];
+        let p = Placement::row(1);
+        let fwd = transfer_forward(&kind, &in_shape, p).unwrap();
+        assert_eq!(fwd.dim, 3); // channel dim moved to position 3
+        let back = transfer_backward(&kind, &in_shape, &out_shape, fwd).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn reshape_transfer() {
+        // [N, C, H, W] -> [N, C, H*W]: C survives
+        let kind = OpKind::Reshape { shape: vec![1, 64, 64] };
+        let p = transfer_forward(&kind, &[1, 64, 8, 8], Placement::row(1)).unwrap();
+        assert_eq!(p.dim, 1);
+        // [N, C, H, W] -> [N, C*H*W]: C destroyed
+        let kind2 = OpKind::Reshape { shape: vec![1, 4096] };
+        assert!(transfer_forward(&kind2, &[1, 64, 8, 8], Placement::row(1)).is_none());
+        // flatten [N, C, 1, 1] -> [N, C] keeps C
+        let kind3 = OpKind::Reshape { shape: vec![1, 2048] };
+        let p3 = transfer_forward(&kind3, &[1, 2048, 1, 1], Placement::row(1)).unwrap();
+        assert_eq!(p3.dim, 1);
+    }
+
+    #[test]
+    fn slice_tile_pad_transfers() {
+        let ss = OpKind::StridedSlice {
+            begin: vec![0, 0],
+            end: vec![2, 8],
+            stride: vec![1, 1],
+        };
+        assert!(transfer_forward(&ss, &[4, 8], Placement::row(0)).is_some());
+        let ss2 = OpKind::StridedSlice {
+            begin: vec![2, 0],
+            end: vec![4, 8],
+            stride: vec![1, 1],
+        };
+        assert!(transfer_forward(&ss2, &[4, 8], Placement::row(0)).is_none());
+        assert!(transfer_forward(&ss2, &[4, 8], Placement::row(1)).is_some());
+
+        let tile = OpKind::Tile { reps: vec![2, 1] };
+        assert!(transfer_forward(&tile, &[4, 8], Placement::row(0)).is_none());
+        assert!(transfer_forward(&tile, &[4, 8], Placement::row(1)).is_some());
+
+        let pad = OpKind::Pad { lo: vec![0, 2], hi: vec![0, 2] };
+        assert!(transfer_forward(&pad, &[4, 8], Placement::row(1)).is_none());
+        assert!(transfer_forward(&pad, &[4, 8], Placement::row(0)).is_some());
+    }
+
+    #[test]
+    fn vector_classification() {
+        assert!(is_vector(&OpKind::BatchNorm));
+        assert!(is_vector(&OpKind::Binary(crate::ir::op::BinaryFn::Add)));
+        assert!(!is_vector(&OpKind::MatMul));
+        assert!(!is_vector(&OpKind::Identity));
+    }
+}

@@ -1,0 +1,180 @@
+//! Tensor liveness over the nest schedule.
+//!
+//! The accelerator simulator's scratchpad allocator needs, for every
+//! schedule point, which tensors are live (produced, with a future
+//! read). Live ranges follow the linear nest order (the schedule the
+//! coordinator executes).
+
+use crate::ir::loopnest::Program;
+use crate::ir::tensor::{TensorId, TensorKind};
+use std::collections::BTreeMap;
+
+/// Live range of one tensor in schedule positions (nest indexes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LiveRange {
+    /// First schedule position that writes the tensor (usize::MAX for
+    /// inputs/weights: live from the start).
+    pub def: usize,
+    /// Last schedule position that reads the tensor (inclusive);
+    /// `usize::MAX` for graph outputs (live to the end).
+    pub last_use: usize,
+}
+
+/// Liveness result: ranges plus helpers for the allocator.
+#[derive(Clone, Debug)]
+pub struct Liveness {
+    pub ranges: BTreeMap<TensorId, LiveRange>,
+    /// Sorted read positions per tensor (§Perf: makes `next_use_after`
+    /// a binary search instead of a schedule scan — the simulator calls
+    /// it for every resident tensor at every step).
+    uses: BTreeMap<TensorId, Vec<usize>>,
+    n_points: usize,
+}
+
+impl Liveness {
+    /// Compute live ranges of every tensor over the program schedule.
+    pub fn analyze(prog: &Program) -> Liveness {
+        let mut ranges: BTreeMap<TensorId, LiveRange> = BTreeMap::new();
+        let mut uses: BTreeMap<TensorId, Vec<usize>> = BTreeMap::new();
+        for t in prog.graph.tensors() {
+            match t.kind {
+                TensorKind::Input | TensorKind::Weight => {
+                    ranges.insert(t.id, LiveRange { def: 0, last_use: 0 });
+                }
+                _ => {}
+            }
+        }
+        for (pos, nest) in prog.nests.iter().enumerate() {
+            for load in nest.body.loads() {
+                for piece in &load.pieces {
+                    if let Some(t) = piece.tensor {
+                        let r = ranges
+                            .entry(t)
+                            .or_insert(LiveRange { def: pos, last_use: pos });
+                        r.last_use = r.last_use.max(pos);
+                        let u = uses.entry(t).or_default();
+                        if u.last() != Some(&pos) {
+                            u.push(pos);
+                        }
+                    }
+                }
+            }
+            let out = nest.store.tensor;
+            let r = ranges
+                .entry(out)
+                .or_insert(LiveRange { def: pos, last_use: pos });
+            r.def = r.def.min(pos);
+        }
+        // outputs stay live to the end
+        for out in prog.graph.outputs() {
+            if let Some(r) = ranges.get_mut(&out) {
+                r.last_use = usize::MAX;
+            }
+        }
+        Liveness { ranges, uses, n_points: prog.nests.len() }
+    }
+
+    /// Is `t` live at schedule position `pos` (after its def, before or
+    /// at its last use)?
+    pub fn live_at(&self, t: TensorId, pos: usize) -> bool {
+        self.ranges
+            .get(&t)
+            .map(|r| r.def <= pos && pos <= r.last_use)
+            .unwrap_or(false)
+    }
+
+    /// Tensors live at a schedule position.
+    pub fn live_set(&self, pos: usize) -> Vec<TensorId> {
+        self.ranges
+            .iter()
+            .filter(|(_, r)| r.def <= pos && pos <= r.last_use)
+            .map(|(t, _)| *t)
+            .collect()
+    }
+
+    /// Peak sum of live intermediate bytes across the schedule — the
+    /// scratchpad footprint DME shrinks.
+    pub fn peak_live_bytes(&self, prog: &Program) -> i64 {
+        (0..self.n_points.max(1))
+            .map(|pos| {
+                self.live_set(pos)
+                    .iter()
+                    .filter(|t| {
+                        matches!(
+                            prog.graph.tensor(**t).kind,
+                            TensorKind::Intermediate | TensorKind::Output
+                        )
+                    })
+                    .map(|t| prog.graph.tensor(*t).size_bytes())
+                    .sum::<i64>()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Next read of `t` strictly after `pos`; `None` if dead after.
+    pub fn next_use_after(&self, _prog: &Program, t: TensorId, pos: usize) -> Option<usize> {
+        let r = self.ranges.get(&t)?;
+        if r.last_use == usize::MAX {
+            return Some(usize::MAX);
+        }
+        let u = self.uses.get(&t)?;
+        let k = u.partition_point(|&p| p <= pos);
+        u.get(k).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+
+    #[test]
+    fn straight_chain_ranges() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 4]);
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", t1, &[1, 0]);
+        let y = b.identity("y", t2);
+        b.mark_output(y);
+        let prog = Program::lower(b.finish());
+        let lv = Liveness::analyze(&prog);
+        assert_eq!(lv.ranges[&t1], LiveRange { def: 0, last_use: 1 });
+        assert_eq!(lv.ranges[&t2], LiveRange { def: 1, last_use: 2 });
+        assert_eq!(lv.ranges[&y].last_use, usize::MAX);
+        assert!(lv.live_at(t1, 0));
+        assert!(lv.live_at(t1, 1));
+        assert!(!lv.live_at(t1, 2));
+    }
+
+    #[test]
+    fn fanout_extends_range() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 4]);
+        let t1 = b.transpose("t1", x, &[1, 0]); // pos 0
+        let a = b.identity("a", t1); // pos 1
+        let bb = b.identity("b", t1); // pos 2
+        let c = b.concat("c", &[a, bb], 0); // pos 3,4
+        b.mark_output(c);
+        let prog = Program::lower(b.finish());
+        let lv = Liveness::analyze(&prog);
+        assert_eq!(lv.ranges[&t1], LiveRange { def: 0, last_use: 2 });
+        assert_eq!(lv.next_use_after(&prog, t1, 0), Some(1));
+        assert_eq!(lv.next_use_after(&prog, t1, 1), Some(2));
+        assert_eq!(lv.next_use_after(&prog, t1, 2), None);
+    }
+
+    #[test]
+    fn peak_bytes_reflects_overlap() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]); // 16 KiB
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", t1, &[1, 0]);
+        let y = b.identity("y", t2);
+        b.mark_output(y);
+        let prog = Program::lower(b.finish());
+        let lv = Liveness::analyze(&prog);
+        // at pos 1 both t1 and t2 are live: 32 KiB
+        assert_eq!(lv.peak_live_bytes(&prog), 2 * 64 * 64 * 4);
+    }
+}

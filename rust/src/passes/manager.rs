@@ -1,0 +1,239 @@
+//! Pass manager: ordered pipeline with per-pass statistics and
+//! inter-pass verification — the driver `polymem compile` runs.
+
+use super::bank::{BankAssignment, BankConfig};
+use super::dme::{run_dme, DmeStats};
+use crate::ir::loopnest::Program;
+use crate::ir::verify::{verify_graph, verify_program, VerifyError};
+use std::time::{Duration, Instant};
+
+/// Which bank-mapping algorithm to run (the paper's E2 comparison).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BankMode {
+    /// No bank mapping at all (for ablations).
+    None,
+    /// Per-operator local mapping (baseline).
+    Local,
+    /// §2.2 global fixed-point mapping.
+    Global,
+}
+
+impl BankMode {
+    pub fn parse(s: &str) -> Option<BankMode> {
+        match s {
+            "none" => Some(BankMode::None),
+            "local" => Some(BankMode::Local),
+            "global" => Some(BankMode::Global),
+            _ => None,
+        }
+    }
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PassManager {
+    pub enable_dme: bool,
+    pub bank_mode: BankMode,
+    pub bank_cfg: BankConfig,
+    /// Verify IR between passes (on by default; benches may disable).
+    pub verify: bool,
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        PassManager {
+            enable_dme: true,
+            bank_mode: BankMode::Global,
+            bank_cfg: BankConfig::default(),
+            verify: true,
+        }
+    }
+}
+
+/// Everything the pipeline produced, for reporting and simulation.
+#[derive(Clone, Debug)]
+pub struct PassReport {
+    /// The optimized program (nests post-DME; graph post-bank-mapping,
+    /// including inserted `MemCopy` nodes).
+    pub program: Program,
+    pub dme: Option<DmeStats>,
+    pub bank: Option<BankAssignment>,
+    pub dme_time: Duration,
+    pub bank_time: Duration,
+}
+
+impl PassManager {
+    /// Run the full pipeline on a graph.
+    pub fn run(&self, graph: crate::ir::Graph) -> Result<PassReport, VerifyError> {
+        if self.verify {
+            verify_graph(&graph)?;
+        }
+        let mut program = Program::lower(graph);
+        if self.verify {
+            verify_program(&program)?;
+        }
+
+        let mut dme_stats = None;
+        let t0 = Instant::now();
+        if self.enable_dme {
+            dme_stats = Some(run_dme(&mut program));
+            if self.verify {
+                verify_program(&program)?;
+            }
+        }
+        let dme_time = t0.elapsed();
+
+        let t1 = Instant::now();
+        let bank = match self.bank_mode {
+            BankMode::None => None,
+            BankMode::Local => Some(super::bank_local::run_local(&program.graph, &self.bank_cfg)),
+            BankMode::Global => {
+                Some(super::bank_global::run_global(&program.graph, &self.bank_cfg))
+            }
+        };
+        let bank_time = t1.elapsed();
+        if let (Some(b), true) = (&bank, self.verify) {
+            verify_graph(&b.graph)?;
+        }
+
+        // Patch the inserted MemCopy nodes into the (DME-optimized)
+        // program: one identity copy nest per MemCopy, inserted before
+        // its consumer's nests, with the consumer's loads re-pointed at
+        // the remapped tensor. Re-lowering the whole graph would lose
+        // the DME-composed access maps, so we splice instead.
+        let program = if let Some(b) = &bank {
+            let mut p2 = program;
+            splice_memcopies(&mut p2, &b.graph);
+            if self.verify {
+                verify_program(&p2)?;
+            }
+            p2
+        } else {
+            program
+        };
+
+        Ok(PassReport { program, dme: dme_stats, bank, dme_time, bank_time })
+    }
+}
+
+/// Splice the bank pass's `MemCopy` nodes into a lowered program:
+/// adopt the bank graph (which is the program's graph plus MemCopy
+/// nodes), add one identity copy nest per MemCopy before its consumer's
+/// first nest, and re-point that consumer's loads at the remapped
+/// tensor.
+fn splice_memcopies(prog: &mut Program, bank_graph: &crate::ir::Graph) {
+    use crate::ir::loopnest::{Body, LoadStmt, LoopNest, StoreStmt};
+    use crate::ir::op::OpKind;
+    use crate::poly::{AccessMap, IterDomain};
+
+    let memcopies: Vec<_> = bank_graph
+        .nodes()
+        .iter()
+        .filter(|n| matches!(n.kind, OpKind::MemCopy))
+        .cloned()
+        .collect();
+    prog.graph = bank_graph.clone();
+    for mc in memcopies {
+        let src = mc.inputs[0];
+        let dst = mc.output;
+        let consumers = prog.graph.consumers(dst);
+        assert_eq!(consumers.len(), 1, "memcopy feeds exactly one consumer");
+        let consumer = consumers[0].id;
+        let shape = prog.graph.tensor(src).shape.clone();
+        let nd = shape.len();
+        let nest = LoopNest {
+            node: mc.id,
+            name: mc.name.clone(),
+            domain: IterDomain::new(&shape),
+            store: StoreStmt { tensor: dst, map: AccessMap::identity(nd) },
+            body: Body::Copy { load: LoadStmt::total(src, AccessMap::identity(nd)) },
+        };
+        let pos = prog
+            .nests
+            .iter()
+            .position(|n| n.node == consumer)
+            .expect("consumer nest not found");
+        // re-point the consumer's loads from src to dst
+        for n in prog.nests.iter_mut().filter(|n| n.node == consumer) {
+            for load in n.body.loads_mut() {
+                for piece in &mut load.pieces {
+                    if piece.tensor == Some(src) {
+                        piece.tensor = Some(dst);
+                    }
+                }
+            }
+        }
+        prog.nests.insert(pos, nest);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+
+    fn sample() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 16, 8, 8]);
+        let t1 = b.transpose("t1", x, &[0, 2, 3, 1]);
+        let t2 = b.transpose("t2", t1, &[0, 3, 1, 2]);
+        let w = b.weight("w", &[16, 16, 3, 3]);
+        let c = b.conv2d("c", t2, w, 1, 1);
+        let r = b.relu("r", c);
+        let w2 = b.weight("w2", &[16, 16, 3, 3]);
+        let c2 = b.conv2d("c2", r, w2, 1, 1);
+        b.mark_output(c2);
+        b.finish()
+    }
+
+    #[test]
+    fn full_pipeline_runs() {
+        let report = PassManager::default().run(sample()).unwrap();
+        let dme = report.dme.unwrap();
+        assert_eq!(dme.tensors_eliminated, 2); // both transposes fold away
+        let bank = report.bank.as_ref().unwrap();
+        assert_eq!(bank.stats.copies_inserted, 0); // global mapping clean
+        // program reflects the bank graph
+        assert_eq!(
+            report.program.graph.nodes().len(),
+            bank.graph.nodes().len()
+        );
+    }
+
+    #[test]
+    fn local_mode_inserts_copies() {
+        let pm = PassManager { bank_mode: BankMode::Local, ..Default::default() };
+        let report = pm.run(sample()).unwrap();
+        let bank = report.bank.as_ref().unwrap();
+        assert!(bank.stats.copies_inserted >= 1);
+        // the memcopy nests survive the re-lowering + protected DME
+        let memcopies = report
+            .program
+            .graph
+            .count_nodes(|n| matches!(n.kind, crate::ir::OpKind::MemCopy));
+        assert_eq!(memcopies, bank.stats.copies_inserted);
+    }
+
+    #[test]
+    fn bank_none_skips() {
+        let pm = PassManager { bank_mode: BankMode::None, ..Default::default() };
+        let report = pm.run(sample()).unwrap();
+        assert!(report.bank.is_none());
+    }
+
+    #[test]
+    fn dme_disabled_keeps_pairs() {
+        let pm = PassManager { enable_dme: false, ..Default::default() };
+        let report = pm.run(sample()).unwrap();
+        assert!(report.dme.is_none());
+        assert!(report.program.load_store_pairs() >= 2);
+    }
+
+    #[test]
+    fn bank_mode_parsing() {
+        assert_eq!(BankMode::parse("local"), Some(BankMode::Local));
+        assert_eq!(BankMode::parse("global"), Some(BankMode::Global));
+        assert_eq!(BankMode::parse("none"), Some(BankMode::None));
+        assert_eq!(BankMode::parse("x"), None);
+    }
+}

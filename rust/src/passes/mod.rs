@@ -1,0 +1,27 @@
+//! Compiler passes — the paper's contribution.
+//!
+//! * [`dme`] — §2.1 data-movement elimination: load/store pair removal
+//!   by affine reverse + composition, iterated to a fixed point.
+//! * [`bank`] — shared bank-mapping vocabulary (placements, per-op
+//!   requirements, transfer functions through memory-bound operators).
+//! * [`bank_local`] — the paper's evaluation baseline: per-operator
+//!   local mapping, no propagation; every mismatched def-use edge pays
+//!   an inter-bank remap copy.
+//! * [`bank_global`] — §2.2 global mapping: fixed-point propagation of
+//!   bank mappings across the operator graph; residual conflicts
+//!   materialize explicit `MemCopy` nodes.
+//! * [`liveness`] — tensor live ranges over the nest schedule, used by
+//!   the accelerator simulator's scratchpad allocator.
+//! * [`manager`] — ordered pass driver with per-pass statistics and
+//!   inter-pass verification.
+
+pub mod bank;
+pub mod bank_global;
+pub mod bank_local;
+pub mod dme;
+pub mod liveness;
+pub mod manager;
+
+pub use bank::{Align, BankAssignment, BankConfig, Placement};
+pub use dme::{run_dme, DmeStats};
+pub use manager::{PassManager, PassReport};

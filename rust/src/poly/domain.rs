@@ -1,0 +1,192 @@
+//! Rectangular iteration domains.
+//!
+//! Every loop nest in the IR is normalized so loop `k` ranges over
+//! `[0, extents[k])` with step 1 — the standard normalization before
+//! polyhedral analysis. A tensor's index space is the same shape box.
+
+use std::fmt;
+
+/// A box domain `[0,e0) × [0,e1) × … × [0,en-1)`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct IterDomain {
+    extents: Vec<i64>,
+}
+
+impl IterDomain {
+    /// Build from extents; all extents must be ≥ 1.
+    pub fn new(extents: &[i64]) -> Self {
+        assert!(
+            extents.iter().all(|&e| e >= 1),
+            "IterDomain: non-positive extent in {extents:?}"
+        );
+        IterDomain { extents: extents.to_vec() }
+    }
+
+    /// 0-dimensional (single point) domain.
+    pub fn point() -> Self {
+        IterDomain { extents: vec![] }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.extents.len()
+    }
+
+    pub fn extents(&self) -> &[i64] {
+        &self.extents
+    }
+
+    /// Number of points (product of extents).
+    pub fn cardinality(&self) -> i64 {
+        self.extents.iter().product()
+    }
+
+    /// Membership test.
+    pub fn contains(&self, p: &[i64]) -> bool {
+        p.len() == self.extents.len()
+            && p.iter().zip(&self.extents).all(|(&x, &e)| x >= 0 && x < e)
+    }
+
+    /// Lexicographic iterator over all points. Only used by tests and
+    /// small-shape verification — never on full-size model tensors.
+    pub fn points(&self) -> DomainIter {
+        DomainIter { dom: self.clone(), cur: vec![0; self.extents.len()], done: self.cardinality() == 0 }
+    }
+
+    /// Deterministic pseudo-random sample of up to `n` points, seeded —
+    /// the workhorse of sampling-based map equivalence checks on big
+    /// domains.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<Vec<i64>> {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let p: Vec<i64> = self
+                .extents
+                .iter()
+                .map(|&e| (rng.next_u64() % (e as u64)) as i64)
+                .collect();
+            out.push(p);
+        }
+        out
+    }
+
+    /// Row-major linearization of a point (used to map an index vector
+    /// to a flat offset for traffic/trace accounting).
+    pub fn linearize(&self, p: &[i64]) -> i64 {
+        debug_assert!(self.contains(p), "linearize: {p:?} outside {self:?}");
+        let mut off = 0i64;
+        for (x, e) in p.iter().zip(&self.extents) {
+            off = off * e + x;
+        }
+        off
+    }
+
+    /// Inverse of [`Self::linearize`].
+    pub fn delinearize(&self, mut off: i64) -> Vec<i64> {
+        let mut p = vec![0i64; self.extents.len()];
+        for k in (0..self.extents.len()).rev() {
+            p[k] = off.rem_euclid(self.extents[k]);
+            off = off.div_euclid(self.extents[k]);
+        }
+        p
+    }
+}
+
+/// Lexicographic point iterator.
+pub struct DomainIter {
+    dom: IterDomain,
+    cur: Vec<i64>,
+    done: bool,
+}
+
+impl Iterator for DomainIter {
+    type Item = Vec<i64>;
+    fn next(&mut self) -> Option<Vec<i64>> {
+        if self.done {
+            return None;
+        }
+        let out = self.cur.clone();
+        // increment like an odometer
+        let mut k = self.cur.len();
+        loop {
+            if k == 0 {
+                self.done = true;
+                break;
+            }
+            k -= 1;
+            self.cur[k] += 1;
+            if self.cur[k] < self.dom.extents[k] {
+                break;
+            }
+            self.cur[k] = 0;
+        }
+        if self.cur.iter().all(|&x| x == 0) && !out.iter().all(|&x| x == 0) {
+            self.done = true;
+        }
+        Some(out)
+    }
+}
+
+impl fmt::Debug for IterDomain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Dom{:?}", self.extents)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cardinality_and_contains() {
+        let d = IterDomain::new(&[2, 3, 4]);
+        assert_eq!(d.cardinality(), 24);
+        assert!(d.contains(&[1, 2, 3]));
+        assert!(!d.contains(&[2, 0, 0]));
+        assert!(!d.contains(&[0, -1, 0]));
+        assert!(!d.contains(&[0, 0]));
+    }
+
+    #[test]
+    fn point_domain() {
+        let d = IterDomain::point();
+        assert_eq!(d.cardinality(), 1);
+        let pts: Vec<_> = d.points().collect();
+        assert_eq!(pts, vec![Vec::<i64>::new()]);
+    }
+
+    #[test]
+    fn points_enumerates_all() {
+        let d = IterDomain::new(&[2, 3]);
+        let pts: Vec<_> = d.points().collect();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], vec![0, 0]);
+        assert_eq!(pts[5], vec![1, 2]);
+        // all distinct
+        let mut sorted = pts.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6);
+    }
+
+    #[test]
+    fn linearize_roundtrip() {
+        let d = IterDomain::new(&[3, 4, 5]);
+        for p in d.points() {
+            let off = d.linearize(&p);
+            assert_eq!(d.delinearize(off), p);
+        }
+        assert_eq!(d.linearize(&[0, 0, 0]), 0);
+        assert_eq!(d.linearize(&[2, 3, 4]), 59);
+    }
+
+    #[test]
+    fn sample_in_domain_and_deterministic() {
+        let d = IterDomain::new(&[7, 11]);
+        let s1 = d.sample(100, 42);
+        let s2 = d.sample(100, 42);
+        assert_eq!(s1, s2);
+        assert!(s1.iter().all(|p| d.contains(p)));
+        let s3 = d.sample(100, 43);
+        assert_ne!(s1, s3);
+    }
+}

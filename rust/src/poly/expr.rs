@@ -1,0 +1,440 @@
+//! Quasi-affine expressions over loop indices.
+//!
+//! `Expr` is the scalar building block of access functions: affine terms
+//! `c0 + Σ ck·ik` plus `floordiv`/`mod` by positive constants. The
+//! div/mod forms are required because the *load* side of memory-bound
+//! operators is only quasi-affine: `tile` reads `src[i mod n]`, `repeat`
+//! reads `src[i div r]`. Composition (substitution) keeps the class
+//! closed, exactly like isl's quasi-affine expressions.
+
+use std::fmt;
+
+/// A quasi-affine scalar expression over input dimensions `d0..dn`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    /// Integer constant.
+    Cst(i64),
+    /// Input dimension `i_k`.
+    Dim(usize),
+    /// Sum of two expressions.
+    Add(Box<Expr>, Box<Expr>),
+    /// Scalar multiple `c · e`.
+    Mul(i64, Box<Expr>),
+    /// Floor division `⌊e / d⌋`, `d > 0`.
+    Div(Box<Expr>, i64),
+    /// Euclidean remainder `e mod d`, `d > 0`.
+    Mod(Box<Expr>, i64),
+}
+
+impl Expr {
+    pub fn cst(c: i64) -> Expr {
+        Expr::Cst(c)
+    }
+
+    pub fn dim(d: usize) -> Expr {
+        Expr::Dim(d)
+    }
+
+    pub fn add(self, rhs: Expr) -> Expr {
+        Expr::Add(Box::new(self), Box::new(rhs)).simplified()
+    }
+
+    pub fn sub(self, rhs: Expr) -> Expr {
+        self.add(rhs.scale(-1))
+    }
+
+    pub fn scale(self, c: i64) -> Expr {
+        Expr::Mul(c, Box::new(self)).simplified()
+    }
+
+    pub fn floordiv(self, d: i64) -> Expr {
+        assert!(d > 0, "floordiv by non-positive {d}");
+        Expr::Div(Box::new(self), d).simplified()
+    }
+
+    pub fn modulo(self, d: i64) -> Expr {
+        assert!(d > 0, "mod by non-positive {d}");
+        Expr::Mod(Box::new(self), d).simplified()
+    }
+
+    /// Evaluate at a concrete point.
+    pub fn eval(&self, point: &[i64]) -> i64 {
+        match self {
+            Expr::Cst(c) => *c,
+            Expr::Dim(d) => {
+                assert!(*d < point.len(), "eval: dim {d} out of range");
+                point[*d]
+            }
+            Expr::Add(a, b) => a.eval(point) + b.eval(point),
+            Expr::Mul(c, e) => c * e.eval(point),
+            Expr::Div(e, d) => e.eval(point).div_euclid(*d),
+            Expr::Mod(e, d) => e.eval(point).rem_euclid(*d),
+        }
+    }
+
+    /// Substitute each `Dim(k)` with `subs[k]` (composition).
+    pub fn substitute(&self, subs: &[Expr]) -> Expr {
+        match self {
+            Expr::Cst(c) => Expr::Cst(*c),
+            Expr::Dim(d) => {
+                assert!(*d < subs.len(), "substitute: dim {d} out of range");
+                subs[*d].clone()
+            }
+            Expr::Add(a, b) => a.substitute(subs).add(b.substitute(subs)),
+            Expr::Mul(c, e) => e.substitute(subs).scale(*c),
+            Expr::Div(e, d) => e.substitute(subs).floordiv(*d),
+            Expr::Mod(e, d) => e.substitute(subs).modulo(*d),
+        }
+    }
+
+    /// The number of input dims this expression mentions (1 + max dim).
+    pub fn arity(&self) -> usize {
+        match self {
+            Expr::Cst(_) => 0,
+            Expr::Dim(d) => d + 1,
+            Expr::Add(a, b) => a.arity().max(b.arity()),
+            Expr::Mul(_, e) | Expr::Div(e, _) | Expr::Mod(e, _) => e.arity(),
+        }
+    }
+
+    /// True when the expression contains no Div/Mod.
+    pub fn is_affine(&self) -> bool {
+        match self {
+            Expr::Cst(_) | Expr::Dim(_) => true,
+            Expr::Add(a, b) => a.is_affine() && b.is_affine(),
+            Expr::Mul(_, e) => e.is_affine(),
+            Expr::Div(..) | Expr::Mod(..) => false,
+        }
+    }
+
+    /// If affine, extract `(coeffs over n dims, constant)`.
+    pub fn as_affine(&self, n_dims: usize) -> Option<(Vec<i64>, i64)> {
+        let mut coeffs = vec![0i64; n_dims];
+        let mut cst = 0i64;
+        if self.accumulate_affine(1, &mut coeffs, &mut cst) {
+            Some((coeffs, cst))
+        } else {
+            None
+        }
+    }
+
+    fn accumulate_affine(&self, factor: i64, coeffs: &mut [i64], cst: &mut i64) -> bool {
+        match self {
+            Expr::Cst(c) => {
+                *cst += factor * c;
+                true
+            }
+            Expr::Dim(d) => {
+                if *d >= coeffs.len() {
+                    return false;
+                }
+                coeffs[*d] += factor;
+                true
+            }
+            Expr::Add(a, b) => {
+                a.accumulate_affine(factor, coeffs, cst)
+                    && b.accumulate_affine(factor, coeffs, cst)
+            }
+            Expr::Mul(c, e) => e.accumulate_affine(factor * c, coeffs, cst),
+            Expr::Div(..) | Expr::Mod(..) => false,
+        }
+    }
+
+    /// Structural simplification: constant folding, dropping zero terms,
+    /// collapsing nested scalings, resolving div/mod of constants.
+    /// Normal form keeps Add right-leaning; not a full canonicalizer but
+    /// enough to keep composed maps compact and to recognize identity.
+    pub fn simplified(self) -> Expr {
+        match self {
+            Expr::Add(a, b) => {
+                let a = a.simplified();
+                let b = b.simplified();
+                match (a, b) {
+                    (Expr::Cst(x), Expr::Cst(y)) => Expr::Cst(x + y),
+                    (Expr::Cst(0), e) | (e, Expr::Cst(0)) => e,
+                    // hoist constants to the right: (c + e) -> (e + c)
+                    (Expr::Cst(x), e) => Expr::Add(Box::new(e), Box::new(Expr::Cst(x))),
+                    // merge linear terms in `k·d + k'·d`
+                    (a, b) => {
+                        if let Some(m) = merge_linear(&a, &b) {
+                            m
+                        } else {
+                            Expr::Add(Box::new(a), Box::new(b))
+                        }
+                    }
+                }
+            }
+            Expr::Mul(c, e) => {
+                let e = e.simplified();
+                match (c, e) {
+                    (0, _) => Expr::Cst(0),
+                    (1, e) => e,
+                    (c, Expr::Cst(x)) => Expr::Cst(c * x),
+                    (c, Expr::Mul(c2, e2)) => Expr::Mul(c * c2, e2).simplified(),
+                    (c, Expr::Add(x, y)) => {
+                        Expr::Add(Box::new(Expr::Mul(c, x)), Box::new(Expr::Mul(c, y)))
+                            .simplified()
+                    }
+                    (c, e) => Expr::Mul(c, Box::new(e)),
+                }
+            }
+            Expr::Div(e, d) => {
+                let e = e.simplified();
+                match e {
+                    _ if d == 1 => e,
+                    Expr::Cst(x) => Expr::Cst(x.div_euclid(d)),
+                    // ⌊(d·q + r)/d⌋ = q when 0 ≤ r < d unknown; only fold exact scalings
+                    Expr::Mul(c, inner) if c % d == 0 => {
+                        Expr::Mul(c / d, inner).simplified()
+                    }
+                    e => Expr::Div(Box::new(e), d),
+                }
+            }
+            Expr::Mod(e, d) => {
+                let e = e.simplified();
+                match e {
+                    _ if d == 1 => Expr::Cst(0),
+                    Expr::Cst(x) => Expr::Cst(x.rem_euclid(d)),
+                    Expr::Mul(c, _) if c % d == 0 => Expr::Cst(0),
+                    Expr::Mod(inner, d2) if d2 % d == 0 => {
+                        // (e mod kd) mod d == e mod d
+                        Expr::Mod(inner, d).simplified()
+                    }
+                    e => Expr::Mod(Box::new(e), d),
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Simplify with knowledge that each `Dim(k)` ranges over
+    /// `[0, extents[k])`: resolves `Mod`/`Div` whose argument provably
+    /// fits inside the modulus. Used after composition to erase
+    /// redundant quasi-affine structure (e.g. `i mod n` when `i < n`).
+    pub fn simplified_in(self, extents: &[i64]) -> Expr {
+        let e = self.simplified();
+        match e {
+            Expr::Div(inner, d) => {
+                let inner = inner.simplified_in(extents);
+                if let Some((lo, hi)) = inner.range(extents) {
+                    if lo >= 0 && hi < d {
+                        return Expr::Cst(0);
+                    }
+                }
+                Expr::Div(Box::new(inner), d)
+            }
+            Expr::Mod(inner, d) => {
+                let inner = inner.simplified_in(extents);
+                if let Some((lo, hi)) = inner.range(extents) {
+                    if lo >= 0 && hi < d {
+                        return inner;
+                    }
+                }
+                Expr::Mod(Box::new(inner), d)
+            }
+            Expr::Add(a, b) => a.simplified_in(extents).add(b.simplified_in(extents)),
+            Expr::Mul(c, e2) => e2.simplified_in(extents).scale(c),
+            other => other,
+        }
+    }
+
+    /// Conservative value range of the expression when dim `k` ranges
+    /// over `[0, extents[k])`. Returns `None` if any dim is out of range.
+    pub fn range(&self, extents: &[i64]) -> Option<(i64, i64)> {
+        match self {
+            Expr::Cst(c) => Some((*c, *c)),
+            Expr::Dim(d) => {
+                let e = *extents.get(*d)?;
+                Some((0, e - 1))
+            }
+            Expr::Add(a, b) => {
+                let (al, ah) = a.range(extents)?;
+                let (bl, bh) = b.range(extents)?;
+                Some((al + bl, ah + bh))
+            }
+            Expr::Mul(c, e) => {
+                let (l, h) = e.range(extents)?;
+                if *c >= 0 {
+                    Some((c * l, c * h))
+                } else {
+                    Some((c * h, c * l))
+                }
+            }
+            Expr::Div(e, d) => {
+                let (l, h) = e.range(extents)?;
+                Some((l.div_euclid(*d), h.div_euclid(*d)))
+            }
+            Expr::Mod(e, d) => {
+                let (l, h) = e.range(extents)?;
+                if l >= 0 && h < *d {
+                    Some((l, h)) // no wrap
+                } else {
+                    Some((0, d - 1))
+                }
+            }
+        }
+    }
+
+    /// Count of Div/Mod nodes (a complexity measure used by tests and
+    /// the DME cost heuristics).
+    pub fn quasi_ops(&self) -> usize {
+        match self {
+            Expr::Cst(_) | Expr::Dim(_) => 0,
+            Expr::Add(a, b) => a.quasi_ops() + b.quasi_ops(),
+            Expr::Mul(_, e) => e.quasi_ops(),
+            Expr::Div(e, _) | Expr::Mod(e, _) => 1 + e.quasi_ops(),
+        }
+    }
+}
+
+/// Try to merge `c1·Dim(d) + c2·Dim(d)` shapes produced by composition.
+fn merge_linear(a: &Expr, b: &Expr) -> Option<Expr> {
+    fn as_scaled_dim(e: &Expr) -> Option<(i64, usize)> {
+        match e {
+            Expr::Dim(d) => Some((1, *d)),
+            Expr::Mul(c, inner) => match inner.as_ref() {
+                Expr::Dim(d) => Some((*c, *d)),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+    let (c1, d1) = as_scaled_dim(a)?;
+    let (c2, d2) = as_scaled_dim(b)?;
+    if d1 == d2 {
+        Some(Expr::Mul(c1 + c2, Box::new(Expr::Dim(d1))).simplified())
+    } else {
+        None
+    }
+}
+
+fn fmt_expr(e: &Expr, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    match e {
+        Expr::Cst(c) => write!(f, "{c}"),
+        Expr::Dim(d) => write!(f, "i{d}"),
+        Expr::Add(a, b) => write!(f, "({a} + {b})"),
+        Expr::Mul(c, e) => write!(f, "{c}*{e}"),
+        Expr::Div(e, d) => write!(f, "({e} div {d})"),
+        Expr::Mod(e, d) => write!(f, "({e} mod {d})"),
+    }
+}
+
+impl fmt::Debug for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_expr(self, f)
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_expr(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_basic() {
+        // 3*i0 + i1 + 5
+        let e = Expr::dim(0).scale(3).add(Expr::dim(1)).add(Expr::cst(5));
+        assert_eq!(e.eval(&[2, 7]), 18);
+    }
+
+    #[test]
+    fn eval_divmod_euclidean() {
+        let d = Expr::dim(0).floordiv(4);
+        let m = Expr::dim(0).modulo(4);
+        // we only use nonneg indices, but semantics must be euclidean
+        assert_eq!(d.eval(&[11]), 2);
+        assert_eq!(m.eval(&[11]), 3);
+    }
+
+    #[test]
+    fn simplify_folds_constants() {
+        let e = Expr::cst(3).add(Expr::cst(4)).scale(2);
+        assert_eq!(e, Expr::Cst(14));
+        let z = Expr::dim(0).scale(0);
+        assert_eq!(z, Expr::Cst(0));
+        let one = Expr::dim(2).scale(1);
+        assert_eq!(one, Expr::Dim(2));
+    }
+
+    #[test]
+    fn simplify_divmod() {
+        assert_eq!(Expr::dim(0).scale(8).floordiv(4), Expr::dim(0).scale(2));
+        assert_eq!(Expr::dim(0).scale(8).modulo(4), Expr::Cst(0));
+        assert_eq!(Expr::dim(0).floordiv(1), Expr::Dim(0));
+        assert_eq!(Expr::dim(0).modulo(1), Expr::Cst(0));
+    }
+
+    #[test]
+    fn substitution_is_composition() {
+        // f(i) = 2i + 1; g(j) = j + 3; f∘g (j) = 2j + 7
+        let fexpr = Expr::dim(0).scale(2).add(Expr::cst(1));
+        let g = Expr::dim(0).add(Expr::cst(3));
+        let fg = fexpr.substitute(&[g]);
+        for j in 0..20 {
+            assert_eq!(fg.eval(&[j]), 2 * j + 7);
+        }
+    }
+
+    #[test]
+    fn substitution_through_mod() {
+        // tile read: src[i mod 5]; composed with i = 5a + b (b<5)
+        let tile = Expr::dim(0).modulo(5);
+        let sub = Expr::dim(0).scale(5).add(Expr::dim(1));
+        let c = tile.substitute(&[sub]);
+        for a in 0..3 {
+            for b in 0..5 {
+                assert_eq!(c.eval(&[a, b]), b);
+            }
+        }
+    }
+
+    #[test]
+    fn domain_aware_simplify() {
+        // i1 mod 8 with i1 in [0,8) is i1
+        let e = Expr::dim(1).modulo(8).simplified_in(&[4, 8]);
+        assert_eq!(e, Expr::Dim(1));
+        // (4*i0 + i1) div 8 with i0<2,i1<4 → max 7 → 0
+        let e2 = Expr::dim(0)
+            .scale(4)
+            .add(Expr::dim(1))
+            .floordiv(8)
+            .simplified_in(&[2, 4]);
+        assert_eq!(e2, Expr::Cst(0));
+    }
+
+    #[test]
+    fn as_affine_extraction() {
+        let e = Expr::dim(0).scale(3).add(Expr::dim(2).scale(-2)).add(Expr::cst(7));
+        let (c, b) = e.as_affine(3).unwrap();
+        assert_eq!(c, vec![3, 0, -2]);
+        assert_eq!(b, 7);
+        assert!(Expr::dim(0).modulo(2).as_affine(1).is_none());
+    }
+
+    #[test]
+    fn range_analysis() {
+        let e = Expr::dim(0).scale(3).add(Expr::cst(-1));
+        assert_eq!(e.range(&[4]), Some((-1, 8)));
+        let m = Expr::dim(0).modulo(10);
+        assert_eq!(m.range(&[5]), Some((0, 4))); // no wrap
+        assert_eq!(m.range(&[50]), Some((0, 9))); // wraps
+    }
+
+    #[test]
+    fn merge_linear_terms() {
+        let e = Expr::dim(0).scale(2).add(Expr::dim(0).scale(3));
+        assert_eq!(e, Expr::dim(0).scale(5));
+    }
+
+    #[test]
+    fn quasi_ops_count() {
+        assert_eq!(Expr::dim(0).quasi_ops(), 0);
+        assert_eq!(Expr::dim(0).modulo(3).quasi_ops(), 1);
+        assert_eq!(Expr::dim(0).modulo(3).floordiv(2).quasi_ops(), 2);
+    }
+}

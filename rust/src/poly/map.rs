@@ -1,0 +1,374 @@
+//! Access maps: vectors of quasi-affine expressions mapping a loop
+//! space into a tensor index space, with the two operations the paper's
+//! DME pass is built on (§2.1):
+//!
+//! * **composition** — `g_ls = f_l ∘ f_s'` (paper eq. 1) and
+//!   `g' = g_ls ∘ f_l'` (paper eq. 2) are [`AccessMap::compose`];
+//! * **reverse** — `f_s' : idx ↦ i` is [`AccessMap::reverse`], the exact
+//!   integer inversion of an injective affine map via the Smith normal
+//!   form ([`crate::poly::smith::left_inverse`]).
+
+use super::domain::IterDomain;
+use super::expr::Expr;
+use super::matrix::IMat;
+use super::smith::left_inverse;
+use std::fmt;
+
+/// A map `f : ℤ^in_dims → ℤ^(exprs.len())`, `f(i) = (e0(i), …, em-1(i))`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct AccessMap {
+    in_dims: usize,
+    exprs: Vec<Expr>,
+}
+
+impl AccessMap {
+    /// Build from expressions. `in_dims` must cover every dim mentioned.
+    pub fn new(in_dims: usize, exprs: Vec<Expr>) -> Self {
+        for e in &exprs {
+            assert!(
+                e.arity() <= in_dims,
+                "AccessMap: expr {e} mentions dim >= in_dims {in_dims}"
+            );
+        }
+        AccessMap { in_dims, exprs }
+    }
+
+    /// Identity map on `n` dims.
+    pub fn identity(n: usize) -> Self {
+        AccessMap::new(n, (0..n).map(Expr::dim).collect())
+    }
+
+    /// Pure-affine map from matrix + offset: `f(i) = C·i + b`.
+    pub fn affine(c: &IMat, b: &[i64]) -> Self {
+        assert_eq!(c.rows(), b.len(), "affine: C/b mismatch");
+        let exprs = (0..c.rows())
+            .map(|r| {
+                let mut e = Expr::cst(b[r]);
+                for j in 0..c.cols() {
+                    let coef = c[(r, j)];
+                    if coef != 0 {
+                        e = e.add(Expr::dim(j).scale(coef));
+                    }
+                }
+                e
+            })
+            .collect();
+        AccessMap::new(c.cols(), exprs)
+    }
+
+    /// Dimension-permutation map: output `k` reads input dim `perm[k]`
+    /// (i.e. `f(i)[k] = i[perm[k]]` — the access function of a
+    /// `transpose` whose output axis `k` comes from input axis `perm[k]`).
+    pub fn permute(perm: &[usize]) -> Self {
+        AccessMap::new(perm.len(), perm.iter().map(|&p| Expr::dim(p)).collect())
+    }
+
+    pub fn in_dims(&self) -> usize {
+        self.in_dims
+    }
+
+    pub fn out_dims(&self) -> usize {
+        self.exprs.len()
+    }
+
+    pub fn exprs(&self) -> &[Expr] {
+        &self.exprs
+    }
+
+    /// Evaluate at a point.
+    pub fn apply(&self, p: &[i64]) -> Vec<i64> {
+        assert_eq!(p.len(), self.in_dims, "apply: arity mismatch");
+        self.exprs.iter().map(|e| e.eval(p)).collect()
+    }
+
+    /// Composition `self ∘ inner`: first apply `inner`, then `self`.
+    /// `inner.out_dims()` must equal `self.in_dims()`.
+    pub fn compose(&self, inner: &AccessMap) -> AccessMap {
+        assert_eq!(
+            inner.out_dims(),
+            self.in_dims,
+            "compose: inner out {} != self in {}",
+            inner.out_dims(),
+            self.in_dims
+        );
+        let exprs = self
+            .exprs
+            .iter()
+            .map(|e| e.substitute(&inner.exprs))
+            .collect();
+        AccessMap::new(inner.in_dims, exprs)
+    }
+
+    /// True if every component is pure-affine (no div/mod).
+    pub fn is_affine(&self) -> bool {
+        self.exprs.iter().all(|e| e.is_affine())
+    }
+
+    /// Extract `(C, b)` with `f(i) = C·i + b` when pure-affine.
+    pub fn as_affine(&self) -> Option<(IMat, Vec<i64>)> {
+        let mut c = IMat::zeros(self.out_dims(), self.in_dims);
+        let mut b = vec![0i64; self.out_dims()];
+        for (r, e) in self.exprs.iter().enumerate() {
+            let (coeffs, cst) = e.as_affine(self.in_dims)?;
+            for (j, &v) in coeffs.iter().enumerate() {
+                c[(r, j)] = v;
+            }
+            b[r] = cst;
+        }
+        Some((c, b))
+    }
+
+    /// The paper's *reverse* `f' : idx ↦ i` (§2.1): exact integer left
+    /// inverse of an injective pure-affine map. Returns `None` when the
+    /// map is quasi-affine, rank-deficient, or strided (invariant factor
+    /// > 1) — i.e. when no affine reverse exists, matching isl behaviour
+    /// restricted to single-valued affine reverses.
+    pub fn reverse(&self) -> Option<AccessMap> {
+        let (c, b) = self.as_affine()?;
+        let l = left_inverse(&c)?;
+        // i = L·(idx − b) = L·idx − L·b
+        let neg_lb: Vec<i64> = l.mul_vec(&b).iter().map(|x| -x).collect();
+        Some(AccessMap::affine(&l, &neg_lb))
+    }
+
+    /// Is this a pure dimension permutation (each component a distinct
+    /// bare `Dim`, square)? Permutations map out-of-bounds points to
+    /// out-of-bounds points, which makes them safe to compose under
+    /// implicit-padding (`oob_zero`) reads.
+    pub fn is_permutation(&self) -> bool {
+        if self.in_dims != self.out_dims() {
+            return false;
+        }
+        let mut seen = vec![false; self.in_dims];
+        for e in &self.exprs {
+            match e {
+                Expr::Dim(d) if !seen[*d] => seen[*d] = true,
+                _ => return false,
+            }
+        }
+        true
+    }
+
+    /// Is the identity map (after simplification)?
+    pub fn is_identity(&self) -> bool {
+        self.in_dims == self.out_dims()
+            && self
+                .exprs
+                .iter()
+                .enumerate()
+                .all(|(k, e)| matches!(e, Expr::Dim(d) if *d == k))
+    }
+
+    /// Simplify each component knowing the input domain extents.
+    pub fn simplified_in(&self, dom: &IterDomain) -> AccessMap {
+        assert_eq!(dom.ndim(), self.in_dims);
+        AccessMap::new(
+            self.in_dims,
+            self.exprs
+                .iter()
+                .map(|e| e.clone().simplified_in(dom.extents()))
+                .collect(),
+        )
+    }
+
+    /// Conservative bounding box of the image over `dom`; `None` if the
+    /// map mentions dims beyond the domain.
+    pub fn image_bounds(&self, dom: &IterDomain) -> Option<Vec<(i64, i64)>> {
+        self.exprs.iter().map(|e| e.range(dom.extents())).collect()
+    }
+
+    /// Check (by exhaustive or sampled evaluation) that the image over
+    /// `dom` stays inside the tensor box `shape`. Exhaustive when the
+    /// domain is small, sampled otherwise; the conservative
+    /// `image_bounds` check runs first and is sufficient when it passes.
+    pub fn image_within(&self, dom: &IterDomain, shape: &[i64]) -> bool {
+        if let Some(bounds) = self.image_bounds(dom) {
+            if bounds.len() == shape.len()
+                && bounds
+                    .iter()
+                    .zip(shape)
+                    .all(|(&(lo, hi), &s)| lo >= 0 && hi < s)
+            {
+                return true;
+            }
+        }
+        // fall back to sampling (bounds are conservative, may be loose)
+        let box_ = IterDomain::new(shape);
+        let pts: Vec<Vec<i64>> = if dom.cardinality() <= 4096 {
+            dom.points().collect()
+        } else {
+            dom.sample(512, 0x9e3779b97f4a7c15)
+        };
+        pts.iter().all(|p| box_.contains(&self.apply(p)))
+    }
+
+    /// Injectivity check over a domain. Affine maps are decided exactly
+    /// via rank + invariant factors when possible; otherwise (and for
+    /// quasi-affine maps) the check is by evaluation — exhaustive on
+    /// small domains, sampled on large ones (sound in practice for the
+    /// structured maps operators produce; the DME pass additionally
+    /// requires an exact affine reverse before rewriting, so a sampling
+    /// false-positive cannot produce a wrong rewrite).
+    pub fn is_injective_on(&self, dom: &IterDomain) -> bool {
+        if let Some((c, _)) = self.as_affine() {
+            if c.rank() == self.in_dims {
+                return true; // full column rank ⇒ injective on ℤ^n
+            }
+            if dom.ndim() == self.in_dims && dom.cardinality() > 1 {
+                // rank-deficient affine: injective only on degenerate domains
+                return dom
+                    .extents()
+                    .iter()
+                    .enumerate()
+                    .all(|(k, &e)| e == 1 || col_nonzero(&c, k));
+            }
+        }
+        let pts: Vec<Vec<i64>> = if dom.cardinality() <= 4096 {
+            dom.points().collect()
+        } else {
+            dom.sample(512, 0x51a5b1c3d5e7f901)
+        };
+        let mut seen = std::collections::HashSet::new();
+        for p in &pts {
+            if !seen.insert(self.apply(p)) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+fn col_nonzero(c: &IMat, j: usize) -> bool {
+    (0..c.rows()).any(|i| c[(i, j)] != 0)
+}
+
+impl fmt::Debug for AccessMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for k in 0..self.in_dims {
+            if k > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "i{k}")?;
+        }
+        write!(f, ") -> [")?;
+        for (k, e) in self.exprs.iter().enumerate() {
+            if k > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_applies() {
+        let id = AccessMap::identity(3);
+        assert!(id.is_identity());
+        assert_eq!(id.apply(&[4, 5, 6]), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn permute_is_transpose_access() {
+        // output[k0,k1] = input[k1,k0]: out axis 0 reads in axis 1
+        let t = AccessMap::permute(&[1, 0]);
+        assert_eq!(t.apply(&[3, 7]), vec![7, 3]);
+    }
+
+    #[test]
+    fn compose_matches_pointwise() {
+        let f = AccessMap::new(
+            2,
+            vec![Expr::dim(0).scale(2).add(Expr::dim(1)), Expr::dim(1).add(Expr::cst(3))],
+        );
+        let g = AccessMap::new(2, vec![Expr::dim(1), Expr::dim(0)]);
+        let fg = f.compose(&g);
+        let dom = IterDomain::new(&[5, 5]);
+        for p in dom.points() {
+            assert_eq!(fg.apply(&p), f.apply(&g.apply(&p)));
+        }
+    }
+
+    #[test]
+    fn reverse_of_permutation() {
+        let t = AccessMap::permute(&[2, 0, 1]);
+        let r = t.reverse().unwrap();
+        let dom = IterDomain::new(&[3, 4, 5]);
+        for p in dom.points() {
+            assert_eq!(r.apply(&t.apply(&p)), p);
+        }
+    }
+
+    #[test]
+    fn reverse_of_offset_map() {
+        // slice store-like: f(i) = i + 10 (1-D shift)
+        let f = AccessMap::new(1, vec![Expr::dim(0).add(Expr::cst(10))]);
+        let r = f.reverse().unwrap();
+        assert_eq!(r.apply(&[17]), vec![7]);
+    }
+
+    #[test]
+    fn reverse_rejects_stride_and_quasi() {
+        let strided = AccessMap::new(1, vec![Expr::dim(0).scale(2)]);
+        assert!(strided.reverse().is_none());
+        let quasi = AccessMap::new(1, vec![Expr::dim(0).modulo(4)]);
+        assert!(quasi.reverse().is_none());
+    }
+
+    #[test]
+    fn reverse_unimodular_shear() {
+        let c = IMat::from_rows(&[&[1, 1], &[0, 1]]);
+        let f = AccessMap::affine(&c, &[5, -2]);
+        let r = f.reverse().unwrap();
+        let dom = IterDomain::new(&[6, 6]);
+        for p in dom.points() {
+            assert_eq!(r.apply(&f.apply(&p)), p);
+        }
+    }
+
+    #[test]
+    fn as_affine_roundtrip() {
+        let c = IMat::from_rows(&[&[2, 0, 1], &[0, -3, 0]]);
+        let f = AccessMap::affine(&c, &[7, 8]);
+        let (c2, b2) = f.as_affine().unwrap();
+        assert_eq!(c2, c);
+        assert_eq!(b2, vec![7, 8]);
+    }
+
+    #[test]
+    fn injectivity() {
+        let dom = IterDomain::new(&[4, 4]);
+        assert!(AccessMap::identity(2).is_injective_on(&dom));
+        assert!(AccessMap::permute(&[1, 0]).is_injective_on(&dom));
+        // broadcast-like map drops a dim: not injective
+        let drop = AccessMap::new(2, vec![Expr::dim(0)]);
+        assert!(!drop.is_injective_on(&dom));
+        // tile read i mod 2 not injective on [0,4)
+        let tile = AccessMap::new(1, vec![Expr::dim(0).modulo(2)]);
+        assert!(!tile.is_injective_on(&IterDomain::new(&[4])));
+    }
+
+    #[test]
+    fn image_within_checks() {
+        let dom = IterDomain::new(&[4, 4]);
+        let id = AccessMap::identity(2);
+        assert!(id.image_within(&dom, &[4, 4]));
+        assert!(!id.image_within(&dom, &[3, 4]));
+        let shifted = AccessMap::new(2, vec![Expr::dim(0).add(Expr::cst(2)), Expr::dim(1)]);
+        assert!(shifted.image_within(&dom, &[6, 4]));
+        assert!(!shifted.image_within(&dom, &[4, 4]));
+    }
+
+    #[test]
+    fn simplified_in_domain() {
+        // repeat-load composed back often leaves (i mod n) with i < n
+        let m = AccessMap::new(1, vec![Expr::dim(0).modulo(8)]);
+        let s = m.simplified_in(&IterDomain::new(&[8]));
+        assert!(s.is_identity());
+    }
+}

@@ -1,0 +1,359 @@
+//! Dense integer matrices over ℤ (`i64`) — just enough linear algebra
+//! for affine-map composition and exact inversion: multiplication,
+//! identity/permutation constructors, determinant (Bareiss,
+//! fraction-free), and adjugate-based exact inverse for unimodular-ish
+//! matrices. Larger solves go through [`crate::poly::smith`].
+
+use std::fmt;
+
+/// A dense `rows × cols` integer matrix, row-major.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct IMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<i64>,
+}
+
+impl IMat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        IMat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = IMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1;
+        }
+        m
+    }
+
+    /// Build from a row-major slice of rows.
+    pub fn from_rows(rows: &[&[i64]]) -> Self {
+        assert!(!rows.is_empty(), "from_rows: empty");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "from_rows: ragged rows");
+            data.extend_from_slice(r);
+        }
+        IMat { rows: rows.len(), cols, data }
+    }
+
+    /// Permutation matrix P with `P·e_j = e_{perm[j]}`, i.e. applying
+    /// the matrix to a vector moves component `j` to row `perm[j]`.
+    pub fn permutation(perm: &[usize]) -> Self {
+        let n = perm.len();
+        let mut m = IMat::zeros(n, n);
+        let mut seen = vec![false; n];
+        for (j, &p) in perm.iter().enumerate() {
+            assert!(p < n && !seen[p], "permutation: not a permutation");
+            seen[p] = true;
+            m[(p, j)] = 1;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Matrix product `self · rhs`.
+    pub fn mul(&self, rhs: &IMat) -> IMat {
+        assert_eq!(self.cols, rhs.rows, "mul: dim mismatch");
+        let mut out = IMat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out[(i, j)] += a * rhs[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self · v`.
+    pub fn mul_vec(&self, v: &[i64]) -> Vec<i64> {
+        assert_eq!(self.cols, v.len(), "mul_vec: dim mismatch");
+        (0..self.rows)
+            .map(|i| (0..self.cols).map(|j| self[(i, j)] * v[j]).sum())
+            .collect()
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> IMat {
+        let mut out = IMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Determinant by the Bareiss fraction-free algorithm (exact over ℤ).
+    /// Panics unless square.
+    pub fn det(&self) -> i64 {
+        assert_eq!(self.rows, self.cols, "det: not square");
+        let n = self.rows;
+        if n == 0 {
+            return 1;
+        }
+        let mut a: Vec<i128> = self.data.iter().map(|&x| x as i128).collect();
+        let idx = |i: usize, j: usize| i * n + j;
+        let mut sign = 1i128;
+        let mut prev = 1i128;
+        for k in 0..n - 1 {
+            if a[idx(k, k)] == 0 {
+                // pivot search
+                let mut piv = None;
+                for i in k + 1..n {
+                    if a[idx(i, k)] != 0 {
+                        piv = Some(i);
+                        break;
+                    }
+                }
+                let Some(p) = piv else { return 0 };
+                for j in 0..n {
+                    a.swap(idx(k, j), idx(p, j));
+                }
+                sign = -sign;
+            }
+            for i in k + 1..n {
+                for j in k + 1..n {
+                    let v = a[idx(i, j)] * a[idx(k, k)] - a[idx(i, k)] * a[idx(k, j)];
+                    a[idx(i, j)] = v / prev; // exact division (Bareiss invariant)
+                }
+            }
+            prev = a[idx(k, k)];
+        }
+        let d = sign * a[idx(n - 1, n - 1)];
+        i64::try_from(d).expect("det: overflow out of i64")
+    }
+
+    /// Exact integer inverse, if it exists over ℤ (i.e. `det == ±1`
+    /// OR adjugate entries are all divisible by the determinant).
+    /// Returns `None` for singular or non-integer-invertible matrices.
+    pub fn inverse_exact(&self) -> Option<IMat> {
+        assert_eq!(self.rows, self.cols, "inverse: not square");
+        let n = self.rows;
+        if n == 0 {
+            return Some(IMat::zeros(0, 0));
+        }
+        let d = self.det();
+        if d == 0 {
+            return None;
+        }
+        let adj = self.adjugate();
+        let mut out = IMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let v = adj[(i, j)];
+                if v % d != 0 {
+                    return None;
+                }
+                out[(i, j)] = v / d;
+            }
+        }
+        Some(out)
+    }
+
+    /// Adjugate (classical adjoint): `adj(A)·A = det(A)·I`.
+    fn adjugate(&self) -> IMat {
+        let n = self.rows;
+        let mut out = IMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let minor = self.minor(j, i); // note transpose
+                let c = minor.det();
+                out[(i, j)] = if (i + j) % 2 == 0 { c } else { -c };
+            }
+        }
+        out
+    }
+
+    /// Delete row `ri` and column `ci`.
+    fn minor(&self, ri: usize, ci: usize) -> IMat {
+        let mut out = IMat::zeros(self.rows - 1, self.cols - 1);
+        let mut oi = 0;
+        for i in 0..self.rows {
+            if i == ri {
+                continue;
+            }
+            let mut oj = 0;
+            for j in 0..self.cols {
+                if j == ci {
+                    continue;
+                }
+                out[(oi, oj)] = self[(i, j)];
+                oj += 1;
+            }
+            oi += 1;
+        }
+        out
+    }
+
+    /// Rank over ℚ (Gaussian elimination with exact rational pivoting via
+    /// integer row ops).
+    pub fn rank(&self) -> usize {
+        let mut a: Vec<i128> = self.data.iter().map(|&x| x as i128).collect();
+        let (m, n) = (self.rows, self.cols);
+        let idx = |i: usize, j: usize| i * n + j;
+        let mut rank = 0;
+        let mut row = 0;
+        for col in 0..n {
+            // find pivot
+            let mut piv = None;
+            for i in row..m {
+                if a[idx(i, col)] != 0 {
+                    piv = Some(i);
+                    break;
+                }
+            }
+            let Some(p) = piv else { continue };
+            for j in 0..n {
+                a.swap(idx(row, j), idx(p, j));
+            }
+            let pv = a[idx(row, col)];
+            for i in row + 1..m {
+                let f = a[idx(i, col)];
+                if f == 0 {
+                    continue;
+                }
+                for j in 0..n {
+                    a[idx(i, j)] = a[idx(i, j)] * pv - f * a[idx(row, j)];
+                }
+            }
+            row += 1;
+            rank += 1;
+            if row == m {
+                break;
+            }
+        }
+        rank
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for IMat {
+    type Output = i64;
+    fn index(&self, (i, j): (usize, usize)) -> &i64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for IMat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut i64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for IMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "IMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            write!(f, "  [")?;
+            for j in 0..self.cols {
+                if j > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{}", self[(i, j)])?;
+            }
+            writeln!(f, "]")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_mul() {
+        let i3 = IMat::identity(3);
+        let a = IMat::from_rows(&[&[1, 2, 3], &[4, 5, 6], &[7, 8, 10]]);
+        assert_eq!(i3.mul(&a), a);
+        assert_eq!(a.mul(&i3), a);
+    }
+
+    #[test]
+    fn det_small() {
+        let a = IMat::from_rows(&[&[1, 2], &[3, 4]]);
+        assert_eq!(a.det(), -2);
+        let b = IMat::from_rows(&[&[2, 0, 0], &[0, 3, 0], &[0, 0, 4]]);
+        assert_eq!(b.det(), 24);
+        let s = IMat::from_rows(&[&[1, 2], &[2, 4]]);
+        assert_eq!(s.det(), 0);
+    }
+
+    #[test]
+    fn det_permutation_sign() {
+        let p = IMat::permutation(&[1, 0, 2]);
+        assert_eq!(p.det(), -1);
+        let p3 = IMat::permutation(&[2, 0, 1]);
+        assert_eq!(p3.det(), 1);
+    }
+
+    #[test]
+    fn inverse_unimodular() {
+        let a = IMat::from_rows(&[&[1, 1], &[0, 1]]);
+        let inv = a.inverse_exact().unwrap();
+        assert_eq!(a.mul(&inv), IMat::identity(2));
+        assert_eq!(inv.mul(&a), IMat::identity(2));
+    }
+
+    #[test]
+    fn inverse_permutation() {
+        let p = IMat::permutation(&[2, 0, 1, 3]);
+        let inv = p.inverse_exact().unwrap();
+        assert_eq!(p.mul(&inv), IMat::identity(4));
+    }
+
+    #[test]
+    fn inverse_rejects_strided() {
+        // stride-2 map has det 2; its inverse is not integer.
+        let a = IMat::from_rows(&[&[2]]);
+        assert!(a.inverse_exact().is_none());
+        // but a diagonal {1,-1} works
+        let b = IMat::from_rows(&[&[1, 0], &[0, -1]]);
+        assert!(b.inverse_exact().is_some());
+    }
+
+    #[test]
+    fn inverse_singular_none() {
+        let s = IMat::from_rows(&[&[1, 2], &[2, 4]]);
+        assert!(s.inverse_exact().is_none());
+    }
+
+    #[test]
+    fn mul_vec_works() {
+        let a = IMat::from_rows(&[&[1, 0, 2], &[0, 3, 0]]);
+        assert_eq!(a.mul_vec(&[1, 2, 3]), vec![7, 6]);
+    }
+
+    #[test]
+    fn rank_examples() {
+        assert_eq!(IMat::identity(4).rank(), 4);
+        let s = IMat::from_rows(&[&[1, 2], &[2, 4]]);
+        assert_eq!(s.rank(), 1);
+        let r = IMat::from_rows(&[&[1, 0], &[0, 1], &[1, 1]]);
+        assert_eq!(r.rank(), 2);
+        assert_eq!(IMat::zeros(3, 3).rank(), 0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = IMat::from_rows(&[&[1, 2, 3], &[4, 5, 6]]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().rows(), 3);
+    }
+}

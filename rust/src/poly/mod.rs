@@ -1,0 +1,37 @@
+//! Integer (quasi-)affine algebra — the polyhedral substrate.
+//!
+//! The paper implements its affine-function *reverse* and *composition*
+//! with the Integer Set Library (isl). isl is not available in this
+//! environment, so `poly` is a from-scratch, integer-exact replacement
+//! scoped to exactly what the paper's two passes need:
+//!
+//! * [`expr::Expr`] — quasi-affine expressions over loop indices:
+//!   `c0 + Σ ck·ik` extended with `floordiv` and `mod` by positive
+//!   constants (what isl calls quasi-affine; needed for `tile`/`repeat`
+//!   whose load maps are `i mod n` / `i div n`).
+//! * [`map::AccessMap`] — a vector of exprs mapping a loop space into a
+//!   tensor index space; supports *composition* (paper eq. 1 and 2) and
+//!   exact *reverse* of injective pure-affine maps (paper's `f_s'`),
+//!   implemented with the Smith normal form over ℤ.
+//! * [`domain::IterDomain`] — normalized rectangular iteration domains
+//!   `[0,e0)×…×[0,en-1)`; every loop nest in the IR is normalized so
+//!   its domain is such a box.
+//! * [`piecewise::PiecewiseMap`] — a disjoint union of `(domain guard,
+//!   AccessMap)` pieces, required by `split`/`concat`/`pad` whose access
+//!   functions are affine only piecewise.
+//!
+//! All arithmetic is `i64` with checked overflow in debug builds; shapes
+//! in this domain keep every intermediate well inside `i64`.
+
+pub mod domain;
+pub mod expr;
+pub mod map;
+pub mod matrix;
+pub mod piecewise;
+pub mod smith;
+
+pub use domain::IterDomain;
+pub use expr::Expr;
+pub use map::AccessMap;
+pub use matrix::IMat;
+pub use piecewise::PiecewiseMap;

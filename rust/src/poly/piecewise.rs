@@ -1,0 +1,259 @@
+//! Piecewise quasi-affine maps.
+//!
+//! `split`, `concat` and `pad` have access functions that are affine
+//! only on sub-boxes of the iteration/index space: a `concat` output at
+//! index `i` reads input A when `i < s` and input B (shifted) when
+//! `i ≥ s`. A [`PiecewiseMap`] is a finite disjoint union of
+//! `(guard box, AccessMap)` pieces over a common input space, closed
+//! under composition with plain affine maps on the inside.
+
+use super::domain::IterDomain;
+use super::map::AccessMap;
+use std::fmt;
+
+/// A half-open interval guard on one input dimension.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Guard {
+    pub dim: usize,
+    pub lo: i64,
+    pub hi: i64, // exclusive
+}
+
+impl Guard {
+    pub fn holds(&self, p: &[i64]) -> bool {
+        let v = p[self.dim];
+        v >= self.lo && v < self.hi
+    }
+}
+
+/// One piece: a conjunction of guards and the map valid under them.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Piece {
+    pub guards: Vec<Guard>,
+    pub map: AccessMap,
+}
+
+impl Piece {
+    pub fn holds(&self, p: &[i64]) -> bool {
+        self.guards.iter().all(|g| g.holds(p))
+    }
+}
+
+/// A piecewise map: the first piece whose guards hold applies. Pieces
+/// are expected (and verified by [`PiecewiseMap::is_total_on`]) to
+/// partition the domain.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct PiecewiseMap {
+    in_dims: usize,
+    pieces: Vec<Piece>,
+}
+
+impl PiecewiseMap {
+    pub fn new(in_dims: usize, pieces: Vec<Piece>) -> Self {
+        assert!(!pieces.is_empty(), "PiecewiseMap: no pieces");
+        for p in &pieces {
+            assert_eq!(p.map.in_dims(), in_dims, "piece arity mismatch");
+            for g in &p.guards {
+                assert!(g.dim < in_dims, "guard dim out of range");
+                assert!(g.lo < g.hi, "empty guard");
+            }
+        }
+        PiecewiseMap { in_dims, pieces }
+    }
+
+    /// Lift a plain map to a single-piece piecewise map.
+    pub fn total(map: AccessMap) -> Self {
+        let in_dims = map.in_dims();
+        PiecewiseMap { in_dims, pieces: vec![Piece { guards: vec![], map }] }
+    }
+
+    pub fn in_dims(&self) -> usize {
+        self.in_dims
+    }
+
+    pub fn pieces(&self) -> &[Piece] {
+        &self.pieces
+    }
+
+    pub fn out_dims(&self) -> usize {
+        self.pieces[0].map.out_dims()
+    }
+
+    /// True when a single piece with no guards remains.
+    pub fn as_total(&self) -> Option<&AccessMap> {
+        match &self.pieces[..] {
+            [p] if p.guards.is_empty() => Some(&p.map),
+            _ => None,
+        }
+    }
+
+    /// Evaluate; panics if no piece covers the point (use
+    /// `is_total_on` to validate coverage first).
+    pub fn apply(&self, p: &[i64]) -> Vec<i64> {
+        for piece in &self.pieces {
+            if piece.holds(p) {
+                return piece.map.apply(p);
+            }
+        }
+        panic!("PiecewiseMap::apply: {p:?} not covered by any piece");
+    }
+
+    /// Every point of `dom` is covered by exactly one piece.
+    pub fn is_total_on(&self, dom: &IterDomain) -> bool {
+        let pts: Vec<Vec<i64>> = if dom.cardinality() <= 4096 {
+            dom.points().collect()
+        } else {
+            dom.sample(512, 0xc0ffee)
+        };
+        pts.iter().all(|p| {
+            self.pieces.iter().filter(|piece| piece.holds(p)).count() == 1
+        })
+    }
+
+    /// Compose with an *affine* inner map: `self ∘ inner`. Guards are
+    /// rewritten when the inner map's guarded component is itself a
+    /// `1·dim + c` expression; otherwise composition falls back to
+    /// keeping the guard on a fresh evaluation of the inner component —
+    /// which our IR never needs, so we conservatively return `None`.
+    pub fn compose_inner(&self, inner: &AccessMap) -> Option<PiecewiseMap> {
+        let mut pieces = Vec::with_capacity(self.pieces.len());
+        for piece in &self.pieces {
+            let mut guards = Vec::with_capacity(piece.guards.len());
+            for g in &piece.guards {
+                // guard applies to inner's output component g.dim
+                let comp = &inner.exprs()[g.dim];
+                let (coeffs, cst) = comp.as_affine(inner.in_dims())?;
+                // need the component to be c + 1·dim_k (unit coefficient)
+                let nz: Vec<usize> =
+                    coeffs.iter().enumerate().filter(|(_, &c)| c != 0).map(|(k, _)| k).collect();
+                match nz.as_slice() {
+                    [] => {
+                        // constant component: guard is statically true/false
+                        if cst >= g.lo && cst < g.hi {
+                            continue; // guard always holds, drop it
+                        } else {
+                            guards.clear();
+                            guards.push(Guard { dim: 0, lo: 0, hi: 0 }); // unsat marker
+                            break;
+                        }
+                    }
+                    [k] if coeffs[*k] == 1 => {
+                        guards.push(Guard { dim: *k, lo: g.lo - cst, hi: g.hi - cst });
+                    }
+                    _ => return None,
+                }
+            }
+            if guards.iter().any(|g| g.lo >= g.hi) {
+                continue; // unsatisfiable piece, drop
+            }
+            pieces.push(Piece { guards, map: piece.map.compose(inner) });
+        }
+        if pieces.is_empty() {
+            return None;
+        }
+        Some(PiecewiseMap { in_dims: inner.in_dims(), pieces })
+    }
+}
+
+impl fmt::Debug for PiecewiseMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "PiecewiseMap {} pieces:", self.pieces.len())?;
+        for p in &self.pieces {
+            write!(f, "  [")?;
+            for (k, g) in p.guards.iter().enumerate() {
+                if k > 0 {
+                    write!(f, " && ")?;
+                }
+                write!(f, "{} <= i{} < {}", g.lo, g.dim, g.hi)?;
+            }
+            writeln!(f, "] {:?}", p.map)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::expr::Expr;
+
+    /// concat([A(4), B(6)]) read map: i<4 → A[i]; i>=4 → B[i-4].
+    fn concat_map() -> PiecewiseMap {
+        PiecewiseMap::new(
+            1,
+            vec![
+                Piece {
+                    guards: vec![Guard { dim: 0, lo: 0, hi: 4 }],
+                    map: AccessMap::new(1, vec![Expr::dim(0)]),
+                },
+                Piece {
+                    guards: vec![Guard { dim: 0, lo: 4, hi: 10 }],
+                    map: AccessMap::new(1, vec![Expr::dim(0).add(Expr::cst(-4))]),
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn concat_semantics() {
+        let m = concat_map();
+        assert_eq!(m.apply(&[2]), vec![2]);
+        assert_eq!(m.apply(&[7]), vec![3]);
+        assert!(m.is_total_on(&IterDomain::new(&[10])));
+    }
+
+    #[test]
+    fn total_lift() {
+        let m = PiecewiseMap::total(AccessMap::identity(2));
+        assert!(m.as_total().is_some());
+        assert_eq!(m.apply(&[3, 4]), vec![3, 4]);
+        assert!(m.is_total_on(&IterDomain::new(&[5, 5])));
+    }
+
+    #[test]
+    fn overlap_detected() {
+        let bad = PiecewiseMap::new(
+            1,
+            vec![
+                Piece {
+                    guards: vec![Guard { dim: 0, lo: 0, hi: 6 }],
+                    map: AccessMap::identity(1),
+                },
+                Piece {
+                    guards: vec![Guard { dim: 0, lo: 4, hi: 10 }],
+                    map: AccessMap::identity(1),
+                },
+            ],
+        );
+        assert!(!bad.is_total_on(&IterDomain::new(&[10])));
+    }
+
+    #[test]
+    fn compose_inner_shift() {
+        // consumer reads concat output via j ↦ j + 2
+        let m = concat_map();
+        let inner = AccessMap::new(1, vec![Expr::dim(0).add(Expr::cst(2))]);
+        let c = m.compose_inner(&inner).unwrap();
+        for j in 0..8 {
+            assert_eq!(c.apply(&[j]), m.apply(&[j + 2]));
+        }
+    }
+
+    #[test]
+    fn compose_inner_constant_guard_resolution() {
+        let m = concat_map();
+        // inner fixes the coordinate to 7 → only piece 2 survives, guard-free
+        let inner = AccessMap::new(1, vec![Expr::cst(7)]);
+        let c = m.compose_inner(&inner).unwrap();
+        assert_eq!(c.pieces().len(), 1);
+        assert!(c.pieces()[0].guards.is_empty());
+        assert_eq!(c.apply(&[0]), vec![3]);
+    }
+
+    #[test]
+    fn compose_inner_rejects_scaled_guard() {
+        let m = concat_map();
+        let inner = AccessMap::new(1, vec![Expr::dim(0).scale(2)]);
+        assert!(m.compose_inner(&inner).is_none());
+    }
+}

@@ -1,0 +1,349 @@
+//! Smith normal form over ℤ and exact integer linear solving.
+//!
+//! For a store access function `f_s(i) = C·i + b` the paper's DME pass
+//! needs the *reverse* `f_s' : idx ↦ i` (§2.1). Reversing means solving
+//! `C·i = idx − b` for `i` as an **affine integer function of idx**.
+//! Such an affine reverse exists iff `C` has full column rank and its
+//! Smith normal form `U·C·V = D` has all invariant factors equal to 1
+//! (then `i = V·D⁺·U·(idx − b)` has integer coefficients).
+//!
+//! This module computes the SNF with explicit unimodular transforms and
+//! derives the left inverse.
+
+use super::matrix::IMat;
+
+/// Result of the Smith decomposition `U · A · V = D` with `U`, `V`
+/// unimodular and `D` diagonal with `d_1 | d_2 | … | d_r`.
+#[derive(Debug, Clone)]
+pub struct Smith {
+    pub u: IMat,
+    pub v: IMat,
+    pub d: IMat,
+}
+
+/// Compute the Smith normal form of `a`.
+pub fn smith_normal_form(a: &IMat) -> Smith {
+    let m = a.rows();
+    let n = a.cols();
+    let mut d = a.clone();
+    let mut u = IMat::identity(m);
+    let mut v = IMat::identity(n);
+
+    let mut t = 0; // current pivot position
+    while t < m.min(n) {
+        // Find a nonzero pivot in the remaining submatrix.
+        let Some((pi, pj)) = find_pivot(&d, t) else { break };
+        swap_rows(&mut d, &mut u, t, pi);
+        swap_cols(&mut d, &mut v, t, pj);
+
+        // Eliminate row and column t alternately until clean.
+        loop {
+            let mut dirty = false;
+            // Clear column t below/above using row ops.
+            for i in 0..m {
+                if i == t || d[(i, t)] == 0 {
+                    continue;
+                }
+                let (q, r) = div_rem_euclid(d[(i, t)], d[(t, t)]);
+                row_axpy(&mut d, &mut u, i, t, -q);
+                if r != 0 {
+                    // remainder nonzero: swap to make it the pivot, retry
+                    swap_rows(&mut d, &mut u, t, i);
+                    dirty = true;
+                }
+            }
+            // Clear row t using column ops.
+            for j in 0..n {
+                if j == t || d[(t, j)] == 0 {
+                    continue;
+                }
+                let (q, r) = div_rem_euclid(d[(t, j)], d[(t, t)]);
+                col_axpy(&mut d, &mut v, j, t, -q);
+                if r != 0 {
+                    swap_cols(&mut d, &mut v, t, j);
+                    dirty = true;
+                }
+            }
+            if !dirty && column_clear(&d, t) && row_clear(&d, t) {
+                break;
+            }
+        }
+        t += 1;
+    }
+
+    // Normalize signs.
+    for k in 0..m.min(n) {
+        if d[(k, k)] < 0 {
+            negate_row(&mut d, &mut u, k);
+        }
+    }
+    // Enforce divisibility chain d_k | d_{k+1}.
+    let r = m.min(n);
+    loop {
+        let mut fixed = true;
+        for k in 0..r.saturating_sub(1) {
+            let (a0, b0) = (d[(k, k)], d[(k + 1, k + 1)]);
+            if a0 != 0 && b0 != 0 && b0 % a0 != 0 {
+                // standard trick: add column k+1 to column k then re-reduce 2x2 block
+                col_axpy(&mut d, &mut v, k, k + 1, 1);
+                reduce_block(&mut d, &mut u, &mut v, k);
+                fixed = false;
+            }
+        }
+        if fixed {
+            break;
+        }
+    }
+
+    Smith { u, v, d }
+}
+
+/// Re-run elimination on the trailing submatrix starting at `t` for the
+/// 2x2 divisibility fix (cheap: touches two rows/cols).
+fn reduce_block(d: &mut IMat, u: &mut IMat, v: &mut IMat, t: usize) {
+    let m = d.rows();
+    let n = d.cols();
+    loop {
+        let mut dirty = false;
+        for i in 0..m {
+            if i == t || d[(i, t)] == 0 {
+                continue;
+            }
+            let (q, r) = div_rem_euclid(d[(i, t)], d[(t, t)]);
+            row_axpy(d, u, i, t, -q);
+            if r != 0 {
+                swap_rows(d, u, t, i);
+                dirty = true;
+            }
+        }
+        for j in 0..n {
+            if j == t || d[(t, j)] == 0 {
+                continue;
+            }
+            let (q, r) = div_rem_euclid(d[(t, j)], d[(t, t)]);
+            col_axpy(d, v, j, t, -q);
+            if r != 0 {
+                swap_cols(d, v, t, j);
+                dirty = true;
+            }
+        }
+        if !dirty && column_clear(d, t) && row_clear(d, t) {
+            break;
+        }
+    }
+    if d[(t, t)] < 0 {
+        negate_row(d, u, t);
+    }
+    let k2 = t + 1;
+    if k2 < m.min(n) && d[(k2, k2)] < 0 {
+        negate_row(d, u, k2);
+    }
+}
+
+fn find_pivot(d: &IMat, t: usize) -> Option<(usize, usize)> {
+    let mut best: Option<(usize, usize, i64)> = None;
+    for i in t..d.rows() {
+        for j in t..d.cols() {
+            let v = d[(i, j)].abs();
+            if v != 0 && best.map_or(true, |(_, _, bv)| v < bv) {
+                best = Some((i, j, v));
+            }
+        }
+    }
+    best.map(|(i, j, _)| (i, j))
+}
+
+fn div_rem_euclid(a: i64, b: i64) -> (i64, i64) {
+    let q = a.div_euclid(b);
+    (q, a.rem_euclid(b))
+}
+
+fn swap_rows(d: &mut IMat, u: &mut IMat, a: usize, b: usize) {
+    if a == b {
+        return;
+    }
+    for j in 0..d.cols() {
+        let t = d[(a, j)];
+        d[(a, j)] = d[(b, j)];
+        d[(b, j)] = t;
+    }
+    for j in 0..u.cols() {
+        let t = u[(a, j)];
+        u[(a, j)] = u[(b, j)];
+        u[(b, j)] = t;
+    }
+}
+
+fn swap_cols(d: &mut IMat, v: &mut IMat, a: usize, b: usize) {
+    if a == b {
+        return;
+    }
+    for i in 0..d.rows() {
+        let t = d[(i, a)];
+        d[(i, a)] = d[(i, b)];
+        d[(i, b)] = t;
+    }
+    for i in 0..v.rows() {
+        let t = v[(i, a)];
+        v[(i, a)] = v[(i, b)];
+        v[(i, b)] = t;
+    }
+}
+
+/// row[i] += f * row[t] (applied to both D and U).
+fn row_axpy(d: &mut IMat, u: &mut IMat, i: usize, t: usize, f: i64) {
+    for j in 0..d.cols() {
+        d[(i, j)] += f * d[(t, j)];
+    }
+    for j in 0..u.cols() {
+        u[(i, j)] += f * u[(t, j)];
+    }
+}
+
+/// col[j] += f * col[t] (applied to both D and V).
+fn col_axpy(d: &mut IMat, v: &mut IMat, j: usize, t: usize, f: i64) {
+    for i in 0..d.rows() {
+        d[(i, j)] += f * d[(i, t)];
+    }
+    for i in 0..v.rows() {
+        v[(i, j)] += f * v[(i, t)];
+    }
+}
+
+fn negate_row(d: &mut IMat, u: &mut IMat, k: usize) {
+    for j in 0..d.cols() {
+        d[(k, j)] = -d[(k, j)];
+    }
+    for j in 0..u.cols() {
+        u[(k, j)] = -u[(k, j)];
+    }
+}
+
+fn column_clear(d: &IMat, t: usize) -> bool {
+    (0..d.rows()).all(|i| i == t || d[(i, t)] == 0)
+}
+
+fn row_clear(d: &IMat, t: usize) -> bool {
+    (0..d.cols()).all(|j| j == t || d[(t, j)] == 0)
+}
+
+/// Exact integer **left inverse**: `L` with `L·A = I_n`, for `A` m×n of
+/// full column rank whose invariant factors are all 1. Returns `None`
+/// otherwise (e.g. strided maps — `A = [2]` has factor 2).
+pub fn left_inverse(a: &IMat) -> Option<IMat> {
+    let n = a.cols();
+    let s = smith_normal_form(a);
+    // need rank n with all invariant factors == 1
+    for k in 0..n {
+        if k >= s.d.rows() || s.d[(k, k)] != 1 {
+            return None;
+        }
+    }
+    // A = U⁻¹ D V⁻¹  ⇒  L = V · D⁺ · U where D⁺ is n×m pseudo-inverse of D
+    let mut dplus = IMat::zeros(n, a.rows());
+    for k in 0..n {
+        dplus[(k, k)] = 1; // d_k == 1
+    }
+    Some(s.v.mul(&dplus).mul(&s.u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_snf(a: &IMat) {
+        let s = smith_normal_form(a);
+        // U·A·V == D
+        assert_eq!(s.u.mul(a).mul(&s.v), s.d, "UAV != D for {a:?}");
+        // U, V unimodular
+        assert_eq!(s.u.det().abs(), 1, "U not unimodular");
+        assert_eq!(s.v.det().abs(), 1, "V not unimodular");
+        // D diagonal, nonneg, divisibility chain
+        for i in 0..s.d.rows() {
+            for j in 0..s.d.cols() {
+                if i != j {
+                    assert_eq!(s.d[(i, j)], 0, "D not diagonal");
+                }
+            }
+        }
+        let r = s.d.rows().min(s.d.cols());
+        for k in 0..r {
+            assert!(s.d[(k, k)] >= 0);
+            if k + 1 < r && s.d[(k, k)] != 0 && s.d[(k + 1, k + 1)] != 0 {
+                assert_eq!(
+                    s.d[(k + 1, k + 1)] % s.d[(k, k)],
+                    0,
+                    "divisibility chain broken"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snf_identity() {
+        check_snf(&IMat::identity(3));
+    }
+
+    #[test]
+    fn snf_permutation() {
+        check_snf(&IMat::permutation(&[2, 0, 1]));
+    }
+
+    #[test]
+    fn snf_classic() {
+        let a = IMat::from_rows(&[&[2, 4, 4], &[-6, 6, 12], &[10, 4, 16]]);
+        let s = smith_normal_form(&a);
+        check_snf(&a);
+        assert_eq!(s.d[(0, 0)], 2);
+        assert_eq!(s.d[(1, 1)], 2);
+        // det(A) = ±(2*2*d3); |det| = 2*2*d3
+        assert_eq!(s.d[(2, 2)], (a.det().abs() / 4));
+    }
+
+    #[test]
+    fn snf_rectangular() {
+        let a = IMat::from_rows(&[&[1, 0], &[0, 1], &[1, 1]]);
+        check_snf(&a);
+        let b = IMat::from_rows(&[&[3, 0, 0], &[0, 5, 0]]);
+        check_snf(&b);
+    }
+
+    #[test]
+    fn snf_zero() {
+        check_snf(&IMat::zeros(2, 3));
+    }
+
+    #[test]
+    fn left_inverse_identitylike() {
+        let a = IMat::from_rows(&[&[1, 0], &[0, 1], &[7, 3]]);
+        let l = left_inverse(&a).unwrap();
+        assert_eq!(l.mul(&a), IMat::identity(2));
+    }
+
+    #[test]
+    fn left_inverse_permutation() {
+        let p = IMat::permutation(&[3, 1, 0, 2]);
+        let l = left_inverse(&p).unwrap();
+        assert_eq!(l.mul(&p), IMat::identity(4));
+    }
+
+    #[test]
+    fn left_inverse_rejects_stride() {
+        // f(i) = 2i writes only even addresses: invariant factor 2.
+        let a = IMat::from_rows(&[&[2]]);
+        assert!(left_inverse(&a).is_none());
+    }
+
+    #[test]
+    fn left_inverse_rejects_rank_deficient() {
+        let a = IMat::from_rows(&[&[1, 2], &[2, 4]]);
+        assert!(left_inverse(&a).is_none());
+    }
+
+    #[test]
+    fn left_inverse_unimodular_mix() {
+        let a = IMat::from_rows(&[&[1, 1, 0], &[0, 1, 0], &[0, 1, 1]]);
+        let l = left_inverse(&a).unwrap();
+        assert_eq!(l.mul(&a), IMat::identity(3));
+    }
+}

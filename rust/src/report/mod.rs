@@ -1,0 +1,209 @@
+//! Paper-table formatting: render the experiment results the way the
+//! paper's evaluation section states them, next to the paper's own
+//! numbers, for the bench harness and the CLI.
+
+use crate::accel::SimReport;
+use crate::passes::bank::BankStats;
+use crate::passes::dme::DmeStats;
+use crate::util::json::Json;
+
+/// A simple fixed-width table writer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (k, c) in row.iter().enumerate() {
+                widths[k] = widths[k].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (k, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[k]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str("|");
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Percent-reduction helper (positive = reduced).
+pub fn pct_reduction(before: i64, after: i64) -> f64 {
+    if before == 0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - after as f64 / before as f64)
+}
+
+pub fn mb(bytes: i64) -> String {
+    format!("{:.1} MB", bytes as f64 / 1e6)
+}
+
+/// The E1 table (paper §3, Parallel WaveNet + DME).
+pub fn e1_table(stats: &DmeStats, before: &SimReport, after: &SimReport) -> String {
+    let mut t = Table::new(&["metric", "paper", "measured"]);
+    t.row(&[
+        "load-store pairs eliminated".into(),
+        "123 / 124".into(),
+        format!("{} / {}", stats.pairs_eliminated, stats.pairs_before),
+    ]);
+    t.row(&[
+        "intermediate tensor bytes eliminated".into(),
+        "145 MB / 146 MB".into(),
+        format!("{} / {}", mb(stats.bytes_eliminated), mb(stats.bytes_before)),
+    ]);
+    t.row(&[
+        "on-chip movement saved".into(),
+        "10%".into(),
+        format!(
+            "{:.1}%  ({} -> {})",
+            pct_reduction(
+                before.onchip_movement_total(),
+                after.onchip_movement_total()
+            ),
+            mb(before.onchip_movement_total()),
+            mb(after.onchip_movement_total())
+        ),
+    ]);
+    t.row(&[
+        "off-chip traffic saved".into(),
+        "11%".into(),
+        format!(
+            "{:.1}%  ({} -> {})",
+            pct_reduction(before.offchip_total(), after.offchip_total()),
+            mb(before.offchip_total()),
+            mb(after.offchip_total())
+        ),
+    ]);
+    t.row(&[
+        "estimated latency".into(),
+        "n/a".into(),
+        format!("{:.2} ms -> {:.2} ms", before.seconds * 1e3, after.seconds * 1e3),
+    ]);
+    t.render()
+}
+
+/// The E2 table (paper §3, ResNet-50 local vs global bank mapping).
+pub fn e2_table(
+    local_stats: &BankStats,
+    global_stats: &BankStats,
+    local_sim: &SimReport,
+    global_sim: &SimReport,
+) -> String {
+    let mut t = Table::new(&["metric", "paper", "measured"]);
+    t.row(&[
+        "on-chip copy bytes eliminated".into(),
+        "76%".into(),
+        format!(
+            "{:.1}%  ({} -> {})",
+            pct_reduction(local_sim.onchip_copy_total(), global_sim.onchip_copy_total()),
+            mb(local_sim.onchip_copy_total()),
+            mb(global_sim.onchip_copy_total())
+        ),
+    ]);
+    t.row(&[
+        "off-chip copy bytes eliminated".into(),
+        "37%".into(),
+        format!(
+            "{:.1}%  ({} -> {})",
+            pct_reduction(
+                local_sim.offchip_copy_total(),
+                global_sim.offchip_copy_total()
+            ),
+            mb(local_sim.offchip_copy_total()),
+            mb(global_sim.offchip_copy_total())
+        ),
+    ]);
+    t.row(&[
+        "remap copies inserted".into(),
+        "n/a".into(),
+        format!(
+            "local {} / global {}",
+            local_stats.copies_inserted, global_stats.copies_inserted
+        ),
+    ]);
+    t.row(&[
+        "estimated latency".into(),
+        "n/a".into(),
+        format!(
+            "local {:.2} ms / global {:.2} ms",
+            local_sim.seconds * 1e3,
+            global_sim.seconds * 1e3
+        ),
+    ]);
+    t.render()
+}
+
+/// JSON form of a sim report for machine-readable experiment logs.
+pub fn sim_to_json(rep: &SimReport) -> Json {
+    Json::obj(vec![
+        ("traffic", rep.traffic.to_json()),
+        ("seconds", Json::Num(rep.seconds)),
+        ("peak_scratchpad", Json::Int(rep.peak_scratchpad)),
+        ("nests", Json::Int(rep.nests_executed as i64)),
+        ("copy_nests", Json::Int(rep.copy_nests_executed as i64)),
+        (
+            "onchip_movement_total",
+            Json::Int(rep.onchip_movement_total()),
+        ),
+        ("offchip_total", Json::Int(rep.offchip_total())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "metric_name"]);
+        t.row(&["1".into(), "x".into()]);
+        t.row(&["2222".into(), "yyyy".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn pct_reduction_cases() {
+        assert!((pct_reduction(100, 24) - 76.0).abs() < 1e-9);
+        assert_eq!(pct_reduction(0, 5), 0.0);
+        assert!((pct_reduction(200, 200)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

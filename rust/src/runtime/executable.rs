@@ -1,0 +1,111 @@
+//! A compiled model artifact ready to execute.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// A compiled PJRT executable plus bookkeeping.
+pub struct LoadedModel {
+    path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    pub(crate) fn new(path: PathBuf, exe: xla::PjRtLoadedExecutable) -> Self {
+        LoadedModel { path, exe }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Execute with f32 inputs, returning the (first) f32 output
+    /// flattened. Inputs are `(data, shape)` pairs; jax-lowered modules
+    /// return a 1-tuple (lowered with `return_tuple=True`), which is
+    /// unwrapped transparently; plain HLO roots pass through.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let outs = self.run_f32_multi(inputs)?;
+        outs.into_iter()
+            .next()
+            .context("executable produced no outputs")
+    }
+
+    /// Execute and return every f32 output flattened.
+    pub fn run_f32_multi(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let numel: i64 = shape.iter().product();
+            anyhow::ensure!(
+                numel as usize == data.len(),
+                "input data len {} != shape {:?}",
+                data.len(),
+                shape
+            );
+            literals.push(xla::Literal::vec1(data).reshape(shape)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing PJRT computation")?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // jax lowers with return_tuple=True → unwrap tuples of any arity
+        let parts = match literal.shape()? {
+            xla::Shape::Tuple(_) => literal.to_tuple()?,
+            _ => vec![literal],
+        };
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime::client::RuntimeClient;
+
+    const TUPLE_HLO: &str = r#"
+HloModule tuple_out
+
+ENTRY main {
+  p0 = f32[3]{0} parameter(0)
+  doubled = f32[3]{0} add(p0, p0)
+  ROOT out = (f32[3]{0}) tuple(doubled)
+}
+"#;
+
+    const TWO_OUT_HLO: &str = r#"
+HloModule two_out
+
+ENTRY main {
+  p0 = f32[2]{0} parameter(0)
+  d = f32[2]{0} add(p0, p0)
+  q = f32[2]{0} multiply(p0, p0)
+  ROOT out = (f32[2]{0}, f32[2]{0}) tuple(d, q)
+}
+"#;
+
+    #[test]
+    fn tuple_outputs_unwrapped() {
+        let rt = RuntimeClient::cpu().unwrap();
+        let m = rt.load_hlo_str("tuple_out", TUPLE_HLO).unwrap();
+        let out = m.run_f32(&[(&[1.0, 2.0, 3.0], &[3])]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn multi_outputs_all_returned() {
+        let rt = RuntimeClient::cpu().unwrap();
+        let m = rt.load_hlo_str("two_out", TWO_OUT_HLO).unwrap();
+        let outs = m.run_f32_multi(&[(&[3.0, 4.0], &[2])]).unwrap();
+        assert_eq!(outs, vec![vec![6.0, 8.0], vec![9.0, 16.0]]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = RuntimeClient::cpu().unwrap();
+        let m = rt.load_hlo_str("tuple_out2", TUPLE_HLO).unwrap();
+        assert!(m.run_f32(&[(&[1.0, 2.0], &[3])]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT execution of AOT-compiled artifacts.
+//!
+//! The build-time Python layer (`python/compile/aot.py`) lowers the
+//! JAX/Pallas model to **HLO text** (the interchange format this
+//! image's xla_extension 0.5.1 can parse — jax≥0.5 serialized protos
+//! are rejected, see DESIGN.md). This module loads those artifacts and
+//! executes them on the PJRT CPU client from the request path — Python
+//! is never involved at runtime.
+
+pub mod client;
+pub mod executable;
+
+pub use client::RuntimeClient;
+pub use executable::LoadedModel;

@@ -1,0 +1,186 @@
+//! Criterion-style measurement harness (criterion is not in the offline
+//! crate cache). Provides warmup, timed sampling, and summary statistics
+//! (mean / p50 / p95 / p99 / min), plus a tiny suite runner used by the
+//! `cargo bench` targets (which are built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Stats {
+    /// items/second derived from mean latency, if items_per_iter set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.mean.as_secs_f64())
+    }
+
+    pub fn print(&self) {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} item/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} mean {:>12?}  p50 {:>12?}  p99 {:>12?}  min {:>12?}{}",
+            self.name, self.mean, self.p50, self.p99, self.min, tp
+        );
+    }
+}
+
+/// One benchmark: measures `f` repeatedly; `f` returns a value that is
+/// black-boxed to stop the optimizer from deleting the work.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    samples: usize,
+    items_per_iter: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            samples: 30,
+            items_per_iter: None,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.samples = n;
+        self
+    }
+
+    /// Declare the number of logical items processed per iteration so
+    /// the report can show throughput.
+    pub fn throughput_items(mut self, n: f64) -> Self {
+        self.items_per_iter = Some(n);
+        self
+    }
+
+    /// Run the benchmark and return statistics.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> Stats {
+        // Warmup until the budget is consumed (at least one call).
+        let wstart = Instant::now();
+        loop {
+            black_box(f());
+            if wstart.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+        Stats {
+            name: self.name,
+            samples: self.samples,
+            mean: total / self.samples as u32,
+            min: times[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            items_per_iter: self.items_per_iter,
+        }
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A collection of benchmarks printed as a table, used by bench mains.
+pub struct Suite {
+    title: String,
+    results: Vec<Stats>,
+}
+
+impl Suite {
+    pub fn new(title: impl Into<String>) -> Self {
+        let title = title.into();
+        println!("\n=== {title} ===");
+        Suite { title, results: vec![] }
+    }
+
+    pub fn add(&mut self, stats: Stats) {
+        stats.print();
+        self.results.push(stats);
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    pub fn finish(self) -> Vec<Stats> {
+        println!("=== {} done ({} benchmarks) ===", self.title, self.results.len());
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let stats = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .samples(5)
+            .run(|| 1 + 1);
+        assert_eq!(stats.samples, 5);
+        assert!(stats.min <= stats.p50 && stats.p50 <= stats.p99);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let stats = Bench::new("tp")
+            .warmup(Duration::from_millis(1))
+            .samples(3)
+            .throughput_items(1000.0)
+            .run(|| std::thread::sleep(Duration::from_micros(100)));
+        let tp = stats.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 1000.0 / 100e-6 * 1.1);
+    }
+
+    #[test]
+    fn ordering_of_percentiles() {
+        let mut i = 0u64;
+        let stats = Bench::new("var")
+            .warmup(Duration::from_millis(1))
+            .samples(20)
+            .run(|| {
+                i += 1;
+                // variable work
+                (0..(i % 5) * 1000).sum::<u64>()
+            });
+        assert!(stats.min <= stats.mean * 2);
+        assert!(stats.p50 <= stats.p95);
+        assert!(stats.p95 <= stats.p99);
+    }
+}

@@ -1,0 +1,273 @@
+//! Small declarative CLI parser (clap is not in the offline crate
+//! cache). Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and positional arguments, plus generated help.
+
+use std::collections::BTreeMap;
+
+/// An option/flag specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declarative command: name, help, options, positional names.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: vec![], positionals: vec![] }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Parse this command's arguments (already stripped of the command
+    /// name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = vec![];
+        let mut pos: Vec<String> = vec![];
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key} for '{}'", self.name))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults / check required
+        for o in &self.opts {
+            if o.is_flag {
+                continue;
+            }
+            if !values.contains_key(o.name) {
+                match o.default {
+                    Some(d) => {
+                        values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required option --{}", o.name)),
+                }
+            }
+        }
+        if pos.len() > self.positionals.len() {
+            return Err(format!(
+                "too many positional arguments for '{}' (expected {})",
+                self.name,
+                self.positionals.len()
+            ));
+        }
+        Ok(Parsed { values, flags, positionals: pos })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("  {} — {}\n", self.name, self.about);
+        for (p, h) in &self.positionals {
+            s.push_str(&format!("      <{p}>  {h}\n"));
+        }
+        for o in &self.opts {
+            if o.is_flag {
+                s.push_str(&format!("      --{}  {}\n", o.name, o.help));
+            } else {
+                match o.default {
+                    Some(d) => s.push_str(&format!(
+                        "      --{} <v>  {} (default: {})\n",
+                        o.name, o.help, d
+                    )),
+                    None => s.push_str(&format!("      --{} <v>  {} (required)\n", o.name, o.help)),
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected unsigned integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected u64, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected float, got '{}'", self.get(name)))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// A multi-command application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nCOMMANDS:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&c.usage());
+        }
+        s
+    }
+
+    /// Dispatch: returns (command name, parsed args) or a help/error string.
+    pub fn dispatch(&self, argv: &[String]) -> Result<(&Command, Parsed), String> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+        let parsed = cmd.parse(&argv[1..])?;
+        Ok((cmd, parsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("compile", "compile a model")
+            .opt("model", "resnet50", "model name")
+            .opt("banks", "16", "bank count")
+            .req("out", "output path")
+            .flag("verbose", "chatty")
+            .positional("input", "input file")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cmd().parse(&s(&["--out", "/tmp/x"])).unwrap();
+        assert_eq!(p.get("model"), "resnet50");
+        assert_eq!(p.get_usize("banks").unwrap(), 16);
+        assert_eq!(p.get("out"), "/tmp/x");
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&s(&[])).unwrap_err().contains("--out"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let p = cmd()
+            .parse(&s(&["--out=/o", "--banks=8", "--verbose", "file.json"]))
+            .unwrap();
+        assert_eq!(p.get_usize("banks").unwrap(), 8);
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional(0), Some("file.json"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&s(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&s(&["--verbose=1", "--out", "x"])).is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App { name: "polymem", about: "test", commands: vec![cmd()] };
+        let (c, p) = app.dispatch(&s(&["compile", "--out", "x"])).unwrap();
+        assert_eq!(c.name, "compile");
+        assert_eq!(p.get("out"), "x");
+        assert!(app.dispatch(&s(&["bogus"])).is_err());
+        assert!(app.dispatch(&s(&["--help"])).is_err());
+    }
+}

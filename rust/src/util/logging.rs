@@ -1,0 +1,100 @@
+//! Leveled stderr logging, controlled by `POLYMEM_LOG`
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("POLYMEM_LOG").ok().as_deref() {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("debug") => Level::Debug,
+        Some("trace") => Level::Trace,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current level (lazily initialized from the environment).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, benches).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{:5}] {}: {}", format!("{l:?}").to_uppercase(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

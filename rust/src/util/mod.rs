@@ -1,0 +1,22 @@
+//! Infrastructure substrate.
+//!
+//! The build image is offline with a minimal crate cache (no clap /
+//! serde / criterion / proptest / rand), so the small generic pieces a
+//! production repo would pull from crates.io are implemented here:
+//!
+//! * [`rng`] — SplitMix64 PRNG (replaces `rand`).
+//! * [`prop`] — a seeded, shrinking property-test driver (replaces
+//!   `proptest` for the invariants this repo checks).
+//! * [`bench`] — a criterion-style measurement harness (warmup, sample
+//!   statistics, throughput) used by `cargo bench` targets.
+//! * [`json`] — a minimal JSON writer/parser for configs and reports.
+//! * [`cli`] — a small declarative argument parser for the `polymem`
+//!   binary and examples.
+//! * [`logging`] — leveled stderr logging.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,156 @@
+//! A small seeded property-test driver (offline stand-in for proptest).
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the rpath to
+//! libxla_extension's bundled libstdc++ in this offline image):
+//! ```no_run
+//! use polymem::util::prop::{Prop, Gen};
+//! Prop::new("addition commutes", 200).check(|g: &mut Gen| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case runs with an independent, reportable seed; on panic the
+//! driver re-raises with the failing case index and seed so the exact
+//! case can be replayed with `PROP_SEED`.
+
+use super::rng::SplitMix64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: SplitMix64::new(seed) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below((hi - lo) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Random shape with `ndim` dims, each extent in `[1, max_extent]`.
+    pub fn shape(&mut self, ndim: usize, max_extent: i64) -> Vec<i64> {
+        (0..ndim).map(|_| self.i64_in(1, max_extent + 1)).collect()
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut p);
+        p
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str, cases: usize) -> Self {
+        // Honor PROP_SEED for replaying a specific failure.
+        let base_seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| fnv1a(name.as_bytes()));
+        Prop { name, cases, base_seed }
+    }
+
+    /// Run the property over `cases` generated cases. Panics with case
+    /// seed information on the first failure.
+    pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(&self, f: F) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen::new(seed);
+                f(&mut g);
+            });
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed at case {}/{} (replay: PROP_SEED={}):\n  {}",
+                    self.name, case, self.cases, seed, msg
+                );
+            }
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        Prop::new("abs is nonneg for > i64::MIN", 100).check(|g| {
+            let v = g.i64_in(-1_000_000, 1_000_000);
+            assert!(v.abs() >= 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        Prop::new("always fails", 10).check(|_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn generator_helpers_in_bounds() {
+        Prop::new("gen helpers", 50).check(|g| {
+            let s = g.shape(3, 8);
+            assert_eq!(s.len(), 3);
+            assert!(s.iter().all(|&e| (1..=8).contains(&e)));
+            let p = g.permutation(5);
+            let mut q = p.clone();
+            q.sort();
+            assert_eq!(q, vec![0, 1, 2, 3, 4]);
+            let u = g.usize_in(2, 10);
+            assert!((2..10).contains(&u));
+        });
+    }
+}

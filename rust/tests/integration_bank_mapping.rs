@@ -1,0 +1,115 @@
+//! Integration: bank mapping across models — the paper's E2 shape must
+//! hold (global wins, by roughly the paper's factor), and the
+//! assignments must be structurally sound.
+
+use polymem::accel::{simulate, AccelConfig};
+use polymem::ir::verify::verify_graph;
+use polymem::passes::bank::{input_requirement, is_weight_operand, BankConfig};
+use polymem::passes::manager::{BankMode, PassManager};
+use polymem::report::pct_reduction;
+
+fn run(mode: BankMode, batch: i64) -> (polymem::passes::bank::BankAssignment, polymem::accel::SimReport) {
+    let pm = PassManager { bank_mode: mode, ..Default::default() };
+    let rep = pm.run(polymem::models::resnet50(batch)).unwrap();
+    let sim = simulate(&rep.program, &AccelConfig::inferentia_like(), None);
+    (rep.bank.unwrap(), sim)
+}
+
+#[test]
+fn e2_headline_shape() {
+    let (local, local_sim) = run(BankMode::Local, 1);
+    let (global, global_sim) = run(BankMode::Global, 1);
+    // global strictly wins on remap copies and bytes
+    assert!(global.stats.copies_inserted < local.stats.copies_inserted);
+    assert!(global.stats.copy_bytes < local.stats.copy_bytes);
+    // paper ballpark: ~76% on-chip copy reduction
+    let red = pct_reduction(local_sim.onchip_copy_total(), global_sim.onchip_copy_total());
+    assert!((60.0..90.0).contains(&red), "on-chip reduction {red:.1}%");
+    // off-chip copies do not get worse
+    assert!(global_sim.offchip_copy_total() <= local_sim.offchip_copy_total());
+}
+
+#[test]
+fn assignments_cover_all_activations() {
+    let (asg, _) = run(BankMode::Global, 1);
+    for node in asg.graph.nodes() {
+        // every activation tensor an operator stages must have a placement
+        assert!(
+            asg.placements.contains_key(&node.output),
+            "missing placement for output of {}",
+            node.name
+        );
+    }
+}
+
+#[test]
+fn hard_requirements_satisfied_post_pass() {
+    // after conflict materialization, every MXU/pool activation edge
+    // must see its required placement
+    for mode in [BankMode::Local, BankMode::Global] {
+        let (asg, _) = run(mode, 1);
+        verify_graph(&asg.graph).unwrap();
+        for node in asg.graph.nodes() {
+            for (pos, &inp) in node.inputs.iter().enumerate() {
+                if is_weight_operand(&asg.graph, node, pos) {
+                    continue;
+                }
+                if asg.graph.tensor(inp).kind == polymem::ir::TensorKind::Input {
+                    continue;
+                }
+                if let Some(req) = input_requirement(node, pos) {
+                    assert_eq!(
+                        asg.placements.get(&inp),
+                        Some(&req),
+                        "{mode:?}: node {} input {pos} violates its requirement",
+                        node.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn memcopy_nodes_match_stats() {
+    for mode in [BankMode::Local, BankMode::Global] {
+        let (asg, _) = run(mode, 1);
+        let n = asg
+            .graph
+            .count_nodes(|nd| matches!(nd.kind, polymem::ir::OpKind::MemCopy));
+        assert_eq!(n, asg.stats.copies_inserted, "{mode:?}");
+    }
+}
+
+#[test]
+fn global_wins_on_resnet18_and_transformer_too() {
+    for g in [
+        polymem::models::resnet18(1),
+        polymem::models::transformer_block(128, 256, 8, 1024),
+    ] {
+        let mut bytes = vec![];
+        for mode in [BankMode::Local, BankMode::Global] {
+            let pm = PassManager { bank_mode: mode, ..Default::default() };
+            let rep = pm.run(g.clone()).unwrap();
+            bytes.push(rep.bank.unwrap().stats.copy_bytes);
+        }
+        assert!(bytes[1] <= bytes[0], "global {} > local {}", bytes[1], bytes[0]);
+    }
+}
+
+#[test]
+fn bank_count_does_not_flip_winner() {
+    for banks in [4usize, 8, 32] {
+        let mut bytes = vec![];
+        for mode in [BankMode::Local, BankMode::Global] {
+            let pm = PassManager {
+                bank_mode: mode,
+                bank_cfg: BankConfig { banks, ..Default::default() },
+                ..Default::default()
+            };
+            let rep = pm.run(polymem::models::resnet50(1)).unwrap();
+            bytes.push(rep.bank.unwrap().stats.copy_bytes);
+        }
+        assert!(bytes[1] < bytes[0], "banks={banks}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Integration: the batching server end to end, over the echo backend
+//! (always) and the PJRT artifact backend (when built).
+
+use polymem::coordinator::{EchoBackend, PjrtBackend, Server, ServerConfig};
+use polymem::runtime::RuntimeClient;
+use std::path::Path;
+use std::time::Duration;
+
+#[test]
+fn concurrent_submitters() {
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 1 << 14,
+    };
+    let srv = std::sync::Arc::new(Server::start(EchoBackend::new(4, 8), cfg));
+    let mut joins = vec![];
+    for t in 0..8u32 {
+        let srv = srv.clone();
+        joins.push(std::thread::spawn(move || {
+            for k in 0..100u32 {
+                let v = (t * 1000 + k) as f32;
+                let h = srv.submit(vec![v, v, v, v]).unwrap();
+                let out = h.wait().unwrap();
+                assert_eq!(out, vec![2.0 * v; 4]);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = srv.metrics().snapshot();
+    assert_eq!(snap.requests, 800);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn shutdown_drains_inflight() {
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        queue_cap: 1024,
+    };
+    let mut be = EchoBackend::new(2, 4);
+    be.delay = Duration::from_millis(1);
+    let srv = Server::start(be, cfg);
+    let handles: Vec<_> = (0..64)
+        .map(|k| srv.submit(vec![k as f32, 1.0]).unwrap())
+        .collect();
+    // shutdown is graceful only after responses; wait first
+    for h in handles {
+        assert!(h.wait().is_ok());
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn pjrt_backend_end_to_end() {
+    let artifact = Path::new("artifacts/model.hlo.txt");
+    if !artifact.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 2048,
+    };
+    let srv = Server::start_with(
+        move || {
+            let rt = RuntimeClient::cpu()?;
+            let model = rt.load_hlo_text(Path::new("artifacts/model.hlo.txt"))?;
+            Ok(PjrtBackend::new(model, 8, &[3, 32, 32], 10))
+        },
+        cfg,
+    )
+    .unwrap();
+    // identical inputs → identical logits, across different batches
+    let img = vec![0.25f32; 3 * 32 * 32];
+    let h1 = srv.submit(img.clone()).unwrap();
+    let first = h1.wait().unwrap();
+    let handles: Vec<_> = (0..32).map(|_| srv.submit(img.clone()).unwrap()).collect();
+    for h in handles {
+        let out = h.wait().unwrap();
+        assert_eq!(out.len(), 10);
+        for k in 0..10 {
+            assert!(
+                (out[k] - first[k]).abs() < 1e-4,
+                "batching changed numerics at {k}"
+            );
+        }
+    }
+    let snap = srv.metrics().snapshot();
+    assert_eq!(snap.errors, 0);
+    assert!(snap.mean_batch > 1.0, "batching never engaged: {snap:?}");
+    srv.shutdown();
+}
+
+/// Failure injection: a backend that errors on every Nth batch. The
+/// server must fail exactly the requests of failing batches, keep
+/// serving afterwards, and account errors in metrics.
+struct FlakyBackend {
+    inner: EchoBackend,
+    calls: usize,
+    fail_every: usize,
+}
+
+impl polymem::coordinator::Backend for FlakyBackend {
+    fn input_len(&self) -> usize {
+        self.inner.len
+    }
+    fn output_len(&self) -> usize {
+        self.inner.len
+    }
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch
+    }
+    fn infer(&mut self, batch: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+        self.calls += 1;
+        if self.calls % self.fail_every == 0 {
+            anyhow::bail!("injected failure on call {}", self.calls);
+        }
+        polymem::coordinator::Backend::infer(&mut self.inner, batch, n)
+    }
+}
+
+#[test]
+fn injected_failures_are_isolated() {
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 4096,
+    };
+    let be = FlakyBackend { inner: EchoBackend::new(2, 4), calls: 0, fail_every: 3 };
+    let srv = Server::start(be, cfg);
+    let handles: Vec<_> = (0..120)
+        .map(|k| srv.submit(vec![k as f32, 0.0]).unwrap())
+        .collect();
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for (k, h) in handles.into_iter().enumerate() {
+        match h.wait() {
+            Ok(out) => {
+                assert_eq!(out, vec![2.0 * k as f32, 0.0], "survivor corrupted");
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("injected failure"), "{e}");
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed > 0, "no batch ever failed");
+    assert!(ok > 0, "no batch ever succeeded");
+    assert_eq!(ok + failed, 120);
+    let snap = srv.metrics().snapshot();
+    assert_eq!(snap.errors as usize, failed);
+    assert_eq!(snap.requests as usize, ok);
+    srv.shutdown();
+}
+
+#[test]
+fn startup_failure_reported() {
+    let cfg = ServerConfig::default();
+    let r = Server::start_with::<EchoBackend, _>(
+        || Err(anyhow::anyhow!("deliberate startup failure")),
+        cfg,
+    );
+    assert!(r.is_err());
+}

@@ -1,0 +1,114 @@
+//! Integration: the PJRT runtime against both hand-written HLO and the
+//! real AOT artifacts (when `make artifacts` has run).
+
+use polymem::runtime::RuntimeClient;
+use std::path::Path;
+
+const MATMUL_HLO: &str = r#"
+HloModule mm
+
+ENTRY main {
+  x = f32[4,3]{1,0} parameter(0)
+  w = f32[3,2]{1,0} parameter(1)
+  ROOT mm = f32[4,2]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+
+#[test]
+fn matmul_numerics() {
+    let rt = RuntimeClient::cpu().unwrap();
+    let m = rt.load_hlo_str("mm", MATMUL_HLO).unwrap();
+    let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+    let w = vec![1f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+    let out = m.run_f32(&[(&x, &[4, 3]), (&w, &[3, 2])]).unwrap();
+    // row0 = [0,1,2] -> [0*1+1*0+2*1, 0*0+1*1+2*1] = [2, 3]
+    assert_eq!(out[0..2], [2.0, 3.0]);
+    assert_eq!(out.len(), 8);
+}
+
+#[test]
+fn repeated_execution_stable() {
+    let rt = RuntimeClient::cpu().unwrap();
+    let m = rt.load_hlo_str("mm2", MATMUL_HLO).unwrap();
+    let x: Vec<f32> = (0..12).map(|v| (v as f32) * 0.5).collect();
+    let w: Vec<f32> = (0..6).map(|v| (v as f32) - 2.0).collect();
+    let first = m.run_f32(&[(&x, &[4, 3]), (&w, &[3, 2])]).unwrap();
+    for _ in 0..10 {
+        let again = m.run_f32(&[(&x, &[4, 3]), (&w, &[3, 2])]).unwrap();
+        assert_eq!(first, again);
+    }
+}
+
+fn artifact() -> Option<std::path::PathBuf> {
+    let p = Path::new("artifacts/model.hlo.txt");
+    p.exists().then(|| p.to_path_buf())
+}
+
+#[test]
+fn aot_artifact_loads_and_runs() {
+    let Some(path) = artifact() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = RuntimeClient::cpu().unwrap();
+    let m = rt.load_hlo_text(&path).unwrap();
+    let input = vec![0.1f32; 8 * 3 * 32 * 32];
+    let out = m.run_f32(&[(&input, &[8, 3, 32, 32])]).unwrap();
+    assert_eq!(out.len(), 8 * 10);
+    assert!(out.iter().all(|v| v.is_finite()));
+    // constant input → identical logits per batch row
+    for row in 1..8 {
+        assert_eq!(out[row * 10..row * 10 + 10], out[0..10]);
+    }
+}
+
+#[test]
+fn aot_artifact_deterministic_across_loads() {
+    let Some(path) = artifact() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = RuntimeClient::cpu().unwrap();
+    let m1 = rt.load_hlo_text(&path).unwrap();
+    let m2 = rt.load_hlo_text(&path).unwrap();
+    let mut input = vec![0f32; 8 * 3 * 32 * 32];
+    for (k, v) in input.iter_mut().enumerate() {
+        *v = ((k % 97) as f32) / 97.0 - 0.5;
+    }
+    let a = m1.run_f32(&[(&input, &[8, 3, 32, 32])]).unwrap();
+    let b = m2.run_f32(&[(&input, &[8, 3, 32, 32])]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn batch1_artifact_agrees_with_batch8() {
+    let Some(path8) = artifact() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let path1 = Path::new("artifacts/model.b1.hlo.txt");
+    if !path1.exists() {
+        eprintln!("skipping: batch-1 artifact missing");
+        return;
+    }
+    let rt = RuntimeClient::cpu().unwrap();
+    let m8 = rt.load_hlo_text(&path8).unwrap();
+    let m1 = rt.load_hlo_text(path1).unwrap();
+    let mut img = vec![0f32; 3 * 32 * 32];
+    for (k, v) in img.iter_mut().enumerate() {
+        *v = ((k % 31) as f32) / 31.0;
+    }
+    // batch-8 input with the test image in row 0
+    let mut batch = vec![0f32; 8 * 3 * 32 * 32];
+    batch[..img.len()].copy_from_slice(&img);
+    let out8 = m8.run_f32(&[(&batch, &[8, 3, 32, 32])]).unwrap();
+    let out1 = m1.run_f32(&[(&img, &[1, 3, 32, 32])]).unwrap();
+    for k in 0..10 {
+        assert!(
+            (out8[k] - out1[k]).abs() < 1e-4,
+            "batch variants disagree at {k}: {} vs {}",
+            out8[k],
+            out1[k]
+        );
+    }
+}

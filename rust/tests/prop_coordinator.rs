@@ -1,0 +1,114 @@
+//! Property tests over the coordinator: response integrity, batching
+//! accounting, and policy invariants under randomized load patterns.
+
+use polymem::coordinator::batcher::{BatchPolicy, Batcher, Flush};
+use polymem::coordinator::{EchoBackend, Server, ServerConfig};
+use polymem::util::prop::Prop;
+use std::time::{Duration, Instant};
+
+#[test]
+fn every_request_answered_correctly() {
+    Prop::new("all responses correct under random load", 12).check(|g| {
+        let len = g.usize_in(1, 16);
+        let max_batch = g.usize_in(1, 16);
+        let n = g.usize_in(1, 200);
+        let mut be = EchoBackend::new(len, max_batch);
+        be.delay = Duration::from_micros(g.u64() % 500);
+        let cfg = ServerConfig {
+            max_batch,
+            max_wait: Duration::from_micros(100 + g.u64() % 2000),
+            queue_cap: 1 << 14,
+        };
+        let srv = Server::start(be, cfg);
+        let handles: Vec<_> = (0..n)
+            .map(|k| {
+                let val = k as f32;
+                srv.submit(vec![val; len]).unwrap()
+            })
+            .collect();
+        for (k, h) in handles.into_iter().enumerate() {
+            let out = h.wait().unwrap();
+            assert_eq!(out, vec![2.0 * k as f32; len], "request {k} corrupted");
+        }
+        let snap = srv.metrics().snapshot();
+        assert_eq!(snap.requests as usize, n);
+        assert_eq!(snap.errors, 0);
+        // batch accounting: batches × max_batch >= requests
+        assert!(snap.batches as usize * max_batch >= n);
+    });
+}
+
+#[test]
+fn batcher_never_exceeds_max_batch() {
+    Prop::new("batcher take() <= max_batch, conserves requests", 200).check(|g| {
+        let max_batch = g.usize_in(1, 32);
+        let policy = BatchPolicy::new(max_batch, Duration::from_millis(g.u64() % 50));
+        let mut b = Batcher::new(policy);
+        let t0 = Instant::now();
+        let mut pushed = 0usize;
+        let mut taken = 0usize;
+        for _ in 0..g.usize_in(1, 100) {
+            if g.bool() {
+                b.push(t0);
+                pushed += 1;
+            } else {
+                let n = b.take(t0);
+                assert!(n <= max_batch);
+                taken += n;
+            }
+            assert_eq!(b.pending(), pushed - taken, "accounting broken");
+        }
+        // drain
+        loop {
+            let n = b.take(t0);
+            if n == 0 {
+                break;
+            }
+            taken += n;
+        }
+        assert_eq!(pushed, taken, "requests lost or invented");
+    });
+}
+
+#[test]
+fn batcher_poll_consistent() {
+    Prop::new("poll(): Empty iff pending==0; Now when full", 200).check(|g| {
+        let max_batch = g.usize_in(1, 16);
+        let wait = Duration::from_millis(1 + g.u64() % 100);
+        let mut b = Batcher::new(BatchPolicy::new(max_batch, wait));
+        let t0 = Instant::now();
+        assert_eq!(b.poll(t0), Flush::Empty);
+        let n = g.usize_in(1, 40);
+        for _ in 0..n {
+            b.push(t0);
+        }
+        match b.poll(t0) {
+            Flush::Now => assert!(n >= max_batch),
+            Flush::Wait(d) => {
+                assert!(n < max_batch);
+                assert!(d <= wait);
+            }
+            Flush::Empty => panic!("pending but Empty"),
+        }
+        // past the deadline it must flush regardless of batch size
+        assert_eq!(b.poll(t0 + wait + Duration::from_millis(1)), Flush::Now);
+    });
+}
+
+#[test]
+fn metrics_percentiles_ordered() {
+    Prop::new("latency percentiles are monotone", 100).check(|g| {
+        let m = polymem::coordinator::Metrics::new();
+        for _ in 0..g.usize_in(1, 50) {
+            let n = g.usize_in(1, 8);
+            let lats: Vec<Duration> = (0..n)
+                .map(|_| Duration::from_micros(g.u64() % 10_000))
+                .collect();
+            m.record_batch(n, &lats);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_latency <= s.p99_latency);
+        assert!(s.mean_batch >= 1.0);
+        assert!(s.requests >= s.batches);
+    });
+}

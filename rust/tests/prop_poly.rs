@@ -1,0 +1,186 @@
+//! Property tests over the polyhedral substrate: the algebraic laws
+//! the DME pass relies on must hold for arbitrary maps, not just the
+//! ones operators emit.
+
+use polymem::poly::expr::Expr;
+use polymem::poly::matrix::IMat;
+use polymem::poly::smith::{left_inverse, smith_normal_form};
+use polymem::poly::{AccessMap, IterDomain};
+use polymem::util::prop::{Gen, Prop};
+
+fn random_matrix(g: &mut Gen, rows: usize, cols: usize, lo: i64, hi: i64) -> IMat {
+    let mut m = IMat::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            m[(i, j)] = g.i64_in(lo, hi);
+        }
+    }
+    m
+}
+
+/// Random unimodular matrix: product of elementary row operations on I.
+fn random_unimodular(g: &mut Gen, n: usize) -> IMat {
+    let mut m = IMat::identity(n);
+    if n < 2 {
+        return m; // no off-diagonal elementary ops exist
+    }
+    for _ in 0..g.usize_in(1, 8) {
+        let a = g.usize_in(0, n);
+        let mut b = g.usize_in(0, n);
+        if a == b {
+            b = (b + 1) % n;
+        }
+        let f = g.i64_in(-3, 4);
+        // row_a += f * row_b
+        for j in 0..n {
+            let v = m[(b, j)];
+            m[(a, j)] += f * v;
+        }
+    }
+    m
+}
+
+fn random_quasi_expr(g: &mut Gen, dims: usize, depth: usize) -> Expr {
+    if depth == 0 || g.chance(0.4) {
+        return if g.bool() {
+            Expr::dim(g.usize_in(0, dims))
+        } else {
+            Expr::cst(g.i64_in(-5, 6))
+        };
+    }
+    match g.usize_in(0, 4) {
+        0 => random_quasi_expr(g, dims, depth - 1).add(random_quasi_expr(g, dims, depth - 1)),
+        1 => random_quasi_expr(g, dims, depth - 1).scale(g.i64_in(-4, 5)),
+        2 => random_quasi_expr(g, dims, depth - 1).floordiv(g.i64_in(1, 7)),
+        _ => random_quasi_expr(g, dims, depth - 1).modulo(g.i64_in(1, 7)),
+    }
+}
+
+#[test]
+fn smith_decomposition_laws() {
+    Prop::new("U·A·V = D, U,V unimodular, D diagonal divisibility", 150).check(|g| {
+        let rows = g.usize_in(1, 5);
+        let cols = g.usize_in(1, 5);
+        let a = random_matrix(g, rows, cols, -6, 7);
+        let s = smith_normal_form(&a);
+        assert_eq!(s.u.mul(&a).mul(&s.v), s.d);
+        assert_eq!(s.u.det().abs(), 1);
+        assert_eq!(s.v.det().abs(), 1);
+        for i in 0..rows {
+            for j in 0..cols {
+                if i != j {
+                    assert_eq!(s.d[(i, j)], 0);
+                }
+            }
+        }
+        let r = rows.min(cols);
+        for k in 0..r.saturating_sub(1) {
+            let (x, y) = (s.d[(k, k)], s.d[(k + 1, k + 1)]);
+            assert!(x >= 0 && y >= 0);
+            if x != 0 && y != 0 {
+                assert_eq!(y % x, 0);
+            }
+        }
+    });
+}
+
+#[test]
+fn left_inverse_is_inverse() {
+    Prop::new("L·A = I for unimodular-extended maps", 100).check(|g| {
+        let n = g.usize_in(1, 4);
+        let u = random_unimodular(g, n);
+        if let Some(l) = left_inverse(&u) {
+            assert_eq!(l.mul(&u), IMat::identity(n));
+        } else {
+            panic!("unimodular matrix must have a left inverse: {u:?}");
+        }
+    });
+}
+
+#[test]
+fn reverse_roundtrip_on_domain() {
+    Prop::new("f'(f(i)) = i for invertible affine maps", 100).check(|g| {
+        let n = g.usize_in(1, 4);
+        let u = random_unimodular(g, n);
+        let b: Vec<i64> = (0..n).map(|_| g.i64_in(-10, 11)).collect();
+        let f = AccessMap::affine(&u, &b);
+        let rev = f.reverse().expect("unimodular affine map must reverse");
+        let dom = IterDomain::new(&g.shape(n, 5));
+        for p in dom.sample(32, g.u64()) {
+            assert_eq!(rev.apply(&f.apply(&p)), p);
+        }
+    });
+}
+
+#[test]
+fn compose_matches_pointwise_application() {
+    Prop::new("(f∘g)(i) = f(g(i)) incl. quasi-affine", 150).check(|g| {
+        let inner_dims = g.usize_in(1, 3);
+        let mid_dims = g.usize_in(1, 3);
+        let out_dims = g.usize_in(1, 3);
+        let inner = AccessMap::new(
+            inner_dims,
+            (0..mid_dims).map(|_| random_quasi_expr(g, inner_dims, 2)).collect(),
+        );
+        let outer = AccessMap::new(
+            mid_dims,
+            (0..out_dims).map(|_| random_quasi_expr(g, mid_dims, 2)).collect(),
+        );
+        let composed = outer.compose(&inner);
+        let dom = IterDomain::new(&g.shape(inner_dims, 6));
+        for p in dom.sample(24, g.u64()) {
+            assert_eq!(
+                composed.apply(&p),
+                outer.apply(&inner.apply(&p)),
+                "composition law broken for {outer:?} ∘ {inner:?} at {p:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn simplification_preserves_semantics() {
+    Prop::new("simplified_in(e) ≡ e on the domain", 200).check(|g| {
+        let dims = g.usize_in(1, 3);
+        let shape = g.shape(dims, 8);
+        let e = random_quasi_expr(g, dims, 3);
+        let s = e.clone().simplified_in(&shape);
+        let dom = IterDomain::new(&shape);
+        for p in dom.sample(24, g.u64()) {
+            assert_eq!(e.eval(&p), s.eval(&p), "simplify changed {e:?} -> {s:?} at {p:?}");
+        }
+    });
+}
+
+#[test]
+fn reverse_rejects_noninjective() {
+    Prop::new("rank-deficient maps have no reverse", 60).check(|g| {
+        let n = g.usize_in(2, 4);
+        // build a rank-deficient matrix: duplicate a row
+        let mut m = random_matrix(g, n, n, -4, 5);
+        let src = g.usize_in(0, n);
+        let mut dst = g.usize_in(0, n);
+        if dst == src {
+            dst = (dst + 1) % n;
+        }
+        for j in 0..n {
+            let v = m[(src, j)];
+            m[(dst, j)] = v;
+        }
+        let f = AccessMap::affine(&m, &vec![0; n]);
+        assert!(f.reverse().is_none(), "degenerate map reversed: {m:?}");
+    });
+}
+
+#[test]
+fn linearize_delinearize_roundtrip() {
+    Prop::new("linearize ∘ delinearize = id", 120).check(|g| {
+        let dims = g.usize_in(1, 4);
+        let dom = IterDomain::new(&g.shape(dims, 9));
+        for p in dom.sample(16, g.u64()) {
+            let off = dom.linearize(&p);
+            assert_eq!(dom.delinearize(off), p);
+            assert!(off >= 0 && off < dom.cardinality());
+        }
+    });
+}
