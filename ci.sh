@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# One-shot verifier: build, tests, and formatting.
+#
+#   ./ci.sh
+#
+# `cargo fmt --check` runs only when a rustfmt component is installed
+# (the offline build image may not carry one); build and tests are
+# always mandatory.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt --check skipped (rustfmt not installed) =="
+fi
+
+echo "ci.sh: all checks passed"

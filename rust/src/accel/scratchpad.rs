@@ -1,11 +1,16 @@
-//! Software-managed scratchpad residency.
+//! Software-managed scratchpad residency — the **dynamic baseline**.
 //!
-//! The compiler (here: the simulator standing in for the compiler's
-//! allocator) decides which tensors live in the banked scratchpad at
-//! each schedule point. Eviction picks the resident victim with the
-//! furthest next use (Belady-style, computable because the schedule is
-//! static — exactly the advantage a compiler-managed scratchpad has
-//! over a hardware cache).
+//! This tracker improvises residency at replay time: eviction picks
+//! the resident victim with the furthest next use (Belady-style,
+//! computable because the schedule is static). It stands in for what a
+//! compiler-managed scratchpad achieves *at best* without an explicit
+//! plan. The real compile-time answer lives in [`crate::alloc`], which
+//! bakes the same furthest-next-use policy into a static
+//! [`crate::alloc::MemoryPlan`] with concrete `(bank, offset, size)`
+//! regions and explicit spill IR; the simulator's planned mode
+//! ([`crate::accel::sim::simulate_planned`]) replays that plan
+//! verbatim and verifies it, while this module remains the baseline
+//! benches compare against (`bench_alloc_plan`).
 
 use crate::ir::tensor::TensorId;
 use std::collections::BTreeMap;

@@ -207,6 +207,177 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
     }
 }
 
+/// Replay a program against a compile-time [`MemoryPlan`] ("planned
+/// mode"). Residency is taken from the plan **verbatim** — the plan is
+/// verified first (capacity, region overlap, residency coverage; see
+/// [`crate::alloc::verify_plan`]) and replay refuses to start on any
+/// violation, instead of improvising residency the way the dynamic
+/// replay does.
+///
+/// Traffic uses the same classes as [`simulate`], charged from the
+/// plan:
+/// * input/weight scratch windows charge their staging bytes at the
+///   window start (re-staged windows charge again, like the dynamic
+///   path's reload of an evicted weight — but with **no** spill
+///   write-back, since the planner knows those bytes are clean);
+/// * DRAM-homed ("streamed") tensors charge a full read per use and a
+///   `Spill` write when produced, matching the dynamic path's
+///   never-admitted tensors;
+/// * copy nests move on-chip when both endpoints are resident; a
+///   DRAM-homed destination makes the nest an explicit `Spill` write
+///   (that is exactly what the spill planner's `spill.*` nests are).
+pub fn simulate_planned(
+    prog: &Program,
+    plan: &crate::alloc::MemoryPlan,
+    cfg: &AccelConfig,
+    mut trace: Option<&mut Trace>,
+) -> Result<SimReport, crate::alloc::PlanViolation> {
+    use crate::alloc::Home;
+
+    crate::alloc::verify_plan(prog, plan, cfg)?;
+    let mut traffic = TrafficCounters::new();
+    let mut seconds = 0.0f64;
+    let mut staging_deposit_bytes = 0i64;
+    let mut copy_nests = 0usize;
+    let node_by_id: std::collections::HashMap<_, _> =
+        prog.graph.nodes().iter().map(|n| (n.id, n)).collect();
+    // release points for tracing: window end -> tensors
+    let mut ends: std::collections::BTreeMap<usize, Vec<TensorId>> = Default::default();
+    if trace.is_some() {
+        for (t, tp) in &plan.tensors {
+            for w in &tp.windows {
+                if matches!(w.home, Home::Scratch(_)) {
+                    ends.entry(w.end).or_default().push(*t);
+                }
+            }
+        }
+    }
+
+    for (pos, nest) in prog.nests.iter().enumerate() {
+        let node = node_by_id[&nest.node];
+        let mut off_bytes = 0i64;
+        let mut on_bytes = 0i64;
+
+        // ---- operands: staged at window start, streamed when DRAM ----
+        let mut operands: Vec<TensorId> = nest
+            .body
+            .loads()
+            .iter()
+            .flat_map(|l| l.pieces.iter().filter_map(|p| p.tensor))
+            .collect();
+        operands.sort();
+        operands.dedup();
+        for &t in &operands {
+            let info = prog.graph.tensor(t);
+            let bytes = info.size_bytes();
+            let w = plan.window_at(t, pos).expect("verified residency");
+            let staged_class = match info.kind {
+                TensorKind::Weight => TrafficClass::WeightLoad,
+                TensorKind::Input => TrafficClass::InputLoad,
+                _ => TrafficClass::Reload,
+            };
+            match w.home {
+                Home::Scratch(_) => {
+                    // intermediates are produced on chip; inputs and
+                    // weights pay a staging DMA when the window opens
+                    let staged_here = w.start == pos
+                        && matches!(info.kind, TensorKind::Input | TensorKind::Weight);
+                    if staged_here {
+                        traffic.add(staged_class, bytes);
+                        off_bytes += bytes;
+                        staging_deposit_bytes += bytes;
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(TraceEvent::Stage {
+                                pos,
+                                tensor: t,
+                                bytes,
+                                class: staged_class,
+                            });
+                        }
+                    }
+                }
+                Home::Dram => {
+                    // streamed: a full read per consuming nest
+                    traffic.add(staged_class, bytes);
+                    off_bytes += bytes;
+                    staging_deposit_bytes += bytes;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.push(TraceEvent::Stage { pos, tensor: t, bytes, class: staged_class });
+                    }
+                }
+            }
+        }
+        // ---- output ----
+        let out = nest.store.tensor;
+        let out_info = prog.graph.tensor(out);
+        let out_bytes = out_info.size_bytes();
+        let out_resident = matches!(
+            plan.window_at(out, pos).expect("verified").home,
+            Home::Scratch(_)
+        );
+
+        // ---- execute ----
+        let elem = out_info.dtype.size_bytes();
+        match &nest.body {
+            Body::Copy { .. } => {
+                copy_nests += 1;
+                let moved = nest.domain.cardinality() * elem;
+                let is_remap = matches!(node.kind, OpKind::MemCopy);
+                if out_resident {
+                    // on-chip deposit (streamed sources were charged above)
+                    traffic.add(
+                        if is_remap {
+                            TrafficClass::OnchipRemap
+                        } else {
+                            TrafficClass::OnchipCopy
+                        },
+                        moved,
+                    );
+                    on_bytes += moved;
+                } else {
+                    // explicit spill write (or streamed copy result)
+                    traffic.add(TrafficClass::Spill, moved);
+                    off_bytes += moved;
+                }
+            }
+            Body::Compute { .. } => {
+                if !out_resident {
+                    traffic.add(TrafficClass::Spill, out_bytes);
+                    off_bytes += out_bytes;
+                }
+            }
+        }
+
+        // ---- latency ----
+        let comp_s = engine::compute_seconds(cfg, nest, &node.kind);
+        let dma_s = engine::dma_seconds(cfg, off_bytes, true)
+            + engine::dma_seconds(cfg, on_bytes, false);
+        seconds += engine::step_seconds(comp_s, dma_s);
+
+        if let Some(tr) = trace.as_deref_mut() {
+            for t in ends.get(&pos).into_iter().flatten() {
+                tr.push(TraceEvent::Release { pos, tensor: *t });
+            }
+        }
+    }
+
+    // ---- write model outputs back (same as the dynamic replay) ----
+    for out in prog.graph.outputs() {
+        let bytes = prog.graph.tensor(out).size_bytes();
+        traffic.add(TrafficClass::OutputStore, bytes);
+        seconds += engine::dma_seconds(cfg, bytes, true);
+    }
+
+    Ok(SimReport {
+        traffic,
+        seconds,
+        peak_scratchpad: plan.peak_scratchpad_bytes(),
+        nests_executed: prog.nests.len(),
+        copy_nests_executed: copy_nests,
+        staging_deposit_bytes,
+    })
+}
+
 fn record_evictions(
     traffic: &mut TrafficCounters,
     in_dram: &mut HashSet<TensorId>,
@@ -333,6 +504,63 @@ mod tests {
         let rep = run(b.finish(), &cfg);
         assert!(rep.traffic.get(TrafficClass::Spill) > 0, "{:?}", rep.traffic);
         assert!(rep.traffic.get(TrafficClass::Reload) > 0, "{:?}", rep.traffic);
+    }
+
+    #[test]
+    fn planned_matches_dynamic_when_roomy() {
+        use crate::alloc::{plan_memory, AllocOpts};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t = b.transpose("t", x, &[1, 0]);
+        let r = b.relu("r", t);
+        b.mark_output(r);
+        let cfg = AccelConfig::inferentia_like();
+        let res = plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default());
+        let dynamic = simulate(&res.program, &cfg, None);
+        let planned = simulate_planned(&res.program, &res.plan, &cfg, None).unwrap();
+        // with no capacity pressure the two accountings agree exactly
+        assert_eq!(planned.offchip_total(), dynamic.offchip_total());
+        assert_eq!(planned.onchip_copy_total(), dynamic.onchip_copy_total());
+        assert_eq!(
+            planned.onchip_movement_total(),
+            dynamic.onchip_movement_total()
+        );
+        assert_eq!(planned.nests_executed, dynamic.nests_executed);
+    }
+
+    #[test]
+    fn planned_spills_are_explicit_and_bounded() {
+        use crate::alloc::{plan_memory, AllocOpts};
+        // fan-out graph under a one-slice-per-bank configuration: the
+        // planner must spill, and the planned replay must verify
+        let mut cfg = AccelConfig::tiny(8 * 1024);
+        cfg.bank_bytes = crate::alloc::offsets::per_bank_bytes(32 * 32 * 4, cfg.banks);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", x, &[1, 0]);
+        let t3 = b.transpose("t3", x, &[1, 0]);
+        let c = b.concat("c", &[t1, t2, t3], 0);
+        b.mark_output(c);
+        let res = plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default());
+        let planned = simulate_planned(&res.program, &res.plan, &cfg, None).unwrap();
+        assert!(res.plan.stats.spill_pairs >= 1);
+        assert!(planned.traffic.get(TrafficClass::Spill) > 0);
+        assert!(planned.peak_scratchpad <= cfg.scratchpad_bytes());
+    }
+
+    #[test]
+    fn planned_rejects_corrupt_plan() {
+        use crate::alloc::{plan_memory, AllocOpts};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let cfg = AccelConfig::inferentia_like();
+        let mut res =
+            plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default());
+        res.plan.tensors.remove(&x);
+        assert!(simulate_planned(&res.program, &res.plan, &cfg, None).is_err());
     }
 
     #[test]

@@ -1,0 +1,510 @@
+//! Static scratchpad planning — compile-time scheduling, offset
+//! allocation and spill planning.
+//!
+//! The paper's premise is that a software-managed scratchpad is staged
+//! *by the compiler*; until this subsystem existed, residency decisions
+//! lived inside the simulator (`accel/scratchpad.rs` made Belady-style
+//! eviction choices at replay time), so no memory plan was ever
+//! actually produced. `alloc` closes that gap with three cooperating
+//! components, following the combined scheduling / allocation /
+//! tensor-replacement formulation of Li et al. (arXiv 2311.18246) and
+//! the full-stack search framing of Zhang et al. (arXiv 2105.12842):
+//!
+//! * [`schedule`] — searches topological orders of the operator graph
+//!   for minimum peak live footprint (greedy with bounded lookahead,
+//!   measured by [`crate::passes::liveness::Liveness`]);
+//! * [`offsets`] — assigns every staged tensor a concrete
+//!   `(bank group, offset, size)` region by interval-overlap first-fit,
+//!   honoring `BankAssignment` placements and reusing addresses across
+//!   non-overlapping live ranges;
+//! * [`spill`] — when demand exceeds the configured SRAM, makes
+//!   evictions explicit: window splits for clean inputs/weights,
+//!   `spill.*`/`reload.*` copy nests (real IR) for intermediates, with
+//!   the same furthest-next-use victim flavor the simulator used
+//!   dynamically.
+//!
+//! The product is a [`MemoryPlan`]: per-tensor residency windows, each
+//! with a concrete region (or DRAM streaming). The simulator's planned
+//! mode ([`crate::accel::sim::simulate_planned`]) replays a plan
+//! verbatim and *verifies* it — capacity, region overlap and residency
+//! assertions — instead of improvising; [`verify_plan`] is the
+//! checker. The dynamic path remains as the baseline so benches can
+//! report planned-vs-dynamic traffic (`bench_alloc_plan`).
+//!
+//! Plan-format invariants (checked by [`verify_plan`], documented in
+//! DESIGN.md):
+//! 1. every tensor a nest touches has a window covering that position;
+//! 2. scratch regions sit inside a bank: `0 <= offset` and
+//!    `offset + per_bank_bytes <= bank_bytes`, with `per_bank_bytes`
+//!    covering the tensor spread over the group's `banks` banks;
+//! 3. no two time-overlapping scratch windows of the same group
+//!    overlap in `[offset, offset + per_bank_bytes)` — except the
+//!    single-position operand→result handoff the dynamic simulator
+//!    also permits;
+//! 4. windows are sorted, disjoint, and within the schedule.
+
+pub mod offsets;
+pub mod schedule;
+pub mod spill;
+
+pub use offsets::{Home, PlanWindow, Region, TensorPlan, ALLOC_ALIGN};
+pub use schedule::{schedule_min_footprint, ScheduleOpts, ScheduleStats};
+pub use spill::SpillAction;
+
+use crate::accel::config::AccelConfig;
+use crate::ir::loopnest::Program;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::passes::bank::{Align, BankAssignment};
+use crate::passes::liveness::Liveness;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+/// Planner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocOpts {
+    /// Scheduler lookahead (see [`ScheduleOpts`]).
+    pub lookahead: usize,
+    /// Hard cap on spill-resolution rounds; beyond it the failing
+    /// tensors are streamed from DRAM (guaranteed termination).
+    pub max_rounds: usize,
+}
+
+impl Default for AllocOpts {
+    fn default() -> Self {
+        AllocOpts { lookahead: 4, max_rounds: 512 }
+    }
+}
+
+/// Aggregate statistics of one planning run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    /// Peak live bytes before/after scheduling.
+    pub peak_live_before: i64,
+    pub peak_live_after: i64,
+    /// Nodes the scheduler moved.
+    pub moved_nodes: usize,
+    /// Allocation rounds (1 = no spilling needed).
+    pub rounds: usize,
+    /// Explicit spill/reload copy-nest pairs inserted.
+    pub spill_pairs: usize,
+    /// Bytes written to DRAM by those spills.
+    pub spilled_bytes: i64,
+    /// Input/weight residency windows split (plan-only evictions).
+    pub window_splits: usize,
+    /// Tensors demoted to DRAM streaming.
+    pub streamed: usize,
+    /// Windows placed outside their preferred bank group.
+    pub cross_group: usize,
+    /// Per-bank offset high-water marks.
+    pub peak_row_offset: i64,
+    pub peak_col_offset: i64,
+}
+
+/// The compile-time memory plan for one scheduled program.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    /// Residency windows + regions per tensor.
+    pub tensors: BTreeMap<TensorId, TensorPlan>,
+    /// Schedule length (nest count) the plan was built for.
+    pub n_positions: usize,
+    /// Banks per group and bytes per bank the plan assumed.
+    pub banks: usize,
+    pub bank_bytes: i64,
+    pub stats: PlanStats,
+}
+
+impl MemoryPlan {
+    /// The window (if any) covering `pos` for tensor `t`.
+    pub fn window_at(&self, t: TensorId, pos: usize) -> Option<&PlanWindow> {
+        self.tensors.get(&t).and_then(|tp| tp.window_at(pos))
+    }
+
+    /// The scratch region `t` occupies at `pos` (None when absent or
+    /// DRAM-streamed).
+    pub fn region_at(&self, t: TensorId, pos: usize) -> Option<Region> {
+        match self.window_at(t, pos)?.home {
+            Home::Scratch(r) => Some(r),
+            Home::Dram => None,
+        }
+    }
+
+    /// Planned scratchpad high-water mark in bytes: the measure of the
+    /// *union* of occupied per-bank address ranges, maximized over
+    /// schedule positions. (A union, not a sum: at a handoff position
+    /// the dying operand and the newborn result alias one range and
+    /// must be counted once — which also keeps this bounded by the
+    /// configured capacity whenever the plan verifies.)
+    pub fn peak_scratchpad_bytes(&self) -> i64 {
+        let windows: Vec<(&PlanWindow, Region)> = self
+            .tensors
+            .values()
+            .flat_map(|tp| {
+                tp.windows.iter().filter_map(|w| match w.home {
+                    Home::Scratch(r) => Some((w, r)),
+                    Home::Dram => None,
+                })
+            })
+            .collect();
+        let mut peak = 0i64;
+        for pos in 0..self.n_positions {
+            let mut per_bank = 0i64;
+            for group in [Align::Row, Align::Col] {
+                let mut ranges: Vec<(i64, i64)> = windows
+                    .iter()
+                    .filter(|(w, r)| w.start <= pos && pos <= w.end && r.group == group)
+                    .map(|(_, r)| (r.offset, r.end()))
+                    .collect();
+                ranges.sort_unstable();
+                let mut cur_end = 0i64;
+                for (s, e) in ranges {
+                    if s >= cur_end {
+                        per_bank += e - s;
+                        cur_end = e;
+                    } else if e > cur_end {
+                        per_bank += e - cur_end;
+                        cur_end = e;
+                    }
+                }
+            }
+            peak = peak.max(per_bank);
+        }
+        peak * self.banks as i64
+    }
+
+    /// Summary for reports/benches.
+    pub fn to_json(&self) -> Json {
+        let s = &self.stats;
+        Json::obj(vec![
+            ("n_positions", Json::Int(self.n_positions as i64)),
+            ("banks", Json::Int(self.banks as i64)),
+            ("bank_bytes", Json::Int(self.bank_bytes)),
+            ("planned_tensors", Json::Int(self.tensors.len() as i64)),
+            ("peak_scratchpad", Json::Int(self.peak_scratchpad_bytes())),
+            ("peak_live_before", Json::Int(s.peak_live_before)),
+            ("peak_live_after", Json::Int(s.peak_live_after)),
+            ("moved_nodes", Json::Int(s.moved_nodes as i64)),
+            ("rounds", Json::Int(s.rounds as i64)),
+            ("spill_pairs", Json::Int(s.spill_pairs as i64)),
+            ("spilled_bytes", Json::Int(s.spilled_bytes)),
+            ("window_splits", Json::Int(s.window_splits as i64)),
+            ("streamed", Json::Int(s.streamed as i64)),
+            ("cross_group", Json::Int(s.cross_group as i64)),
+        ])
+    }
+}
+
+/// A plan-invariant violation (planned-mode simulation refuses to run).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanViolation {
+    /// A nest touches a tensor with no covering window.
+    NotResident { tensor: TensorId, pos: usize },
+    /// A region escapes its bank or under-covers its tensor.
+    BadRegion { tensor: TensorId, detail: String },
+    /// Two live windows overlap in the same bank group.
+    Overlap { a: TensorId, b: TensorId },
+    /// A window is outside the schedule or malformed.
+    BadWindow { tensor: TensorId },
+}
+
+impl fmt::Display for PlanViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanViolation::NotResident { tensor, pos } => {
+                write!(f, "plan: {tensor:?} not resident at position {pos}")
+            }
+            PlanViolation::BadRegion { tensor, detail } => {
+                write!(f, "plan: bad region for {tensor:?}: {detail}")
+            }
+            PlanViolation::Overlap { a, b } => {
+                write!(f, "plan: regions of {a:?} and {b:?} overlap while both live")
+            }
+            PlanViolation::BadWindow { tensor } => {
+                write!(f, "plan: malformed window for {tensor:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanViolation {}
+
+/// Verify every plan-format invariant against a program and chip
+/// configuration. The planned-mode simulator runs this before replay.
+pub fn verify_plan(
+    prog: &Program,
+    plan: &MemoryPlan,
+    cfg: &AccelConfig,
+) -> Result<(), PlanViolation> {
+    let lv = Liveness::analyze(prog);
+    if plan.n_positions != prog.nests.len() {
+        return Err(PlanViolation::BadWindow { tensor: TensorId(u32::MAX) });
+    }
+
+    // windows well-formed
+    for (t, tp) in &plan.tensors {
+        let mut prev_end: Option<usize> = None;
+        for w in &tp.windows {
+            if w.start > w.end || w.end >= plan.n_positions {
+                return Err(PlanViolation::BadWindow { tensor: *t });
+            }
+            if let Some(pe) = prev_end {
+                if w.start <= pe {
+                    return Err(PlanViolation::BadWindow { tensor: *t });
+                }
+            }
+            prev_end = Some(w.end);
+            if let Home::Scratch(r) = w.home {
+                if r.offset < 0 || r.offset + r.per_bank_bytes > plan.bank_bytes {
+                    return Err(PlanViolation::BadRegion {
+                        tensor: *t,
+                        detail: format!(
+                            "offset {}..{} outside bank of {} bytes",
+                            r.offset,
+                            r.end(),
+                            plan.bank_bytes
+                        ),
+                    });
+                }
+                let need = prog.graph.tensor(*t).size_bytes();
+                if r.total_bytes(plan.banks) < need {
+                    return Err(PlanViolation::BadRegion {
+                        tensor: *t,
+                        detail: format!(
+                            "{} bytes across {} banks < tensor size {}",
+                            r.total_bytes(plan.banks),
+                            plan.banks,
+                            need
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // residency: every touched tensor has a covering window
+    for (pos, nest) in prog.nests.iter().enumerate() {
+        for load in nest.body.loads() {
+            for piece in &load.pieces {
+                if let Some(t) = piece.tensor {
+                    if plan.window_at(t, pos).is_none() {
+                        return Err(PlanViolation::NotResident { tensor: t, pos });
+                    }
+                }
+            }
+        }
+        if plan.window_at(nest.store.tensor, pos).is_none() {
+            return Err(PlanViolation::NotResident { tensor: nest.store.tensor, pos });
+        }
+    }
+
+    // overlap: pairwise over scratch windows of the same group
+    let flat: Vec<(TensorId, &PlanWindow, Region)> = plan
+        .tensors
+        .iter()
+        .flat_map(|(t, tp)| {
+            tp.windows.iter().filter_map(move |w| match w.home {
+                Home::Scratch(r) => Some((*t, w, r)),
+                Home::Dram => None,
+            })
+        })
+        .collect();
+    for (i, (ta, wa, ra)) in flat.iter().enumerate() {
+        for (tb, wb, rb) in flat.iter().skip(i + 1) {
+            if ra.group != rb.group {
+                continue;
+            }
+            let addr_overlap = ra.offset < rb.end() && rb.offset < ra.end();
+            if !addr_overlap {
+                continue;
+            }
+            if offsets::windows_conflict(&lv, prog, (*ta, wa.start, wa.end), (*tb, wb.start, wb.end))
+            {
+                return Err(PlanViolation::Overlap { a: *ta, b: *tb });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Planner result: the (possibly rescheduled, possibly spill-extended)
+/// program plus its memory plan.
+#[derive(Clone, Debug)]
+pub struct AllocResult {
+    pub program: Program,
+    pub plan: MemoryPlan,
+}
+
+/// Run the full static planner: schedule, then iterate offset
+/// allocation + spill resolution to a clean plan.
+pub fn plan_memory(
+    program: Program,
+    bank: Option<&BankAssignment>,
+    cfg: &AccelConfig,
+    opts: &AllocOpts,
+) -> AllocResult {
+    let sched_opts = ScheduleOpts { lookahead: opts.lookahead, ..Default::default() };
+    let (mut program, sched) = schedule_min_footprint(program, &sched_opts);
+
+    let placements = bank.map(|b| &b.placements);
+    let mut dram: BTreeSet<TensorId> = BTreeSet::new();
+    let mut evictions: BTreeMap<TensorId, BTreeSet<usize>> = BTreeMap::new();
+
+    // Single-use inputs/weights are streamed, never planned into
+    // residency: staging and streaming cost identical DRAM bytes in
+    // this traffic model, and keeping one-shot operands out of the
+    // scratchpad frees whole banks (what double-buffered weight
+    // streaming achieves on real hardware). Multi-use operands keep
+    // residency windows so their reuse stays on-chip.
+    {
+        let lv = Liveness::analyze(&program);
+        for t in program.graph.tensors() {
+            if matches!(t.kind, TensorKind::Input | TensorKind::Weight)
+                && lv.use_positions(t.id).len() == 1
+            {
+                dram.insert(t.id);
+            }
+        }
+    }
+    let mut stats = PlanStats {
+        peak_live_before: sched.peak_before,
+        peak_live_after: sched.peak_after,
+        moved_nodes: sched.moved_nodes,
+        ..Default::default()
+    };
+
+    loop {
+        stats.rounds += 1;
+        let lv = Liveness::analyze(&program);
+        match offsets::allocate(&program, &lv, placements, cfg, &dram, &evictions) {
+            Ok(out) => {
+                stats.cross_group = out.cross_group;
+                stats.peak_row_offset = out.peak_row_offset;
+                stats.peak_col_offset = out.peak_col_offset;
+                let plan = MemoryPlan {
+                    tensors: out.tensors,
+                    n_positions: program.nests.len(),
+                    banks: cfg.banks,
+                    bank_bytes: cfg.bank_bytes,
+                    stats,
+                };
+                return AllocResult { program, plan };
+            }
+            Err(conflict) => {
+                let action = if stats.rounds >= opts.max_rounds {
+                    // termination backstop: stream the failing tensor
+                    dram.insert(conflict.tensor);
+                    SpillAction::Stream { tensor: conflict.tensor }
+                } else {
+                    spill::resolve(&mut program, &lv, &conflict, &mut dram, &mut evictions)
+                };
+                match action {
+                    SpillAction::SplitWindow { .. } => stats.window_splits += 1,
+                    SpillAction::SpillPair { bytes, .. } => {
+                        stats.spill_pairs += 1;
+                        stats.spilled_bytes += bytes;
+                    }
+                    SpillAction::Stream { .. } => stats.streamed += 1,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::verify::{verify_graph, verify_program};
+
+    fn plan_for(g: crate::ir::Graph, cfg: &AccelConfig) -> AllocResult {
+        plan_memory(Program::lower(g), None, cfg, &AllocOpts::default())
+    }
+
+    #[test]
+    fn roomy_plan_needs_no_spills() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[16, 16]);
+        let t = b.transpose("t", x, &[1, 0]);
+        let y = b.relu("y", t);
+        b.mark_output(y);
+        let r = plan_for(b.finish(), &AccelConfig::inferentia_like());
+        assert_eq!(r.plan.stats.rounds, 1);
+        assert_eq!(r.plan.stats.spill_pairs, 0);
+        verify_plan(&r.program, &r.plan, &AccelConfig::inferentia_like()).unwrap();
+    }
+
+    #[test]
+    fn tight_plan_spills_and_verifies() {
+        // Three parallel transposes of x feed a concat: four windows
+        // overlap strictly while each bank holds exactly one tensor
+        // slice, so the planner must insert spill/reload pairs.
+        let mut cfg = AccelConfig::tiny(8 * 1024);
+        cfg.bank_bytes = crate::alloc::offsets::per_bank_bytes(32 * 32 * 4, cfg.banks);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", x, &[1, 0]);
+        let t3 = b.transpose("t3", x, &[1, 0]);
+        let c = b.concat("c", &[t1, t2, t3], 0);
+        b.mark_output(c);
+        let r = plan_for(b.finish(), &cfg);
+        verify_graph(&r.program.graph).unwrap();
+        verify_program(&r.program).unwrap();
+        verify_plan(&r.program, &r.plan, &cfg).unwrap();
+        assert!(r.plan.stats.rounds > 1, "{:?}", r.plan.stats);
+        assert!(r.plan.stats.spill_pairs >= 1, "{:?}", r.plan.stats);
+        let spills = r
+            .program
+            .graph
+            .count_nodes(|n| n.name.starts_with("spill."));
+        assert_eq!(spills, r.plan.stats.spill_pairs);
+        // the plan fits the configured capacity by construction
+        assert!(r.plan.peak_scratchpad_bytes() <= cfg.scratchpad_bytes());
+    }
+
+    #[test]
+    fn peak_accounting_matches_regions() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let cfg = AccelConfig::inferentia_like();
+        let r = plan_for(b.finish(), &cfg);
+        let peak = r.plan.peak_scratchpad_bytes();
+        assert!(peak > 0);
+        assert!(peak <= cfg.scratchpad_bytes());
+    }
+
+    #[test]
+    fn verify_plan_catches_missing_window() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let cfg = AccelConfig::inferentia_like();
+        let mut r = plan_for(b.finish(), &cfg);
+        r.plan.tensors.remove(&x);
+        let err = verify_plan(&r.program, &r.plan, &cfg).unwrap_err();
+        assert!(matches!(err, PlanViolation::NotResident { tensor, .. } if tensor == x));
+    }
+
+    #[test]
+    fn verify_plan_catches_overlap() {
+        // x is read twice, so it keeps a scratch region live across
+        // both adds — as does the first sum s.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let y = b.input("y", &[8, 8]);
+        let s = b.add("s", x, y);
+        let u = b.add("u", s, x);
+        b.mark_output(u);
+        let cfg = AccelConfig::inferentia_like();
+        let mut r = plan_for(b.finish(), &cfg);
+        // force s onto x's region while both are live
+        let rx = r.plan.region_at(x, 0).expect("x is multi-use, planned");
+        let tp = r.plan.tensors.get_mut(&s).unwrap();
+        tp.windows[0].home = Home::Scratch(rx);
+        let err = verify_plan(&r.program, &r.plan, &cfg).unwrap_err();
+        assert!(matches!(err, PlanViolation::Overlap { .. }), "{err}");
+    }
+}

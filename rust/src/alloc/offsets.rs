@@ -1,0 +1,441 @@
+//! Static `(bank group, offset, size)` assignment.
+//!
+//! Every tensor staged on chip receives a concrete region of the
+//! banked scratchpad at compile time: the bank group its
+//! [`Placement`] names (Row or Col), a byte offset inside each bank of
+//! that group, and a per-bank slice size (the tensor is spread across
+//! all `banks` banks of its group at the same offset, the layout the
+//! bank-mapping passes assume). Two tensors may share addresses exactly
+//! when their residency windows do not overlap in time — the address
+//! reuse a static allocator gets for free from liveness.
+//!
+//! The allocator is interval-overlap first-fit: windows are placed in
+//! schedule order, each at the lowest offset not overlapping any
+//! time-conflicting placed window of the same group. A window that fits
+//! in neither its preferred group nor (crossbar fallback, see below)
+//! the other group is returned as a [`Conflict`] for the spill planner
+//! to resolve.
+//!
+//! **Group fallback.** The eviction crossbar can deposit a result into
+//! either bank group at equal cost when the destination is known at
+//! schedule time (`passes/bank.rs` §"compiler degree of freedom") —
+//! and a static plan knows it. When the preferred group is full the
+//! allocator therefore borrows space in the other group rather than
+//! spilling, counting the event in
+//! [`AllocOutcome::cross_group`]. The traffic model (like the dynamic
+//! simulator, which is group-blind) charges no penalty; a finer
+//! crossbar-contention model is future work.
+
+use crate::accel::config::AccelConfig;
+use crate::ir::loopnest::Program;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::passes::bank::{Align, Placement};
+use crate::passes::liveness::Liveness;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Region granularity: offsets and sizes are rounded to this many
+/// bytes per bank (DMA burst granularity).
+pub const ALLOC_ALIGN: i64 = 64;
+
+/// A concrete scratchpad region.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Region {
+    /// Bank group (the `banks` banks of this group each hold a slice).
+    pub group: Align,
+    /// Byte offset inside each bank of the group.
+    pub offset: i64,
+    /// Slice bytes per bank (aligned); `banks * per_bank_bytes` total.
+    pub per_bank_bytes: i64,
+}
+
+impl Region {
+    pub fn end(&self) -> i64 {
+        self.offset + self.per_bank_bytes
+    }
+
+    pub fn total_bytes(&self, banks: usize) -> i64 {
+        self.per_bank_bytes * banks as i64
+    }
+}
+
+/// Where a tensor lives during one residency window.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Home {
+    /// Planned into the scratchpad at a concrete region.
+    Scratch(Region),
+    /// Streamed from/to DRAM (too big, or the spill planner demoted
+    /// it); occupies no scratchpad space.
+    Dram,
+}
+
+/// One residency window: the tensor occupies `home` for schedule
+/// positions `start..=end`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct PlanWindow {
+    pub start: usize,
+    pub end: usize,
+    pub home: Home,
+}
+
+/// Per-tensor plan: disjoint, sorted residency windows.
+#[derive(Clone, Debug, Default)]
+pub struct TensorPlan {
+    pub windows: Vec<PlanWindow>,
+}
+
+impl TensorPlan {
+    pub fn window_at(&self, pos: usize) -> Option<&PlanWindow> {
+        self.windows.iter().find(|w| w.start <= pos && pos <= w.end)
+    }
+}
+
+/// Successful allocation of every window.
+#[derive(Clone, Debug)]
+pub struct AllocOutcome {
+    pub tensors: BTreeMap<TensorId, TensorPlan>,
+    /// Per-bank offset high-water mark, Row group.
+    pub peak_row_offset: i64,
+    /// Per-bank offset high-water mark, Col group.
+    pub peak_col_offset: i64,
+    /// Windows placed outside their preferred group.
+    pub cross_group: usize,
+}
+
+/// A window that fit in neither group: the spill planner must free
+/// space (or demote a tensor to DRAM) and allocation is retried.
+#[derive(Clone, Debug)]
+pub struct Conflict {
+    pub tensor: TensorId,
+    pub start: usize,
+    pub end: usize,
+    pub per_bank_bytes: i64,
+    /// Scratch windows (tensor, start, end) overlapping this window in
+    /// time — the victim candidates.
+    pub overlapping: Vec<(TensorId, usize, usize)>,
+}
+
+/// Per-bank slice size for a tensor spread across `banks` banks.
+pub fn per_bank_bytes(total_bytes: i64, banks: usize) -> i64 {
+    let per = (total_bytes + banks as i64 - 1) / banks as i64;
+    (per + ALLOC_ALIGN - 1) / ALLOC_ALIGN * ALLOC_ALIGN
+}
+
+#[derive(Clone, Copy)]
+struct Placed {
+    tensor: TensorId,
+    start: usize,
+    end: usize,
+    offset: i64,
+    per_bank: i64,
+    group: Align,
+}
+
+/// Residency windows of every tensor over the program schedule,
+/// derived from liveness: intermediates/outputs live `[def, last
+/// read]`, inputs/weights `[first read, last read]` split at the
+/// eviction breaks the spill planner recorded (`evictions[t]` holds
+/// use-indexes `k` meaning "not resident between use k and use k+1").
+pub(crate) fn residency_windows(
+    prog: &Program,
+    lv: &Liveness,
+    evictions: &BTreeMap<TensorId, BTreeSet<usize>>,
+) -> Vec<(TensorId, usize, usize)> {
+    // last writing nest per tensor (multi-nest nodes like `concat`
+    // write their output at several positions; liveness only records
+    // the first)
+    let mut last_write: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for (pos, nest) in prog.nests.iter().enumerate() {
+        last_write.insert(nest.store.tensor, pos);
+    }
+    let mut out = Vec::new();
+    for t in prog.graph.tensors() {
+        let uses = lv.use_positions(t.id);
+        match t.kind {
+            TensorKind::Input | TensorKind::Weight => {
+                if uses.is_empty() {
+                    continue;
+                }
+                let breaks = evictions.get(&t.id);
+                let mut run_start = uses[0];
+                for k in 0..uses.len() {
+                    let broken = breaks.map(|b| b.contains(&k)).unwrap_or(false);
+                    let last = k + 1 == uses.len();
+                    if broken || last {
+                        out.push((t.id, run_start, uses[k]));
+                        if !last {
+                            run_start = uses[k + 1];
+                        }
+                    }
+                }
+            }
+            TensorKind::Intermediate | TensorKind::Output => {
+                let Some(r) = lv.ranges.get(&t.id) else { continue };
+                let lw = last_write.get(&t.id).copied().unwrap_or(r.def);
+                let end = uses.last().copied().unwrap_or(r.def).max(r.def).max(lw);
+                out.push((t.id, r.def, end));
+            }
+        }
+    }
+    out.sort_by_key(|&(t, s, e)| (s, e, t));
+    out
+}
+
+/// Do two windows conflict in time? Touching at a single position `p`
+/// is permitted ("handoff") when one window is the output being
+/// *defined* at `p` and the other is an operand whose last read is at
+/// `p`: the result may reuse the operand's banks as the nest consumes
+/// it — exactly what the dynamic simulator's release-after-step allows.
+pub(crate) fn windows_conflict(
+    lv: &Liveness,
+    prog: &Program,
+    a: (TensorId, usize, usize),
+    b: (TensorId, usize, usize),
+) -> bool {
+    let s = a.1.max(b.1);
+    let e = a.2.min(b.2);
+    if s > e {
+        return false;
+    }
+    if s < e {
+        return true;
+    }
+    // single shared position: allow operand -> output handoff
+    let def_at = |t: TensorId, p: usize| {
+        matches!(
+            prog.graph.tensor(t).kind,
+            TensorKind::Intermediate | TensorKind::Output
+        ) && lv.ranges.get(&t).map(|r| r.def == p).unwrap_or(false)
+    };
+    let handoff = |read: (TensorId, usize, usize), def: (TensorId, usize, usize)| {
+        def.1 == s && def_at(def.0, s) && read.2 == s && lv.read_at(read.0, s)
+    };
+    !(handoff(a, b) || handoff(b, a))
+}
+
+/// Allocate a region for every residency window. `dram` lists tensors
+/// the caller streams (no region). Returns the first unplaceable
+/// window as `Err` so the spill planner can make room.
+pub(crate) fn allocate(
+    prog: &Program,
+    lv: &Liveness,
+    placements: Option<&BTreeMap<TensorId, Placement>>,
+    cfg: &AccelConfig,
+    dram: &BTreeSet<TensorId>,
+    evictions: &BTreeMap<TensorId, BTreeSet<usize>>,
+) -> Result<AllocOutcome, Conflict> {
+    let windows = residency_windows(prog, lv, evictions);
+    let mut tensors: BTreeMap<TensorId, TensorPlan> = BTreeMap::new();
+    let mut placed: Vec<Placed> = Vec::new();
+    let mut peak = BTreeMap::from([(group_key(Align::Row), 0i64), (group_key(Align::Col), 0i64)]);
+    let mut cross_group = 0usize;
+
+    for (t, start, end) in windows {
+        let info = prog.graph.tensor(t);
+        let per_bank = per_bank_bytes(info.size_bytes(), cfg.banks);
+        let too_big = per_bank > cfg.bank_bytes;
+        if dram.contains(&t) || too_big {
+            tensors
+                .entry(t)
+                .or_default()
+                .windows
+                .push(PlanWindow { start, end, home: Home::Dram });
+            continue;
+        }
+        let pref = placements
+            .and_then(|p| p.get(&t))
+            .map(|p| p.align)
+            .unwrap_or(Align::Row);
+        let other = match pref {
+            Align::Row => Align::Col,
+            Align::Col => Align::Row,
+        };
+        let fit = first_fit(lv, prog, &placed, cfg, pref, (t, start, end), per_bank)
+            .map(|off| (pref, off))
+            .or_else(|| {
+                first_fit(lv, prog, &placed, cfg, other, (t, start, end), per_bank)
+                    .map(|off| (other, off))
+            });
+        match fit {
+            Some((group, offset)) => {
+                if group != pref && placements.and_then(|p| p.get(&t)).is_some() {
+                    cross_group += 1;
+                }
+                let region = Region { group, offset, per_bank_bytes: per_bank };
+                tensors
+                    .entry(t)
+                    .or_default()
+                    .windows
+                    .push(PlanWindow { start, end, home: Home::Scratch(region) });
+                let p = peak.get_mut(&group_key(group)).unwrap();
+                *p = (*p).max(region.end());
+                placed.push(Placed { tensor: t, start, end, offset, per_bank, group });
+            }
+            None => {
+                let overlapping = placed
+                    .iter()
+                    .filter(|p| {
+                        windows_conflict(lv, prog, (p.tensor, p.start, p.end), (t, start, end))
+                    })
+                    .map(|p| (p.tensor, p.start, p.end))
+                    .collect();
+                return Err(Conflict {
+                    tensor: t,
+                    start,
+                    end,
+                    per_bank_bytes: per_bank,
+                    overlapping,
+                });
+            }
+        }
+    }
+
+    Ok(AllocOutcome {
+        tensors,
+        peak_row_offset: peak[&group_key(Align::Row)],
+        peak_col_offset: peak[&group_key(Align::Col)],
+        cross_group,
+    })
+}
+
+fn group_key(g: Align) -> u8 {
+    match g {
+        Align::Row => 0,
+        Align::Col => 1,
+    }
+}
+
+/// Lowest offset in `group` where `[off, off+need)` is free for the
+/// whole window, or `None` if the group cannot hold it.
+fn first_fit(
+    lv: &Liveness,
+    prog: &Program,
+    placed: &[Placed],
+    cfg: &AccelConfig,
+    group: Align,
+    win: (TensorId, usize, usize),
+    need: i64,
+) -> Option<i64> {
+    let mut occupied: Vec<(i64, i64)> = placed
+        .iter()
+        .filter(|p| {
+            p.group == group && windows_conflict(lv, prog, (p.tensor, p.start, p.end), win)
+        })
+        .map(|p| (p.offset, p.per_bank))
+        .collect();
+    occupied.sort_unstable();
+    let mut cur = 0i64;
+    for (off, sz) in occupied {
+        if off - cur >= need {
+            return Some(cur);
+        }
+        cur = cur.max(off + sz);
+    }
+    if cfg.bank_bytes - cur >= need {
+        Some(cur)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+
+    fn chain_prog() -> Program {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]); // 4 KiB
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", t1, &[1, 0]);
+        let y = b.identity("y", t2);
+        b.mark_output(y);
+        Program::lower(b.finish())
+    }
+
+    #[test]
+    fn per_bank_rounding() {
+        assert_eq!(per_bank_bytes(1, 4), ALLOC_ALIGN);
+        assert_eq!(per_bank_bytes(4 * ALLOC_ALIGN, 4), ALLOC_ALIGN);
+        assert_eq!(per_bank_bytes(4 * ALLOC_ALIGN + 1, 4), 2 * ALLOC_ALIGN);
+    }
+
+    #[test]
+    fn chain_reuses_addresses() {
+        let prog = chain_prog();
+        let lv = Liveness::analyze(&prog);
+        let cfg = AccelConfig::inferentia_like();
+        let out = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new()).unwrap();
+        // t1 dies as t2 is defined (handoff): their regions may alias,
+        // so the Row high-water stays well under the sum of all tensors.
+        let total: i64 = prog.graph.tensors().map(|t| t.size_bytes()).sum();
+        let used = out.peak_row_offset * cfg.banks as i64
+            + out.peak_col_offset * cfg.banks as i64;
+        assert!(used < total, "no address reuse: {used} >= {total}");
+        assert_eq!(out.cross_group, 0);
+    }
+
+    #[test]
+    fn simultaneous_windows_disjoint() {
+        let prog = chain_prog();
+        let lv = Liveness::analyze(&prog);
+        let cfg = AccelConfig::inferentia_like();
+        let out = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new()).unwrap();
+        let flat: Vec<(TensorId, PlanWindow)> = out
+            .tensors
+            .iter()
+            .flat_map(|(t, tp)| tp.windows.iter().map(|w| (*t, *w)))
+            .collect();
+        for (i, (ta, wa)) in flat.iter().enumerate() {
+            for (tb, wb) in flat.iter().skip(i + 1) {
+                let (Home::Scratch(ra), Home::Scratch(rb)) = (wa.home, wb.home) else {
+                    continue;
+                };
+                if ra.group != rb.group {
+                    continue;
+                }
+                if windows_conflict(&lv, &prog, (*ta, wa.start, wa.end), (*tb, wb.start, wb.end))
+                {
+                    assert!(
+                        ra.end() <= rb.offset || rb.end() <= ra.offset,
+                        "{ta:?} and {tb:?} overlap: {ra:?} vs {rb:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_tensor_streams() {
+        let prog = chain_prog();
+        let lv = Liveness::analyze(&prog);
+        let cfg = AccelConfig::tiny(1024); // 4 KiB tensors >> 128 B banks
+        let out = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new()).unwrap();
+        for tp in out.tensors.values() {
+            for w in &tp.windows {
+                assert_eq!(w.home, Home::Dram);
+            }
+        }
+    }
+
+    #[test]
+    fn conflict_reported_when_full() {
+        // Each bank holds exactly one tensor slice, one slice per
+        // group. x, t1, t2 overlap strictly in time (no handoff): the
+        // third window fits in neither group and must be reported.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", x, &[1, 0]);
+        let t3 = b.transpose("t3", x, &[1, 0]);
+        let c = b.concat("c", &[t1, t2, t3], 0);
+        b.mark_output(c);
+        let prog = Program::lower(b.finish());
+        let lv = Liveness::analyze(&prog);
+        let mut cfg = AccelConfig::tiny(8 * 1024);
+        cfg.bank_bytes = per_bank_bytes(32 * 32 * 4, cfg.banks);
+        let r = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new());
+        let err = r.unwrap_err();
+        assert_eq!(err.tensor, t2);
+        assert!(!err.overlapping.is_empty());
+    }
+}

@@ -1,0 +1,391 @@
+//! Compile-time spill planning.
+//!
+//! When the offset allocator cannot place a residency window, space
+//! must be freed by evicting something across an idle stretch of its
+//! lifetime. The victim policy is the same furthest-next-use rule the
+//! dynamic simulator applied at replay time — expressed statically:
+//! among the windows contending for the full region, pick the tensor
+//! with the largest *use gap* overlapping the failing window (the gap
+//! start is exactly the point whose next use is furthest away), and
+//! make the eviction explicit:
+//!
+//! * **weights / inputs** are clean copies of DRAM data, so eviction is
+//!   free and re-staging is an ordinary reload: the planner just splits
+//!   the residency window at the gap (no IR is needed — and unlike the
+//!   dynamic simulator, no spill write-back is charged).
+//! * **intermediates** hold values that exist nowhere else, so the
+//!   planner inserts an explicit `spill.*` copy nest (scratchpad →
+//!   DRAM-homed tensor) at the gap start and a `reload.*` copy nest
+//!   (DRAM → fresh tensor) right before the next use, re-pointing the
+//!   remaining consumers. The spill traffic is thereby *IR the passes
+//!   can see* — future DME generalizations can attack redundant
+//!   spill/reload pairs the way they attack layout copies.
+//!
+//! If no contender has a usable gap the failing tensor itself is
+//! demoted to DRAM (streamed), mirroring the dynamic simulator's
+//! refusal to admit tensors that cannot be held.
+
+use super::offsets::Conflict;
+use crate::ir::loopnest::{Body, LoadStmt, LoopNest, Program, StoreStmt};
+use crate::ir::op::OpKind;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::passes::liveness::Liveness;
+use crate::poly::{AccessMap, IterDomain};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// What one resolution round did (for stats).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillAction {
+    /// Split an input/weight residency window (plan-only).
+    SplitWindow { tensor: TensorId },
+    /// Inserted a spill/reload copy-nest pair for an intermediate.
+    SpillPair { tensor: TensorId, bytes: i64 },
+    /// Demoted the failing tensor to DRAM streaming.
+    Stream { tensor: TensorId },
+}
+
+/// Resolve one allocation conflict. Mutates the program (for
+/// intermediate spills), `dram` (for demotions) and `evictions` (for
+/// window splits); the caller re-runs allocation afterwards.
+pub(crate) fn resolve(
+    prog: &mut Program,
+    lv: &Liveness,
+    conflict: &Conflict,
+    dram: &mut BTreeSet<TensorId>,
+    evictions: &mut BTreeMap<TensorId, BTreeSet<usize>>,
+) -> SpillAction {
+    // Victim candidates: every contender, including the failing window
+    // itself. For each, the largest idle gap between consecutive needs
+    // that intersects the failing window.
+    let mut contenders: Vec<(TensorId, usize, usize)> = conflict.overlapping.clone();
+    contenders.push((conflict.tensor, conflict.start, conflict.end));
+
+    let mut best: Option<(i64, TensorId, usize, usize)> = None; // (gap, t, from, to)
+    for &(t, _ws, _we) in &contenders {
+        let Some((from, to)) = largest_gap(prog, lv, evictions, t, conflict.start, conflict.end)
+        else {
+            continue;
+        };
+        let gap = (to - from) as i64;
+        let better = match best {
+            None => true,
+            Some((g, bt, ..)) => gap > g || (gap == g && t < bt),
+        };
+        if better {
+            best = Some((gap, t, from, to));
+        }
+    }
+
+    match best {
+        Some((_, t, from, to)) => {
+            let kind = prog.graph.tensor(t).kind;
+            if matches!(kind, TensorKind::Input | TensorKind::Weight) {
+                // split between the use at-or-before `from` and the one at `to`
+                let uses = lv.use_positions(t);
+                let k = uses.partition_point(|&u| u <= from) - 1;
+                evictions.entry(t).or_default().insert(k);
+                SpillAction::SplitWindow { tensor: t }
+            } else {
+                let bytes = prog.graph.tensor(t).size_bytes();
+                let (t_sp, _t_rel) = insert_spill_pair(prog, t, from, to);
+                // the DRAM-side copy must never get a scratchpad region
+                dram.insert(t_sp);
+                SpillAction::SpillPair { tensor: t, bytes }
+            }
+        }
+        None => {
+            dram.insert(conflict.tensor);
+            SpillAction::Stream { tensor: conflict.tensor }
+        }
+    }
+}
+
+/// The largest stretch `(from, to)` with `from < to`, `to - from >= 2`,
+/// between consecutive *needs* of `t` (its def and reads), overlapping
+/// `[c_start, c_end]`, during which `t` is currently planned resident.
+/// Returns `None` when `t` has no such idle stretch.
+fn largest_gap(
+    prog: &Program,
+    lv: &Liveness,
+    evictions: &BTreeMap<TensorId, BTreeSet<usize>>,
+    t: TensorId,
+    c_start: usize,
+    c_end: usize,
+) -> Option<(usize, usize)> {
+    let info = prog.graph.tensor(t);
+    let mut needs: Vec<usize> = lv.use_positions(t).to_vec();
+    if matches!(info.kind, TensorKind::Intermediate | TensorKind::Output) {
+        // every write is a need: multi-nest nodes (`concat`) write the
+        // tensor at several positions, and a gap must never span one —
+        // the spill copy would snapshot a half-written tensor
+        lv.ranges.get(&t)?;
+        needs.extend(prog.writers(t));
+        needs.sort_unstable();
+        needs.dedup();
+    }
+    let already = evictions.get(&t);
+    let mut best: Option<(usize, usize)> = None;
+    for (k, pair) in needs.windows(2).enumerate() {
+        let (a, b) = (pair[0], pair[1]);
+        if b - a < 2 {
+            continue; // no free position strictly inside
+        }
+        // an intermediate's gap must end at a *read*: the reload's
+        // consumers are re-pointed, which only makes sense for loads
+        if matches!(info.kind, TensorKind::Intermediate | TensorKind::Output)
+            && !lv.read_at(t, b)
+        {
+            continue;
+        }
+        // the idle stretch must help the failing window
+        if b.saturating_sub(1) < c_start || a + 1 > c_end {
+            continue;
+        }
+        // for inputs/weights, skip gaps already split
+        if matches!(info.kind, TensorKind::Input | TensorKind::Weight) {
+            // needs == uses here; break index k sits between use k and k+1
+            if already.map(|s| s.contains(&k)).unwrap_or(false) {
+                continue;
+            }
+        }
+        let better = match best {
+            None => true,
+            Some((ba, bb)) => b - a > bb - ba,
+        };
+        if better {
+            best = Some((a, b));
+        }
+    }
+    best
+}
+
+/// Insert `spill.t` (at gap start) and `reload.t` (before the next
+/// use) copy nests, re-pointing every read of `t` at or after the
+/// reload to the reloaded tensor. `from` is the last position that
+/// needs `t`; `to` is the next read after the gap. Returns the
+/// DRAM-side tensor and the reloaded tensor.
+fn insert_spill_pair(
+    prog: &mut Program,
+    t: TensorId,
+    from: usize,
+    to: usize,
+) -> (TensorId, TensorId) {
+    let info = prog.graph.tensor(t).clone();
+    let nd = info.shape.len();
+    let t_sp = prog.graph.add_tensor(
+        format!("spill.{}", info.name),
+        &info.shape,
+        info.dtype,
+        TensorKind::Intermediate,
+    );
+    let t_rel = prog.graph.add_tensor(
+        format!("reload.{}", info.name),
+        &info.shape,
+        info.dtype,
+        TensorKind::Intermediate,
+    );
+
+    // Graph nodes, inserted just before the consumer at `to` (topological:
+    // producer(t) is earlier, consumers of t_rel are `to` and later).
+    let consumer_node = prog.nests[to].node;
+    let sp_node = prog.graph.insert_node_before(
+        consumer_node,
+        format!("spill.{}@{}", info.name, from + 1),
+        OpKind::MemCopy,
+        vec![t],
+        t_sp,
+    );
+    let rel_node = prog.graph.insert_node_before(
+        consumer_node,
+        format!("reload.{}@{}", info.name, to),
+        OpKind::MemCopy,
+        vec![t_sp],
+        t_rel,
+    );
+
+    // Re-point reads of `t` in nests at/after the reload, and in the
+    // corresponding graph nodes.
+    let mut repointed_nodes: BTreeSet<crate::ir::NodeId> = BTreeSet::new();
+    for nest in prog.nests.iter_mut().skip(to) {
+        let mut touched = false;
+        for load in nest.body.loads_mut() {
+            for piece in &mut load.pieces {
+                if piece.tensor == Some(t) {
+                    piece.tensor = Some(t_rel);
+                    touched = true;
+                }
+            }
+        }
+        if touched {
+            repointed_nodes.insert(nest.node);
+        }
+    }
+    for id in repointed_nodes {
+        let node = prog.graph.node_mut(id);
+        for inp in &mut node.inputs {
+            if *inp == t {
+                *inp = t_rel;
+            }
+        }
+    }
+
+    // Nests: reload right before the old position `to`, spill right
+    // after `from`. Insert the later index first so both stay valid.
+    let copy_nest = |node, name: String, src, dst| LoopNest {
+        node,
+        name,
+        domain: IterDomain::new(&info.shape),
+        store: StoreStmt { tensor: dst, map: AccessMap::identity(nd) },
+        body: Body::Copy { load: LoadStmt::total(src, AccessMap::identity(nd)) },
+    };
+    prog.nests.insert(
+        to,
+        copy_nest(
+            rel_node,
+            format!("reload.{}@{}", info.name, to),
+            t_sp,
+            t_rel,
+        ),
+    );
+    prog.nests.insert(
+        from + 1,
+        copy_nest(
+            sp_node,
+            format!("spill.{}@{}", info.name, from + 1),
+            t,
+            t_sp,
+        ),
+    );
+    (t_sp, t_rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::verify::{verify_graph, verify_program};
+
+    /// x is produced early, idle for a long stretch, then read again:
+    /// the classic spill shape.
+    fn long_gap_prog() -> (Program, TensorId) {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[16, 16]);
+        let early = b.transpose("early", x, &[1, 0]); // the victim
+        let mut cur = b.transpose("w0", x, &[1, 0]);
+        for k in 1..5 {
+            cur = b.transpose(&format!("w{k}"), cur, &[1, 0]);
+        }
+        let late = b.add("late", cur, early); // early's far next use
+        b.mark_output(late);
+        (Program::lower(b.finish()), early)
+    }
+
+    #[test]
+    fn spill_pair_is_valid_ir() {
+        let (mut prog, victim) = long_gap_prog();
+        let lv = Liveness::analyze(&prog);
+        // gap of `victim`: def at 0, next read at the final add
+        let uses = lv.use_positions(victim).to_vec();
+        let def = lv.ranges[&victim].def;
+        insert_spill_pair(&mut prog, victim, def, uses[0]);
+        verify_graph(&prog.graph).unwrap();
+        verify_program(&prog).unwrap();
+        // the add now reads reload.early_out, not early_out
+        let reload_reads = prog
+            .nests
+            .iter()
+            .filter(|n| n.name.starts_with("reload."))
+            .count();
+        let spill_reads = prog
+            .nests
+            .iter()
+            .filter(|n| n.name.starts_with("spill."))
+            .count();
+        assert_eq!(reload_reads, 1);
+        assert_eq!(spill_reads, 1);
+        // liveness of the victim now ends at the spill copy
+        let lv2 = Liveness::analyze(&prog);
+        assert!(lv2.ranges[&victim].last_use <= def + 1);
+    }
+
+    #[test]
+    fn resolve_prefers_largest_gap() {
+        let (mut prog, victim) = long_gap_prog();
+        let lv = Liveness::analyze(&prog);
+        let uses = lv.use_positions(victim).to_vec();
+        let conflict = Conflict {
+            tensor: victim,
+            start: lv.ranges[&victim].def,
+            end: uses[0],
+            per_bank_bytes: 64,
+            overlapping: vec![],
+        };
+        let mut dram = BTreeSet::new();
+        let mut ev = BTreeMap::new();
+        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev);
+        assert!(
+            matches!(action, SpillAction::SpillPair { tensor, .. } if tensor == victim),
+            "{action:?}"
+        );
+        verify_program(&prog).unwrap();
+    }
+
+    #[test]
+    fn weight_window_splits_without_ir() {
+        // a weight used at positions 0 and far later: resolve must
+        // split the window, not touch the IR
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 8]);
+        let w = b.weight("w", &[8, 8]);
+        let m1 = b.matmul("m1", x, w);
+        let mut cur = m1;
+        for k in 0..4 {
+            cur = b.transpose(&format!("t{k}"), cur, &[1, 0]);
+        }
+        let m2 = b.matmul("m2", cur, w); // w read again at the end
+        b.mark_output(m2);
+        let mut prog = Program::lower(b.finish());
+        let n_before = prog.nests.len();
+        let lv = Liveness::analyze(&prog);
+        let uses = lv.use_positions(w).to_vec();
+        assert_eq!(uses.len(), 2);
+        let conflict = Conflict {
+            tensor: w,
+            start: uses[0],
+            end: uses[1],
+            per_bank_bytes: 64,
+            overlapping: vec![],
+        };
+        let mut dram = BTreeSet::new();
+        let mut ev = BTreeMap::new();
+        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev);
+        assert!(matches!(action, SpillAction::SplitWindow { tensor } if tensor == w));
+        assert_eq!(prog.nests.len(), n_before);
+        assert_eq!(ev[&w], BTreeSet::from([0]));
+    }
+
+    #[test]
+    fn gapless_conflict_streams() {
+        // three tensors all strictly live together with no idle gaps:
+        // nothing can be evicted, the failing tensor is demoted
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let s = b.add("s", t1, x);
+        b.mark_output(s);
+        let mut prog = Program::lower(b.finish());
+        let lv = Liveness::analyze(&prog);
+        let conflict = Conflict {
+            tensor: t1,
+            start: 0,
+            end: 1,
+            per_bank_bytes: 64,
+            overlapping: vec![(x, 0, 1)],
+        };
+        let mut dram = BTreeSet::new();
+        let mut ev = BTreeMap::new();
+        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev);
+        assert!(matches!(action, SpillAction::Stream { tensor } if tensor == t1));
+        assert!(dram.contains(&t1));
+    }
+}

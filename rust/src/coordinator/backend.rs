@@ -1,7 +1,7 @@
 //! Execution backends for the serving coordinator.
 
 use crate::runtime::LoadedModel;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Executes a batch of same-shaped requests. The coordinator owns
 /// exactly one backend per worker thread. Backends need not be `Send`
@@ -49,7 +49,7 @@ impl Backend for EchoBackend {
     }
 
     fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(batch.len() == n * self.len, "bad batch packing");
+        crate::ensure!(batch.len() == n * self.len, "bad batch packing");
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
@@ -104,13 +104,13 @@ impl Backend for PjrtBackend {
     }
 
     fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(n <= self.compiled_batch, "batch exceeds compiled size");
-        anyhow::ensure!(batch.len() == n * self.in_len, "bad batch packing");
+        crate::ensure!(n <= self.compiled_batch, "batch exceeds compiled size");
+        crate::ensure!(batch.len() == n * self.in_len, "bad batch packing");
         // zero-pad to the compiled batch
         let mut padded = vec![0f32; self.compiled_batch * self.in_len];
         padded[..batch.len()].copy_from_slice(batch);
         let out = self.model.run_f32(&[(&padded, &self.in_shape)])?;
-        anyhow::ensure!(
+        crate::ensure!(
             out.len() >= n * self.out_len,
             "model returned {} elements, need {}",
             out.len(),
@@ -138,6 +138,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn pjrt_backend_pads_batches() {
         const HLO: &str = r#"
 HloModule batch_double

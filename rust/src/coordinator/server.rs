@@ -5,6 +5,7 @@
 //! response channel.
 
 use super::backend::Backend;
+use crate::util::error::Result;
 use super::batcher::{BatchPolicy, Batcher, Flush};
 use super::metrics::Metrics;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -35,29 +36,29 @@ impl Default for ServerConfig {
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
-    respond: Sender<anyhow::Result<Vec<f32>>>,
+    respond: Sender<Result<Vec<f32>>>,
 }
 
 /// Handle to a response.
 pub struct ResponseHandle {
-    rx: Receiver<anyhow::Result<Vec<f32>>>,
+    rx: Receiver<Result<Vec<f32>>>,
 }
 
 impl ResponseHandle {
     /// Block until the response arrives.
-    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+    pub fn wait(self) -> Result<Vec<f32>> {
         self.rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+            .map_err(|_| crate::format_err!("server dropped the request"))?
     }
 
     /// Non-blocking poll.
-    pub fn try_take(&self) -> Option<anyhow::Result<Vec<f32>>> {
+    pub fn try_take(&self) -> Option<Result<Vec<f32>>> {
         match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(TryRecvError::Empty) => None,
             Err(TryRecvError::Disconnected) => {
-                Some(Err(anyhow::anyhow!("server dropped the request")))
+                Some(Err(crate::format_err!("server dropped the request")))
             }
         }
     }
@@ -79,13 +80,13 @@ impl Server {
     /// the worker thread (PJRT executables are not `Send`, so they must
     /// be created where they run). The factory returns the backend plus
     /// its per-request input length.
-    pub fn start_with<B, F>(factory: F, cfg: ServerConfig) -> anyhow::Result<Server>
+    pub fn start_with<B, F>(factory: F, cfg: ServerConfig) -> Result<Server>
     where
         B: Backend,
-        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
     {
         let (tx, rx) = channel::<Request>();
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<usize>>();
+        let (ready_tx, ready_rx) = channel::<Result<usize>>();
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
         let queued = Arc::new(Mutex::new(0usize));
@@ -112,7 +113,7 @@ impl Server {
             .expect("spawning server worker");
         let input_len = ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+            .map_err(|_| crate::format_err!("server worker died during startup"))??;
         Ok(Server {
             tx,
             queued,
@@ -131,8 +132,8 @@ impl Server {
 
     /// Submit one request. Fails fast when the queue is saturated
     /// (backpressure) or the input length is wrong.
-    pub fn submit(&self, input: Vec<f32>) -> anyhow::Result<ResponseHandle> {
-        anyhow::ensure!(
+    pub fn submit(&self, input: Vec<f32>) -> Result<ResponseHandle> {
+        crate::ensure!(
             input.len() == self.input_len,
             "input length {} != expected {}",
             input.len(),
@@ -140,13 +141,13 @@ impl Server {
         );
         {
             let mut q = self.queued.lock().unwrap();
-            anyhow::ensure!(*q < self.cfg.queue_cap, "queue full ({} requests)", *q);
+            crate::ensure!(*q < self.cfg.queue_cap, "queue full ({} requests)", *q);
             *q += 1;
         }
         let (rtx, rrx) = channel();
         self.tx
             .send(Request { input, enqueued: Instant::now(), respond: rtx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+            .map_err(|_| crate::format_err!("server stopped"))?;
         Ok(ResponseHandle { rx: rrx })
     }
 
@@ -278,7 +279,7 @@ fn execute_batch<B: Backend>(
         Err(e) => {
             metrics.record_error(n);
             for r in batch {
-                let _ = r.respond.send(Err(anyhow::anyhow!("inference failed: {e}")));
+                let _ = r.respond.send(Err(crate::format_err!("inference failed: {e}")));
             }
         }
     }

@@ -13,6 +13,10 @@
 //!   loop-nest lowering (the paper's §2 program representation).
 //! * [`passes`] — the paper's §2.1 DME and §2.2 bank-mapping passes,
 //!   plus the liveness/allocation support they depend on.
+//! * [`alloc`] — the static scratchpad planner: compile-time
+//!   scheduling, `(bank, offset, size)` assignment and spill planning,
+//!   producing the [`alloc::MemoryPlan`] the simulator's planned mode
+//!   replays and verifies.
 //! * [`accel`] — a simulated Inferentia-class accelerator (banked
 //!   scratchpad + DMA byte accounting) used as the measurement
 //!   substrate for the paper's two experiments.
@@ -24,11 +28,13 @@
 //! * [`report`] — paper-table formatting for the benchmark harness.
 //! * [`util`] — offline substitutes for clap/serde/criterion/proptest.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the module map and plan-format invariants, and
+//! `EXPERIMENTS.md` for the experiment index (how each paper table is
+//! regenerated and where the measured numbers come from).
 
 
 pub mod accel;
+pub mod alloc;
 pub mod coordinator;
 pub mod ir;
 pub mod models;

@@ -110,10 +110,39 @@ fn cmd_compile(p: &Parsed) -> Result<(), String> {
 
 fn cmd_simulate(p: &Parsed) -> Result<(), String> {
     let g = graph_from_args(p)?;
-    let pm = pm_from_args(p)?;
+    let mut pm = pm_from_args(p)?;
     let cfg = accel_from_args(p)?;
+    // The dynamic baseline must replay the *untransformed* pipeline
+    // output (no rescheduling, no spill nests) — the same comparison
+    // bench_alloc_plan makes.
+    let baseline = if p.has_flag("plan") {
+        let base = pm.run(g.clone()).map_err(|e| e.to_string())?;
+        pm.alloc = Some(polymem::passes::AllocStage::for_accel(cfg.clone()));
+        Some(simulate(&base.program, &cfg, None))
+    } else {
+        None
+    };
     let rep = pm.run(g).map_err(|e| e.to_string())?;
-    let sim = simulate(&rep.program, &cfg, None);
+    let sim = baseline.unwrap_or_else(|| simulate(&rep.program, &cfg, None));
+    if let Some(plan) = &rep.plan {
+        let planned = polymem::accel::simulate_planned(&rep.program, plan, &cfg, None)
+            .map_err(|e| e.to_string())?;
+        if p.has_flag("json") {
+            println!(
+                "{}",
+                report::planned_vs_dynamic_json(p.get("model"), &sim, &planned, plan)
+                    .to_string_pretty()
+            );
+        } else {
+            println!(
+                "planned vs dynamic residency on '{}' ({}):\n",
+                p.get("model"),
+                cfg.name
+            );
+            println!("{}", report::e3_table(p.get("model"), &sim, &planned, plan));
+        }
+        return Ok(());
+    }
     if p.has_flag("json") {
         println!("{}", report::sim_to_json(&sim).to_string_pretty());
     } else {
@@ -253,6 +282,7 @@ fn app() -> App {
                 .opt("accel-config", "", "JSON accelerator config path")
                 .flag("no-dme", "disable data-movement elimination")
                 .flag("no-verify", "skip inter-pass verification")
+                .flag("plan", "static scratchpad planning + planned-mode replay")
                 .flag("json", "machine-readable output"),
             Command::new("e1", "reproduce paper experiment 1 (WaveNet DME)"),
             Command::new("export-graph", "write a built-in model as a JSON graph")

@@ -112,6 +112,18 @@ impl Liveness {
             .unwrap_or(0)
     }
 
+    /// Sorted schedule positions at which `t` is read (empty for
+    /// tensors never loaded). Used by the static allocator
+    /// (`crate::alloc`) to build residency windows and handoff checks.
+    pub fn use_positions(&self, t: TensorId) -> &[usize] {
+        self.uses.get(&t).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Is `t` read exactly at `pos`?
+    pub fn read_at(&self, t: TensorId, pos: usize) -> bool {
+        self.use_positions(t).binary_search(&pos).is_ok()
+    }
+
     /// Next read of `t` strictly after `pos`; `None` if dead after.
     pub fn next_use_after(&self, _prog: &Program, t: TensorId, pos: usize) -> Option<usize> {
         let r = self.ranges.get(&t)?;

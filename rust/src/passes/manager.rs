@@ -3,6 +3,8 @@
 
 use super::bank::{BankAssignment, BankConfig};
 use super::dme::{run_dme, DmeStats};
+use crate::accel::config::AccelConfig;
+use crate::alloc::{plan_memory, AllocOpts, MemoryPlan};
 use crate::ir::loopnest::Program;
 use crate::ir::verify::{verify_graph, verify_program, VerifyError};
 use std::time::{Duration, Instant};
@@ -29,12 +31,32 @@ impl BankMode {
     }
 }
 
+/// The static-planner stage configuration (`alloc` subsystem), run
+/// after bank mapping when enabled.
+#[derive(Clone, Debug)]
+pub struct AllocStage {
+    /// Chip whose scratchpad geometry the plan targets.
+    pub accel: AccelConfig,
+    pub opts: AllocOpts,
+}
+
+impl AllocStage {
+    pub fn for_accel(accel: AccelConfig) -> AllocStage {
+        AllocStage { accel, opts: AllocOpts::default() }
+    }
+}
+
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PassManager {
     pub enable_dme: bool,
     pub bank_mode: BankMode,
     pub bank_cfg: BankConfig,
+    /// Static scratchpad planning (scheduling + offsets + spills).
+    /// `None` (the default) leaves residency to the simulator's
+    /// dynamic baseline; `Some` produces a [`MemoryPlan`] the planned
+    /// simulator mode replays verbatim.
+    pub alloc: Option<AllocStage>,
     /// Verify IR between passes (on by default; benches may disable).
     pub verify: bool,
 }
@@ -45,6 +67,7 @@ impl Default for PassManager {
             enable_dme: true,
             bank_mode: BankMode::Global,
             bank_cfg: BankConfig::default(),
+            alloc: None,
             verify: true,
         }
     }
@@ -54,12 +77,16 @@ impl Default for PassManager {
 #[derive(Clone, Debug)]
 pub struct PassReport {
     /// The optimized program (nests post-DME; graph post-bank-mapping,
-    /// including inserted `MemCopy` nodes).
+    /// including inserted `MemCopy` nodes; rescheduled and
+    /// spill-extended when the alloc stage ran).
     pub program: Program,
     pub dme: Option<DmeStats>,
     pub bank: Option<BankAssignment>,
+    /// The static memory plan (alloc stage enabled only).
+    pub plan: Option<MemoryPlan>,
     pub dme_time: Duration,
     pub bank_time: Duration,
+    pub alloc_time: Duration,
 }
 
 impl PassManager {
@@ -112,7 +139,32 @@ impl PassManager {
             program
         };
 
-        Ok(PassReport { program, dme: dme_stats, bank, dme_time, bank_time })
+        // Static scratchpad planning: reschedule for footprint, assign
+        // concrete regions, make spills explicit IR.
+        let t2 = Instant::now();
+        let mut plan = None;
+        let program = if let Some(stage) = &self.alloc {
+            let res = plan_memory(program, bank.as_ref(), &stage.accel, &stage.opts);
+            if self.verify {
+                verify_graph(&res.program.graph)?;
+                verify_program(&res.program)?;
+            }
+            plan = Some(res.plan);
+            res.program
+        } else {
+            program
+        };
+        let alloc_time = t2.elapsed();
+
+        Ok(PassReport {
+            program,
+            dme: dme_stats,
+            bank,
+            plan,
+            dme_time,
+            bank_time,
+            alloc_time,
+        })
     }
 }
 
@@ -227,6 +279,30 @@ mod tests {
         let report = pm.run(sample()).unwrap();
         assert!(report.dme.is_none());
         assert!(report.program.load_store_pairs() >= 2);
+    }
+
+    #[test]
+    fn alloc_stage_produces_plan() {
+        use crate::accel::config::AccelConfig;
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(AccelConfig::inferentia_like())),
+            ..Default::default()
+        };
+        let report = pm.run(sample()).unwrap();
+        let plan = report.plan.expect("alloc stage ran");
+        assert_eq!(plan.n_positions, report.program.nests.len());
+        crate::alloc::verify_plan(
+            &report.program,
+            &plan,
+            &AccelConfig::inferentia_like(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn alloc_stage_off_by_default() {
+        let report = PassManager::default().run(sample()).unwrap();
+        assert!(report.plan.is_none());
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //!   bank mappings across the operator graph; residual conflicts
 //!   materialize explicit `MemCopy` nodes.
 //! * [`liveness`] — tensor live ranges over the nest schedule, used by
-//!   the accelerator simulator's scratchpad allocator.
+//!   the accelerator simulator's scratchpad allocator and the static
+//!   planner's residency windows.
 //! * [`manager`] — ordered pass driver with per-pass statistics and
-//!   inter-pass verification.
+//!   inter-pass verification; optionally runs the static scratchpad
+//!   planner ([`crate::alloc`]) as a final stage after bank mapping.
 
 pub mod bank;
 pub mod bank_global;
@@ -24,4 +26,4 @@ pub mod manager;
 
 pub use bank::{Align, BankAssignment, BankConfig, Placement};
 pub use dme::{run_dme, DmeStats};
-pub use manager::{PassManager, PassReport};
+pub use manager::{AllocStage, PassManager, PassReport};

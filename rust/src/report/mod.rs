@@ -162,6 +162,73 @@ pub fn e2_table(
     t.render()
 }
 
+/// The E3 table (this repo's extension experiment: planned vs dynamic
+/// residency on one model).
+pub fn e3_table(
+    model: &str,
+    dynamic: &SimReport,
+    planned: &SimReport,
+    plan: &crate::alloc::MemoryPlan,
+) -> String {
+    let s = &plan.stats;
+    let mut t = Table::new(&["metric", "dynamic", "planned"]);
+    t.row(&[
+        format!("{model}: off-chip bytes"),
+        mb(dynamic.offchip_total()),
+        mb(planned.offchip_total()),
+    ]);
+    t.row(&[
+        "off-chip copy bytes (spill churn)".into(),
+        mb(dynamic.offchip_copy_total()),
+        mb(planned.offchip_copy_total()),
+    ]);
+    t.row(&[
+        "on-chip movement bytes".into(),
+        mb(dynamic.onchip_movement_total()),
+        mb(planned.onchip_movement_total()),
+    ]);
+    t.row(&[
+        "peak scratchpad".into(),
+        mb(dynamic.peak_scratchpad),
+        mb(planned.peak_scratchpad),
+    ]);
+    t.row(&[
+        "residency decisions".into(),
+        "replay-time (Belady)".into(),
+        format!(
+            "compile-time ({} spill pairs, {} splits, {} streamed)",
+            s.spill_pairs, s.window_splits, s.streamed
+        ),
+    ]);
+    t.row(&[
+        "schedule".into(),
+        "builder order".into(),
+        format!(
+            "min-footprint ({} -> {} peak live, {} moved)",
+            mb(s.peak_live_before),
+            mb(s.peak_live_after),
+            s.moved_nodes
+        ),
+    ]);
+    t.render()
+}
+
+/// JSON record for one planned-vs-dynamic comparison, reusing the
+/// [`sim_to_json`] shape for both replays.
+pub fn planned_vs_dynamic_json(
+    model: &str,
+    dynamic: &SimReport,
+    planned: &SimReport,
+    plan: &crate::alloc::MemoryPlan,
+) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(model.to_string())),
+        ("dynamic", sim_to_json(dynamic)),
+        ("planned", sim_to_json(planned)),
+        ("plan", plan.to_json()),
+    ])
+}
+
 /// JSON form of a sim report for machine-readable experiment logs.
 pub fn sim_to_json(rep: &SimReport) -> Json {
     Json::obj(vec![

@@ -1,7 +1,7 @@
 //! PJRT client wrapper: one process-wide CPU client, many compiled
 //! executables.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 use super::executable::LoadedModel;

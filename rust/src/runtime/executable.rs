@@ -1,6 +1,6 @@
 //! A compiled model artifact ready to execute.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::PathBuf;
 
 /// A compiled PJRT executable plus bookkeeping.
@@ -34,13 +34,13 @@ impl LoadedModel {
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs {
             let numel: i64 = shape.iter().product();
-            anyhow::ensure!(
+            crate::ensure!(
                 numel as usize == data.len(),
                 "input data len {} != shape {:?}",
                 data.len(),
                 shape
             );
-            literals.push(xla::Literal::vec1(data).reshape(shape)?);
+            literals.push(xla::Literal::vec1(data).reshape(shape).context("reshaping input literal")?);
         }
         let result = self
             .exe
@@ -50,8 +50,8 @@ impl LoadedModel {
             .to_literal_sync()
             .context("fetching result literal")?;
         // jax lowers with return_tuple=True → unwrap tuples of any arity
-        let parts = match literal.shape()? {
-            xla::Shape::Tuple(_) => literal.to_tuple()?,
+        let parts = match literal.shape().context("reading result shape")? {
+            xla::Shape::Tuple(_) => literal.to_tuple().context("unpacking result tuple")?,
             _ => vec![literal],
         };
         parts

@@ -1,14 +1,29 @@
 //! PJRT execution of AOT-compiled artifacts.
 //!
 //! The build-time Python layer (`python/compile/aot.py`) lowers the
-//! JAX/Pallas model to **HLO text** (the interchange format this
-//! image's xla_extension 0.5.1 can parse — jax≥0.5 serialized protos
-//! are rejected, see DESIGN.md). This module loads those artifacts and
-//! executes them on the PJRT CPU client from the request path — Python
-//! is never involved at runtime.
+//! JAX/Pallas model to **HLO text** (the interchange format the
+//! original image's xla_extension 0.5.1 can parse — jax≥0.5 serialized
+//! protos are rejected, see DESIGN.md). This module loads those
+//! artifacts and executes them on the PJRT CPU client from the request
+//! path — Python is never involved at runtime.
+//!
+//! The real client wraps the `xla` crate, which is **not** part of the
+//! default offline build: it is compiled only with `--features pjrt`
+//! (and requires adding the `xla` dependency back to `Cargo.toml` on an
+//! image that caches it). Without the feature, [`stub`] provides the
+//! same API surface with run-time errors, keeping the compiler and
+//! simulator stack — which never executes artifacts — fully usable.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executable;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use client::RuntimeClient;
+#[cfg(feature = "pjrt")]
 pub use executable::LoadedModel;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedModel, RuntimeClient};

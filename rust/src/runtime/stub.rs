@@ -1,0 +1,71 @@
+//! Stub runtime used when the `pjrt` feature is disabled (the default
+//! on images without the `xla` crate cache). Mirrors the public API of
+//! [`super::client`] / [`super::executable`]; every entry point that
+//! would touch PJRT fails with a descriptive error at run time, so the
+//! compiler/simulator stack — which never executes artifacts — builds
+//! and tests cleanly offline.
+
+use crate::util::error::Result;
+use std::path::{Path, PathBuf};
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: polymem was built without the `pjrt` feature \
+     (requires the `xla` crate; see DESIGN.md)";
+
+/// Stand-in for the PJRT client wrapper.
+pub struct RuntimeClient {
+    _private: (),
+}
+
+impl RuntimeClient {
+    /// Always fails: no PJRT in this build.
+    pub fn cpu() -> Result<Self> {
+        Err(crate::format_err!("{UNAVAILABLE}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path) -> Result<LoadedModel> {
+        Err(crate::format_err!("{UNAVAILABLE}"))
+    }
+
+    pub fn load_hlo_str(&self, _name: &str, _hlo_text: &str) -> Result<LoadedModel> {
+        Err(crate::format_err!("{UNAVAILABLE}"))
+    }
+}
+
+/// Stand-in for a compiled PJRT executable.
+pub struct LoadedModel {
+    path: PathBuf,
+}
+
+impl LoadedModel {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        Err(crate::format_err!("{UNAVAILABLE}"))
+    }
+
+    pub fn run_f32_multi(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(crate::format_err!("{UNAVAILABLE}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly() {
+        let err = RuntimeClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

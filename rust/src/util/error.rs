@@ -1,0 +1,151 @@
+//! Minimal error type + context helpers (anyhow is not in the offline
+//! crate cache). API mirrors the small subset of `anyhow` this repo
+//! uses — a string-backed error, `Result` alias, a `Context` extension
+//! trait and the `format_err!` / `bail!` / `ensure!` macros — so the
+//! runtime/coordinator code reads the same as it would with anyhow.
+
+use std::fmt;
+
+/// A string-backed error with an optional cause chain (flattened into
+/// the message, which is all the serving layer ever reports).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::msg(m)
+    }
+}
+
+/// Crate-wide result alias (the `anyhow::Result` stand-in).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(...)` on results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+/// Assert-or-early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 7);
+    }
+
+    fn guarded(v: i64) -> Result<i64> {
+        ensure!(v > 0, "need positive, got {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+        assert!(guarded(3).is_ok());
+        assert_eq!(
+            guarded(-1).unwrap_err().to_string(),
+            "need positive, got -1"
+        );
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<i32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let s: Option<i32> = Some(4);
+        assert_eq!(s.with_context(|| "x".into()).unwrap(), 4);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -4,6 +4,8 @@
 //! serde / criterion / proptest / rand), so the small generic pieces a
 //! production repo would pull from crates.io are implemented here:
 //!
+//! * [`error`] — string-backed error + context helpers (replaces
+//!   `anyhow` for the runtime/serving layers).
 //! * [`rng`] — SplitMix64 PRNG (replaces `rand`).
 //! * [`prop`] — a seeded, shrinking property-test driver (replaces
 //!   `proptest` for the invariants this repo checks).
@@ -16,6 +18,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -115,10 +115,10 @@ impl polymem::coordinator::Backend for FlakyBackend {
     fn max_batch(&self) -> usize {
         self.inner.max_batch
     }
-    fn infer(&mut self, batch: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+    fn infer(&mut self, batch: &[f32], n: usize) -> polymem::util::error::Result<Vec<f32>> {
         self.calls += 1;
         if self.calls % self.fail_every == 0 {
-            anyhow::bail!("injected failure on call {}", self.calls);
+            polymem::bail!("injected failure on call {}", self.calls);
         }
         polymem::coordinator::Backend::infer(&mut self.inner, batch, n)
     }
@@ -163,7 +163,7 @@ fn injected_failures_are_isolated() {
 fn startup_failure_reported() {
     let cfg = ServerConfig::default();
     let r = Server::start_with::<EchoBackend, _>(
-        || Err(anyhow::anyhow!("deliberate startup failure")),
+        || Err(polymem::format_err!("deliberate startup failure")),
         cfg,
     );
     assert!(r.is_err());

@@ -1,5 +1,9 @@
 //! Integration: the PJRT runtime against both hand-written HLO and the
 //! real AOT artifacts (when `make artifacts` has run).
+//!
+//! The whole file requires the real PJRT client, so it only compiles
+//! with `--features pjrt` (default builds use the stub runtime).
+#![cfg(feature = "pjrt")]
 
 use polymem::runtime::RuntimeClient;
 use std::path::Path;

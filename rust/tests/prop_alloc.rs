@@ -1,0 +1,178 @@
+//! Property tests for the static scratchpad planner (via
+//! `util/prop.rs`): over random operator graphs and random capacities,
+//!
+//! 1. no two simultaneously-live tensors receive overlapping
+//!    `(bank group, offset)` regions — checked here independently of
+//!    `alloc::verify_plan`, straight from liveness;
+//! 2. every planned program (including inserted spill/reload nests)
+//!    passes `ir/verify.rs`;
+//! 3. the plan replays through the simulator's planned mode with zero
+//!    violations.
+
+use polymem::accel::{simulate_planned, AccelConfig};
+use polymem::alloc::{Home, PlanWindow};
+use polymem::ir::verify::{verify_graph, verify_program};
+use polymem::ir::{Graph, GraphBuilder, Program, TensorId};
+use polymem::passes::manager::{AllocStage, PassManager};
+use polymem::util::prop::{Gen, Prop};
+
+/// A random DAG of the ops the planner has to cope with: convs (bank
+/// requirements), elementwise joins (multi-use tensors), transposes
+/// and slices (copy nests), concat (multi-nest nodes).
+fn random_graph(g: &mut Gen) -> Graph {
+    let mut b = GraphBuilder::new();
+    let side = 4 + 4 * g.i64_in(1, 4); // 8..16
+    let c = 8i64;
+    let x = b.input("x", &[1, c, side, side]);
+    let mut frontier = vec![x];
+    let n_ops = g.usize_in(3, 10);
+    for k in 0..n_ops {
+        let cur = *g.choose(&frontier);
+        let out = match g.usize_in(0, 6) {
+            0 => {
+                // conv needs NCHW with the expected channel count
+                let shape = b.graph().tensor(cur).shape.clone();
+                if shape.len() == 4 && shape[1] == c {
+                    let w = b.weight(&format!("w{k}"), &[c, c, 1, 1]);
+                    b.conv2d(&format!("conv{k}"), cur, w, 1, 0)
+                } else {
+                    b.relu(&format!("relu{k}"), cur)
+                }
+            }
+            1 => b.relu(&format!("relu{k}"), cur),
+            2 => b.transpose(&format!("tr{k}"), cur, &[0, 2, 3, 1]),
+            3 => {
+                // join two frontier tensors when shapes agree
+                let other = *g.choose(&frontier);
+                if b.graph().tensor(other).shape == b.graph().tensor(cur).shape
+                    && other != cur
+                {
+                    b.add(&format!("add{k}"), cur, other)
+                } else {
+                    b.relu(&format!("relu{k}"), cur)
+                }
+            }
+            4 => {
+                let shape = b.graph().tensor(cur).shape.clone();
+                if shape.len() == 4 {
+                    b.maxpool(&format!("pool{k}"), cur, 1, 1)
+                } else {
+                    b.identity(&format!("id{k}"), cur)
+                }
+            }
+            _ => b.identity(&format!("id{k}"), cur),
+        };
+        frontier.push(out);
+    }
+    // join all frontier leaves (tensors nothing read) so the graph has
+    // no dead intermediates, then mark one output
+    let leaves: Vec<TensorId> = frontier
+        .iter()
+        .copied()
+        .filter(|t| b.graph().consumers(*t).is_empty())
+        .collect();
+    let mut acc = leaves[0];
+    for (j, &l) in leaves.iter().enumerate().skip(1) {
+        let a_shape = b.graph().tensor(acc).shape.clone();
+        let l_shape = b.graph().tensor(l).shape.clone();
+        acc = if a_shape == l_shape {
+            b.add(&format!("join{j}"), acc, l)
+        } else {
+            let numel: i64 = l_shape.iter().product();
+            let flat = b.reshape(&format!("flat{j}"), l, &[1, numel]);
+            let a_numel: i64 = a_shape.iter().product();
+            let a_flat = b.reshape(&format!("aflat{j}"), acc, &[1, a_numel]);
+            b.concat(&format!("cat{j}"), &[a_flat, flat], 1)
+        };
+    }
+    b.mark_output(acc);
+    b.finish()
+}
+
+fn random_cfg(g: &mut Gen) -> AccelConfig {
+    // between "everything fits" and "almost nothing fits"
+    let mut cfg = AccelConfig::tiny(1 << g.usize_in(12, 22));
+    cfg.bank_bytes = cfg.bank_bytes.max(polymem::alloc::ALLOC_ALIGN);
+    cfg
+}
+
+#[test]
+fn planned_regions_never_overlap_and_ir_verifies() {
+    Prop::new("alloc: disjoint regions + valid IR", 40).check(|g| {
+        let graph = random_graph(g);
+        verify_graph(&graph).expect("generator built a valid graph");
+        let cfg = random_cfg(g);
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(graph).expect("pipeline");
+        let plan = rep.plan.as_ref().expect("alloc ran");
+        let prog: &Program = &rep.program;
+
+        // (2) planned program passes ir/verify.rs
+        verify_graph(&prog.graph).expect("planned graph verifies");
+        verify_program(prog).expect("planned program verifies");
+
+        // (1) independent overlap check: windows that share a live
+        // position must have disjoint regions per group
+        let flat: Vec<(TensorId, PlanWindow)> = plan
+            .tensors
+            .iter()
+            .flat_map(|(t, tp)| tp.windows.iter().map(|w| (*t, *w)))
+            .collect();
+        for (i, (ta, wa)) in flat.iter().enumerate() {
+            let Home::Scratch(ra) = wa.home else { continue };
+            for (tb, wb) in flat.iter().skip(i + 1) {
+                let Home::Scratch(rb) = wb.home else { continue };
+                if ra.group != rb.group || ta == tb {
+                    continue;
+                }
+                // strictly-shared live position (beyond the
+                // operand->result handoff point)
+                let s = wa.start.max(wb.start);
+                let e = wa.end.min(wb.end);
+                if s >= e {
+                    continue;
+                }
+                let addr_disjoint = ra.end() <= rb.offset || rb.end() <= ra.offset;
+                assert!(
+                    addr_disjoint,
+                    "{ta:?}@{ra:?} and {tb:?}@{rb:?} overlap while both live \
+                     (windows {wa:?} / {wb:?})"
+                );
+            }
+        }
+
+        // (3) zero-violation replay
+        let sim = simulate_planned(prog, plan, &cfg, None).expect("planned replay");
+        assert!(sim.peak_scratchpad <= cfg.scratchpad_bytes());
+    });
+}
+
+#[test]
+fn plan_windows_cover_every_touch() {
+    Prop::new("alloc: residency covers schedule", 25).check(|g| {
+        let graph = random_graph(g);
+        let cfg = random_cfg(g);
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(graph).expect("pipeline");
+        let plan = rep.plan.as_ref().unwrap();
+        for (pos, nest) in rep.program.nests.iter().enumerate() {
+            for load in nest.body.loads() {
+                for piece in &load.pieces {
+                    if let Some(t) = piece.tensor {
+                        assert!(
+                            plan.window_at(t, pos).is_some(),
+                            "{t:?} untracked at {pos}"
+                        );
+                    }
+                }
+            }
+            assert!(plan.window_at(nest.store.tensor, pos).is_some());
+        }
+    });
+}
