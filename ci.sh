@@ -1,7 +1,18 @@
 #!/usr/bin/env bash
-# One-shot verifier: build, tests, and formatting.
+# One-shot verifier: build, tests (including the differential
+# equivalence suite), and formatting.
 #
 #   ./ci.sh
+#
+# The differential fuzzer (`tests/diff_pipeline.rs`) runs with a fixed
+# default seed and case count; override with FUZZ_SEED / FUZZ_CASES:
+#
+#   FUZZ_SEED=123 FUZZ_CASES=1 ./ci.sh     # replay one failing seed
+#   FUZZ_CASES=1000 ./ci.sh                # deeper nightly sweep
+#
+# On a mismatch the suite panics with the exact failing seed and the
+# first diverging (stage, tensor, element) — paste the printed
+# FUZZ_SEED back into the command above to reproduce.
 #
 # `cargo fmt --check` runs only when a rustfmt component is installed
 # (the offline build image may not carry one); build and tests are
@@ -9,11 +20,18 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# fixed default seed for the differential suite (kept in sync with the
+# in-code default in tests/diff_pipeline.rs)
+: "${FUZZ_SEED:=4028782061}"
+: "${FUZZ_CASES:=200}"
+export FUZZ_SEED FUZZ_CASES
+
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
+echo "== cargo test -q (differential suite runs inside: FUZZ_SEED=$FUZZ_SEED FUZZ_CASES=$FUZZ_CASES) =="
 cargo test -q
+echo "   (replay one differential case: FUZZ_SEED=<seed> FUZZ_CASES=1 cargo test --test diff_pipeline fuzzed)"
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

@@ -515,7 +515,8 @@ mod tests {
         let r = b.relu("r", t);
         b.mark_output(r);
         let cfg = AccelConfig::inferentia_like();
-        let res = plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default());
+        let res = plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default())
+            .unwrap();
         let dynamic = simulate(&res.program, &cfg, None);
         let planned = simulate_planned(&res.program, &res.plan, &cfg, None).unwrap();
         // with no capacity pressure the two accountings agree exactly
@@ -542,7 +543,8 @@ mod tests {
         let t3 = b.transpose("t3", x, &[1, 0]);
         let c = b.concat("c", &[t1, t2, t3], 0);
         b.mark_output(c);
-        let res = plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default());
+        let res = plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default())
+            .unwrap();
         let planned = simulate_planned(&res.program, &res.plan, &cfg, None).unwrap();
         assert!(res.plan.stats.spill_pairs >= 1);
         assert!(planned.traffic.get(TrafficClass::Spill) > 0);
@@ -558,7 +560,7 @@ mod tests {
         b.mark_output(t);
         let cfg = AccelConfig::inferentia_like();
         let mut res =
-            plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default());
+            plan_memory(Program::lower(b.finish()), None, &cfg, &AllocOpts::default()).unwrap();
         res.plan.tensors.remove(&x);
         assert!(simulate_planned(&res.program, &res.plan, &cfg, None).is_err());
     }

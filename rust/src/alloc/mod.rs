@@ -68,13 +68,46 @@ pub struct AllocOpts {
     /// Hard cap on spill-resolution rounds; beyond it the failing
     /// tensors are streamed from DRAM (guaranteed termination).
     pub max_rounds: usize,
+    /// Strict capacity mode: refuse (with [`PlanError::Oversized`]) any
+    /// workload containing a tensor larger than the *total* scratchpad,
+    /// instead of silently demoting it to DRAM streaming. Deployments
+    /// that require guaranteed residency turn this on; the default
+    /// keeps the documented streaming fallback.
+    pub require_fit: bool,
 }
 
 impl Default for AllocOpts {
     fn default() -> Self {
-        AllocOpts { lookahead: 4, max_rounds: 512 }
+        AllocOpts { lookahead: 4, max_rounds: 512, require_fit: false }
     }
 }
+
+/// A planning failure — returned, never panicked, so a caller with a
+/// degenerate chip description or an unservable workload gets a
+/// diagnosable error instead of an invalid plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// The chip description cannot host any plan (zero banks or
+    /// non-positive bank size).
+    BadConfig(String),
+    /// Strict capacity mode: a tensor exceeds the total scratchpad.
+    Oversized { tensor: TensorId, name: String, bytes: i64, capacity: i64 },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::BadConfig(d) => write!(f, "plan: bad accelerator config: {d}"),
+            PlanError::Oversized { tensor, name, bytes, capacity } => write!(
+                f,
+                "plan: tensor {tensor:?} ('{name}', {bytes} bytes) exceeds the \
+                 total scratchpad capacity of {capacity} bytes"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// Aggregate statistics of one planning run.
 #[derive(Clone, Copy, Debug, Default)]
@@ -335,13 +368,35 @@ pub struct AllocResult {
 }
 
 /// Run the full static planner: schedule, then iterate offset
-/// allocation + spill resolution to a clean plan.
+/// allocation + spill resolution to a clean plan. Fails (never panics)
+/// on a degenerate chip config, and — in strict capacity mode
+/// ([`AllocOpts::require_fit`]) — on any tensor larger than the total
+/// scratchpad.
 pub fn plan_memory(
     program: Program,
     bank: Option<&BankAssignment>,
     cfg: &AccelConfig,
     opts: &AllocOpts,
-) -> AllocResult {
+) -> Result<AllocResult, PlanError> {
+    if cfg.banks == 0 || cfg.bank_bytes <= 0 {
+        return Err(PlanError::BadConfig(format!(
+            "banks={} bank_bytes={}",
+            cfg.banks, cfg.bank_bytes
+        )));
+    }
+    if opts.require_fit {
+        let capacity = cfg.scratchpad_bytes();
+        for t in program.graph.tensors() {
+            if t.size_bytes() > capacity {
+                return Err(PlanError::Oversized {
+                    tensor: t.id,
+                    name: t.name.clone(),
+                    bytes: t.size_bytes(),
+                    capacity,
+                });
+            }
+        }
+    }
     let sched_opts = ScheduleOpts { lookahead: opts.lookahead, ..Default::default() };
     let (mut program, sched) = schedule_min_footprint(program, &sched_opts);
 
@@ -387,7 +442,7 @@ pub fn plan_memory(
                     bank_bytes: cfg.bank_bytes,
                     stats,
                 };
-                return AllocResult { program, plan };
+                return Ok(AllocResult { program, plan });
             }
             Err(conflict) => {
                 let action = if stats.rounds >= opts.max_rounds {
@@ -417,7 +472,7 @@ mod tests {
     use crate::ir::verify::{verify_graph, verify_program};
 
     fn plan_for(g: crate::ir::Graph, cfg: &AccelConfig) -> AllocResult {
-        plan_memory(Program::lower(g), None, cfg, &AllocOpts::default())
+        plan_memory(Program::lower(g), None, cfg, &AllocOpts::default()).unwrap()
     }
 
     #[test]
@@ -473,6 +528,88 @@ mod tests {
         let peak = r.plan.peak_scratchpad_bytes();
         assert!(peak > 0);
         assert!(peak <= cfg.scratchpad_bytes());
+    }
+
+    #[test]
+    fn tensor_exactly_filling_a_bank_group_plans_clean() {
+        // 32×32 f32 = 4096 B = 4 banks × 1024 B: the tensor fills one
+        // bank group to the last byte. The region must land at offset 0
+        // with per_bank_bytes == bank_bytes (no off-by-one), and the
+        // plan must verify with no spill activity.
+        let cfg = AccelConfig::tiny(8 * 1024); // banks=4, bank_bytes=1024
+        assert_eq!(
+            offsets::per_bank_bytes(32 * 32 * 4, cfg.banks),
+            cfg.bank_bytes
+        );
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[32, 32]);
+        // two readers: single-use inputs are streamed by policy, and the
+        // point here is a *resident* group-filling region
+        let t1 = b.transpose("t1", x, &[1, 0]);
+        let t2 = b.transpose("t2", x, &[1, 0]);
+        b.mark_output(t1);
+        b.mark_output(t2);
+        let r = plan_for(b.finish(), &cfg);
+        verify_plan(&r.program, &r.plan, &cfg).unwrap();
+        assert_eq!(r.plan.stats.rounds, 1, "{:?}", r.plan.stats);
+        assert_eq!(r.plan.stats.spill_pairs, 0);
+        assert_eq!(r.plan.stats.streamed, 0);
+        let region = r.plan.region_at(x, 0).expect("x planned resident");
+        assert_eq!(region.offset, 0);
+        assert_eq!(region.per_bank_bytes, cfg.bank_bytes);
+    }
+
+    #[test]
+    fn oversized_tensor_is_planner_err_in_strict_mode() {
+        // 64×64 f32 = 16 KiB > the whole 8 KiB scratchpad: strict mode
+        // must report it, not emit a silently-streaming plan.
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let opts = AllocOpts { require_fit: true, ..Default::default() };
+        let err = plan_memory(Program::lower(b.finish()), None, &cfg, &opts).unwrap_err();
+        assert!(
+            matches!(err, PlanError::Oversized { bytes: 16384, capacity: 8192, .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn oversized_tensor_streams_to_valid_plan_by_default() {
+        // same workload without strict mode: the documented fallback is
+        // DRAM streaming, and the emitted plan must still verify
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let r = plan_for(b.finish(), &cfg);
+        verify_plan(&r.program, &r.plan, &cfg).unwrap();
+        for tp in r.plan.tensors.values() {
+            for w in &tp.windows {
+                assert_eq!(w.home, Home::Dram);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_config_is_err_not_panic() {
+        let mut cfg = AccelConfig::tiny(8 * 1024);
+        cfg.banks = 0; // would divide by zero in per-bank sizing
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let err = plan_memory(
+            Program::lower(b.finish()),
+            None,
+            &cfg,
+            &AllocOpts::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, PlanError::BadConfig(_)), "{err}");
     }
 
     #[test]

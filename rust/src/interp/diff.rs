@@ -1,0 +1,271 @@
+//! Differential equivalence testing across the pass pipeline.
+//!
+//! [`diff_pipeline`] snapshots the program after every
+//! [`PassManager`] stage (lower → DME → bank map + copy splice →
+//! static plan), executes each snapshot on the reference interpreter
+//! with identically seeded inputs, and asserts **bit-identical** graph
+//! outputs against the freshly lowered (stage-0) program. Any
+//! divergence is reported with the stage, tensor, flat element index
+//! and both values — enough to replay and bisect.
+//!
+//! The comparison is on raw `f64` bits ([`f64::to_bits`]): the
+//! interpreter's determinism contract (lexicographic reduction order,
+//! pass-invariant compute domains) makes exact equality the correct
+//! bar — an epsilon would only mask real routing bugs.
+
+use super::{interpret, Buffers, InterpError};
+use crate::ir::loopnest::Program;
+use crate::ir::tensor::TensorId;
+use crate::ir::Graph;
+use crate::passes::manager::PassManager;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Flat per-output-tensor values of one executed stage.
+pub type StageOutputs = BTreeMap<TensorId, Vec<f64>>;
+
+/// How one stage's outputs depart from the baseline's.
+#[derive(Clone, Debug)]
+pub enum OutputDiff {
+    /// The tensor is absent from the later stage's outputs.
+    Missing { tensor: TensorId },
+    /// The tensor changed element count (a shape-corrupting pass).
+    Resized { tensor: TensorId, want: usize, got: usize },
+    /// A genuine per-element bitwise divergence.
+    Element { tensor: TensorId, index: usize, want: f64, got: f64 },
+}
+
+impl fmt::Display for OutputDiff {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OutputDiff::Missing { tensor } => write!(f, "output {tensor:?} missing"),
+            OutputDiff::Resized { tensor, want, got } => {
+                write!(f, "output {tensor:?} resized: {got} elements != {want} (baseline)")
+            }
+            OutputDiff::Element { tensor, index, want, got } => {
+                write!(f, "{tensor:?}[{index}]: {got} != {want} (baseline)")
+            }
+        }
+    }
+}
+
+/// A differential-testing failure.
+#[derive(Clone, Debug)]
+pub enum DiffError {
+    /// The pass pipeline itself failed (verification error etc.).
+    Pipeline(String),
+    /// A stage snapshot faulted under interpretation.
+    Interp { stage: String, err: InterpError },
+    /// An output tensor disappeared from a stage's graph.
+    MissingOutput { stage: String, tensor: TensorId },
+    /// Output divergence against the lowered baseline.
+    Mismatch { stage: String, diff: OutputDiff },
+}
+
+impl fmt::Display for DiffError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DiffError::Pipeline(e) => write!(f, "diff: pipeline failed: {e}"),
+            DiffError::Interp { stage, err } => {
+                write!(f, "diff: stage '{stage}' faulted: {err}")
+            }
+            DiffError::MissingOutput { stage, tensor } => {
+                write!(f, "diff: stage '{stage}' lost output tensor {tensor:?}")
+            }
+            DiffError::Mismatch { stage, diff } => {
+                write!(f, "diff: stage '{stage}' diverges: {diff}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DiffError {}
+
+/// Summary of one successful differential run.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// Stage names compared, in pipeline order (first is the baseline).
+    pub stages: Vec<String>,
+    /// Output tensors compared per stage.
+    pub outputs: usize,
+    /// Total f64 elements compared per stage.
+    pub elements: usize,
+}
+
+/// Execute one stage snapshot and collect its graph-output buffers.
+pub fn stage_outputs(
+    prog: &Program,
+    outputs: &[TensorId],
+    seed: u64,
+    stage: &str,
+) -> Result<StageOutputs, DiffError> {
+    let mut bufs = Buffers::seeded(&prog.graph, seed);
+    interpret(prog, &mut bufs)
+        .map_err(|err| DiffError::Interp { stage: stage.to_string(), err })?;
+    let mut outs = StageOutputs::new();
+    for &t in outputs {
+        let vals = bufs
+            .try_tensor(t)
+            .ok_or(DiffError::MissingOutput { stage: stage.to_string(), tensor: t })?;
+        outs.insert(t, vals.to_vec());
+    }
+    Ok(outs)
+}
+
+/// First divergence between two stages' outputs, if any: a missing or
+/// resized tensor, or the first bitwise element mismatch.
+pub fn first_mismatch(want: &StageOutputs, got: &StageOutputs) -> Option<OutputDiff> {
+    for (t, w) in want {
+        let Some(gv) = got.get(t) else {
+            return Some(OutputDiff::Missing { tensor: *t });
+        };
+        if w.len() != gv.len() {
+            return Some(OutputDiff::Resized { tensor: *t, want: w.len(), got: gv.len() });
+        }
+        for (i, (a, b)) in w.iter().zip(gv).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Some(OutputDiff::Element {
+                    tensor: *t,
+                    index: i,
+                    want: *a,
+                    got: *b,
+                });
+            }
+        }
+    }
+    None
+}
+
+/// Panic unless `after` computes bit-identical graph outputs to
+/// `before` under seed `seed` (outputs taken from `before`'s graph).
+/// The shared before/after harness for single-pass tests (DME unit,
+/// integration and property tests all call this).
+pub fn assert_equivalent(before: &Program, after: &Program, seed: u64) {
+    let outputs = before.graph.outputs();
+    let b = stage_outputs(before, &outputs, seed, "before")
+        .unwrap_or_else(|e| panic!("baseline program faulted: {e}"));
+    let a = stage_outputs(after, &outputs, seed, "after")
+        .unwrap_or_else(|e| panic!("transformed program faulted: {e}"));
+    if let Some(diff) = first_mismatch(&b, &a) {
+        panic!("transformed program changed semantics: {diff}");
+    }
+}
+
+/// Run `pm` on `graph`, snapshotting after every stage, and assert all
+/// stages compute bit-identical outputs under seed `seed`.
+pub fn diff_pipeline(
+    graph: Graph,
+    pm: &PassManager,
+    seed: u64,
+) -> Result<DiffReport, DiffError> {
+    let outputs: Vec<TensorId> = graph.outputs();
+    let mut snaps: Vec<(String, Program)> = Vec::new();
+    pm.run_observed(graph, |stage, prog| {
+        snaps.push((stage.to_string(), prog.clone()));
+    })
+    .map_err(|e| DiffError::Pipeline(e.to_string()))?;
+
+    let mut base: Option<StageOutputs> = None;
+    let mut elements = 0usize;
+    for (stage, prog) in &snaps {
+        let outs = stage_outputs(prog, &outputs, seed, stage)?;
+        match &base {
+            None => {
+                elements = outs.values().map(|v| v.len()).sum();
+                base = Some(outs);
+            }
+            Some(b) => {
+                if let Some(diff) = first_mismatch(b, &outs) {
+                    return Err(DiffError::Mismatch { stage: stage.clone(), diff });
+                }
+            }
+        }
+    }
+    Ok(DiffReport {
+        stages: snaps.iter().map(|(s, _)| s.clone()).collect(),
+        outputs: outputs.len(),
+        elements,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::config::AccelConfig;
+    use crate::ir::builder::GraphBuilder;
+    use crate::passes::manager::{AllocStage, BankMode, PassManager};
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 6, 6]);
+        let t1 = b.transpose("t1", x, &[0, 2, 3, 1]);
+        let t2 = b.transpose("t2", t1, &[0, 3, 1, 2]);
+        let w = b.weight("w", &[4, 4, 3, 3]);
+        let c = b.conv2d("c", t2, w, 1, 1);
+        let r = b.relu("r", c);
+        b.mark_output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn default_pipeline_is_equivalent() {
+        let rep = diff_pipeline(sample(), &PassManager::default(), 11).unwrap();
+        assert!(rep.stages.len() >= 3, "{:?}", rep.stages);
+        assert_eq!(rep.stages[0], "lower");
+        assert!(rep.elements > 0);
+    }
+
+    #[test]
+    fn planned_pipeline_is_equivalent() {
+        // a cramped scratchpad forces window splits / spill nests, which
+        // must replay to the same outputs
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(AccelConfig::tiny(16 * 1024))),
+            ..Default::default()
+        };
+        let rep = diff_pipeline(sample(), &pm, 11).unwrap();
+        assert_eq!(rep.stages.last().map(|s| s.as_str()), Some("plan"));
+    }
+
+    #[test]
+    fn local_bank_mode_is_equivalent() {
+        let pm = PassManager { bank_mode: BankMode::Local, ..Default::default() };
+        diff_pipeline(sample(), &pm, 11).unwrap();
+    }
+
+    #[test]
+    fn mismatch_reporting_names_tensor_and_index() {
+        // fabricate diverging outputs directly
+        let t = TensorId(3);
+        let mut a = StageOutputs::new();
+        let mut b = StageOutputs::new();
+        a.insert(t, vec![1.0, 2.0, 3.0]);
+        b.insert(t, vec![1.0, 2.5, 3.0]);
+        match first_mismatch(&a, &b).unwrap() {
+            OutputDiff::Element { tensor, index, want, got } => {
+                assert_eq!((tensor, index), (t, 1));
+                assert_eq!((want, got), (2.0, 2.5));
+            }
+            other => panic!("wrong diff kind: {other:?}"),
+        }
+        assert!(first_mismatch(&a, &a).is_none());
+    }
+
+    #[test]
+    fn resized_and_missing_outputs_reported_as_such() {
+        let t = TensorId(4);
+        let mut a = StageOutputs::new();
+        a.insert(t, vec![1.0, 2.0]);
+        let mut shorter = StageOutputs::new();
+        shorter.insert(t, vec![1.0]);
+        assert!(matches!(
+            first_mismatch(&a, &shorter),
+            Some(OutputDiff::Resized { want: 2, got: 1, .. })
+        ));
+        let empty = StageOutputs::new();
+        assert!(matches!(
+            first_mismatch(&a, &empty),
+            Some(OutputDiff::Missing { .. })
+        ));
+    }
+}

@@ -1,0 +1,661 @@
+//! Reference scalar interpreter — the semantic oracle for the pass
+//! pipeline.
+//!
+//! Every transformation this repo performs (DME, bank mapping, copy
+//! splicing, static planning with spill/reload nests) claims to reduce
+//! memory traffic *without changing what the program computes*. This
+//! module makes that claim checkable: it executes any normalized
+//! loop-nest [`Program`] on concrete `f64` buffers, one domain point at
+//! a time, with
+//!
+//! * full **copy-nest** semantics (piecewise loads, synthesized-zero
+//!   pad borders, `oob_zero` implicit-padding reads),
+//! * full **compute-nest** semantics per [`OpKind`] (matmul/conv
+//!   sum-of-products, max/avg pooling, global average pool, softmax,
+//!   elementwise unary/binary, batch-norm, bias-add), and
+//! * replay of planner-inserted `spill.*`/`reload.*` and bank-mapping
+//!   `MemCopy` nests (plain copies), so post-planning programs are
+//!   executable too.
+//!
+//! Determinism contract: reduction nests accumulate in lexicographic
+//! domain order, and passes never alter a compute nest's domain — so a
+//! correct transformation produces **bit-identical** `f64` outputs, and
+//! the differential harness ([`diff`]) compares raw bits, not epsilons.
+//! Inputs and weights are seeded with *integers* of per-element
+//! distinct magnitude (exact in f64 at these sizes), which keeps copy
+//! plumbing exact and makes element misroutes collision-proof;
+//! transcendental ops (softmax/sigmoid/tanh) and very deep product
+//! chains are merely deterministic, which is all bit-comparison needs.
+//!
+//! Strictness: reads of never-written elements, loads outside a tensor
+//! box (without `oob_zero`), stores outside the output box and domain
+//! points no load piece covers are all hard [`InterpError`]s — each one
+//! is a class of miscompile the structural verifier cannot see.
+
+pub mod diff;
+
+use crate::ir::graph::Graph;
+use crate::ir::loopnest::{Body, LoadStmt, LoopNest, Program};
+use crate::ir::op::{BinaryFn, OpKind, PoolKind, UnaryFn};
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::poly::IterDomain;
+use crate::util::rng::SplitMix64;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// An execution fault: the program is not a well-defined function of
+/// its inputs. Every variant is a miscompile signature.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InterpError {
+    /// No load piece covers a domain point.
+    UncoveredLoad { nest: String, point: Vec<i64> },
+    /// A load (without `oob_zero`) indexed outside the tensor box.
+    OobLoad { nest: String, tensor: TensorId, index: Vec<i64> },
+    /// A store indexed outside the output tensor box.
+    OobStore { nest: String, tensor: TensorId, index: Vec<i64> },
+    /// A read of an element no earlier nest wrote.
+    UnwrittenRead { nest: String, tensor: TensorId, index: Vec<i64> },
+    /// A compute nest whose node kind has no interpretable semantics
+    /// (or whose store shape departs from the lowering contract).
+    Opaque { nest: String, detail: String },
+}
+
+impl fmt::Display for InterpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InterpError::UncoveredLoad { nest, point } => {
+                write!(f, "interp: nest '{nest}': no load piece covers {point:?}")
+            }
+            InterpError::OobLoad { nest, tensor, index } => {
+                write!(f, "interp: nest '{nest}': load of {tensor:?} at {index:?} out of bounds")
+            }
+            InterpError::OobStore { nest, tensor, index } => {
+                write!(f, "interp: nest '{nest}': store to {tensor:?} at {index:?} out of bounds")
+            }
+            InterpError::UnwrittenRead { nest, tensor, index } => {
+                write!(f, "interp: nest '{nest}': read of unwritten {tensor:?}[{index:?}]")
+            }
+            InterpError::Opaque { nest, detail } => {
+                write!(f, "interp: nest '{nest}': uninterpretable: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InterpError {}
+
+/// Concrete memory state: one flat `f64` buffer per tensor plus a
+/// per-element initialization mask (reads of unwritten elements fault).
+#[derive(Clone, Debug)]
+pub struct Buffers {
+    data: BTreeMap<TensorId, Vec<f64>>,
+    written: BTreeMap<TensorId, Vec<bool>>,
+}
+
+impl Buffers {
+    /// Deterministically seed every `Input`/`Weight` tensor from
+    /// `(seed, tensor id)`. Each element gets a **distinct magnitude**
+    /// (`base + index`, random sign, `base ≥ 1`), so any intra-tensor
+    /// misroute — two elements swapped or aliased by a wrong access
+    /// map — changes some output bit even under a single fixed seed
+    /// (the sensitivity the deleted unique-fingerprint walkers had);
+    /// per-tensor random bases keep cross-tensor values mostly
+    /// distinct too. The per-tensor streams are independent of which
+    /// *other* tensors exist, so pre- and post-pass programs (whose
+    /// intermediate tensor sets differ) see identical external data.
+    pub fn seeded(g: &Graph, seed: u64) -> Buffers {
+        let mut data = BTreeMap::new();
+        let mut written = BTreeMap::new();
+        for t in g.tensors() {
+            let n = t.numel() as usize;
+            match t.kind {
+                TensorKind::Input | TensorKind::Weight => {
+                    let mut rng = SplitMix64::new(
+                        seed ^ (t.id.0 as u64).wrapping_mul(0x9e3779b97f4a7c15),
+                    );
+                    let base = 1 + rng.range_i64(0, 512);
+                    data.insert(
+                        t.id,
+                        (0..n)
+                            .map(|k| {
+                                let v = (base + k as i64) as f64;
+                                if rng.next_u64() & 1 == 0 {
+                                    v
+                                } else {
+                                    -v
+                                }
+                            })
+                            .collect(),
+                    );
+                    written.insert(t.id, vec![true; n]);
+                }
+                TensorKind::Intermediate | TensorKind::Output => {
+                    data.insert(t.id, vec![0.0; n]);
+                    written.insert(t.id, vec![false; n]);
+                }
+            }
+        }
+        Buffers { data, written }
+    }
+
+    /// The flat (row-major) contents of a tensor.
+    pub fn tensor(&self, t: TensorId) -> &[f64] {
+        &self.data[&t]
+    }
+
+    pub fn try_tensor(&self, t: TensorId) -> Option<&[f64]> {
+        self.data.get(&t).map(|v| v.as_slice())
+    }
+
+    /// Replace a tensor's contents wholesale (marks every element
+    /// written). Tests use this to pin exact input values instead of
+    /// seeding.
+    pub fn set_tensor(&mut self, t: TensorId, vals: Vec<f64>) {
+        let n = self.data[&t].len();
+        assert_eq!(vals.len(), n, "set_tensor: length {} != {n}", vals.len());
+        self.written.insert(t, vec![true; n]);
+        self.data.insert(t, vals);
+    }
+
+    /// True when every element of `t` has been written.
+    pub fn fully_written(&self, t: TensorId) -> bool {
+        self.written.get(&t).map(|m| m.iter().all(|&w| w)).unwrap_or(false)
+    }
+
+    fn write(&mut self, t: TensorId, lin: usize, v: f64) {
+        self.data.get_mut(&t).unwrap()[lin] = v;
+        self.written.get_mut(&t).unwrap()[lin] = true;
+    }
+}
+
+/// Execute the whole program in nest order against `bufs`.
+pub fn interpret(prog: &Program, bufs: &mut Buffers) -> Result<(), InterpError> {
+    // index-space boxes for every tensor, built once
+    let doms: BTreeMap<TensorId, IterDomain> = prog
+        .graph
+        .tensors()
+        .map(|t| (t.id, IterDomain::new(&t.shape)))
+        .collect();
+    for nest in &prog.nests {
+        exec_nest(prog, nest, &doms, bufs)?;
+    }
+    Ok(())
+}
+
+/// Seed fresh buffers from the program's graph, execute, and return the
+/// final memory state.
+pub fn interpret_seeded(prog: &Program, seed: u64) -> Result<Buffers, InterpError> {
+    let mut bufs = Buffers::seeded(&prog.graph, seed);
+    interpret(prog, &mut bufs)?;
+    Ok(bufs)
+}
+
+/// Resolve one (piecewise) load at a domain point.
+fn load_value(
+    doms: &BTreeMap<TensorId, IterDomain>,
+    bufs: &Buffers,
+    nest: &LoopNest,
+    load: &LoadStmt,
+    p: &[i64],
+) -> Result<f64, InterpError> {
+    let piece = load.pieces.iter().find(|a| a.holds(p)).ok_or_else(|| {
+        InterpError::UncoveredLoad { nest: nest.name.clone(), point: p.to_vec() }
+    })?;
+    let Some(t) = piece.tensor else {
+        return Ok(0.0); // synthesized zero (pad border)
+    };
+    let idx = piece.map.apply(p);
+    let dom = &doms[&t];
+    if !dom.contains(&idx) {
+        if piece.oob_zero {
+            return Ok(0.0); // hardware-padded read
+        }
+        return Err(InterpError::OobLoad { nest: nest.name.clone(), tensor: t, index: idx });
+    }
+    let lin = dom.linearize(&idx) as usize;
+    if !bufs.written[&t][lin] {
+        return Err(InterpError::UnwrittenRead { nest: nest.name.clone(), tensor: t, index: idx });
+    }
+    Ok(bufs.data[&t][lin])
+}
+
+/// Map a domain point through the store map, bounds-checked.
+fn store_index(
+    nest: &LoopNest,
+    out_dom: &IterDomain,
+    p: &[i64],
+) -> Result<usize, InterpError> {
+    let oidx = nest.store.map.apply(p);
+    if !out_dom.contains(&oidx) {
+        return Err(InterpError::OobStore {
+            nest: nest.name.clone(),
+            tensor: nest.store.tensor,
+            index: oidx,
+        });
+    }
+    Ok(out_dom.linearize(&oidx) as usize)
+}
+
+fn exec_nest(
+    prog: &Program,
+    nest: &LoopNest,
+    doms: &BTreeMap<TensorId, IterDomain>,
+    bufs: &mut Buffers,
+) -> Result<(), InterpError> {
+    let g = &prog.graph;
+    let out = nest.store.tensor;
+    let out_dom = doms[&out].clone();
+    match &nest.body {
+        Body::Copy { load } => {
+            for p in nest.domain.points() {
+                let v = load_value(doms, bufs, nest, load, &p)?;
+                let lin = store_index(nest, &out_dom, &p)?;
+                bufs.write(out, lin, v);
+            }
+            Ok(())
+        }
+        Body::Compute { loads, .. } => {
+            let kind = g.node(nest.node).kind.clone();
+            exec_compute(nest, &kind, loads, doms, &out_dom, bufs)
+        }
+    }
+}
+
+/// Per-[`OpKind`] compute semantics over one nest. Reductions
+/// accumulate in lexicographic domain order (the determinism contract).
+fn exec_compute(
+    nest: &LoopNest,
+    kind: &OpKind,
+    loads: &[LoadStmt],
+    doms: &BTreeMap<TensorId, IterDomain>,
+    out_dom: &IterDomain,
+    bufs: &mut Buffers,
+) -> Result<(), InterpError> {
+    let out = nest.store.tensor;
+    let ext = nest.domain.extents().to_vec();
+    match kind {
+        // ---- sum-of-products reductions (systolic array ops) ----
+        OpKind::MatMul
+        | OpKind::Conv2d { .. }
+        | OpKind::DepthwiseConv2d { .. }
+        | OpKind::Conv1d { .. } => {
+            reduce(nest, loads, doms, out_dom, bufs, 0.0, |acc, vals| {
+                acc + vals.iter().product::<f64>()
+            })?;
+            Ok(())
+        }
+
+        // ---- pooling reductions (vector engine) ----
+        OpKind::Pool { kind: PoolKind::Max, .. } => {
+            reduce(nest, loads, doms, out_dom, bufs, f64::NEG_INFINITY, |acc, vals| {
+                acc.max(vals[0])
+            })?;
+            Ok(())
+        }
+        OpKind::Pool { kind: PoolKind::Avg, .. } => {
+            // window size from the domain, not the op attributes: the
+            // domain is the one thing no pass rewrites
+            let count = (ext[4] * ext[5]) as f64;
+            let acc = reduce(nest, loads, doms, out_dom, bufs, 0.0, |acc, vals| {
+                acc + vals[0]
+            })?;
+            finalize_scaled(bufs, out, &acc, 1.0 / count);
+            Ok(())
+        }
+        OpKind::GlobalAvgPool => {
+            let count = (ext[2] * ext[3]) as f64;
+            let acc = reduce(nest, loads, doms, out_dom, bufs, 0.0, |acc, vals| {
+                acc + vals[0]
+            })?;
+            finalize_scaled(bufs, out, &acc, 1.0 / count);
+            Ok(())
+        }
+
+        // ---- pointwise ops ----
+        OpKind::Unary(f) => {
+            let func = *f;
+            pointwise(nest, loads, doms, out_dom, bufs, move |vals| match func {
+                UnaryFn::Relu => vals[0].max(0.0),
+                UnaryFn::Sigmoid => 1.0 / (1.0 + (-vals[0]).exp()),
+                UnaryFn::Tanh => vals[0].tanh(),
+                UnaryFn::Exp => vals[0].exp(),
+                UnaryFn::Neg => -vals[0],
+            })
+        }
+        OpKind::Binary(f) => {
+            let func = *f;
+            pointwise(nest, loads, doms, out_dom, bufs, move |vals| match func {
+                BinaryFn::Add => vals[0] + vals[1],
+                BinaryFn::Sub => vals[0] - vals[1],
+                BinaryFn::Mul => vals[0] * vals[1],
+                BinaryFn::Max => vals[0].max(vals[1]),
+            })
+        }
+        OpKind::BatchNorm => {
+            // loads: x, per-channel scale, per-channel shift
+            pointwise(nest, loads, doms, out_dom, bufs, |vals| {
+                vals[0] * vals[1] + vals[2]
+            })
+        }
+        OpKind::BiasAdd => pointwise(nest, loads, doms, out_dom, bufs, |vals| {
+            vals[0] + vals[1]
+        }),
+
+        // ---- softmax: a row reduction over the last output dim ----
+        OpKind::Softmax => {
+            if !nest.store.map.is_identity() || out_dom.extents() != nest.domain.extents() {
+                return Err(InterpError::Opaque {
+                    nest: nest.name.clone(),
+                    detail: "softmax store departs from identity lowering".into(),
+                });
+            }
+            let numel = out_dom.cardinality() as usize;
+            let mut vals = vec![0.0f64; numel];
+            for p in nest.domain.points() {
+                let v = load_value(doms, bufs, nest, &loads[0], &p)?;
+                vals[out_dom.linearize(&p) as usize] = v;
+            }
+            let row = *out_dom.extents().last().unwrap() as usize;
+            for chunk_start in (0..numel).step_by(row) {
+                let chunk = &mut vals[chunk_start..chunk_start + row];
+                let m = chunk.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+                let mut sum = 0.0;
+                for v in chunk.iter_mut() {
+                    *v = (*v - m).exp();
+                    sum += *v;
+                }
+                for v in chunk.iter_mut() {
+                    *v /= sum;
+                }
+            }
+            for (lin, v) in vals.into_iter().enumerate() {
+                bufs.write(out, lin, v);
+            }
+            Ok(())
+        }
+
+        // memory-bound kinds always lower to Body::Copy; a Compute body
+        // carrying one is a lowering bug
+        OpKind::Transpose { .. }
+        | OpKind::Reshape { .. }
+        | OpKind::Tile { .. }
+        | OpKind::Repeat { .. }
+        | OpKind::StridedSlice { .. }
+        | OpKind::Concat { .. }
+        | OpKind::Pad { .. }
+        | OpKind::Identity
+        | OpKind::MemCopy => Err(InterpError::Opaque {
+            nest: nest.name.clone(),
+            detail: format!("memory-bound op '{}' with a compute body", kind.mnemonic()),
+        }),
+    }
+}
+
+/// Run a reduction: initialize each touched output element to `init` on
+/// first touch, fold `combine` over the domain in lexicographic order,
+/// then write the results back. Returns the accumulator (indexed by
+/// flat output offset; untouched elements are `None`) so avg-style ops
+/// can rescale before the write-back overwrites it.
+fn reduce(
+    nest: &LoopNest,
+    loads: &[LoadStmt],
+    doms: &BTreeMap<TensorId, IterDomain>,
+    out_dom: &IterDomain,
+    bufs: &mut Buffers,
+    init: f64,
+    combine: impl Fn(f64, &[f64]) -> f64,
+) -> Result<Vec<Option<f64>>, InterpError> {
+    let out = nest.store.tensor;
+    let mut acc: Vec<Option<f64>> = vec![None; out_dom.cardinality() as usize];
+    let mut vals = vec![0.0f64; loads.len()];
+    for p in nest.domain.points() {
+        for (k, load) in loads.iter().enumerate() {
+            vals[k] = load_value(doms, bufs, nest, load, &p)?;
+        }
+        let lin = store_index(nest, out_dom, &p)?;
+        let cur = acc[lin].unwrap_or(init);
+        acc[lin] = Some(combine(cur, &vals));
+    }
+    for (lin, v) in acc.iter().enumerate() {
+        if let Some(v) = v {
+            bufs.write(out, lin, *v);
+        }
+    }
+    Ok(acc)
+}
+
+/// Overwrite the just-reduced elements with `acc * scale` (avg pools).
+fn finalize_scaled(bufs: &mut Buffers, out: TensorId, acc: &[Option<f64>], scale: f64) {
+    for (lin, v) in acc.iter().enumerate() {
+        if let Some(v) = v {
+            bufs.write(out, lin, *v * scale);
+        }
+    }
+}
+
+/// Evaluate an injective-store pointwise nest.
+fn pointwise(
+    nest: &LoopNest,
+    loads: &[LoadStmt],
+    doms: &BTreeMap<TensorId, IterDomain>,
+    out_dom: &IterDomain,
+    bufs: &mut Buffers,
+    f: impl Fn(&[f64]) -> f64,
+) -> Result<(), InterpError> {
+    let out = nest.store.tensor;
+    let mut vals = vec![0.0f64; loads.len()];
+    for p in nest.domain.points() {
+        for (k, load) in loads.iter().enumerate() {
+            vals[k] = load_value(doms, bufs, nest, load, &p)?;
+        }
+        let lin = store_index(nest, out_dom, &p)?;
+        bufs.write(out, lin, f(&vals));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::loopnest::Program;
+
+    fn run(g: crate::ir::Graph) -> Buffers {
+        let prog = Program::lower(g);
+        interpret_seeded(&prog, 7).unwrap()
+    }
+
+    #[test]
+    fn transpose_moves_elements() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[2, 3]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let bufs = run(b.finish());
+        let xs = bufs.tensor(x).to_vec();
+        let ts = bufs.tensor(t);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(ts[(i * 2 + j) as usize], xs[(j * 3 + i) as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_border_is_zero_interior_preserved() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[2]);
+        let p = b.pad("p", x, &[1], &[1]);
+        b.mark_output(p);
+        let bufs = run(b.finish());
+        let xs = bufs.tensor(x).to_vec();
+        let ps = bufs.tensor(p);
+        assert_eq!(ps[0], 0.0);
+        assert_eq!(ps[1], xs[0]);
+        assert_eq!(ps[2], xs[1]);
+        assert_eq!(ps[3], 0.0);
+    }
+
+    #[test]
+    fn matmul_matches_direct_computation() {
+        let mut b = GraphBuilder::new();
+        let a = b.input("a", &[2, 3]);
+        let w = b.weight("w", &[3, 2]);
+        let m = b.matmul("m", a, w);
+        b.mark_output(m);
+        let bufs = run(b.finish());
+        let av = bufs.tensor(a).to_vec();
+        let wv = bufs.tensor(w).to_vec();
+        let mv = bufs.tensor(m);
+        for i in 0..2usize {
+            for j in 0..2usize {
+                let want: f64 = (0..3usize).map(|k| av[i * 3 + k] * wv[k * 2 + j]).sum();
+                assert_eq!(mv[i * 2 + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_padded_matches_direct_computation() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 1, 3, 3]);
+        let w = b.weight("w", &[1, 1, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        b.mark_output(c);
+        let bufs = run(b.finish());
+        let xv = bufs.tensor(x).to_vec();
+        let wv = bufs.tensor(w).to_vec();
+        let cv = bufs.tensor(c);
+        for oh in 0i64..3 {
+            for ow in 0i64..3 {
+                let mut want = 0.0;
+                for kh in 0i64..3 {
+                    for kw in 0i64..3 {
+                        let (ih, iw) = (oh + kh - 1, ow + kw - 1);
+                        if (0..3).contains(&ih) && (0..3).contains(&iw) {
+                            want += xv[(ih * 3 + iw) as usize] * wv[(kh * 3 + kw) as usize];
+                        }
+                    }
+                }
+                assert_eq!(cv[(oh * 3 + ow) as usize], want);
+            }
+        }
+    }
+
+    #[test]
+    fn avg_pool_and_gap_divide_by_window() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 1, 2, 2]);
+        let p = b.apply(
+            "avg",
+            OpKind::Pool { kind: PoolKind::Avg, window: 2, stride: 2 },
+            &[x],
+        );
+        let gp = b.gap("gap", x);
+        b.mark_output(p);
+        b.mark_output(gp);
+        let bufs = run(b.finish());
+        let xv = bufs.tensor(x).to_vec();
+        let mean = xv.iter().sum::<f64>() / 4.0;
+        assert_eq!(bufs.tensor(p)[0], mean);
+        assert_eq!(bufs.tensor(gp)[0], mean);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        // pinned small inputs: strict positivity below only holds while
+        // the row spread stays under exp's underflow range (~745)
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[3, 4]);
+        let s = b.apply("sm", OpKind::Softmax, &[x]);
+        b.mark_output(s);
+        let prog = Program::lower(b.finish());
+        let mut bufs = Buffers::seeded(&prog.graph, 7);
+        bufs.set_tensor(x, (0..12).map(|k| (k % 5) as f64 - 2.0).collect());
+        interpret(&prog, &mut bufs).unwrap();
+        let sv = bufs.tensor(s);
+        for r in 0..3 {
+            let sum: f64 = sv[r * 4..(r + 1) * 4].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "row {r} sums to {sum}");
+            assert!(sv[r * 4..(r + 1) * 4].iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn concat_then_slice_routes_correctly() {
+        let mut b = GraphBuilder::new();
+        let a = b.input("a", &[2, 2]);
+        let c = b.input("c", &[2, 3]);
+        let cat = b.concat("cat", &[a, c], 1);
+        let s = b.slice("s", cat, &[0, 1], &[2, 4], &[1, 1]);
+        b.mark_output(s);
+        let bufs = run(b.finish());
+        let av = bufs.tensor(a).to_vec();
+        let cv = bufs.tensor(c).to_vec();
+        let sv = bufs.tensor(s);
+        // cat row r = [a[r,0], a[r,1], c[r,0], c[r,1], c[r,2]]; slice cols 1..4
+        for r in 0..2usize {
+            assert_eq!(sv[r * 3], av[r * 2 + 1]);
+            assert_eq!(sv[r * 3 + 1], cv[r * 3]);
+            assert_eq!(sv[r * 3 + 2], cv[r * 3 + 1]);
+        }
+    }
+
+    #[test]
+    fn unwritten_read_faults() {
+        // hand-build a program that reads an intermediate nobody wrote
+        use crate::ir::loopnest::{Body, LoadStmt, LoopNest, StoreStmt};
+        use crate::ir::tensor::{DType, TensorKind};
+        use crate::poly::AccessMap;
+        let mut g = crate::ir::Graph::new();
+        let x = g.add_tensor("x", &[4], DType::F32, TensorKind::Input);
+        let t = g.add_tensor("t", &[4], DType::F32, TensorKind::Intermediate);
+        let y = g.add_tensor("y", &[4], DType::F32, TensorKind::Output);
+        let n = g.add_node("bad", OpKind::Identity, vec![t], y);
+        let _ = x;
+        let prog = Program {
+            graph: g,
+            nests: vec![LoopNest {
+                node: n,
+                name: "bad".into(),
+                domain: IterDomain::new(&[4]),
+                store: StoreStmt { tensor: y, map: AccessMap::identity(1) },
+                body: Body::Copy { load: LoadStmt::total(t, AccessMap::identity(1)) },
+            }],
+        };
+        let err = interpret_seeded(&prog, 1).unwrap_err();
+        assert!(matches!(err, InterpError::UnwrittenRead { .. }), "{err}");
+    }
+
+    #[test]
+    fn seeding_is_stable_across_tensor_set_changes() {
+        // the same input tensor id must get the same values even when
+        // the graph carries different intermediates around it
+        let mut b1 = GraphBuilder::new();
+        let x1 = b1.input("x", &[8]);
+        let y1 = b1.identity("y", x1);
+        b1.mark_output(y1);
+        let g1 = b1.finish();
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input("x", &[8]);
+        let t = b2.transpose("t", x2, &[0]);
+        let y2 = b2.identity("y", t);
+        b2.mark_output(y2);
+        let g2 = b2.finish();
+
+        let s1 = Buffers::seeded(&g1, 99);
+        let s2 = Buffers::seeded(&g2, 99);
+        assert_eq!(s1.tensor(x1), s2.tensor(x2));
+    }
+
+    #[test]
+    fn full_model_executes_and_fills_outputs() {
+        let g = crate::models::mlp(2, 6, 5, 3, 2);
+        let prog = Program::lower(g);
+        let bufs = interpret_seeded(&prog, 3).unwrap();
+        for out in prog.graph.outputs() {
+            assert!(bufs.fully_written(out), "output {out:?} not fully written");
+        }
+    }
+}

@@ -20,6 +20,9 @@
 //! * [`accel`] — a simulated Inferentia-class accelerator (banked
 //!   scratchpad + DMA byte accounting) used as the measurement
 //!   substrate for the paper's two experiments.
+//! * [`interp`] — the reference scalar interpreter (semantic oracle)
+//!   and the stage-by-stage differential equivalence harness that
+//!   regression-tests every pass against it.
 //! * [`models`] — ResNet-50, a Parallel-WaveNet-shaped graph, and other
 //!   workload builders.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
@@ -36,6 +39,7 @@
 pub mod accel;
 pub mod alloc;
 pub mod coordinator;
+pub mod interp;
 pub mod ir;
 pub mod models;
 pub mod passes;

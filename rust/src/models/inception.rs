@@ -21,28 +21,43 @@ fn conv_relu(
 }
 
 /// One inception block: 1×1 / 3×3 / 5×5 / pool-proj branches, channel
-/// concat.
-fn inception_block(b: &mut GraphBuilder, name: &str, x: TensorId, cin: i64) -> (TensorId, i64) {
-    let b1 = conv_relu(b, &format!("{name}_b1"), x, cin, 32, 1);
-    let b3a = conv_relu(b, &format!("{name}_b3a"), x, cin, 48, 1);
-    let b3 = conv_relu(b, &format!("{name}_b3"), b3a, 48, 64, 3);
-    let b5a = conv_relu(b, &format!("{name}_b5a"), x, cin, 16, 1);
-    let b5 = conv_relu(b, &format!("{name}_b5"), b5a, 16, 32, 5);
+/// concat. Branch widths are the canonical ones divided by `wd`.
+fn inception_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    cin: i64,
+    wd: i64,
+) -> (TensorId, i64) {
+    let b1 = conv_relu(b, &format!("{name}_b1"), x, cin, 32 / wd, 1);
+    let b3a = conv_relu(b, &format!("{name}_b3a"), x, cin, 48 / wd, 1);
+    let b3 = conv_relu(b, &format!("{name}_b3"), b3a, 48 / wd, 64 / wd, 3);
+    let b5a = conv_relu(b, &format!("{name}_b5a"), x, cin, 16 / wd, 1);
+    let b5 = conv_relu(b, &format!("{name}_b5"), b5a, 16 / wd, 32 / wd, 5);
     let pool = b.maxpool(&format!("{name}_pool"), x, 1, 1);
-    let pp = conv_relu(b, &format!("{name}_pp"), pool, cin, 32, 1);
+    let pp = conv_relu(b, &format!("{name}_pp"), pool, cin, 32 / wd, 1);
     let cat = b.concat(&format!("{name}_cat"), &[b1, b3, b5, pp], 1);
-    (cat, 32 + 64 + 32 + 32)
+    (cat, (32 + 64 + 32 + 32) / wd)
 }
 
 /// A small inception stack on 32×32 features.
 pub fn inception_stack(batch: i64, blocks: usize) -> Graph {
+    inception_stack_scaled(batch, blocks, 32, 1)
+}
+
+/// Inception stack with a `res`×`res` input and branch widths divided
+/// by `width_div` (must divide 16). Same multi-writer concat topology;
+/// tiny settings keep exhaustive execution on the reference
+/// interpreter cheap for the differential equivalence suite.
+pub fn inception_stack_scaled(batch: i64, blocks: usize, res: i64, width_div: i64) -> Graph {
+    let wd = width_div;
     let mut b = GraphBuilder::new();
-    let x = b.input("image", &[batch, 3, 32, 32]);
-    let stem = conv_relu(&mut b, "stem", x, 3, 64, 3);
+    let x = b.input("image", &[batch, 3, res, res]);
+    let stem = conv_relu(&mut b, "stem", x, 3, 64 / wd, 3);
     let mut cur = stem;
-    let mut c = 64;
+    let mut c = 64 / wd;
     for k in 0..blocks {
-        let (out, cout) = inception_block(&mut b, &format!("inc{k}"), cur, c);
+        let (out, cout) = inception_block(&mut b, &format!("inc{k}"), cur, c, wd);
         cur = out;
         c = cout;
     }

@@ -35,9 +35,18 @@ fn dw_separable(
 
 /// MobileNetV1 (width 1.0) on 224×224 input.
 pub fn mobilenet_v1(batch: i64) -> Graph {
+    mobilenet_v1_scaled(batch, 224, 1, 1000)
+}
+
+/// MobileNetV1 with a `res`×`res` input and every channel width divided
+/// by `width_div` (must divide 32). Same depthwise-separable topology
+/// as the full model; tiny settings keep exhaustive execution on the
+/// reference interpreter cheap for the differential equivalence suite.
+pub fn mobilenet_v1_scaled(batch: i64, res: i64, width_div: i64, classes: i64) -> Graph {
+    let wd = width_div;
     let mut b = GraphBuilder::new();
-    let x = b.input("image", &[batch, 3, 224, 224]);
-    let w0 = b.weight("conv0_w", &[32, 3, 3, 3]);
+    let x = b.input("image", &[batch, 3, res, res]);
+    let w0 = b.weight("conv0_w", &[32 / wd, 3, 3, 3]);
     let c0 = b.conv2d("conv0", x, w0, 2, 1);
     let bn0 = b.batchnorm("bn0", c0);
     let mut cur = b.relu("r0", bn0);
@@ -58,11 +67,11 @@ pub fn mobilenet_v1(batch: i64) -> Graph {
         (1024, 1024, 1),
     ];
     for (k, (cin, cout, stride)) in blocks.iter().enumerate() {
-        cur = dw_separable(&mut b, &format!("b{k}"), cur, *cin, *cout, *stride);
+        cur = dw_separable(&mut b, &format!("b{k}"), cur, cin / wd, cout / wd, *stride);
     }
     let gap = b.gap("gap", cur);
-    let flat = b.reshape("flatten", gap, &[batch, 1024]);
-    let fcw = b.weight("fc_w", &[1024, 1000]);
+    let flat = b.reshape("flatten", gap, &[batch, 1024 / wd]);
+    let fcw = b.weight("fc_w", &[1024 / wd, classes]);
     let logits = b.matmul("fc", flat, fcw);
     b.mark_output(logits);
     b.finish()

@@ -17,9 +17,9 @@ pub mod resnet;
 pub mod transformer;
 pub mod wavenet;
 
-pub use inception::inception_stack;
+pub use inception::{inception_stack, inception_stack_scaled};
 pub use mlp::mlp;
-pub use mobilenet::mobilenet_v1;
-pub use resnet::{resnet18, resnet50};
+pub use mobilenet::{mobilenet_v1, mobilenet_v1_scaled};
+pub use resnet::{resnet18, resnet18_scaled, resnet50, resnet50_scaled};
 pub use transformer::transformer_block;
-pub use wavenet::parallel_wavenet;
+pub use wavenet::{parallel_wavenet, parallel_wavenet_with, WaveNetConfig};

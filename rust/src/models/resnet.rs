@@ -71,33 +71,44 @@ fn basic_block(
     b.relu(&format!("{name}_out"), sum)
 }
 
-fn stem(b: &mut GraphBuilder, batch: i64) -> TensorId {
-    let x = b.input("image", &[batch, 3, 224, 224]);
-    let c1 = conv_bn(b, "conv1", x, 3, 64, 7, 2, true);
+fn stem(b: &mut GraphBuilder, batch: i64, res: i64, wd: i64) -> TensorId {
+    let x = b.input("image", &[batch, 3, res, res]);
+    let c1 = conv_bn(b, "conv1", x, 3, 64 / wd, 7, 2, true);
     b.maxpool("pool1", c1, 3, 2)
 }
 
-fn head(b: &mut GraphBuilder, x: TensorId, c: i64, batch: i64) -> TensorId {
+fn head(b: &mut GraphBuilder, x: TensorId, c: i64, batch: i64, classes: i64) -> TensorId {
     let gap = b.gap("gap", x);
     let flat = b.reshape("flatten", gap, &[batch, c]);
-    let wfc = b.weight("fc_w", &[c, 1000]);
+    let wfc = b.weight("fc_w", &[c, classes]);
     let logits = b.matmul("fc", flat, wfc);
-    let bias = b.weight("fc_b", &[1000]);
+    let bias = b.weight("fc_b", &[classes]);
     b.apply("fc_bias", crate::ir::OpKind::BiasAdd, &[logits, bias])
 }
 
 /// Full ResNet-50 v1.5 inference graph.
 pub fn resnet50(batch: i64) -> Graph {
+    resnet50_scaled(batch, 224, 1, 1000)
+}
+
+/// ResNet-50 with a `res`×`res` input and every channel width divided
+/// by `width_div` (which must divide 64). Identical topology and
+/// operator mix to the full model — tiny settings (e.g. `res = 16`,
+/// `width_div = 8`) keep exhaustive execution on the reference
+/// interpreter cheap enough for the differential equivalence suite.
+/// `res` must keep every stage's spatial extent ≥ 1 (res ≥ 16).
+pub fn resnet50_scaled(batch: i64, res: i64, width_div: i64, classes: i64) -> Graph {
+    let wd = width_div;
     let mut b = GraphBuilder::new();
-    let mut x = stem(&mut b, batch);
+    let mut x = stem(&mut b, batch, res, wd);
     // (blocks, mid, out, stride of first block)
     let stages: [(usize, i64, i64, i64); 4] = [
-        (3, 64, 256, 1),
-        (4, 128, 512, 2),
-        (6, 256, 1024, 2),
-        (3, 512, 2048, 2),
+        (3, 64 / wd, 256 / wd, 1),
+        (4, 128 / wd, 512 / wd, 2),
+        (6, 256 / wd, 1024 / wd, 2),
+        (3, 512 / wd, 2048 / wd, 2),
     ];
-    let mut cin = 64;
+    let mut cin = 64 / wd;
     for (si, (blocks, mid, cout, stride)) in stages.iter().enumerate() {
         for bi in 0..*blocks {
             let s = if bi == 0 { *stride } else { 1 };
@@ -113,18 +124,29 @@ pub fn resnet50(batch: i64) -> Graph {
             cin = *cout;
         }
     }
-    let out = head(&mut b, x, 2048, batch);
+    let out = head(&mut b, x, 2048 / wd, batch, classes);
     b.mark_output(out);
     b.finish()
 }
 
 /// ResNet-18 (basic blocks) — smaller bank-mapping workload.
 pub fn resnet18(batch: i64) -> Graph {
+    resnet18_scaled(batch, 224, 1, 1000)
+}
+
+/// ResNet-18 with configurable resolution / width (see
+/// [`resnet50_scaled`]).
+pub fn resnet18_scaled(batch: i64, res: i64, width_div: i64, classes: i64) -> Graph {
+    let wd = width_div;
     let mut b = GraphBuilder::new();
-    let mut x = stem(&mut b, batch);
-    let stages: [(usize, i64, i64); 4] =
-        [(2, 64, 1), (2, 128, 2), (2, 256, 2), (2, 512, 2)];
-    let mut cin = 64;
+    let mut x = stem(&mut b, batch, res, wd);
+    let stages: [(usize, i64, i64); 4] = [
+        (2, 64 / wd, 1),
+        (2, 128 / wd, 2),
+        (2, 256 / wd, 2),
+        (2, 512 / wd, 2),
+    ];
+    let mut cin = 64 / wd;
     for (si, (blocks, cout, stride)) in stages.iter().enumerate() {
         for bi in 0..*blocks {
             let s = if bi == 0 { *stride } else { 1 };
@@ -132,7 +154,7 @@ pub fn resnet18(batch: i64) -> Graph {
             cin = *cout;
         }
     }
-    let out = head(&mut b, x, 512, batch);
+    let out = head(&mut b, x, 512 / wd, batch, classes);
     b.mark_output(out);
     b.finish()
 }
@@ -175,6 +197,27 @@ mod tests {
         // 1 stem + 2×2×4 + 3 projections (stages 2-4) = 20
         assert_eq!(convs, 20);
         verify_program(&Program::lower(g)).unwrap();
+    }
+
+    #[test]
+    fn scaled_variants_build_and_verify() {
+        let g = resnet50_scaled(1, 16, 8, 10);
+        verify_graph(&g).unwrap();
+        // same conv count as the full model: the topology is unchanged
+        assert_eq!(
+            g.count_nodes(|n| matches!(n.kind, OpKind::Conv2d { .. })),
+            53
+        );
+        assert_eq!(g.tensor(g.outputs()[0]).shape, vec![1, 10]);
+        verify_program(&Program::lower(g)).unwrap();
+
+        let g18 = resnet18_scaled(1, 16, 8, 10);
+        verify_graph(&g18).unwrap();
+        assert_eq!(
+            g18.count_nodes(|n| matches!(n.kind, OpKind::Conv2d { .. })),
+            20
+        );
+        verify_program(&Program::lower(g18)).unwrap();
     }
 
     #[test]

@@ -501,63 +501,20 @@ mod tests {
     use crate::ir::loopnest::Program;
     use crate::ir::verify::{verify_graph, verify_program};
 
-    /// Interpret a program over i64 "element = source fingerprint"
-    /// semantics: each input/weight element is a unique i64; copies move
-    /// them; compute nests are not executed (we only compare copy
-    /// plumbing), so tests use graphs whose outputs are copy-reachable.
-    fn reference_output(prog: &Program) -> std::collections::BTreeMap<(u32, i64), i64> {
-        use std::collections::BTreeMap;
-        let g = &prog.graph;
-        let mut mem: BTreeMap<(u32, i64), i64> = BTreeMap::new();
-        // seed inputs & weights
-        for t in g.tensors() {
-            if matches!(
-                t.kind,
-                crate::ir::TensorKind::Input | crate::ir::TensorKind::Weight
-            ) {
-                for k in 0..t.numel() {
-                    mem.insert((t.id.0, k), ((t.id.0 as i64) << 32) | k);
-                }
-            }
-        }
-        for nest in &prog.nests {
-            let out = nest.store.tensor;
-            let out_dom = crate::poly::IterDomain::new(&g.tensor(out).shape);
-            match &nest.body {
-                Body::Copy { load } => {
-                    for p in nest.domain.points() {
-                        let (src_t, src_idx) = load.at(&p).expect("uncovered point");
-                        let v = match src_t {
-                            Some(s) => {
-                                let s_dom =
-                                    crate::poly::IterDomain::new(&g.tensor(s).shape);
-                                *mem.get(&(s.0, s_dom.linearize(&src_idx)))
-                                    .expect("read of unwritten element")
-                            }
-                            None => 0,
-                        };
-                        let oidx = nest.store.map.apply(&p);
-                        mem.insert((out.0, out_dom.linearize(&oidx)), v);
-                    }
-                }
-                Body::Compute { .. } => { /* not interpreted */ }
-            }
-        }
-        // keep only graph outputs
-        let outs: std::collections::HashSet<u32> =
-            g.outputs().iter().map(|t| t.0).collect();
-        mem.into_iter().filter(|((t, _), _)| outs.contains(t)).collect()
-    }
-
+    /// DME must preserve the program as a function of its inputs. The
+    /// shared reference interpreter ([`crate::interp`]) is the oracle:
+    /// unlike the copy-only fingerprint walker these tests used to
+    /// carry, it executes `Body::Compute` nests too, so graphs whose
+    /// outputs pass through matmuls/convs are fully checked — no
+    /// "not interpreted" blind spot.
     fn check_dme_preserves(graph: crate::ir::Graph) -> (DmeStats, Program) {
         verify_graph(&graph).unwrap();
         let mut prog = Program::lower(graph);
         verify_program(&prog).unwrap();
-        let before = reference_output(&prog);
+        let before = prog.clone();
         let stats = run_dme(&mut prog);
         verify_program(&prog).unwrap();
-        let after = reference_output(&prog);
-        assert_eq!(before, after, "DME changed program semantics");
+        crate::interp::diff::assert_equivalent(&before, &prog, 0xD31);
         (stats, prog)
     }
 
@@ -653,17 +610,15 @@ mod tests {
     #[test]
     fn rewrites_compute_consumer_loads() {
         // transpose feeding a matmul: the transpose dies, the matmul's
-        // load map absorbs the permutation.
+        // load map absorbs the permutation. The oracle interprets the
+        // matmul itself (the old fingerprint walker could not).
         let mut b = GraphBuilder::new();
         let x = b.input("x", &[8, 4]);
         let t = b.transpose("t", x, &[1, 0]); // [4, 8]
         let w = b.weight("w", &[8, 6]);
         let m = b.matmul("mm", t, w);
         b.mark_output(m);
-        let g = b.finish();
-        let mut prog = Program::lower(g);
-        let stats = run_dme(&mut prog);
-        verify_program(&prog).unwrap();
+        let (stats, prog) = check_dme_preserves(b.finish());
         assert_eq!(stats.tensors_eliminated, 1);
         assert_eq!(prog.load_store_pairs(), 0);
         // matmul now reads x with transposed access

@@ -92,6 +92,20 @@ pub struct PassReport {
 impl PassManager {
     /// Run the full pipeline on a graph.
     pub fn run(&self, graph: crate::ir::Graph) -> Result<PassReport, VerifyError> {
+        self.run_observed(graph, |_, _| {})
+    }
+
+    /// Run the pipeline, calling `observe(stage, program)` with the
+    /// program state after each executed stage: `"lower"` (always),
+    /// `"dme"`, `"bank"` (after bank mapping **and** copy splicing,
+    /// so the observed program is executable) and `"plan"`. The
+    /// differential equivalence harness ([`crate::interp::diff`])
+    /// snapshots these to prove every stage preserves semantics.
+    pub fn run_observed(
+        &self,
+        graph: crate::ir::Graph,
+        mut observe: impl FnMut(&str, &Program),
+    ) -> Result<PassReport, VerifyError> {
         if self.verify {
             verify_graph(&graph)?;
         }
@@ -99,6 +113,7 @@ impl PassManager {
         if self.verify {
             verify_program(&program)?;
         }
+        observe("lower", &program);
 
         let mut dme_stats = None;
         let t0 = Instant::now();
@@ -107,6 +122,7 @@ impl PassManager {
             if self.verify {
                 verify_program(&program)?;
             }
+            observe("dme", &program);
         }
         let dme_time = t0.elapsed();
 
@@ -134,6 +150,7 @@ impl PassManager {
             if self.verify {
                 verify_program(&p2)?;
             }
+            observe("bank", &p2);
             p2
         } else {
             program
@@ -144,11 +161,13 @@ impl PassManager {
         let t2 = Instant::now();
         let mut plan = None;
         let program = if let Some(stage) = &self.alloc {
-            let res = plan_memory(program, bank.as_ref(), &stage.accel, &stage.opts);
+            let res = plan_memory(program, bank.as_ref(), &stage.accel, &stage.opts)
+                .map_err(|e| VerifyError(format!("alloc: {e}")))?;
             if self.verify {
                 verify_graph(&res.program.graph)?;
                 verify_program(&res.program)?;
             }
+            observe("plan", &res.program);
             plan = Some(res.plan);
             res.program
         } else {
@@ -303,6 +322,34 @@ mod tests {
     fn alloc_stage_off_by_default() {
         let report = PassManager::default().run(sample()).unwrap();
         assert!(report.plan.is_none());
+    }
+
+    #[test]
+    fn observer_sees_stages_in_order() {
+        use crate::accel::config::AccelConfig;
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(AccelConfig::inferentia_like())),
+            ..Default::default()
+        };
+        let mut stages: Vec<String> = Vec::new();
+        pm.run_observed(sample(), |s, p| {
+            assert!(!p.nests.is_empty());
+            stages.push(s.to_string());
+        })
+        .unwrap();
+        assert_eq!(stages, vec!["lower", "dme", "bank", "plan"]);
+    }
+
+    #[test]
+    fn observer_skips_disabled_stages() {
+        let pm = PassManager {
+            enable_dme: false,
+            bank_mode: BankMode::None,
+            ..Default::default()
+        };
+        let mut stages: Vec<String> = Vec::new();
+        pm.run_observed(sample(), |s, _| stages.push(s.to_string())).unwrap();
+        assert_eq!(stages, vec!["lower"]);
     }
 
     #[test]

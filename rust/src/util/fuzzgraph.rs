@@ -1,0 +1,333 @@
+//! Seeded random operator-DAG generator for differential fuzzing.
+//!
+//! Builds small, shape-checked graphs mixing the memory-bound ops DME
+//! attacks (transpose / reshape / tile / repeat / slice / pad / concat
+//! / split / identity) with compute ops (matmul, padded conv2d,
+//! pooling, softmax, elementwise) so random chains hit DME fixed-point
+//! interactions, piecewise-load rewrites and `oob_zero` legality
+//! checks the hand-written model builders never exercise.
+//!
+//! Every generated graph:
+//! * passes [`crate::ir::verify::verify_graph`] by construction (ops
+//!   are only emitted when their preconditions hold — the generator
+//!   retries rather than building invalid nodes);
+//! * is tiny (tensor element counts capped by [`FuzzOpts::max_elems`])
+//!   so exhaustive execution on the reference interpreter stays cheap;
+//! * is a pure function of the seed — a failing seed printed by the
+//!   differential suite reproduces the exact graph (see README.md).
+
+use crate::ir::builder::GraphBuilder;
+use crate::ir::op::{OpKind, PoolKind};
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::ir::Graph;
+use crate::util::rng::SplitMix64;
+
+/// Generator limits.
+#[derive(Clone, Copy, Debug)]
+pub struct FuzzOpts {
+    /// Target operator count (the generator may fall slightly short if
+    /// repeated proposals fail their preconditions).
+    pub ops: usize,
+    /// Cap on any tensor's element count.
+    pub max_elems: i64,
+}
+
+impl Default for FuzzOpts {
+    fn default() -> Self {
+        FuzzOpts { ops: 12, max_elems: 192 }
+    }
+}
+
+/// Generate a graph from a seed with default limits.
+pub fn fuzz_graph(seed: u64) -> Graph {
+    fuzz_graph_with(seed, &FuzzOpts::default())
+}
+
+/// Generate a graph from a seed.
+pub fn fuzz_graph_with(seed: u64, opts: &FuzzOpts) -> Graph {
+    let mut r = SplitMix64::new(seed);
+    let mut b = GraphBuilder::new();
+    let mut pool: Vec<TensorId> = Vec::new();
+    let n_inputs = 1 + r.below(2) as usize;
+    for i in 0..n_inputs {
+        let shape = random_shape(&mut r, opts.max_elems);
+        pool.push(b.input(&format!("in{i}"), &shape));
+    }
+    let mut made = 0usize;
+    let mut attempts = 0usize;
+    while made < opts.ops && attempts < opts.ops * 16 {
+        attempts += 1;
+        if let Some(new) = random_op(&mut b, &mut r, &pool, made, opts) {
+            pool.extend(new);
+            made += 1;
+        }
+    }
+    // Unconsumed intermediates become graph outputs: verify_graph
+    // forbids dead intermediates, DME must preserve outputs, and the
+    // oracle compares exactly these tensors.
+    let sinks: Vec<TensorId> = pool
+        .iter()
+        .copied()
+        .filter(|&t| {
+            b.graph().consumers(t).is_empty()
+                && b.graph().tensor(t).kind == TensorKind::Intermediate
+        })
+        .collect();
+    for t in sinks {
+        b.mark_output(t);
+    }
+    if b.graph().outputs().is_empty() {
+        let y = b.identity("out", pool[0]);
+        b.mark_output(y);
+    }
+    b.finish()
+}
+
+fn random_shape(r: &mut SplitMix64, max_elems: i64) -> Vec<i64> {
+    let rank = 1 + r.below(4) as usize; // 1..=4
+    loop {
+        let hi = if rank >= 4 { 4 } else { 6 };
+        let dims: Vec<i64> = (0..rank).map(|_| r.range_i64(1, hi)).collect();
+        if dims.iter().product::<i64>() <= max_elems {
+            return dims;
+        }
+    }
+}
+
+/// Random factorization of `numel` into 1–3 dims.
+fn random_factorization(r: &mut SplitMix64, numel: i64) -> Vec<i64> {
+    let mut dims = Vec::new();
+    let mut rest = numel;
+    while rest > 1 && dims.len() < 2 {
+        // random divisor of `rest`
+        let mut d = r.range_i64(1, rest + 1);
+        while rest % d != 0 {
+            d -= 1;
+        }
+        dims.push(d);
+        rest /= d;
+    }
+    dims.push(rest);
+    dims
+}
+
+/// Propose one operator over the pool. Returns the produced tensors,
+/// or `None` when the proposal's preconditions fail (caller retries).
+fn random_op(
+    b: &mut GraphBuilder,
+    r: &mut SplitMix64,
+    pool: &[TensorId],
+    k: usize,
+    opts: &FuzzOpts,
+) -> Option<Vec<TensorId>> {
+    let cur = *r.choose(pool);
+    let shape = b.graph().tensor(cur).shape.clone();
+    let nd = shape.len();
+    let numel: i64 = shape.iter().product();
+    match r.below(14) {
+        0 => {
+            let mut perm: Vec<usize> = (0..nd).collect();
+            r.shuffle(&mut perm);
+            Some(vec![b.transpose(&format!("tr{k}"), cur, &perm)])
+        }
+        1 => {
+            let new_shape = random_factorization(r, numel);
+            Some(vec![b.reshape(&format!("rs{k}"), cur, &new_shape)])
+        }
+        2 => {
+            if numel * 2 > opts.max_elems {
+                return None;
+            }
+            let axis = r.below(nd as u64) as usize;
+            let mut reps = vec![1i64; nd];
+            reps[axis] = 2;
+            Some(vec![b.tile(&format!("tile{k}"), cur, &reps)])
+        }
+        3 => {
+            if numel * 2 > opts.max_elems {
+                return None;
+            }
+            let axis = r.below(nd as u64) as usize;
+            Some(vec![b.repeat(&format!("rep{k}"), cur, axis, 2)])
+        }
+        4 => {
+            let begin: Vec<i64> = shape.iter().map(|&e| r.range_i64(0, e)).collect();
+            let end: Vec<i64> = shape
+                .iter()
+                .zip(&begin)
+                .map(|(&e, &s)| r.range_i64(s + 1, e + 1))
+                .collect();
+            let stride: Vec<i64> = (0..nd).map(|_| r.range_i64(1, 3)).collect();
+            Some(vec![b.slice(&format!("sl{k}"), cur, &begin, &end, &stride)])
+        }
+        5 => {
+            let lo: Vec<i64> = (0..nd).map(|_| r.range_i64(0, 2)).collect();
+            let hi: Vec<i64> = (0..nd).map(|_| r.range_i64(0, 2)).collect();
+            let new_numel: i64 = shape
+                .iter()
+                .zip(lo.iter().zip(&hi))
+                .map(|(&e, (&l, &h))| e + l + h)
+                .product();
+            if new_numel > opts.max_elems {
+                return None;
+            }
+            Some(vec![b.pad(&format!("pd{k}"), cur, &lo, &hi)])
+        }
+        6 => {
+            // concat with a rank/shape-compatible partner (or with
+            // itself — reading the same tensor twice is legal SSA)
+            let axis = r.below(nd as u64) as usize;
+            let partner = pool
+                .iter()
+                .copied()
+                .find(|&t| {
+                    let s = &b.graph().tensor(t).shape;
+                    s.len() == nd
+                        && s.iter()
+                            .zip(&shape)
+                            .enumerate()
+                            .all(|(d, (a, c))| d == axis || a == c)
+                })
+                .unwrap_or(cur);
+            let total = numel + b.graph().tensor(partner).numel();
+            if total > opts.max_elems {
+                return None;
+            }
+            Some(vec![b.concat(&format!("cat{k}"), &[cur, partner], axis)])
+        }
+        7 => {
+            let axis = (0..nd).find(|&d| shape[d] % 2 == 0 && shape[d] >= 2)?;
+            Some(b.split(&format!("sp{k}"), cur, axis, 2))
+        }
+        8 => Some(vec![b.identity(&format!("id{k}"), cur)]),
+        9 => {
+            let out = match r.below(4) {
+                0 => b.relu(&format!("relu{k}"), cur),
+                1 => b.tanh(&format!("tanh{k}"), cur),
+                2 => b.sigmoid(&format!("sig{k}"), cur),
+                _ => {
+                    use crate::ir::op::UnaryFn;
+                    b.apply(&format!("neg{k}"), OpKind::Unary(UnaryFn::Neg), &[cur])
+                }
+            };
+            Some(vec![out])
+        }
+        10 => {
+            use crate::ir::op::BinaryFn;
+            let partner = pool
+                .iter()
+                .copied()
+                .find(|&t| t != cur && b.graph().tensor(t).shape == shape)
+                .unwrap_or(cur);
+            let f = *r.choose(&[BinaryFn::Add, BinaryFn::Sub, BinaryFn::Mul, BinaryFn::Max]);
+            Some(vec![b.apply(&format!("bin{k}"), OpKind::Binary(f), &[cur, partner])])
+        }
+        11 => {
+            if nd != 2 {
+                return None;
+            }
+            let m = r.range_i64(1, 5);
+            // both the result and the created weight respect the cap
+            if shape[0] * m > opts.max_elems || shape[1] * m > opts.max_elems {
+                return None;
+            }
+            let w = b.weight(&format!("w{k}"), &[shape[1], m]);
+            Some(vec![b.matmul(&format!("mm{k}"), cur, w)])
+        }
+        12 => {
+            if *shape.last().unwrap() > 8 {
+                return None;
+            }
+            Some(vec![b.apply(&format!("sm{k}"), OpKind::Softmax, &[cur])])
+        }
+        _ => {
+            // padded conv2d / pooling on rank-4 tensors: exercises the
+            // oob_zero legality path through DME
+            if nd != 4 {
+                return None;
+            }
+            let (c, h, w) = (shape[1], shape[2], shape[3]);
+            if r.chance(0.5) {
+                let co = r.range_i64(1, 5);
+                let out_numel = shape[0] * co * h * w;
+                // bound interpretation cost (domain = out × cin × 3 × 3)
+                // and keep the created weight under the element cap too
+                if out_numel > opts.max_elems
+                    || co * c * 9 > opts.max_elems
+                    || out_numel * c * 9 > 40_000
+                {
+                    return None;
+                }
+                let wt = b.weight(&format!("cw{k}"), &[co, c, 3, 3]);
+                Some(vec![b.conv2d(&format!("cv{k}"), cur, wt, 1, 1)])
+            } else {
+                if h < 2 || w < 2 {
+                    return None;
+                }
+                let kind = *r.choose(&[PoolKind::Max, PoolKind::Avg]);
+                Some(vec![b.apply(
+                    &format!("pool{k}"),
+                    OpKind::Pool { kind, window: 2, stride: 1 },
+                    &[cur],
+                )])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::{verify_graph, verify_program};
+    use crate::ir::Program;
+
+    #[test]
+    fn generated_graphs_are_valid() {
+        for seed in 0..60u64 {
+            let g = fuzz_graph(seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
+            verify_graph(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            verify_program(&Program::lower(g))
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = fuzz_graph(42);
+        let c = fuzz_graph(42);
+        assert_eq!(a.nodes().len(), c.nodes().len());
+        assert_eq!(a.tensors().count(), c.tensors().count());
+        for (na, nc) in a.nodes().iter().zip(c.nodes()) {
+            assert_eq!(na.name, nc.name);
+            assert_eq!(na.inputs, nc.inputs);
+        }
+    }
+
+    #[test]
+    fn respects_element_cap() {
+        let opts = FuzzOpts { ops: 16, max_elems: 64 };
+        for seed in 0..20u64 {
+            let g = fuzz_graph_with(seed, &opts);
+            for t in g.tensors() {
+                assert!(t.numel() <= 64, "seed {seed}: {} elems", t.numel());
+            }
+        }
+    }
+
+    #[test]
+    fn mixes_memory_and_compute_ops() {
+        // across a seed batch, both op families must appear
+        let (mut mem, mut comp) = (0usize, 0usize);
+        for seed in 0..30u64 {
+            let g = fuzz_graph(seed);
+            for n in g.nodes() {
+                if n.kind.is_memory_bound() {
+                    mem += 1;
+                } else {
+                    comp += 1;
+                }
+            }
+        }
+        assert!(mem > 0 && comp > 0, "mem={mem} comp={comp}");
+    }
+}

@@ -15,10 +15,13 @@
 //! * [`cli`] — a small declarative argument parser for the `polymem`
 //!   binary and examples.
 //! * [`logging`] — leveled stderr logging.
+//! * [`fuzzgraph`] — seeded random operator-DAG generator for the
+//!   differential equivalence fuzzer.
 
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod fuzzgraph;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -1,64 +1,22 @@
 //! Integration: DME across models — semantics preservation checked by
-//! an element-fingerprint interpreter over the copy plumbing, and the
-//! paper's E1 invariants on the WaveNet workload.
+//! the shared reference interpreter (`polymem::interp`, which executes
+//! compute nests too, unlike the copy-only fingerprint walker this
+//! file used to carry), and the paper's E1 invariants on the WaveNet
+//! workload.
 
-use polymem::ir::loopnest::{Body, Program};
+use polymem::interp::diff::assert_equivalent;
+use polymem::ir::loopnest::Program;
 use polymem::ir::verify::verify_program;
 use polymem::ir::{Graph, TensorKind};
 use polymem::passes::dme::run_dme;
-use std::collections::BTreeMap;
-
-/// Interpret all copy nests: every input/weight element gets a unique
-/// fingerprint; outputs collect whatever the copy plumbing routes to
-/// them. Compute nests are opaque (not interpreted), so only graphs
-/// whose outputs are copy-reachable give full coverage — but partial
-/// coverage still validates every rewritten load on the way.
-fn fingerprint_outputs(prog: &Program) -> BTreeMap<(u32, i64), i64> {
-    let g = &prog.graph;
-    let mut mem: BTreeMap<(u32, i64), i64> = BTreeMap::new();
-    for t in g.tensors() {
-        if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
-            for k in 0..t.numel() {
-                mem.insert((t.id.0, k), ((t.id.0 as i64) << 40) | k);
-            }
-        }
-    }
-    for nest in &prog.nests {
-        let out = nest.store.tensor;
-        let out_dom = polymem::poly::IterDomain::new(&g.tensor(out).shape);
-        if let Body::Copy { load } = &nest.body {
-            for p in nest.domain.points() {
-                let (src_t, src_idx) = load.at(&p).expect("uncovered point");
-                let v = match src_t {
-                    Some(s) => {
-                        let s_dom = polymem::poly::IterDomain::new(&g.tensor(s).shape);
-                        let key = (s.0, s_dom.linearize(&src_idx));
-                        // compute outputs are never interpreted: give each
-                        // element a deterministic fingerprint instead, so
-                        // reads through rewritten maps stay comparable
-                        mem.get(&key)
-                            .copied()
-                            .unwrap_or(((key.0 as i64) << 40) | key.1 | (1 << 62))
-                    }
-                    None => 0,
-                };
-                mem.insert((out.0, out_dom.linearize(&nest.store.map.apply(&p))), v);
-            }
-        }
-    }
-    let outs: std::collections::HashSet<u32> = g.outputs().iter().map(|t| t.0).collect();
-    mem.into_iter().filter(|((t, _), _)| outs.contains(t)).collect()
-}
 
 fn assert_dme_preserves(graph: Graph) -> polymem::passes::dme::DmeStats {
-    let before_prog = Program::lower(graph.clone());
-    verify_program(&before_prog).unwrap();
-    let before = fingerprint_outputs(&before_prog);
     let mut prog = Program::lower(graph);
+    verify_program(&prog).unwrap();
+    let before = prog.clone();
     let stats = run_dme(&mut prog);
     verify_program(&prog).unwrap();
-    let after = fingerprint_outputs(&prog);
-    assert_eq!(before, after, "DME changed copy-plumbing semantics");
+    assert_equivalent(&before, &prog, 0xA11);
     stats
 }
 

@@ -2,13 +2,12 @@
 //! semantics on randomly generated memory-op graphs, and global bank
 //! mapping must never lose to the local baseline.
 
-use polymem::ir::loopnest::{Body, Program};
+use polymem::ir::loopnest::Program;
 use polymem::ir::verify::{verify_graph, verify_program};
 use polymem::ir::{Graph, GraphBuilder, TensorKind};
 use polymem::passes::dme::run_dme;
 use polymem::passes::manager::{BankMode, PassManager};
 use polymem::util::prop::{Gen, Prop};
-use std::collections::BTreeMap;
 
 /// Random chain/DAG of memory-bound ops over small tensors.
 fn random_memory_graph(g: &mut Gen) -> Graph {
@@ -89,50 +88,18 @@ fn random_memory_graph(g: &mut Gen) -> Graph {
     b.finish()
 }
 
-/// Fingerprint interpreter over copy nests (compute-free graphs here).
-fn fingerprint(prog: &Program) -> BTreeMap<(u32, i64), i64> {
-    let g = &prog.graph;
-    let mut mem: BTreeMap<(u32, i64), i64> = BTreeMap::new();
-    for t in g.tensors() {
-        if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
-            for k in 0..t.numel() {
-                mem.insert((t.id.0, k), ((t.id.0 as i64) << 40) | k);
-            }
-        }
-    }
-    for nest in &prog.nests {
-        let out = nest.store.tensor;
-        let out_dom = polymem::poly::IterDomain::new(&g.tensor(out).shape);
-        let Body::Copy { load } = &nest.body else { continue };
-        for p in nest.domain.points() {
-            let (src, idx) = load.at(&p).expect("uncovered");
-            let v = match src {
-                Some(s) => {
-                    let sd = polymem::poly::IterDomain::new(&g.tensor(s).shape);
-                    *mem.get(&(s.0, sd.linearize(&idx))).expect("unwritten read")
-                }
-                None => 0,
-            };
-            mem.insert((out.0, out_dom.linearize(&nest.store.map.apply(&p))), v);
-        }
-    }
-    let outs: std::collections::HashSet<u32> = g.outputs().iter().map(|t| t.0).collect();
-    mem.into_iter().filter(|((t, _), _)| outs.contains(t)).collect()
-}
-
 #[test]
 fn dme_preserves_random_memory_graphs() {
+    use polymem::interp::diff::assert_equivalent;
     Prop::new("DME preserves semantics on random memory graphs", 60).check(|g| {
         let graph = random_memory_graph(g);
         verify_graph(&graph).unwrap();
-        let before_prog = Program::lower(graph.clone());
-        verify_program(&before_prog).unwrap();
-        let before = fingerprint(&before_prog);
         let mut prog = Program::lower(graph);
+        verify_program(&prog).unwrap();
+        let before = prog.clone();
         let _stats = run_dme(&mut prog);
         verify_program(&prog).expect("DME broke program invariants");
-        let after = fingerprint(&prog);
-        assert_eq!(before, after, "semantics changed");
+        assert_equivalent(&before, &prog, 0x5EED);
     });
 }
 

@@ -173,6 +173,108 @@ fn reverse_rejects_noninjective() {
 }
 
 #[test]
+fn reverse_roundtrip_on_random_injective_affine_maps() {
+    // Beyond square unimodular maps: stack a unimodular core with
+    // redundant rows (integer combinations of the core's rows) and
+    // shuffle the row order. Invariant factors stay 1, so an exact
+    // affine reverse must exist and `f' ∘ f = id` must hold on the
+    // whole domain.
+    Prop::new("f'∘f = id on injective affine maps (redundant rows)", 100).check(|g| {
+        let n = g.usize_in(1, 4);
+        let extra = g.usize_in(0, 3);
+        let u = random_unimodular(g, n);
+        let m = n + extra;
+        let mut rows: Vec<Vec<i64>> =
+            (0..n).map(|i| (0..n).map(|j| u[(i, j)]).collect()).collect();
+        for _ in 0..extra {
+            let mut combo = vec![0i64; n];
+            for i in 0..n {
+                let c = g.i64_in(-2, 3);
+                for (j, cell) in combo.iter_mut().enumerate() {
+                    *cell += c * u[(i, j)];
+                }
+            }
+            rows.push(combo);
+        }
+        for i in (1..rows.len()).rev() {
+            let j = g.usize_in(0, i + 1);
+            rows.swap(i, j);
+        }
+        let mut c = IMat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                c[(i, j)] = rows[i][j];
+            }
+        }
+        let b: Vec<i64> = (0..m).map(|_| g.i64_in(-10, 11)).collect();
+        let f = AccessMap::affine(&c, &b);
+        let rev = f
+            .reverse()
+            .expect("unimodular-extended injective map must have an affine reverse");
+        let dom = IterDomain::new(&g.shape(n, 6));
+        for p in dom.sample(24, g.u64()) {
+            assert_eq!(rev.apply(&f.apply(&p)), p, "roundtrip failed for {f:?} at {p:?}");
+        }
+    });
+}
+
+#[test]
+fn piecewise_pieces_stay_disjoint_and_covering_under_composition() {
+    use polymem::poly::piecewise::{Guard, Piece, PiecewiseMap};
+    // A concat-style 1-D partition of [0, L) into k segments, composed
+    // with an affine inner map, must remain a partition of the inner
+    // domain (exactly-one piece per point) and agree pointwise with
+    // apply-then-apply.
+    Prop::new("piecewise ∘ affine stays a partition", 120).check(|g| {
+        let k = g.usize_in(2, 5);
+        let lens: Vec<i64> = (0..k).map(|_| g.i64_in(1, 5)).collect();
+        let total: i64 = lens.iter().sum();
+        let mut pieces = Vec::new();
+        let mut off = 0i64;
+        for len in &lens {
+            pieces.push(Piece {
+                guards: vec![Guard { dim: 0, lo: off, hi: off + len }],
+                map: AccessMap::new(1, vec![Expr::dim(0).add(Expr::cst(-off))]),
+            });
+            off += len;
+        }
+        let m = PiecewiseMap::new(1, pieces);
+        let full = IterDomain::new(&[total]);
+        assert!(m.is_total_on(&full), "generator built a non-partition");
+
+        // inner map: either a shift i ↦ i + c (guards translate through
+        // unit coefficients) or a dim-remap from a 2-D space
+        let (inner, inner_dom) = if g.bool() {
+            let c = g.i64_in(0, total);
+            (
+                AccessMap::new(1, vec![Expr::dim(0).add(Expr::cst(c))]),
+                IterDomain::new(&[total - c.min(total - 1)]),
+            )
+        } else {
+            let other = g.i64_in(1, 5);
+            (
+                AccessMap::new(2, vec![Expr::dim(1)]),
+                IterDomain::new(&[other, total]),
+            )
+        };
+        let composed = m
+            .compose_inner(&inner)
+            .expect("unit-coefficient inner maps must compose");
+        assert!(
+            composed.is_total_on(&inner_dom),
+            "composition broke the partition: {composed:?} on {inner_dom:?}"
+        );
+        for p in inner_dom.sample(24, g.u64()) {
+            assert_eq!(
+                composed.apply(&p),
+                m.apply(&inner.apply(&p)),
+                "composition law broken at {p:?}"
+            );
+        }
+    });
+}
+
+#[test]
 fn linearize_delinearize_roundtrip() {
     Prop::new("linearize ∘ delinearize = id", 120).check(|g| {
         let dims = g.usize_in(1, 4);
