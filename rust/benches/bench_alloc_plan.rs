@@ -16,7 +16,8 @@ use polymem::alloc::MemoryPlan;
 use polymem::ir::Graph;
 use polymem::passes::manager::{AllocStage, PassManager};
 use polymem::report;
-use polymem::util::bench::{black_box, Bench, Suite};
+use polymem::util::bench::{black_box, write_json_record, Bench, Suite};
+use polymem::util::json::Json;
 
 fn models() -> Vec<(&'static str, Graph)> {
     vec![
@@ -47,14 +48,13 @@ fn main() {
     let cfg = AccelConfig::inferentia_like();
 
     println!("\nE3 — planned vs dynamic scratchpad residency\n");
+    let mut records: Vec<Json> = Vec::new();
     for (name, g) in models() {
         let (dynamic, planned, plan) = run_pair(g, &cfg);
         println!("{}", report::e3_table(name, &dynamic, &planned, &plan));
-        println!(
-            "{}",
-            report::planned_vs_dynamic_json(name, &dynamic, &planned, &plan)
-                .to_string_compact()
-        );
+        let record = report::planned_vs_dynamic_json(name, &dynamic, &planned, &plan);
+        println!("{}", record.to_string_compact());
+        records.push(record);
         println!();
         assert!(
             planned.offchip_total() <= dynamic.offchip_total(),
@@ -67,6 +67,7 @@ fn main() {
             "{name}: plan exceeds configured SRAM"
         );
     }
+    write_json_record("BENCH_plan.json", &Json::Arr(records));
 
     // constrained-capacity series: how both modes degrade when the
     // scratchpad shrinks (no ordering assertion here — the planner

@@ -1,0 +1,145 @@
+//! Bench E4: tiled double-buffer pipeline vs untiled planning.
+//!
+//! The acceptance scenario of `tile/`: a chip whose scratchpad is
+//! smaller than ResNet-50's largest intermediate (2 MiB against
+//! conv1's 3.2 MB feature map). The untiled planner must stream every
+//! oversized intermediate through DRAM; the tiled pipeline stages them
+//! through double-buffered regions and must report **strictly fewer
+//! off-chip bytes**, plus an honest pipelined latency instead of the
+//! per-nest `max(compute, dma)` estimate.
+//!
+//! Emits one machine-readable record per scenario to
+//! `$BENCH_JSON_DIR/BENCH_tile.json` (ci.sh collects it).
+//!
+//! Run: `cargo bench --bench bench_tile`
+
+use polymem::accel::{simulate_pipelined, simulate_planned, AccelConfig, SimReport};
+use polymem::ir::Graph;
+use polymem::passes::manager::{AllocStage, PassManager, TileStage};
+use polymem::report;
+use polymem::util::bench::{black_box, write_json_record, Bench, Suite};
+use polymem::util::json::Json;
+
+fn cramped(shrink: i64) -> AccelConfig {
+    let mut cfg = AccelConfig::inferentia_like();
+    cfg.bank_bytes /= shrink;
+    cfg.name = format!("inferentia-like/{shrink}");
+    cfg
+}
+
+struct Row {
+    untiled: SimReport,
+    tiled: SimReport,
+    tile_stats: polymem::tile::TileStats,
+    plan_stats: polymem::alloc::PlanStats,
+}
+
+fn run_pair(g: Graph, cfg: &AccelConfig) -> Row {
+    let untiled_pm = PassManager {
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        ..Default::default()
+    };
+    let urep = untiled_pm.run(g.clone()).expect("untiled pipeline");
+    let untiled = simulate_planned(
+        &urep.program,
+        urep.plan.as_ref().expect("plan"),
+        cfg,
+        None,
+    )
+    .expect("untiled plan verifies");
+
+    let tiled_pm = PassManager {
+        tile: Some(TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        ..Default::default()
+    };
+    let trep = tiled_pm.run(g).expect("tiled pipeline");
+    let plan = trep.plan.as_ref().expect("plan");
+    let tiled = simulate_pipelined(&trep.program, plan, cfg, None)
+        .expect("tiled plan verifies");
+    Row {
+        untiled,
+        tiled,
+        tile_stats: trep.tile.expect("tile stage ran"),
+        plan_stats: plan.stats,
+    }
+}
+
+fn main() {
+    println!("\nE4 — tiled double-buffer pipeline vs untiled planning (ResNet-50)\n");
+    let mut records: Vec<Json> = Vec::new();
+    let mut table = report::Table::new(&[
+        "scratchpad",
+        "untiled off-chip",
+        "tiled off-chip",
+        "groups",
+        "staged",
+        "untiled ms",
+        "tiled ms",
+    ]);
+    for shrink in [4i64, 8] {
+        let cfg = cramped(shrink);
+        let row = run_pair(polymem::models::resnet50(1), &cfg);
+        assert!(
+            row.tiled.offchip_total() < row.untiled.offchip_total(),
+            "{}: tiled off-chip {} not strictly below untiled {}",
+            cfg.name,
+            row.tiled.offchip_total(),
+            row.untiled.offchip_total()
+        );
+        assert!(row.tile_stats.fused_chains > 0, "no fused chains");
+        assert!(row.plan_stats.tile_staged > 0, "no staged intermediates");
+        table.row(&[
+            report::mb(cfg.scratchpad_bytes()),
+            report::mb(row.untiled.offchip_total()),
+            report::mb(row.tiled.offchip_total()),
+            row.tile_stats.groups.to_string(),
+            row.plan_stats.tile_staged.to_string(),
+            format!("{:.3}", row.untiled.seconds * 1e3),
+            format!("{:.3}", row.tiled.seconds * 1e3),
+        ]);
+        records.push(Json::obj(vec![
+            ("model", Json::Str("resnet50".into())),
+            ("accel", cfg.to_json()),
+            ("untiled", report::sim_to_json(&row.untiled)),
+            ("tiled", report::sim_to_json(&row.tiled)),
+            ("tile_stats", row.tile_stats.to_json()),
+            (
+                "offchip_reduction_pct",
+                Json::Num(report::pct_reduction(
+                    row.untiled.offchip_total(),
+                    row.tiled.offchip_total(),
+                )),
+            ),
+        ]));
+    }
+    println!("{}", table.render());
+    write_json_record("BENCH_tile.json", &Json::Arr(records));
+
+    // ---- timing ----
+    let mut suite = Suite::new("E4 timing");
+    let cfg = cramped(4);
+    let g = polymem::models::resnet50(1);
+    suite.add(Bench::new("tile+plan(resnet50)").samples(3).run(|| {
+        let pm = PassManager {
+            tile: Some(TileStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            verify: false,
+            ..Default::default()
+        };
+        black_box(pm.run(g.clone()).unwrap())
+    }));
+    let pm = PassManager {
+        tile: Some(TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        ..Default::default()
+    };
+    let rep = pm.run(polymem::models::resnet50(1)).unwrap();
+    let plan = rep.plan.unwrap();
+    suite.add(
+        Bench::new("simulate_pipelined(resnet50)")
+            .samples(5)
+            .run(|| black_box(simulate_pipelined(&rep.program, &plan, &cfg, None).unwrap())),
+    );
+    suite.finish();
+}

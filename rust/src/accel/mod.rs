@@ -27,4 +27,4 @@ pub mod trace;
 
 pub use config::AccelConfig;
 pub use dma::{TrafficClass, TrafficCounters};
-pub use sim::{simulate, simulate_planned, SimReport};
+pub use sim::{simulate, simulate_pipelined, simulate_planned, SimReport};

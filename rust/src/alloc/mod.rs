@@ -127,6 +127,8 @@ pub struct PlanStats {
     pub window_splits: usize,
     /// Tensors demoted to DRAM streaming.
     pub streamed: usize,
+    /// Tile-staged tensors (double-buffered [`Home::Staged`] regions).
+    pub tile_staged: usize,
     /// Windows placed outside their preferred bank group.
     pub cross_group: usize,
     /// Per-bank offset high-water marks.
@@ -154,12 +156,9 @@ impl MemoryPlan {
     }
 
     /// The scratch region `t` occupies at `pos` (None when absent or
-    /// DRAM-streamed).
+    /// DRAM-streamed). Tile-staged windows report their staging region.
     pub fn region_at(&self, t: TensorId, pos: usize) -> Option<Region> {
-        match self.window_at(t, pos)?.home {
-            Home::Scratch(r) => Some(r),
-            Home::Dram => None,
-        }
+        self.window_at(t, pos)?.home.region()
     }
 
     /// Planned scratchpad high-water mark in bytes: the measure of the
@@ -173,10 +172,7 @@ impl MemoryPlan {
             .tensors
             .values()
             .flat_map(|tp| {
-                tp.windows.iter().filter_map(|w| match w.home {
-                    Home::Scratch(r) => Some((w, r)),
-                    Home::Dram => None,
-                })
+                tp.windows.iter().filter_map(|w| w.home.region().map(|r| (w, r)))
             })
             .collect();
         let mut peak = 0i64;
@@ -222,6 +218,7 @@ impl MemoryPlan {
             ("spilled_bytes", Json::Int(s.spilled_bytes)),
             ("window_splits", Json::Int(s.window_splits as i64)),
             ("streamed", Json::Int(s.streamed as i64)),
+            ("tile_staged", Json::Int(s.tile_staged as i64)),
             ("cross_group", Json::Int(s.cross_group as i64)),
         ])
     }
@@ -286,7 +283,7 @@ pub fn verify_plan(
                 }
             }
             prev_end = Some(w.end);
-            if let Home::Scratch(r) = w.home {
+            if let Some(r) = w.home.region() {
                 if r.offset < 0 || r.offset + r.per_bank_bytes > plan.bank_bytes {
                     return Err(PlanViolation::BadRegion {
                         tensor: *t,
@@ -298,17 +295,61 @@ pub fn verify_plan(
                         ),
                     });
                 }
-                let need = prog.graph.tensor(*t).size_bytes();
-                if r.total_bytes(plan.banks) < need {
-                    return Err(PlanViolation::BadRegion {
-                        tensor: *t,
-                        detail: format!(
-                            "{} bytes across {} banks < tensor size {}",
-                            r.total_bytes(plan.banks),
-                            plan.banks,
-                            need
-                        ),
-                    });
+                match w.home {
+                    Home::Scratch(_) => {
+                        let need = prog.graph.tensor(*t).size_bytes();
+                        if r.total_bytes(plan.banks) < need {
+                            return Err(PlanViolation::BadRegion {
+                                tensor: *t,
+                                detail: format!(
+                                    "{} bytes across {} banks < tensor size {}",
+                                    r.total_bytes(plan.banks),
+                                    plan.banks,
+                                    need
+                                ),
+                            });
+                        }
+                    }
+                    Home::Staged(_) => {
+                        // a staging region is deliberately smaller than
+                        // the tensor; it must cover the largest single
+                        // tile, and only tile nests may touch it
+                        for (pos, nest) in prog.nests.iter().enumerate() {
+                            if pos < w.start || pos > w.end {
+                                continue;
+                            }
+                            let touches = nest.store.tensor == *t
+                                || nest.body.loads().iter().any(|l| {
+                                    l.pieces.iter().any(|p| p.tensor == Some(*t))
+                                });
+                            if !touches {
+                                continue;
+                            }
+                            if nest.tile.is_none() {
+                                return Err(PlanViolation::BadRegion {
+                                    tensor: *t,
+                                    detail: format!(
+                                        "staged tensor touched by untiled nest '{}'",
+                                        nest.name
+                                    ),
+                                });
+                            }
+                            let need =
+                                crate::tile::footprint::nest_tensor_bytes(&prog.graph, nest, *t);
+                            if r.total_bytes(plan.banks) < need {
+                                return Err(PlanViolation::BadRegion {
+                                    tensor: *t,
+                                    detail: format!(
+                                        "staging region {} bytes < tile working set {} at '{}'",
+                                        r.total_bytes(plan.banks),
+                                        need,
+                                        nest.name
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                    Home::Dram => unreachable!("region() returned Some"),
                 }
             }
         }
@@ -335,10 +376,9 @@ pub fn verify_plan(
         .tensors
         .iter()
         .flat_map(|(t, tp)| {
-            tp.windows.iter().filter_map(move |w| match w.home {
-                Home::Scratch(r) => Some((*t, w, r)),
-                Home::Dram => None,
-            })
+            tp.windows
+                .iter()
+                .filter_map(move |w| w.home.region().map(|r| (*t, w, r)))
         })
         .collect();
     for (i, (ta, wa, ra)) in flat.iter().enumerate() {
@@ -357,6 +397,92 @@ pub fn verify_plan(
         }
     }
     Ok(())
+}
+
+/// Tile-staged tensor detection.
+///
+/// An intermediate qualifies when every nest writing or reading it is a
+/// tile nest of **one** group and, per tile index, the tile's writes
+/// complete before its reads begin (with at most the adjacent tile in
+/// flight — the double-buffer window). Such a tensor never needs
+/// whole-tensor residency: tile `t` is produced into a staging region
+/// and consumed a few positions later while tile `t+1` is produced into
+/// the buddy half. Returns the per-bank staging-region size (2× the
+/// largest tile slice, 1× for single-tile groups); tensors whose
+/// staging region cannot fit a bank are left out (they fall back to
+/// whole-tensor planning or streaming).
+fn detect_staged(program: &Program, cfg: &AccelConfig) -> BTreeMap<TensorId, i64> {
+    let mut out = BTreeMap::new();
+    for info in program.graph.tensors() {
+        if info.kind != TensorKind::Intermediate {
+            continue;
+        }
+        let writers = program.writers(info.id);
+        let readers = program.readers(info.id);
+        if writers.is_empty() || readers.is_empty() {
+            continue;
+        }
+        let tag_of = |p: usize| program.nests[p].tile;
+        let Some(t0) = tag_of(writers[0]) else { continue };
+        if !writers
+            .iter()
+            .chain(&readers)
+            .all(|&p| tag_of(p).map(|t| t.group == t0.group).unwrap_or(false))
+        {
+            continue;
+        }
+        // per tile index: (min, max) writer and reader positions
+        let by_index = |positions: &[usize]| {
+            let mut m: BTreeMap<u32, (usize, usize)> = BTreeMap::new();
+            for &p in positions {
+                let idx = tag_of(p).unwrap().index;
+                let e = m.entry(idx).or_insert((p, p));
+                e.0 = e.0.min(p);
+                e.1 = e.1.max(p);
+            }
+            m
+        };
+        let w_by = by_index(&writers);
+        let r_by = by_index(&readers);
+        if w_by.keys().ne(r_by.keys()) {
+            continue; // a tile written but never read (or vice versa)
+        }
+        // write-before-read inside each tile, and no tile's reads
+        // outlive the write of tile index+2 (double-buffer window)
+        let ordered = w_by.iter().all(|(idx, &(_, wmax))| r_by[idx].0 > wmax);
+        if !ordered {
+            continue;
+        }
+        let idxs: Vec<u32> = w_by.keys().copied().collect();
+        let windowed = idxs
+            .windows(3)
+            .all(|w| r_by[&w[0]].1 < w_by[&w[2]].0);
+        if !windowed {
+            continue;
+        }
+        let max_touched = writers
+            .iter()
+            .chain(&readers)
+            .map(|&p| {
+                crate::tile::footprint::nest_tensor_bytes(
+                    &program.graph,
+                    &program.nests[p],
+                    info.id,
+                )
+            })
+            .max()
+            .unwrap_or(0);
+        if max_touched == 0 {
+            continue;
+        }
+        let buf = if w_by.len() > 1 { 2 * max_touched } else { max_touched };
+        let pb = offsets::per_bank_bytes(buf, cfg.banks);
+        if pb > cfg.bank_bytes {
+            continue;
+        }
+        out.insert(info.id, pb);
+    }
+    out
 }
 
 /// Planner result: the (possibly rescheduled, possibly spill-extended)
@@ -397,8 +523,24 @@ pub fn plan_memory(
             }
         }
     }
-    let sched_opts = ScheduleOpts { lookahead: opts.lookahead, ..Default::default() };
-    let (mut program, sched) = schedule_min_footprint(program, &sched_opts);
+    // Tiled programs keep their schedule: the tile transform already
+    // interleaved fused chains for minimal footprint, and the node-
+    // granular scheduler would unweave them (it sorts nests by node).
+    let tiled = program.nests.iter().any(|n| n.tile.is_some());
+    let (mut program, sched) = if tiled {
+        let peak = Liveness::analyze(&program).peak_live_bytes(&program);
+        (
+            program,
+            ScheduleStats { peak_before: peak, peak_after: peak, ..Default::default() },
+        )
+    } else {
+        let sched_opts = ScheduleOpts { lookahead: opts.lookahead, ..Default::default() };
+        schedule_min_footprint(program, &sched_opts)
+    };
+
+    // Chain intermediates produced and consumed tile-by-tile get
+    // double-buffered staging regions instead of whole-tensor windows.
+    let mut staged = detect_staged(&program, cfg);
 
     let placements = bank.map(|b| &b.placements);
     let mut dram: BTreeSet<TensorId> = BTreeSet::new();
@@ -430,11 +572,12 @@ pub fn plan_memory(
     loop {
         stats.rounds += 1;
         let lv = Liveness::analyze(&program);
-        match offsets::allocate(&program, &lv, placements, cfg, &dram, &evictions) {
+        match offsets::allocate(&program, &lv, placements, cfg, &dram, &evictions, &staged) {
             Ok(out) => {
                 stats.cross_group = out.cross_group;
                 stats.peak_row_offset = out.peak_row_offset;
                 stats.peak_col_offset = out.peak_col_offset;
+                stats.tile_staged = staged.len();
                 let plan = MemoryPlan {
                     tensors: out.tensors,
                     n_positions: program.nests.len(),
@@ -444,7 +587,19 @@ pub fn plan_memory(
                 };
                 return Ok(AllocResult { program, plan });
             }
-            Err(conflict) => {
+            Err(mut conflict) => {
+                if staged.contains_key(&conflict.tensor) {
+                    // a staging region the crowded plan cannot place:
+                    // demote the tensor to tile-wise DRAM streaming
+                    staged.remove(&conflict.tensor);
+                    dram.insert(conflict.tensor);
+                    stats.streamed += 1;
+                    continue;
+                }
+                // staged regions are never spill victims — they are
+                // already minimal, and spilling one would corrupt the
+                // tile handoff the staging depends on
+                conflict.overlapping.retain(|(t, _, _)| !staged.contains_key(t));
                 let action = if stats.rounds >= opts.max_rounds {
                     // termination backstop: stream the failing tensor
                     dram.insert(conflict.tensor);
@@ -610,6 +765,61 @@ mod tests {
         )
         .unwrap_err();
         assert!(matches!(err, PlanError::BadConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn tiled_chain_intermediates_get_staged_regions() {
+        // conv → bn → relu with 4 KiB feature maps on a 4 KiB chip:
+        // after tiling, the chain intermediates must be planned into
+        // Staged regions smaller than the tensors they stage
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 16, 16]);
+        let w = b.weight("w", &[4, 4, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        let n = b.batchnorm("bn", c);
+        let r = b.relu("r", n);
+        b.mark_output(r);
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let mut prog = Program::lower(b.finish());
+        let tstats =
+            crate::tile::run_tiling(&mut prog, &cfg, &crate::tile::TileOpts::default());
+        assert!(tstats.fused_chains >= 1, "{tstats:?}");
+        let res = plan_memory(prog, None, &cfg, &AllocOpts::default()).unwrap();
+        verify_plan(&res.program, &res.plan, &cfg).unwrap();
+        assert!(res.plan.stats.tile_staged >= 1, "{:?}", res.plan.stats);
+        let staged: Vec<_> = res
+            .plan
+            .tensors
+            .iter()
+            .flat_map(|(t, tp)| {
+                tp.windows
+                    .iter()
+                    .filter(|w| matches!(w.home, Home::Staged(_)))
+                    .map(move |w| (*t, *w))
+            })
+            .collect();
+        assert!(!staged.is_empty());
+        for (t, w) in staged {
+            let region = w.home.region().unwrap();
+            assert!(
+                region.total_bytes(res.plan.banks)
+                    < res.program.graph.tensor(t).size_bytes(),
+                "staging region should be smaller than the staged tensor"
+            );
+        }
+        let _ = (x, r);
+    }
+
+    #[test]
+    fn untiled_programs_detect_no_staging() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[16, 16]);
+        let t = b.transpose("t", x, &[1, 0]);
+        let y = b.relu("y", t);
+        b.mark_output(y);
+        let prog = Program::lower(b.finish());
+        let staged = detect_staged(&prog, &AccelConfig::inferentia_like());
+        assert!(staged.is_empty());
     }
 
     #[test]

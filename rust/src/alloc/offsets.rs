@@ -63,9 +63,30 @@ impl Region {
 pub enum Home {
     /// Planned into the scratchpad at a concrete region.
     Scratch(Region),
+    /// Tile-staged: the tensor as a whole never materializes anywhere —
+    /// its tiles are produced and consumed through this double-buffered
+    /// staging region by the tile nests of one group
+    /// (`crate::tile`). The region holds at most two live tiles, so
+    /// tensors far larger than the scratchpad cost zero DRAM traffic.
+    Staged(Region),
     /// Streamed from/to DRAM (too big, or the spill planner demoted
     /// it); occupies no scratchpad space.
     Dram,
+}
+
+impl Home {
+    /// Is the tensor on-chip under this home (whole or tile-staged)?
+    pub fn on_chip(&self) -> bool {
+        !matches!(self, Home::Dram)
+    }
+
+    /// The scratchpad region this home occupies, if any.
+    pub fn region(&self) -> Option<Region> {
+        match self {
+            Home::Scratch(r) | Home::Staged(r) => Some(*r),
+            Home::Dram => None,
+        }
+    }
 }
 
 /// One residency window: the tensor occupies `home` for schedule
@@ -213,8 +234,10 @@ pub(crate) fn windows_conflict(
 }
 
 /// Allocate a region for every residency window. `dram` lists tensors
-/// the caller streams (no region). Returns the first unplaceable
-/// window as `Err` so the spill planner can make room.
+/// the caller streams (no region); `staged` maps tile-staged tensors
+/// (see [`Home::Staged`]) to their double-buffered per-bank region
+/// size, which replaces the whole-tensor size. Returns the first
+/// unplaceable window as `Err` so the spill planner can make room.
 pub(crate) fn allocate(
     prog: &Program,
     lv: &Liveness,
@@ -222,6 +245,7 @@ pub(crate) fn allocate(
     cfg: &AccelConfig,
     dram: &BTreeSet<TensorId>,
     evictions: &BTreeMap<TensorId, BTreeSet<usize>>,
+    staged: &BTreeMap<TensorId, i64>,
 ) -> Result<AllocOutcome, Conflict> {
     let windows = residency_windows(prog, lv, evictions);
     let mut tensors: BTreeMap<TensorId, TensorPlan> = BTreeMap::new();
@@ -231,7 +255,8 @@ pub(crate) fn allocate(
 
     for (t, start, end) in windows {
         let info = prog.graph.tensor(t);
-        let per_bank = per_bank_bytes(info.size_bytes(), cfg.banks);
+        let staged_pb = if dram.contains(&t) { None } else { staged.get(&t).copied() };
+        let per_bank = staged_pb.unwrap_or_else(|| per_bank_bytes(info.size_bytes(), cfg.banks));
         let too_big = per_bank > cfg.bank_bytes;
         if dram.contains(&t) || too_big {
             tensors
@@ -261,11 +286,16 @@ pub(crate) fn allocate(
                     cross_group += 1;
                 }
                 let region = Region { group, offset, per_bank_bytes: per_bank };
+                let home = if staged_pb.is_some() {
+                    Home::Staged(region)
+                } else {
+                    Home::Scratch(region)
+                };
                 tensors
                     .entry(t)
                     .or_default()
                     .windows
-                    .push(PlanWindow { start, end, home: Home::Scratch(region) });
+                    .push(PlanWindow { start, end, home });
                 let p = peak.get_mut(&group_key(group)).unwrap();
                 *p = (*p).max(region.end());
                 placed.push(Placed { tensor: t, start, end, offset, per_bank, group });
@@ -364,7 +394,15 @@ mod tests {
         let prog = chain_prog();
         let lv = Liveness::analyze(&prog);
         let cfg = AccelConfig::inferentia_like();
-        let out = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new()).unwrap();
+        let out = allocate(
+            &prog,
+            &lv,
+            None,
+            &cfg,
+            &BTreeSet::new(),
+            &BTreeMap::new(),
+            &BTreeMap::new(),
+        ).unwrap();
         // t1 dies as t2 is defined (handoff): their regions may alias,
         // so the Row high-water stays well under the sum of all tensors.
         let total: i64 = prog.graph.tensors().map(|t| t.size_bytes()).sum();
@@ -379,7 +417,15 @@ mod tests {
         let prog = chain_prog();
         let lv = Liveness::analyze(&prog);
         let cfg = AccelConfig::inferentia_like();
-        let out = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new()).unwrap();
+        let out = allocate(
+            &prog,
+            &lv,
+            None,
+            &cfg,
+            &BTreeSet::new(),
+            &BTreeMap::new(),
+            &BTreeMap::new(),
+        ).unwrap();
         let flat: Vec<(TensorId, PlanWindow)> = out
             .tensors
             .iter()
@@ -409,7 +455,15 @@ mod tests {
         let prog = chain_prog();
         let lv = Liveness::analyze(&prog);
         let cfg = AccelConfig::tiny(1024); // 4 KiB tensors >> 128 B banks
-        let out = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new()).unwrap();
+        let out = allocate(
+            &prog,
+            &lv,
+            None,
+            &cfg,
+            &BTreeSet::new(),
+            &BTreeMap::new(),
+            &BTreeMap::new(),
+        ).unwrap();
         for tp in out.tensors.values() {
             for w in &tp.windows {
                 assert_eq!(w.home, Home::Dram);
@@ -433,7 +487,15 @@ mod tests {
         let lv = Liveness::analyze(&prog);
         let mut cfg = AccelConfig::tiny(8 * 1024);
         cfg.bank_bytes = per_bank_bytes(32 * 32 * 4, cfg.banks);
-        let r = allocate(&prog, &lv, None, &cfg, &BTreeSet::new(), &BTreeMap::new());
+        let r = allocate(
+            &prog,
+            &lv,
+            None,
+            &cfg,
+            &BTreeSet::new(),
+            &BTreeMap::new(),
+            &BTreeMap::new(),
+        );
         let err = r.unwrap_err();
         assert_eq!(err.tensor, t2);
         assert!(!err.overlapping.is_empty());

@@ -233,6 +233,7 @@ fn insert_spill_pair(
     // after `from`. Insert the later index first so both stay valid.
     let copy_nest = |node, name: String, src, dst| LoopNest {
         node,
+        tile: None,
         name,
         domain: IterDomain::new(&info.shape),
         store: StoreStmt { tensor: dst, map: AccessMap::identity(nd) },

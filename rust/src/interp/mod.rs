@@ -617,6 +617,7 @@ mod tests {
             graph: g,
             nests: vec![LoopNest {
                 node: n,
+                tile: None,
                 name: "bad".into(),
                 domain: IterDomain::new(&[4]),
                 store: StoreStmt { tensor: y, map: AccessMap::identity(1) },

@@ -118,6 +118,22 @@ impl Body {
     }
 }
 
+/// Tiling provenance of a nest (attached by `crate::tile::transform`).
+///
+/// All tile nests strip-mined from one original nest — or from one
+/// fused producer/consumer chain — share a `group`; `index` is the
+/// lexicographic tile number and `count` the group's tile total. The
+/// tag rides on the nest itself so spill insertion and any later
+/// reordering cannot desynchronize it from the schedule; the static
+/// planner uses it to detect tile-staged intermediates and the
+/// pipelined simulator mode uses it to form double-buffer runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct TileTag {
+    pub group: u32,
+    pub index: u32,
+    pub count: u32,
+}
+
 /// A normalized loop nest.
 #[derive(Clone, Debug)]
 pub struct LoopNest {
@@ -127,6 +143,8 @@ pub struct LoopNest {
     pub domain: IterDomain,
     pub store: StoreStmt,
     pub body: Body,
+    /// `Some` when this nest is one tile of a strip-mined nest.
+    pub tile: Option<TileTag>,
 }
 
 impl LoopNest {
@@ -203,6 +221,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
         OpKind::Identity | OpKind::MemCopy => {
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -219,6 +238,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             }
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -234,6 +254,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             let exprs = delinearize_exprs(lin, in_shape);
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -249,6 +270,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
                 .collect();
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -269,6 +291,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
                 .collect();
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -283,6 +306,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
                 .collect();
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -308,6 +332,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
                     .collect();
                 nests.push(LoopNest {
                     node: node.id,
+                    tile: None,
                     name: format!("{}#{k}", node.name),
                     domain: IterDomain::new(&in_shape),
                     store: StoreStmt { tensor: out, map: AccessMap::new(nd, store_exprs) },
@@ -359,6 +384,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             }
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -393,6 +419,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             x_load.pieces[0].oob_zero = *pad > 0;
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom,
                 store: StoreStmt { tensor: out, map: store_map },
@@ -427,6 +454,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             x_load.pieces[0].oob_zero = *pad > 0;
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom,
                 store: StoreStmt { tensor: out, map: store_map },
@@ -441,6 +469,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             let dom = IterDomain::new(&[out_shape[0], out_shape[1], k]);
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom,
                 store: StoreStmt {
@@ -475,6 +504,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             );
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom,
                 store: StoreStmt {
@@ -495,6 +525,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             let dom = IterDomain::new(&in_shape);
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom,
                 store: StoreStmt {
@@ -526,6 +557,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             let w_map = AccessMap::new(5, vec![Expr::dim(1), Expr::dim(3), Expr::dim(4)]);
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom,
                 store: StoreStmt {
@@ -544,6 +576,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
         OpKind::Unary(_) | OpKind::Softmax => {
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -556,6 +589,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
         OpKind::Binary(_) => {
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -572,6 +606,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             let c_map = AccessMap::new(nd, vec![Expr::dim(1)]);
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),
@@ -589,6 +624,7 @@ pub fn lower_node(g: &Graph, node: &Node) -> Vec<LoopNest> {
             let b_map = AccessMap::new(nd, vec![Expr::dim(nd - 1)]);
             vec![LoopNest {
                 node: node.id,
+                tile: None,
                 name: node.name.clone(),
                 domain: dom_out,
                 store: ident_store(out),

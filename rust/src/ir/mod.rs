@@ -27,6 +27,6 @@ pub mod verify;
 
 pub use builder::GraphBuilder;
 pub use graph::{Graph, Node, NodeId};
-pub use loopnest::{Access, Body, LoopNest, Program, StoreStmt};
+pub use loopnest::{Access, Body, LoopNest, Program, StoreStmt, TileTag};
 pub use op::OpKind;
 pub use tensor::{DType, TensorId, TensorInfo, TensorKind};

@@ -17,6 +17,10 @@
 //!   scheduling, `(bank, offset, size)` assignment and spill planning,
 //!   producing the [`alloc::MemoryPlan`] the simulator's planned mode
 //!   replays and verifies.
+//! * [`tile`] — the polyhedral tiling subsystem: per-tile working-set
+//!   analysis, strip-mining with fused producer→elementwise chains,
+//!   and the double-buffered DMA pipeline schedule the simulator's
+//!   pipelined mode replays.
 //! * [`accel`] — a simulated Inferentia-class accelerator (banked
 //!   scratchpad + DMA byte accounting) used as the measurement
 //!   substrate for the paper's two experiments.
@@ -46,4 +50,5 @@ pub mod passes;
 pub mod poly;
 pub mod report;
 pub mod runtime;
+pub mod tile;
 pub mod util;

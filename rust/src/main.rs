@@ -112,6 +112,9 @@ fn cmd_simulate(p: &Parsed) -> Result<(), String> {
     let g = graph_from_args(p)?;
     let mut pm = pm_from_args(p)?;
     let cfg = accel_from_args(p)?;
+    if p.has_flag("tile") {
+        return cmd_simulate_tiled(g, pm, &cfg, p.has_flag("json"), p.get("model"));
+    }
     // The dynamic baseline must replay the *untransformed* pipeline
     // output (no rescheduling, no spill nests) — the same comparison
     // bench_alloc_plan makes.
@@ -158,6 +161,86 @@ fn cmd_simulate(p: &Parsed) -> Result<(), String> {
         println!("peak scratchpad:        {}", report::mb(sim.peak_scratchpad));
         println!("estimated latency:      {:.3} ms", sim.seconds * 1e3);
     }
+    Ok(())
+}
+
+/// `simulate --tile`: tiled double-buffer pipeline vs the untiled
+/// planned baseline on the same chip.
+fn cmd_simulate_tiled(
+    g: polymem::ir::Graph,
+    mut pm: PassManager,
+    cfg: &AccelConfig,
+    json: bool,
+    model: &str,
+) -> Result<(), String> {
+    use polymem::accel::{simulate_pipelined, simulate_planned};
+    use polymem::passes::{AllocStage, TileStage};
+
+    pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
+    let base = pm.run(g.clone()).map_err(|e| e.to_string())?;
+    let base_plan = base.plan.as_ref().expect("alloc stage ran");
+    let untiled =
+        simulate_planned(&base.program, base_plan, cfg, None).map_err(|e| e.to_string())?;
+
+    pm.tile = Some(TileStage::for_accel(cfg.clone()));
+    let rep = pm.run(g).map_err(|e| e.to_string())?;
+    let plan = rep.plan.as_ref().expect("alloc stage ran");
+    let tiled = simulate_pipelined(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+    let tstats = rep.tile.expect("tile stage ran");
+
+    if json {
+        let j = polymem::util::json::Json::obj(vec![
+            ("model", polymem::util::json::Json::Str(model.to_string())),
+            ("accel", cfg.to_json()),
+            ("untiled_planned", report::sim_to_json(&untiled)),
+            ("tiled_pipelined", report::sim_to_json(&tiled)),
+            ("tile_stats", tstats.to_json()),
+            ("plan", plan.to_json()),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "tiled double-buffer pipeline vs untiled planning on '{model}' ({}):\n",
+        cfg.name
+    );
+    let mut t = report::Table::new(&["metric", "untiled planned", "tiled pipelined"]);
+    t.row(&[
+        "off-chip bytes".into(),
+        report::mb(untiled.offchip_total()),
+        report::mb(tiled.offchip_total()),
+    ]);
+    t.row(&[
+        "on-chip movement bytes".into(),
+        report::mb(untiled.onchip_movement_total()),
+        report::mb(tiled.onchip_movement_total()),
+    ]);
+    t.row(&[
+        "peak scratchpad".into(),
+        report::mb(untiled.peak_scratchpad),
+        report::mb(tiled.peak_scratchpad),
+    ]);
+    t.row(&[
+        "estimated latency".into(),
+        format!("{:.3} ms", untiled.seconds * 1e3),
+        format!("{:.3} ms", tiled.seconds * 1e3),
+    ]);
+    t.row(&[
+        "schedule".into(),
+        format!("{} nests", base.program.nests.len()),
+        format!(
+            "{} nests ({} groups, {} fused chains, {} staged tensors)",
+            rep.program.nests.len(),
+            tstats.groups,
+            tstats.fused_chains,
+            plan.stats.tile_staged
+        ),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "off-chip reduction: {:.1}%",
+        report::pct_reduction(untiled.offchip_total(), tiled.offchip_total())
+    );
     Ok(())
 }
 
@@ -283,6 +366,7 @@ fn app() -> App {
                 .flag("no-dme", "disable data-movement elimination")
                 .flag("no-verify", "skip inter-pass verification")
                 .flag("plan", "static scratchpad planning + planned-mode replay")
+                .flag("tile", "polyhedral tiling + double-buffered pipeline replay vs untiled plan")
                 .flag("json", "machine-readable output"),
             Command::new("e1", "reproduce paper experiment 1 (WaveNet DME)"),
             Command::new("export-graph", "write a built-in model as a JSON graph")

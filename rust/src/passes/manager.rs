@@ -7,6 +7,7 @@ use crate::accel::config::AccelConfig;
 use crate::alloc::{plan_memory, AllocOpts, MemoryPlan};
 use crate::ir::loopnest::Program;
 use crate::ir::verify::{verify_graph, verify_program, VerifyError};
+use crate::tile::{run_tiling, TileOpts, TileStats};
 use std::time::{Duration, Instant};
 
 /// Which bank-mapping algorithm to run (the paper's E2 comparison).
@@ -46,12 +47,32 @@ impl AllocStage {
     }
 }
 
+/// The tiling stage configuration (`tile` subsystem), run between DME
+/// and bank mapping when enabled.
+#[derive(Clone, Debug)]
+pub struct TileStage {
+    /// Chip whose scratchpad the tile working sets are sized for.
+    pub accel: AccelConfig,
+    pub opts: TileOpts,
+}
+
+impl TileStage {
+    pub fn for_accel(accel: AccelConfig) -> TileStage {
+        TileStage { accel, opts: TileOpts::default() }
+    }
+}
+
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PassManager {
     pub enable_dme: bool,
     pub bank_mode: BankMode,
     pub bank_cfg: BankConfig,
+    /// Polyhedral tiling (strip-mining + chain fusion), run between
+    /// DME and bank mapping. `None` (the default) keeps whole-tensor
+    /// nests; `Some` strip-mines oversized nests so the planner can
+    /// stage tensors larger than the scratchpad tile by tile.
+    pub tile: Option<TileStage>,
     /// Static scratchpad planning (scheduling + offsets + spills).
     /// `None` (the default) leaves residency to the simulator's
     /// dynamic baseline; `Some` produces a [`MemoryPlan`] the planned
@@ -67,6 +88,7 @@ impl Default for PassManager {
             enable_dme: true,
             bank_mode: BankMode::Global,
             bank_cfg: BankConfig::default(),
+            tile: None,
             alloc: None,
             verify: true,
         }
@@ -81,10 +103,13 @@ pub struct PassReport {
     /// spill-extended when the alloc stage ran).
     pub program: Program,
     pub dme: Option<DmeStats>,
+    /// Tiling statistics (tile stage enabled only).
+    pub tile: Option<TileStats>,
     pub bank: Option<BankAssignment>,
     /// The static memory plan (alloc stage enabled only).
     pub plan: Option<MemoryPlan>,
     pub dme_time: Duration,
+    pub tile_time: Duration,
     pub bank_time: Duration,
     pub alloc_time: Duration,
 }
@@ -97,9 +122,9 @@ impl PassManager {
 
     /// Run the pipeline, calling `observe(stage, program)` with the
     /// program state after each executed stage: `"lower"` (always),
-    /// `"dme"`, `"bank"` (after bank mapping **and** copy splicing,
-    /// so the observed program is executable) and `"plan"`. The
-    /// differential equivalence harness ([`crate::interp::diff`])
+    /// `"dme"`, `"tile"`, `"bank"` (after bank mapping **and** copy
+    /// splicing, so the observed program is executable) and `"plan"`.
+    /// The differential equivalence harness ([`crate::interp::diff`])
     /// snapshots these to prove every stage preserves semantics.
     pub fn run_observed(
         &self,
@@ -125,6 +150,24 @@ impl PassManager {
             observe("dme", &program);
         }
         let dme_time = t0.elapsed();
+
+        // Tiling: strip-mine oversized nests (and fuse elementwise
+        // consumers onto their producer's grid) so residency can be
+        // planned tile by tile. Runs before bank mapping: the bank
+        // passes work on the graph, and copy splicing handles multi-
+        // nest consumers already (concat), so tile nests need nothing
+        // special downstream.
+        let tt = Instant::now();
+        let mut tile_stats = None;
+        if let Some(stage) = &self.tile {
+            let stats = run_tiling(&mut program, &stage.accel, &stage.opts);
+            if self.verify {
+                verify_program(&program)?;
+            }
+            observe("tile", &program);
+            tile_stats = Some(stats);
+        }
+        let tile_time = tt.elapsed();
 
         let t1 = Instant::now();
         let bank = match self.bank_mode {
@@ -178,9 +221,11 @@ impl PassManager {
         Ok(PassReport {
             program,
             dme: dme_stats,
+            tile: tile_stats,
             bank,
             plan,
             dme_time,
+            tile_time,
             bank_time,
             alloc_time,
         })
@@ -192,10 +237,19 @@ impl PassManager {
 /// nodes), add one identity copy nest per MemCopy before its consumer's
 /// first nest, and re-point that consumer's loads at the remapped
 /// tensor.
+///
+/// When the remapped edge belongs to a fused tile chain — the
+/// consumer's tile nests interleave with the producer's, so there is
+/// no position where the source is fully written *and* unread — the
+/// copy is spliced tile-wise instead: one copy nest per producer tile,
+/// covering exactly that tile's store image, inserted right after the
+/// producing tile so the consumer's same-index tile reads a complete
+/// copy. The tile copies inherit the producer's `TileTag` and so stay
+/// inside its pipeline group.
 fn splice_memcopies(prog: &mut Program, bank_graph: &crate::ir::Graph) {
     use crate::ir::loopnest::{Body, LoadStmt, LoopNest, StoreStmt};
     use crate::ir::op::OpKind;
-    use crate::poly::{AccessMap, IterDomain};
+    use crate::poly::{AccessMap, Expr, IterDomain};
 
     let memcopies: Vec<_> = bank_graph
         .nodes()
@@ -212,18 +266,14 @@ fn splice_memcopies(prog: &mut Program, bank_graph: &crate::ir::Graph) {
         let consumer = consumers[0].id;
         let shape = prog.graph.tensor(src).shape.clone();
         let nd = shape.len();
-        let nest = LoopNest {
-            node: mc.id,
-            name: mc.name.clone(),
-            domain: IterDomain::new(&shape),
-            store: StoreStmt { tensor: dst, map: AccessMap::identity(nd) },
-            body: Body::Copy { load: LoadStmt::total(src, AccessMap::identity(nd)) },
-        };
-        let pos = prog
+        let consumer_first = prog
             .nests
             .iter()
             .position(|n| n.node == consumer)
             .expect("consumer nest not found");
+        let writer_positions = prog.writers(src);
+        let last_writer = writer_positions.iter().copied().max().unwrap_or(0);
+
         // re-point the consumer's loads from src to dst
         for n in prog.nests.iter_mut().filter(|n| n.node == consumer) {
             for load in n.body.loads_mut() {
@@ -234,7 +284,54 @@ fn splice_memcopies(prog: &mut Program, bank_graph: &crate::ir::Graph) {
                 }
             }
         }
-        prog.nests.insert(pos, nest);
+
+        if consumer_first > last_writer {
+            // ordinary schedule: src is complete before the consumer
+            let nest = LoopNest {
+                node: mc.id,
+                tile: None,
+                name: mc.name.clone(),
+                domain: IterDomain::new(&shape),
+                store: StoreStmt { tensor: dst, map: AccessMap::identity(nd) },
+                body: Body::Copy { load: LoadStmt::total(src, AccessMap::identity(nd)) },
+            };
+            prog.nests.insert(consumer_first, nest);
+        } else {
+            // interleaved tile chain: copy tile-by-tile. Highest
+            // position first so earlier indices stay valid.
+            for &wpos in writer_positions.iter().rev() {
+                let wnest = &prog.nests[wpos];
+                let tag = wnest
+                    .tile
+                    .expect("interleaved writer must be a tile nest");
+                let ext = wnest.domain.extents().to_vec();
+                // tile nests have unit-dim stores: the image is a box
+                let bbox: Vec<(i64, i64)> = wnest
+                    .store
+                    .map
+                    .exprs()
+                    .iter()
+                    .map(|e| e.range(&ext).expect("store arity"))
+                    .collect();
+                let exts: Vec<i64> = bbox.iter().map(|&(lo, hi)| hi - lo + 1).collect();
+                let map = AccessMap::new(
+                    nd,
+                    bbox.iter()
+                        .enumerate()
+                        .map(|(d, &(lo, _))| Expr::dim(d).add(Expr::cst(lo)))
+                        .collect(),
+                );
+                let nest = LoopNest {
+                    node: mc.id,
+                    tile: Some(tag),
+                    name: format!("{}@t{}", mc.name, tag.index),
+                    domain: IterDomain::new(&exts),
+                    store: StoreStmt { tensor: dst, map: map.clone() },
+                    body: Body::Copy { load: LoadStmt::total(src, map) },
+                };
+                prog.nests.insert(wpos + 1, nest);
+            }
+        }
     }
 }
 
@@ -338,6 +435,32 @@ mod tests {
         })
         .unwrap();
         assert_eq!(stages, vec!["lower", "dme", "bank", "plan"]);
+    }
+
+    #[test]
+    fn tile_stage_observed_between_dme_and_bank() {
+        use crate::accel::config::AccelConfig;
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = PassManager {
+            tile: Some(TileStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg)),
+            ..Default::default()
+        };
+        let mut stages: Vec<String> = Vec::new();
+        let report = pm
+            .run_observed(sample(), |s, _| stages.push(s.to_string()))
+            .unwrap();
+        assert_eq!(stages, vec!["lower", "dme", "tile", "bank", "plan"]);
+        let tile = report.tile.expect("tile stage ran");
+        assert!(tile.groups >= 1, "4 KiB chip must force tiling: {tile:?}");
+        assert!(report.program.nests.iter().any(|n| n.tile.is_some()));
+    }
+
+    #[test]
+    fn tile_stage_off_by_default() {
+        let report = PassManager::default().run(sample()).unwrap();
+        assert!(report.tile.is_none());
+        assert!(report.program.nests.iter().all(|n| n.tile.is_none()));
     }
 
     #[test]

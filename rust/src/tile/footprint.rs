@@ -1,0 +1,411 @@
+//! Per-tile working-set analysis.
+//!
+//! The sizing question tiling has to answer — "what is the largest tile
+//! whose double-buffered working set fits the scratchpad?" — reduces to
+//! *imaging a box through the nest's access maps*: for a candidate tile
+//! box `o + [0,S)` the bytes a load touches are the (clipped) bounding
+//! box of `map(o + [0,S))`, which [`crate::poly::Expr::range`] computes
+//! exactly for affine components and conservatively (never under) for
+//! quasi-affine ones. This is the same access-map machinery the DME and
+//! bank passes are built on, pointed at transfer sizing the way Zheng
+//! et al. size their staging buffers.
+//!
+//! Conventions:
+//! * footprints are measured in **bytes of the touched bounding box**,
+//!   clipped to the tensor box (`oob_zero` halo reads cost nothing
+//!   outside the tensor — the hardware synthesizes zeros);
+//! * piecewise loads take the bounding box of the union of their
+//!   pieces (guards are ignored — an over-approximation, sound for
+//!   capacity);
+//! * a tensor touched by several loads of one nest is counted once,
+//!   at the union bounding box.
+
+use crate::ir::graph::Graph;
+use crate::ir::loopnest::LoopNest;
+use crate::ir::tensor::TensorId;
+use crate::poly::{AccessMap, Expr, IterDomain};
+use std::collections::BTreeMap;
+
+/// The map `j ↦ j + offsets` on `offsets.len()` dims — the inner shift
+/// that turns a nest-local access map into a tile-local one.
+pub fn shift_map(offsets: &[i64]) -> AccessMap {
+    AccessMap::new(
+        offsets.len(),
+        offsets
+            .iter()
+            .enumerate()
+            .map(|(d, &o)| Expr::dim(d).add(Expr::cst(o)))
+            .collect(),
+    )
+}
+
+/// Bounding box `(lo, hi)` (inclusive) per tensor dim of `map` over the
+/// box `offsets + [0, extents)`, unclipped.
+fn image_box(map: &AccessMap, offsets: &[i64], extents: &[i64]) -> Vec<(i64, i64)> {
+    let shifted = map.compose(&shift_map(offsets));
+    shifted
+        .exprs()
+        .iter()
+        .map(|e| e.range(extents).expect("tile box covers every map dim"))
+        .collect()
+}
+
+/// Merge `b` into the running union box `acc`.
+fn union_box(acc: &mut Vec<(i64, i64)>, b: &[(i64, i64)]) {
+    if acc.is_empty() {
+        acc.extend_from_slice(b);
+        return;
+    }
+    for (a, &(lo, hi)) in acc.iter_mut().zip(b) {
+        a.0 = a.0.min(lo);
+        a.1 = a.1.max(hi);
+    }
+}
+
+/// Bytes of a union box clipped to the tensor's shape (0 if empty).
+fn box_bytes(bbox: &[(i64, i64)], shape: &[i64], elem_bytes: i64) -> i64 {
+    let mut elems = 1i64;
+    for (&(lo, hi), &s) in bbox.iter().zip(shape) {
+        let lo = lo.max(0);
+        let hi = hi.min(s - 1);
+        if hi < lo {
+            return 0;
+        }
+        elems *= hi - lo + 1;
+    }
+    elems * elem_bytes
+}
+
+/// Bytes of every tensor a nest touches (loads and store), measured as
+/// clipped image bounding boxes over the sub-box `offsets + [0,
+/// extents)` of the nest's domain. Pass `offsets = 0…0` and `extents =
+/// domain` for the whole-nest working set.
+pub fn touched_bytes_in(
+    g: &Graph,
+    nest: &LoopNest,
+    offsets: &[i64],
+    extents: &[i64],
+) -> BTreeMap<TensorId, i64> {
+    // per tensor: union bounding box across every load piece + store
+    let mut boxes: BTreeMap<TensorId, Vec<(i64, i64)>> = BTreeMap::new();
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            let Some(t) = piece.tensor else { continue };
+            let b = image_box(&piece.map, offsets, extents);
+            union_box(boxes.entry(t).or_default(), &b);
+        }
+    }
+    let sb = image_box(&nest.store.map, offsets, extents);
+    union_box(boxes.entry(nest.store.tensor).or_default(), &sb);
+
+    boxes
+        .into_iter()
+        .map(|(t, bbox)| {
+            let info = g.tensor(t);
+            (t, box_bytes(&bbox, &info.shape, info.dtype.size_bytes()))
+        })
+        .collect()
+}
+
+/// Whole-nest working set: bytes of every tensor the nest touches.
+pub fn nest_touched_bytes(g: &Graph, nest: &LoopNest) -> BTreeMap<TensorId, i64> {
+    let ext = nest.domain.extents().to_vec();
+    touched_bytes_in(g, nest, &vec![0; ext.len()], &ext)
+}
+
+/// Offset-independent per-tensor **upper bound** on the bytes any tile
+/// of extents `extents` touches: per tensor dim, the unclipped image
+/// width of the tile box (affine widths do not depend on the tile's
+/// position) capped at the tensor extent. Exact for interior tiles of
+/// affine accesses; never below any real tile's clipped footprint.
+pub fn touched_bytes_bound(
+    g: &Graph,
+    nest: &LoopNest,
+    extents: &[i64],
+) -> BTreeMap<TensorId, i64> {
+    let zeros = vec![0i64; extents.len()];
+    let mut boxes: BTreeMap<TensorId, Vec<(i64, i64)>> = BTreeMap::new();
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            let Some(t) = piece.tensor else { continue };
+            let b = image_box(&piece.map, &zeros, extents);
+            union_box(boxes.entry(t).or_default(), &b);
+        }
+    }
+    let sb = image_box(&nest.store.map, &zeros, extents);
+    union_box(boxes.entry(nest.store.tensor).or_default(), &sb);
+
+    boxes
+        .into_iter()
+        .map(|(t, bbox)| {
+            let info = g.tensor(t);
+            let elems: i64 = bbox
+                .iter()
+                .zip(&info.shape)
+                .map(|(&(lo, hi), &s)| (hi - lo + 1).min(s).max(0))
+                .product();
+            (t, elems * info.dtype.size_bytes())
+        })
+        .collect()
+}
+
+/// Bytes of one tensor a nest touches (0 when untouched). The planned
+/// simulator charges exactly this per tile nest for DRAM-homed
+/// operands, and [`crate::alloc::verify_plan`] checks tile-staged
+/// regions against it. (Delegates to [`nest_tensor_box`] so hot
+/// callers never image the nest's *other* tensors.)
+pub fn nest_tensor_bytes(g: &Graph, nest: &LoopNest, t: TensorId) -> i64 {
+    nest_tensor_box(g, nest, t).map(|(_, b)| b).unwrap_or(0)
+}
+
+/// Clipped image box (inclusive per-dim bounds) and byte count of one
+/// tensor under a nest; `None` when the nest does not touch it or the
+/// touch clips to nothing. Tile nests carry their shift inside their
+/// maps, so boxes are in absolute tensor coordinates and comparable
+/// across tiles — the pipelined simulator uses box identity between
+/// consecutive tiles to recognize operand slices that stay resident in
+/// the staging buffer (a weight slice reused by every spatial tile of
+/// one output-channel block is fetched once, not per tile).
+pub fn nest_tensor_box(
+    g: &Graph,
+    nest: &LoopNest,
+    t: TensorId,
+) -> Option<(Vec<(i64, i64)>, i64)> {
+    let ext = nest.domain.extents().to_vec();
+    let offs = vec![0i64; ext.len()];
+    let mut bbox: Vec<(i64, i64)> = Vec::new();
+    let mut found = false;
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            if piece.tensor == Some(t) {
+                union_box(&mut bbox, &image_box(&piece.map, &offs, &ext));
+                found = true;
+            }
+        }
+    }
+    if nest.store.tensor == t {
+        union_box(&mut bbox, &image_box(&nest.store.map, &offs, &ext));
+        found = true;
+    }
+    if !found {
+        return None;
+    }
+    let info = g.tensor(t);
+    let mut clipped = Vec::with_capacity(bbox.len());
+    let mut elems = 1i64;
+    for (&(lo, hi), &s) in bbox.iter().zip(&info.shape) {
+        let lo = lo.max(0);
+        let hi = hi.min(s - 1);
+        if hi < lo {
+            return None;
+        }
+        elems *= hi - lo + 1;
+        clipped.push((lo, hi));
+    }
+    Some((clipped, elems * info.dtype.size_bytes()))
+}
+
+/// Does any load of tensor `t` in this nest index through domain dim
+/// `d`? (Read side only — used by the tile-size search to predict
+/// which grid splits change the slice a tile reads.)
+pub fn tensor_read_uses_dim(nest: &LoopNest, t: TensorId, d: usize) -> bool {
+    nest.body.loads().iter().any(|l| {
+        l.pieces.iter().any(|p| {
+            p.tensor == Some(t) && p.map.exprs().iter().any(|e| expr_uses_dim(e, d))
+        })
+    })
+}
+
+/// Sum of a nest's touched bytes — its working set if staged whole.
+pub fn nest_working_set(g: &Graph, nest: &LoopNest) -> i64 {
+    nest_touched_bytes(g, nest).values().sum()
+}
+
+/// Does `e` mention loop dim `d`?
+pub(crate) fn expr_uses_dim(e: &Expr, d: usize) -> bool {
+    match e {
+        Expr::Cst(_) => false,
+        Expr::Dim(k) => *k == d,
+        Expr::Add(a, b) => expr_uses_dim(a, d) || expr_uses_dim(b, d),
+        Expr::Mul(_, inner) | Expr::Div(inner, _) | Expr::Mod(inner, _) => {
+            expr_uses_dim(inner, d)
+        }
+    }
+}
+
+/// Is tensor `t` tile-invariant in `nest` under the given tiled domain
+/// dims — i.e. none of its access-map components mention a tiled dim?
+/// Invariant tensors (conv weights under spatial tiling) are staged
+/// once and reused by every tile, so they count 1× (not 2×) in the
+/// double-buffer budget.
+pub fn tensor_tile_invariant(nest: &LoopNest, t: TensorId, tiled_dims: &[usize]) -> bool {
+    let uses_tiled = |m: &AccessMap| {
+        m.exprs()
+            .iter()
+            .any(|e| tiled_dims.iter().any(|&d| expr_uses_dim(e, d)))
+    };
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            if piece.tensor == Some(t) && uses_tiled(&piece.map) {
+                return false;
+            }
+        }
+    }
+    !(nest.store.tensor == t && uses_tiled(&nest.store.map))
+}
+
+/// The per-out-dim domain source of a nest's store map: `Some(d)` when
+/// component `k` is `i_d + c` (unit coefficient), `None` when it is a
+/// constant (reduction-collapsed dims, e.g. pooling's spatial outputs
+/// of a GlobalAvgPool). Returns `None` overall when any component is
+/// non-affine, has a non-unit coefficient, or two components read the
+/// same domain dim — the shapes whose tile store-images could overlap,
+/// which tiling must refuse.
+pub fn store_dim_map(nest: &LoopNest) -> Option<Vec<Option<usize>>> {
+    let in_dims = nest.store.map.in_dims();
+    let mut seen = vec![false; in_dims];
+    let mut out = Vec::with_capacity(nest.store.map.out_dims());
+    for e in nest.store.map.exprs() {
+        let (coeffs, _cst) = e.as_affine(in_dims)?;
+        let nz: Vec<usize> = coeffs
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0)
+            .map(|(d, _)| d)
+            .collect();
+        match nz.as_slice() {
+            [] => out.push(None),
+            [d] if coeffs[*d] == 1 && !seen[*d] => {
+                seen[*d] = true;
+                out.push(Some(*d));
+            }
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+/// Domain dims of a nest that tiling may strip-mine: the dims its store
+/// map forwards with unit coefficient. Dims absent from the store map
+/// are reduction dims — splitting one would split an accumulation
+/// across nests and change the result.
+pub fn tileable_dims(nest: &LoopNest) -> Option<Vec<usize>> {
+    Some(store_dim_map(nest)?.into_iter().flatten().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::loopnest::Program;
+
+    fn conv_prog() -> Program {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 8, 8]);
+        let w = b.weight("w", &[6, 4, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        b.mark_output(c);
+        Program::lower(b.finish())
+    }
+
+    #[test]
+    fn whole_nest_touches_whole_tensors() {
+        let prog = conv_prog();
+        let nest = &prog.nests[0];
+        let touched = nest_touched_bytes(&prog.graph, nest);
+        // x, w and the output are each touched in full
+        for t in prog.graph.tensors() {
+            assert_eq!(
+                touched.get(&t.id).copied().unwrap_or(0),
+                t.size_bytes(),
+                "tensor {}",
+                t.name
+            );
+        }
+    }
+
+    #[test]
+    fn tile_box_shrinks_varying_tensors_only() {
+        let prog = conv_prog();
+        let nest = &prog.nests[0];
+        // domain (n, co, oh, ow, ci, kh, kw) = [1,6,8,8,4,3,3];
+        // take the output-row half-tile oh in [0,4)
+        let offs = vec![0, 0, 0, 0, 0, 0, 0];
+        let ext = vec![1, 6, 4, 8, 4, 3, 3];
+        let touched = touched_bytes_in(&prog.graph, nest, &offs, &ext);
+        let (x, w, y) = {
+            let mut it = prog.graph.tensors();
+            let x = it.next().unwrap().id;
+            let w = it.next().unwrap().id;
+            let y = it.next().unwrap().id;
+            (x, w, y)
+        };
+        // weights untouched by spatial tiling
+        assert_eq!(touched[&w], prog.graph.tensor(w).size_bytes());
+        // output: half the rows
+        assert_eq!(touched[&y], prog.graph.tensor(y).size_bytes() / 2);
+        // input: rows -1..=4 clipped to 0..=4 -> 5 of 8 rows
+        assert_eq!(touched[&x], 4 * 5 * 8 * 4);
+        assert!(tensor_tile_invariant(nest, w, &[2, 3]));
+        assert!(!tensor_tile_invariant(nest, x, &[2, 3]));
+        assert!(!tensor_tile_invariant(nest, y, &[2, 3]));
+    }
+
+    #[test]
+    fn boundary_tile_clips_to_tensor_box() {
+        let prog = conv_prog();
+        let nest = &prog.nests[0];
+        // last output-row stripe: oh in [6,8) reads x rows 5..=8 -> clip
+        let offs = vec![0, 0, 6, 0, 0, 0, 0];
+        let ext = vec![1, 6, 2, 8, 4, 3, 3];
+        let touched = touched_bytes_in(&prog.graph, nest, &offs, &ext);
+        let x = prog.graph.tensors().next().unwrap().id;
+        // rows 5..=7 survive the clip (row 8 is oob_zero halo): 3 rows
+        assert_eq!(touched[&x], 4 * 3 * 8 * 4);
+    }
+
+    #[test]
+    fn store_dim_map_shapes() {
+        let prog = conv_prog();
+        // conv store (d0,d1,d2,d3) over a 7-dim domain
+        assert_eq!(
+            store_dim_map(&prog.nests[0]),
+            Some(vec![Some(0), Some(1), Some(2), Some(3)])
+        );
+        assert_eq!(tileable_dims(&prog.nests[0]), Some(vec![0, 1, 2, 3]));
+
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[2, 3, 4, 4]);
+        let g1 = b.gap("g", x);
+        b.mark_output(g1);
+        let p = Program::lower(b.finish());
+        // GAP store (d0,d1,0,0): spatial dims are reductions
+        assert_eq!(
+            store_dim_map(&p.nests[0]),
+            Some(vec![Some(0), Some(1), None, None])
+        );
+        assert_eq!(tileable_dims(&p.nests[0]), Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn strided_store_is_refused() {
+        use crate::ir::loopnest::{Body, LoadStmt, LoopNest, StoreStmt};
+        use crate::ir::tensor::{DType, TensorKind};
+        let mut g = Graph::new();
+        let x = g.add_tensor("x", &[8], DType::F32, TensorKind::Input);
+        let y = g.add_tensor("y", &[16], DType::F32, TensorKind::Output);
+        let n = g.add_node("s", crate::ir::op::OpKind::Identity, vec![x], y);
+        let nest = LoopNest {
+            node: n,
+            tile: None,
+            name: "s".into(),
+            domain: IterDomain::new(&[8]),
+            store: StoreStmt {
+                tensor: y,
+                map: AccessMap::new(1, vec![Expr::dim(0).scale(2)]),
+            },
+            body: Body::Copy { load: LoadStmt::total(x, AccessMap::identity(1)) },
+        };
+        assert_eq!(store_dim_map(&nest), None);
+    }
+}

@@ -1,0 +1,556 @@
+//! Polyhedral loop tiling — staging tensors larger than the scratchpad.
+//!
+//! The planner (`crate::alloc`) can only make a tensor resident when it
+//! fits; anything larger fell back to DRAM streaming, so the workloads
+//! the paper cares most about — feature maps bigger than on-chip SRAM —
+//! were never actually *staged*. This subsystem closes that gap with
+//! three cooperating parts:
+//!
+//! * [`footprint`] — sizes tiles by imaging candidate tile boxes
+//!   through the nests' access maps (the `poly` machinery the passes
+//!   already use), picking the largest grid whose **double-buffered**
+//!   working set (2× tile-varying tensors + 1× tile-invariant ones,
+//!   e.g. conv weights) fits the configured budget;
+//! * [`transform`] — strip-mines the chosen nests into ordinary tile
+//!   nests (exact boundary tiles on non-divisible extents, guards and
+//!   access maps rewritten), interleaving fused producer→elementwise
+//!   chains on a shared grid so chain intermediates are produced and
+//!   consumed within a few schedule positions;
+//! * [`pipeline`] — extracts the double-buffer schedule (prefetch tile
+//!   *t+1* while computing tile *t*, write back *t−1*) that the
+//!   simulator's pipelined mode replays with a two-engine overlap model
+//!   instead of the per-nest `max(compute, dma)` fiction.
+//!
+//! Downstream, `alloc` detects chain intermediates whose every writer
+//! and reader is a tile nest of one group and plans them into
+//! double-buffered staging regions ([`crate::alloc::Home::Staged`])
+//! instead of whole-tensor residency — the step that finally takes
+//! oversized intermediates off DRAM.
+//!
+//! Run as an optional [`crate::passes::manager::PassManager`] stage
+//! between DME and bank mapping; the differential oracle proves the
+//! transformed program bit-identical (tiling never splits reduction
+//! dims, so accumulation order is preserved).
+
+pub mod footprint;
+pub mod pipeline;
+pub mod transform;
+
+use crate::accel::config::AccelConfig;
+use crate::ir::loopnest::{LoopNest, Program};
+use crate::ir::op::OpKind;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+use self::transform::{Chain, ChainMember};
+
+/// Tiling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TileOpts {
+    /// Fraction of the total scratchpad the double-buffered tile
+    /// working set may use (the rest is headroom for co-resident
+    /// weights and the planner's other windows).
+    pub budget_fraction: f64,
+    /// Hard cap on tiles per chain (bounds schedule growth).
+    pub max_tiles: usize,
+    /// Fuse elementwise consumers onto their producer's grid.
+    pub fuse: bool,
+}
+
+impl Default for TileOpts {
+    fn default() -> Self {
+        TileOpts { budget_fraction: 0.5, max_tiles: 1024, fuse: true }
+    }
+}
+
+/// What the tiling stage did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileStats {
+    /// Tile groups emitted (one per tiled nest/chain).
+    pub groups: usize,
+    /// Original nests that were strip-mined.
+    pub nests_tiled: usize,
+    /// Tile nests emitted in their place.
+    pub tiles_emitted: usize,
+    /// Groups that fused ≥ 2 members onto one grid.
+    pub fused_chains: usize,
+    /// Longest fused chain.
+    pub max_chain_len: usize,
+}
+
+impl TileStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("groups", Json::Int(self.groups as i64)),
+            ("nests_tiled", Json::Int(self.nests_tiled as i64)),
+            ("tiles_emitted", Json::Int(self.tiles_emitted as i64)),
+            ("fused_chains", Json::Int(self.fused_chains as i64)),
+            ("max_chain_len", Json::Int(self.max_chain_len as i64)),
+        ])
+    }
+}
+
+/// Op kinds tiling may strip-mine. Copy bodies are always eligible;
+/// `Softmax` is excluded (its row reduction spans the whole domain and
+/// the interpreter's lowering contract pins its store to the full box).
+fn tileable_kind(kind: &OpKind, nest: &LoopNest) -> bool {
+    if nest.body.is_copy() {
+        return true;
+    }
+    matches!(
+        kind,
+        OpKind::Conv2d { .. }
+            | OpKind::DepthwiseConv2d { .. }
+            | OpKind::Conv1d { .. }
+            | OpKind::MatMul
+            | OpKind::Pool { .. }
+            | OpKind::GlobalAvgPool
+            | OpKind::Unary(_)
+            | OpKind::Binary(_)
+            | OpKind::BatchNorm
+            | OpKind::BiasAdd
+    )
+}
+
+/// Can this head accept fused followers? Requires a pure projection
+/// store (`i_d` / constant components, no offsets) whose grid equals
+/// the output tensor box, so follower domains align with the grid.
+fn fusable_head(prog: &Program, nest: &LoopNest, grid_shape: &[i64]) -> bool {
+    use crate::poly::Expr;
+    nest.store
+        .map
+        .exprs()
+        .iter()
+        .all(|e| matches!(e, Expr::Dim(_) | Expr::Cst(_)))
+        && prog.graph.tensor(nest.store.tensor).shape == grid_shape
+}
+
+/// Is nest `q` an eligible elementwise follower consuming `y`?
+fn elementwise_follower(prog: &Program, q: usize, y: TensorId, grid_shape: &[i64]) -> bool {
+    let nest = &prog.nests[q];
+    let node = prog.graph.node(nest.node);
+    if !tileable_kind(&node.kind, nest) {
+        return false;
+    }
+    if !nest.store.map.is_identity() || nest.domain.extents() != grid_shape {
+        return false;
+    }
+    // every read of y must be a plain identity load
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            if piece.tensor == Some(y)
+                && !(piece.guards.is_empty() && !piece.oob_zero && piece.map.is_identity())
+            {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Detect the tiling chain starting at nest position `p`: the nest
+/// itself (if tileable), extended — when `fuse` — over consecutive
+/// sole-consumer elementwise nests on the same grid.
+fn detect_chain(prog: &Program, p: usize, opts: &TileOpts) -> Option<Chain> {
+    let head = &prog.nests[p];
+    let node = prog.graph.node(head.node);
+    if !tileable_kind(&node.kind, head) {
+        return None;
+    }
+    let dim_of_grid = transform::head_dim_map(head)?;
+    let sm = footprint::store_dim_map(head)?;
+    let ext = head.domain.extents();
+    let grid_shape: Vec<i64> = sm
+        .iter()
+        .map(|d| d.map(|d| ext[d]).unwrap_or(1))
+        .collect();
+    let mut chain = Chain {
+        members: vec![ChainMember { pos: p, dim_of_grid }],
+        grid_shape,
+    };
+
+    if opts.fuse && fusable_head(prog, head, &chain.grid_shape) {
+        let mut y = head.store.tensor;
+        let mut q = p + 1;
+        while q < prog.nests.len() {
+            let info = prog.graph.tensor(y);
+            if info.kind != TensorKind::Intermediate {
+                break;
+            }
+            if prog.graph.consumers(y).len() != 1 {
+                break;
+            }
+            if prog.writers(y) != vec![q - 1] || prog.readers(y) != vec![q] {
+                break;
+            }
+            if !elementwise_follower(prog, q, y, &chain.grid_shape) {
+                break;
+            }
+            let nd = chain.grid_shape.len();
+            chain.members.push(ChainMember {
+                pos: q,
+                dim_of_grid: (0..nd).map(Some).collect(),
+            });
+            y = prog.nests[q].store.tensor;
+            q += 1;
+        }
+    }
+    Some(chain)
+}
+
+/// Worst-case double-buffered tile working set of a chain under grid
+/// sizes `s`: per sampled tile, tile-varying tensors count twice (the
+/// live tile plus its prefetch/writeback partner), tile-invariant ones
+/// (weights under spatial tiling) once.
+pub fn chain_tile_footprint(prog: &Program, chain: &Chain, s: &[i64]) -> i64 {
+    let g = &prog.graph;
+    // which grid dims actually split under s
+    let split: Vec<bool> = chain
+        .grid_shape
+        .iter()
+        .zip(s)
+        .map(|(&e, &t)| t < e)
+        .collect();
+    // per member, the domain dims that vary across tiles
+    let member_tiled: Vec<Vec<usize>> = chain
+        .members
+        .iter()
+        .map(|m| {
+            m.dim_of_grid
+                .iter()
+                .enumerate()
+                .filter_map(|(d, k)| match k {
+                    Some(k) if split[*k] => Some(d),
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+    // a tensor is invariant iff invariant in every member touching it
+    let mut invariant: BTreeMap<TensorId, bool> = BTreeMap::new();
+    for (mi, m) in chain.members.iter().enumerate() {
+        let nest = &prog.nests[m.pos];
+        for (t, _) in footprint::nest_touched_bytes(g, nest) {
+            let inv = footprint::tensor_tile_invariant(nest, t, &member_tiled[mi]);
+            invariant
+                .entry(t)
+                .and_modify(|v| *v = *v && inv)
+                .or_insert(inv);
+        }
+    }
+
+    // Affine access maps have offset-independent image widths, so a
+    // single analytic bound — unclipped widths of a full-size tile box,
+    // capped at the tensor extent — dominates every real tile
+    // (`footprint::touched_bytes_bound`). Quasi-affine maps (div/mod
+    // from reshape/tile/repeat) vary with the tile's position, so those
+    // chains evaluate every tile origin exactly (they are capped at
+    // `max_tiles` anyway).
+    let all_affine = chain.members.iter().all(|m| {
+        let nest = &prog.nests[m.pos];
+        nest.store.map.is_affine()
+            && nest
+                .body
+                .loads()
+                .iter()
+                .all(|l| l.pieces.iter().all(|p| p.map.is_affine()))
+    });
+
+    let mut worst = 0i64;
+    if all_affine {
+        let mut per_tensor: BTreeMap<TensorId, i64> = BTreeMap::new();
+        for m in &chain.members {
+            let nest = &prog.nests[m.pos];
+            // full-size tile box of this member (boundary tiles only shrink)
+            let ext = nest.domain.extents();
+            let exts: Vec<i64> = m
+                .dim_of_grid
+                .iter()
+                .enumerate()
+                .map(|(d, k)| match k {
+                    Some(k) => s[*k].min(chain.grid_shape[*k]),
+                    None => ext[d],
+                })
+                .collect();
+            for (t, b) in footprint::touched_bytes_bound(g, nest, &exts) {
+                let e = per_tensor.entry(t).or_insert(0);
+                *e = (*e).max(b);
+            }
+        }
+        worst = per_tensor
+            .iter()
+            .map(|(t, &b)| if invariant[t] { b } else { 2 * b })
+            .sum();
+    } else {
+        for go in &chain.tile_origins(s) {
+            let mut per_tensor: BTreeMap<TensorId, i64> = BTreeMap::new();
+            for m in &chain.members {
+                let nest = &prog.nests[m.pos];
+                let (offs, exts) = chain.member_box(nest, m, go, s);
+                for (t, b) in footprint::touched_bytes_in(g, nest, &offs, &exts) {
+                    let e = per_tensor.entry(t).or_insert(0);
+                    *e = (*e).max(b);
+                }
+            }
+            let total: i64 = per_tensor
+                .iter()
+                .map(|(t, &b)| if invariant[t] { b } else { 2 * b })
+                .sum();
+            worst = worst.max(total);
+        }
+    }
+    worst
+}
+
+/// Predicted excess DRAM traffic of grid sizes `s`: for every tensor a
+/// member *reads* that cannot be scratchpad-resident (its whole-tensor
+/// slice exceeds a bank, so the planner will stream it), each grid dim
+/// the tensor does **not** vary in, sitting outside (lexicographically
+/// above) a dim it does vary in, multiplies how often its slices must
+/// be re-fetched — e.g. splitting output channels makes every
+/// channel block re-sweep the whole input. Dims the tensor varies in
+/// are counted at the *full* grid (they will usually be split later),
+/// so the penalty is visible before the inner split happens — which is
+/// what steers the greedy search away from such splits up front.
+pub fn chain_stream_penalty(
+    prog: &Program,
+    chain: &Chain,
+    s: &[i64],
+    cfg: &AccelConfig,
+) -> i64 {
+    let g = &prog.graph;
+    let counts: Vec<i64> = chain
+        .grid_shape
+        .iter()
+        .zip(s)
+        .map(|(&e, &t)| (e + t - 1) / t)
+        .collect();
+    // per read tensor: the grid dims it (potentially) varies in
+    let mut varies: BTreeMap<TensorId, Vec<bool>> = BTreeMap::new();
+    for m in &chain.members {
+        let nest = &prog.nests[m.pos];
+        for load in nest.body.loads() {
+            for piece in &load.pieces {
+                let Some(t) = piece.tensor else { continue };
+                let v = varies
+                    .entry(t)
+                    .or_insert_with(|| vec![false; chain.grid_shape.len()]);
+                for (d, k) in m.dim_of_grid.iter().enumerate() {
+                    if let Some(k) = *k {
+                        if chain.grid_shape[k] > 1
+                            && footprint::tensor_read_uses_dim(nest, t, d)
+                        {
+                            v[k] = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut penalty = 0i64;
+    for (t, v) in &varies {
+        let info = g.tensor(*t);
+        if crate::alloc::offsets::per_bank_bytes(info.size_bytes(), cfg.banks)
+            <= cfg.bank_bytes
+        {
+            continue; // can be resident — reuse is free
+        }
+        let Some(kmax) = v.iter().rposition(|&x| x) else { continue };
+        let repeat: i64 = (0..=kmax).filter(|&k| !v[k]).map(|k| counts[k]).product();
+        if repeat > 1 {
+            penalty += (repeat - 1) * info.size_bytes();
+        }
+    }
+    penalty
+}
+
+/// Greedy tile-size search: start at the whole grid and repeatedly
+/// halve a dim until the worst-case double-buffered footprint fits
+/// `budget`. Candidates are ranked by `(stream penalty, footprint)`:
+/// first avoid splits that multiply re-streaming of DRAM-bound operands
+/// ([`chain_stream_penalty`]), then shrink the working set fastest.
+/// `None` when the chain already fits untiled (measured 1×: a single
+/// "tile" needs no buddy buffer), or when even the finest split within
+/// the tile cap cannot fit (e.g. an un-splittable invariant operand
+/// dominates).
+///
+/// Terminates because every step strictly shrinks one grid dim: at
+/// most `Σ ceil(log2 grid[k])` iterations.
+pub fn choose_grid_sizes(
+    prog: &Program,
+    chain: &Chain,
+    budget: i64,
+    max_tiles: usize,
+    cfg: &AccelConfig,
+) -> Option<Vec<i64>> {
+    let mut s = chain.grid_shape.clone();
+    if chain_tile_footprint(prog, chain, &s) <= budget {
+        return None; // fits whole — no tiling needed
+    }
+    loop {
+        let mut best: Option<(i64, i64, usize)> = None;
+        for k in 0..s.len() {
+            if s[k] <= 1 {
+                continue;
+            }
+            let mut s2 = s.clone();
+            s2[k] = (s[k] + 1) / 2;
+            if chain.n_tiles(&s2) > max_tiles as i64 {
+                continue;
+            }
+            let fp = chain_tile_footprint(prog, chain, &s2);
+            let pen = chain_stream_penalty(prog, chain, &s2, cfg);
+            if best.map(|(bp, bf, _)| (pen, fp) < (bp, bf)).unwrap_or(true) {
+                best = Some((pen, fp, k));
+            }
+        }
+        let (_, fp, k) = best?;
+        s[k] = (s[k] + 1) / 2;
+        if fp <= budget {
+            return Some(s);
+        }
+    }
+}
+
+/// Run the tiling stage over a lowered (post-DME) program: detect
+/// oversized nests/chains, choose grids, strip-mine in place.
+pub fn run_tiling(prog: &mut Program, cfg: &AccelConfig, opts: &TileOpts) -> TileStats {
+    let budget = (cfg.scratchpad_bytes() as f64 * opts.budget_fraction) as i64;
+    let mut stats = TileStats::default();
+    let mut out: Vec<LoopNest> = Vec::with_capacity(prog.nests.len());
+    let mut group: u32 = 0;
+    let mut p = 0usize;
+    while p < prog.nests.len() {
+        let tiled = match detect_chain(prog, p, opts) {
+            Some(chain) => match choose_grid_sizes(prog, &chain, budget, opts.max_tiles, cfg) {
+                Some(s) => {
+                    let tiles = transform::tile_chain(&prog.nests, &chain, &s, group);
+                    stats.groups += 1;
+                    stats.nests_tiled += chain.len();
+                    stats.tiles_emitted += tiles.len();
+                    if chain.len() > 1 {
+                        stats.fused_chains += 1;
+                    }
+                    stats.max_chain_len = stats.max_chain_len.max(chain.len());
+                    out.extend(tiles);
+                    group += 1;
+                    Some(chain.len())
+                }
+                None => None,
+            },
+            None => None,
+        };
+        match tiled {
+            Some(len) => p += len,
+            None => {
+                out.push(prog.nests[p].clone());
+                p += 1;
+            }
+        }
+    }
+    prog.nests = out;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::verify::{verify_graph, verify_program};
+    use crate::poly::IterDomain;
+
+    /// conv → bn → relu with a 16 KiB feature map on a 4 KiB chip.
+    fn chain_graph() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 16, 16]);
+        let w = b.weight("w", &[4, 4, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        let n = b.batchnorm("bn", c);
+        let r = b.relu("r", n);
+        b.mark_output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn oversized_chain_is_tiled_and_fused() {
+        let mut prog = Program::lower(chain_graph());
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let stats = run_tiling(&mut prog, &cfg, &TileOpts::default());
+        assert!(stats.groups >= 1, "{stats:?}");
+        assert!(stats.fused_chains >= 1, "conv->bn->relu should fuse: {stats:?}");
+        assert!(stats.max_chain_len >= 3, "{stats:?}");
+        assert!(stats.tiles_emitted > stats.nests_tiled);
+        verify_graph(&prog.graph).unwrap();
+        verify_program(&prog).unwrap();
+        // every tile nest's working set fits the double-buffer budget
+        let budget = cfg.scratchpad_bytes() / 2;
+        for nest in prog.nests.iter().filter(|n| n.tile.is_some()) {
+            let ws = footprint::nest_working_set(&prog.graph, nest);
+            assert!(ws <= budget, "{}: {ws} bytes > {budget}", nest.name);
+        }
+    }
+
+    #[test]
+    fn roomy_chip_tiles_nothing() {
+        let mut prog = Program::lower(chain_graph());
+        let before = prog.nests.len();
+        let stats = run_tiling(&mut prog, &AccelConfig::inferentia_like(), &TileOpts::default());
+        assert_eq!(stats.groups, 0);
+        assert_eq!(prog.nests.len(), before);
+        assert!(prog.nests.iter().all(|n| n.tile.is_none()));
+    }
+
+    #[test]
+    fn tiling_preserves_semantics_on_prime_sized_conv() {
+        // 13×13 spatial extent: boundary tiles everywhere
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 3, 13, 13]);
+        let w = b.weight("w", &[5, 3, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        let r = b.relu("r", c);
+        b.mark_output(r);
+        let g = b.finish();
+        let baseline = Program::lower(g.clone());
+        let mut tiled = Program::lower(g);
+        let stats = run_tiling(&mut tiled, &AccelConfig::tiny(2 * 1024), &TileOpts::default());
+        assert!(stats.groups >= 1, "conv must tile on a 2 KiB chip: {stats:?}");
+        verify_program(&tiled).unwrap();
+        crate::interp::diff::assert_equivalent(&baseline, &tiled, 0xA11CE);
+    }
+
+    #[test]
+    fn fusion_off_still_tiles_but_never_fuses() {
+        let mut prog = Program::lower(chain_graph());
+        let opts = TileOpts { fuse: false, ..Default::default() };
+        let stats = run_tiling(&mut prog, &AccelConfig::tiny(4 * 1024), &opts);
+        assert!(stats.groups >= 1);
+        assert_eq!(stats.fused_chains, 0);
+        verify_program(&prog).unwrap();
+    }
+
+    #[test]
+    fn grid_size_search_respects_budget() {
+        let prog = Program::lower(chain_graph());
+        let chain = detect_chain(&prog, 0, &TileOpts::default()).unwrap();
+        let budget = 2048;
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let s = choose_grid_sizes(&prog, &chain, budget, 1024, &cfg).unwrap();
+        assert!(chain_tile_footprint(&prog, &chain, &s) <= budget);
+        assert!(chain.n_tiles(&s) >= 2);
+        // boundary tiles cover the grid exactly
+        let covered: i64 = chain
+            .tile_origins(&s)
+            .iter()
+            .map(|go| {
+                chain
+                    .grid_shape
+                    .iter()
+                    .zip(s.iter().zip(go))
+                    .map(|(&e, (&t, &o))| t.min(e - o))
+                    .product::<i64>()
+            })
+            .sum();
+        assert_eq!(covered, IterDomain::new(&chain.grid_shape).cardinality());
+    }
+}

@@ -1,0 +1,132 @@
+//! Double-buffer schedule extraction.
+//!
+//! The tiled program is plain nests; what makes it a *pipeline* is the
+//! replay policy: within one tile group, the DMA engine prefetches tile
+//! `t+1`'s operands while the compute engine works on tile `t`, and
+//! tile `t−1`'s results ride the same DMA queue out. This module turns
+//! a schedule region into [`crate::accel::engine::PipeStep`]s — one per
+//! tile index, merging the fused chain members that share the index —
+//! and the simulator's pipelined mode feeds them to
+//! [`crate::accel::engine::pipeline_seconds`] in place of the per-nest
+//! `max(compute, dma)` estimate.
+
+use crate::accel::engine::PipeStep;
+use crate::ir::loopnest::Program;
+
+/// Per-nest cost decomposition the simulator computes during replay.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NestCost {
+    /// Compute-engine seconds.
+    pub compute: f64,
+    /// DMA seconds for operand staging (off-chip reads + on-chip
+    /// deposits) this nest triggers.
+    pub dma_in: f64,
+    /// DMA seconds for result write-back (spills / streamed stores).
+    pub dma_out: f64,
+}
+
+/// Maximal schedule runs `[start, end]` (inclusive) of nests sharing
+/// one tile group; untagged nests are singleton runs.
+pub fn tile_runs(prog: &Program) -> Vec<(usize, usize)> {
+    let mut runs = Vec::new();
+    let mut i = 0usize;
+    while i < prog.nests.len() {
+        match prog.nests[i].tile {
+            None => {
+                runs.push((i, i));
+                i += 1;
+            }
+            Some(tag) => {
+                let mut j = i;
+                while j + 1 < prog.nests.len()
+                    && prog.nests[j + 1]
+                        .tile
+                        .map(|t| t.group == tag.group)
+                        .unwrap_or(false)
+                {
+                    j += 1;
+                }
+                runs.push((i, j));
+                i = j + 1;
+            }
+        }
+    }
+    runs
+}
+
+/// Collapse the nests of one tile-group run into pipeline steps, one
+/// per tile index in schedule order (fused chain members of a tile
+/// merge into its step).
+pub fn run_steps(prog: &Program, run: (usize, usize), costs: &[NestCost]) -> Vec<PipeStep> {
+    let mut steps: Vec<(u32, PipeStep)> = Vec::new();
+    for pos in run.0..=run.1 {
+        let idx = prog.nests[pos].tile.map(|t| t.index).unwrap_or(0);
+        let c = costs[pos];
+        match steps.last_mut() {
+            Some((last, step)) if *last == idx => {
+                step.dma_in += c.dma_in;
+                step.compute += c.compute;
+                step.dma_out += c.dma_out;
+            }
+            _ => steps.push((
+                idx,
+                PipeStep { dma_in: c.dma_in, compute: c.compute, dma_out: c.dma_out },
+            )),
+        }
+    }
+    steps.into_iter().map(|(_, s)| s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::loopnest::{Program, TileTag};
+
+    fn tagged_prog() -> Program {
+        // 4 nests: untagged, two tiles of group 0, untagged
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8]);
+        let a = b.relu("a", x);
+        let c = b.relu("c", a);
+        let d = b.relu("d", c);
+        let e = b.relu("e", d);
+        b.mark_output(e);
+        let mut prog = Program::lower(b.finish());
+        prog.nests[1].tile = Some(TileTag { group: 0, index: 0, count: 2 });
+        prog.nests[2].tile = Some(TileTag { group: 0, index: 1, count: 2 });
+        prog
+    }
+
+    #[test]
+    fn runs_split_on_group_boundaries() {
+        let prog = tagged_prog();
+        assert_eq!(tile_runs(&prog), vec![(0, 0), (1, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn steps_merge_same_index_members() {
+        let mut prog = tagged_prog();
+        // make nest 2 a second member of tile 0 instead of tile 1
+        prog.nests[2].tile = Some(TileTag { group: 0, index: 0, count: 1 });
+        let costs = vec![
+            NestCost::default(),
+            NestCost { compute: 1.0, dma_in: 2.0, dma_out: 0.5 },
+            NestCost { compute: 3.0, dma_in: 0.25, dma_out: 4.0 },
+            NestCost::default(),
+        ];
+        let steps = run_steps(&prog, (1, 2), &costs);
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].compute, 4.0);
+        assert_eq!(steps[0].dma_in, 2.25);
+        assert_eq!(steps[0].dma_out, 4.5);
+    }
+
+    #[test]
+    fn distinct_indexes_stay_distinct_steps() {
+        let prog = tagged_prog();
+        let costs = vec![NestCost { compute: 1.0, dma_in: 1.0, dma_out: 1.0 }; 4];
+        let steps = run_steps(&prog, (1, 2), &costs);
+        assert_eq!(steps.len(), 2);
+    }
+}

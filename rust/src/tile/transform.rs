@@ -1,0 +1,325 @@
+//! Strip-mining loop nests into tile nests.
+//!
+//! A tile of a nest with domain `[0,E)` is the same nest restricted to
+//! the sub-box `o + [0, min(S, E-o))`: the domain becomes the tile box,
+//! every access map is composed with the shift `j ↦ j + o`, and guards
+//! (which constrain loop dims directly) are translated and clipped into
+//! tile-local coordinates. Tiles partition the original domain exactly
+//! — non-divisible extents produce smaller *boundary* tiles, never
+//! overlap or gaps — so the transformed program is just more nests of
+//! the ordinary kind: every downstream pass, the planner and the
+//! reference interpreter run on it unchanged.
+//!
+//! **Fused chains.** A producer followed by elementwise consumers of
+//! its output (conv → batch-norm → relu) is tiled as one *chain* on a
+//! shared grid over the producer's output space, with the members'
+//! tiles interleaved (`A@0 B@0 C@0 A@1 B@1 …`). The chain intermediates
+//! are then written and read tile-by-tile within a few schedule
+//! positions — the structure `crate::alloc` detects to give them
+//! double-buffered staging regions instead of whole-tensor residency,
+//! which is what lets tensors bigger than the scratchpad stay off DRAM
+//! entirely.
+//!
+//! Reduction dims (domain dims the store map drops) are never split:
+//! each output element keeps its full accumulation inside one tile
+//! nest, in the same lexicographic order — the determinism contract the
+//! differential oracle holds every pass to.
+
+use super::footprint::{shift_map, store_dim_map};
+use crate::ir::loopnest::{Access, Body, LoadStmt, LoopNest, TileTag};
+use crate::poly::piecewise::Guard;
+use crate::poly::IterDomain;
+
+/// One member of a (possibly length-1) fused chain: a nest position
+/// plus, per domain dim, the grid dim tiling it (`None` = keep full).
+#[derive(Clone, Debug)]
+pub struct ChainMember {
+    pub pos: usize,
+    pub dim_of_grid: Vec<Option<usize>>,
+}
+
+/// A tiling unit: consecutive nest positions sharing a tile grid over
+/// `grid_shape` (the head's output index space).
+#[derive(Clone, Debug)]
+pub struct Chain {
+    pub members: Vec<ChainMember>,
+    pub grid_shape: Vec<i64>,
+}
+
+impl Chain {
+    pub fn head(&self) -> usize {
+        self.members[0].pos
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Tile count for grid sizes `s`.
+    pub fn n_tiles(&self, s: &[i64]) -> i64 {
+        self.grid_shape
+            .iter()
+            .zip(s)
+            .map(|(&e, &t)| (e + t - 1) / t)
+            .product()
+    }
+
+    /// Tile-box `(offsets, extents)` of `member` for grid tile `go`
+    /// with grid sizes `s`: grid-tiled dims take the (clipped) grid
+    /// slice, reduction dims stay full.
+    pub fn member_box(
+        &self,
+        nest: &LoopNest,
+        member: &ChainMember,
+        go: &[i64],
+        s: &[i64],
+    ) -> (Vec<i64>, Vec<i64>) {
+        let ext = nest.domain.extents();
+        let mut offs = vec![0i64; ext.len()];
+        let mut exts = ext.to_vec();
+        for (d, grid) in member.dim_of_grid.iter().enumerate() {
+            if let Some(k) = *grid {
+                offs[d] = go[k];
+                exts[d] = s[k].min(self.grid_shape[k] - go[k]);
+            }
+        }
+        (offs, exts)
+    }
+
+    /// Lexicographic grid-tile origins for grid sizes `s`.
+    pub fn tile_origins(&self, s: &[i64]) -> Vec<Vec<i64>> {
+        let counts: Vec<i64> = self
+            .grid_shape
+            .iter()
+            .zip(s)
+            .map(|(&e, &t)| (e + t - 1) / t)
+            .collect();
+        let mut origins = Vec::with_capacity(counts.iter().product::<i64>() as usize);
+        let mut cur = vec![0i64; counts.len()];
+        loop {
+            origins.push(cur.iter().zip(s).map(|(&c, &t)| c * t).collect());
+            let mut d = counts.len();
+            loop {
+                if d == 0 {
+                    return origins;
+                }
+                d -= 1;
+                cur[d] += 1;
+                if cur[d] < counts[d] {
+                    break;
+                }
+                cur[d] = 0;
+            }
+        }
+    }
+}
+
+/// Restrict one nest to the tile box `offsets + [0, extents)`.
+pub fn tile_of(nest: &LoopNest, offsets: &[i64], extents: &[i64], tag: TileTag) -> LoopNest {
+    let dom = IterDomain::new(extents);
+    let shift = shift_map(offsets);
+    let store_map = nest.store.map.compose(&shift).simplified_in(&dom);
+
+    let retile_load = |load: &LoadStmt| -> LoadStmt {
+        let mut pieces = Vec::with_capacity(load.pieces.len());
+        for piece in &load.pieces {
+            let mut guards = Vec::with_capacity(piece.guards.len());
+            let mut sat = true;
+            for g in &piece.guards {
+                // guard on loop dim `g.dim`: translate into tile-local
+                // coordinates and clip to the tile box
+                let lo = (g.lo - offsets[g.dim]).max(0);
+                let hi = (g.hi - offsets[g.dim]).min(extents[g.dim]);
+                if lo >= hi {
+                    sat = false; // piece never applies inside this tile
+                    break;
+                }
+                if lo > 0 || hi < extents[g.dim] {
+                    guards.push(Guard { dim: g.dim, lo, hi });
+                }
+                // else: guard covers the whole tile range — drop it
+            }
+            if !sat {
+                continue;
+            }
+            pieces.push(Access {
+                guards,
+                tensor: piece.tensor,
+                map: piece.map.compose(&shift).simplified_in(&dom),
+                oob_zero: piece.oob_zero,
+            });
+        }
+        LoadStmt { pieces }
+    };
+
+    let body = match &nest.body {
+        Body::Copy { load } => Body::Copy { load: retile_load(load) },
+        Body::Compute { loads, flops_per_point } => Body::Compute {
+            loads: loads.iter().map(retile_load).collect(),
+            flops_per_point: *flops_per_point,
+        },
+    };
+    LoopNest {
+        node: nest.node,
+        tile: Some(tag),
+        name: format!("{}@t{}", nest.name, tag.index),
+        domain: dom,
+        store: crate::ir::loopnest::StoreStmt { tensor: nest.store.tensor, map: store_map },
+        body,
+    }
+}
+
+/// Emit the interleaved tile nests of a chain under grid sizes `s`, in
+/// schedule order: all members at tile 0, then all members at tile 1, …
+pub fn tile_chain(nests: &[LoopNest], chain: &Chain, s: &[i64], group: u32) -> Vec<LoopNest> {
+    let origins = chain.tile_origins(s);
+    let count = origins.len() as u32;
+    let mut out = Vec::with_capacity(origins.len() * chain.len());
+    for (idx, go) in origins.iter().enumerate() {
+        for m in &chain.members {
+            let nest = &nests[m.pos];
+            let (offs, exts) = chain.member_box(nest, m, go, s);
+            let tag = TileTag { group, index: idx as u32, count };
+            out.push(tile_of(nest, &offs, &exts, tag));
+        }
+    }
+    out
+}
+
+/// The head-member grid map: grid dim `k` (an output-space dim) tiles
+/// the domain dim its store component forwards; constant components
+/// (reduction-collapsed output dims) tile nothing.
+pub fn head_dim_map(nest: &LoopNest) -> Option<Vec<Option<usize>>> {
+    let sm = store_dim_map(nest)?;
+    let in_dims = nest.store.map.in_dims();
+    let mut dim_of_grid = vec![None; in_dims];
+    for (k, d) in sm.iter().enumerate() {
+        if let Some(d) = *d {
+            dim_of_grid[d] = Some(k);
+        }
+    }
+    Some(dim_of_grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::loopnest::Program;
+    use std::collections::HashSet;
+
+    fn single_chain(prog: &Program, pos: usize) -> Chain {
+        let nest = &prog.nests[pos];
+        let dim_of_grid = head_dim_map(nest).expect("tileable store");
+        let grid_shape: Vec<i64> = prog.graph.tensor(nest.store.tensor).shape.clone();
+        Chain {
+            members: vec![ChainMember { pos, dim_of_grid }],
+            grid_shape,
+        }
+    }
+
+    #[test]
+    fn tiles_partition_domain_exactly_with_prime_extent() {
+        // 13 is prime: tile size 4 gives boundary tiles of extent 1
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[13, 6]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let prog = Program::lower(b.finish());
+        // t's nest domain is the output box [6, 13]
+        let chain = single_chain(&prog, 0);
+        let s = vec![4, 4];
+        let tiles = tile_chain(&prog.nests, &chain, &s, 0);
+        assert_eq!(tiles.len(), 2 * 4);
+        // every original domain point covered exactly once: collect the
+        // store images (store is identity on the output box)
+        let mut seen: HashSet<Vec<i64>> = HashSet::new();
+        for tile in &tiles {
+            for p in tile.domain.points() {
+                let stored = tile.store.map.apply(&p);
+                assert!(seen.insert(stored.clone()), "double cover at {stored:?}");
+            }
+        }
+        assert_eq!(seen.len() as i64, prog.nests[0].domain.cardinality());
+    }
+
+    #[test]
+    fn tiled_copy_reads_same_sources() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[7, 5]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let prog = Program::lower(b.finish());
+        let chain = single_chain(&prog, 0);
+        let tiles = tile_chain(&prog.nests, &chain, &[3, 2], 0);
+        // per output element, source index must match the untiled nest
+        let orig = &prog.nests[0];
+        for tile in &tiles {
+            let Body::Copy { load } = &tile.body else { panic!() };
+            for p in tile.domain.points() {
+                let out_idx = tile.store.map.apply(&p);
+                let (src_t, src_idx) = load.at(&p).unwrap();
+                // find the untiled point producing the same output
+                let q = out_idx.clone(); // identity store on the output box
+                let (ot, oidx) = {
+                    let Body::Copy { load } = &orig.body else { panic!() };
+                    let (a, b2) = load.at(&q).unwrap();
+                    (a, b2)
+                };
+                assert_eq!(src_t, ot);
+                assert_eq!(src_idx, oidx);
+            }
+        }
+    }
+
+    #[test]
+    fn guards_rewritten_per_tile() {
+        // pad produces piecewise loads with guards; tiling must keep
+        // exactly-once coverage inside every tile
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[5]);
+        let p = b.pad("p", x, &[2], &[3]); // out extent 10
+        b.mark_output(p);
+        let prog = Program::lower(b.finish());
+        let chain = single_chain(&prog, 0);
+        let tiles = tile_chain(&prog.nests, &chain, &[3], 0);
+        assert_eq!(tiles.len(), 4); // 3+3+3+1
+        for tile in &tiles {
+            let Body::Copy { load } = &tile.body else { panic!() };
+            for pt in tile.domain.points() {
+                let n = load.pieces.iter().filter(|a| a.holds(&pt)).count();
+                assert_eq!(n, 1, "tile {} point {pt:?} covered {n}x", tile.name);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_interleaves_members() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8]);
+        let t = b.relu("r", x);
+        let y = b.identity("y", t);
+        b.mark_output(y);
+        let prog = Program::lower(b.finish());
+        let chain = Chain {
+            members: vec![
+                ChainMember { pos: 0, dim_of_grid: vec![Some(0)] },
+                ChainMember { pos: 1, dim_of_grid: vec![Some(0)] },
+            ],
+            grid_shape: vec![8],
+        };
+        let tiles = tile_chain(&prog.nests, &chain, &[4], 3);
+        let names: Vec<&str> = tiles.iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names, vec!["r@t0", "y@t0", "r@t1", "y@t1"]);
+        for (i, tile) in tiles.iter().enumerate() {
+            let tag = tile.tile.unwrap();
+            assert_eq!(tag.group, 3);
+            assert_eq!(tag.count, 2);
+            assert_eq!(tag.index as usize, i / 2);
+        }
+    }
+}

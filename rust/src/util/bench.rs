@@ -115,6 +115,21 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write a machine-readable benchmark record to
+/// `$BENCH_JSON_DIR/<name>` (default: `target/`, which is gitignored —
+/// ad-hoc `cargo bench` runs must not litter the working tree). The
+/// bench mains call this so `ci.sh` can collect per-run JSON artifacts
+/// (`BENCH_plan.json`, `BENCH_tile.json`) for the perf trajectory.
+pub fn write_json_record(name: &str, json: &crate::util::json::Json) {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| "target".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = std::path::Path::new(&dir).join(name);
+    match std::fs::write(&path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+}
+
 /// A collection of benchmarks printed as a table, used by bench mains.
 pub struct Suite {
     title: String,

@@ -30,17 +30,36 @@ pub struct FuzzOpts {
     pub ops: usize,
     /// Cap on any tensor's element count.
     pub max_elems: i64,
+    /// Force the first input to have at least this many elements
+    /// (0 = no floor). Set above a test chip's scratchpad capacity so
+    /// fuzzed graphs exercise the tiling and streaming-fallback paths
+    /// instead of always fitting on chip.
+    pub min_first_input_elems: i64,
 }
 
 impl Default for FuzzOpts {
     fn default() -> Self {
-        FuzzOpts { ops: 12, max_elems: 192 }
+        FuzzOpts { ops: 12, max_elems: 192, min_first_input_elems: 0 }
     }
 }
 
-/// Generate a graph from a seed with default limits.
+impl FuzzOpts {
+    /// Oversized-tensor variant: the first input alone (≥ 1280 f32
+    /// elements = 5 KiB) exceeds the 4 KiB scratchpad of
+    /// `AccelConfig::tiny(4096)`, so planner streaming and the tiling
+    /// stage both trigger. Fewer ops keep exhaustive interpretation
+    /// cheap despite the bigger tensors.
+    pub fn oversized() -> Self {
+        FuzzOpts { ops: 8, max_elems: 2560, min_first_input_elems: 1280 }
+    }
+}
+
+/// Generate a graph from a seed with default limits — except that
+/// every fourth seed uses [`FuzzOpts::oversized`], so the corpus mixes
+/// chip-sized and scratchpad-busting tensors deterministically.
 pub fn fuzz_graph(seed: u64) -> Graph {
-    fuzz_graph_with(seed, &FuzzOpts::default())
+    let opts = if seed % 4 == 3 { FuzzOpts::oversized() } else { FuzzOpts::default() };
+    fuzz_graph_with(seed, &opts)
 }
 
 /// Generate a graph from a seed.
@@ -50,7 +69,11 @@ pub fn fuzz_graph_with(seed: u64, opts: &FuzzOpts) -> Graph {
     let mut pool: Vec<TensorId> = Vec::new();
     let n_inputs = 1 + r.below(2) as usize;
     for i in 0..n_inputs {
-        let shape = random_shape(&mut r, opts.max_elems);
+        let shape = if i == 0 && opts.min_first_input_elems > 0 {
+            random_big_shape(&mut r, opts.min_first_input_elems, opts.max_elems)
+        } else {
+            random_shape(&mut r, opts.max_elems)
+        };
         pool.push(b.input(&format!("in{i}"), &shape));
     }
     let mut made = 0usize;
@@ -92,6 +115,15 @@ fn random_shape(r: &mut SplitMix64, max_elems: i64) -> Vec<i64> {
             return dims;
         }
     }
+}
+
+/// A rank-2 shape with `min_elems ≤ numel ≤ max_elems` — big enough to
+/// bust a test scratchpad, rank-2 so matmul/elementwise chains apply.
+fn random_big_shape(r: &mut SplitMix64, min_elems: i64, max_elems: i64) -> Vec<i64> {
+    let rows = r.range_i64(2, 9); // 2..=8
+    let lo = (min_elems + rows - 1) / rows;
+    let hi = (max_elems / rows).max(lo);
+    vec![rows, r.range_i64(lo, hi + 1)]
 }
 
 /// Random factorization of `numel` into 1–3 dims.
@@ -305,12 +337,28 @@ mod tests {
 
     #[test]
     fn respects_element_cap() {
-        let opts = FuzzOpts { ops: 16, max_elems: 64 };
+        let opts = FuzzOpts { ops: 16, max_elems: 64, ..Default::default() };
         for seed in 0..20u64 {
             let g = fuzz_graph_with(seed, &opts);
             for t in g.tensors() {
                 assert!(t.numel() <= 64, "seed {seed}: {} elems", t.numel());
             }
+        }
+    }
+
+    #[test]
+    fn oversized_seeds_bust_a_tiny_scratchpad() {
+        // every 4th seed must carry at least one tensor bigger than the
+        // 4 KiB test scratchpad, and stay valid
+        for k in 0..8u64 {
+            let seed = 4 * k + 3;
+            let g = fuzz_graph(seed);
+            verify_graph(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let biggest = g.tensors().map(|t| t.size_bytes()).max().unwrap();
+            assert!(
+                biggest > 4096,
+                "seed {seed}: biggest tensor {biggest} B fits the scratchpad"
+            );
         }
     }
 

@@ -20,7 +20,7 @@ use polymem::ir::verify::verify_graph;
 use polymem::ir::{Graph, GraphBuilder};
 use polymem::models::{self, WaveNetConfig};
 use polymem::passes::dme::run_dme;
-use polymem::passes::manager::{AllocStage, BankMode, PassManager};
+use polymem::passes::manager::{AllocStage, BankMode, PassManager, TileStage};
 use polymem::poly::AccessMap;
 use polymem::util::fuzzgraph;
 
@@ -59,6 +59,14 @@ fn planned(cfg: AccelConfig) -> PassManager {
     }
 }
 
+fn tiled(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        tile: Some(TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
 #[test]
 fn zoo_equivalent_through_global_planned_pipeline() {
     // a cramped scratchpad so the plan stage actually splits windows /
@@ -70,6 +78,24 @@ fn zoo_equivalent_through_global_planned_pipeline() {
         assert_eq!(rep.stages.first().map(|s| s.as_str()), Some("lower"), "{name}");
         assert_eq!(rep.stages.last().map(|s| s.as_str()), Some("plan"), "{name}");
         assert!(rep.elements > 0, "{name}: nothing compared");
+    }
+}
+
+#[test]
+fn zoo_equivalent_through_tiled_planned_pipeline() {
+    // a scratchpad smaller than the zoo's feature maps, so the tile
+    // stage strip-mines real chains and the planner stages their
+    // intermediates — the full lower → dme → tile → bank → plan ladder
+    // must stay bit-identical
+    let pm = tiled(AccelConfig::tiny(8 * 1024));
+    for (name, g) in zoo() {
+        let rep = diff_pipeline(g, &pm, SEED).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            rep.stages.iter().any(|s| s == "tile"),
+            "{name}: tile stage not observed in {:?}",
+            rep.stages
+        );
+        assert_eq!(rep.stages.last().map(|s| s.as_str()), Some("plan"), "{name}");
     }
 }
 
@@ -111,13 +137,17 @@ fn fuzzed_graphs_equivalent_across_all_stages() {
         verify_graph(&g)
             .unwrap_or_else(|e| panic!("FUZZ_SEED={seed}: generator built invalid graph: {e}"));
         // rotate pipeline configurations so every stage combination is
-        // fuzzed: global / local / global + static planning. Derived
-        // from the seed (not the loop index) so FUZZ_SEED=<s>
-        // FUZZ_CASES=1 replays the exact failing case, config included.
-        let pm = match seed % 3 {
+        // fuzzed: global / local / global + static planning / tiling +
+        // planning. Derived from the seed (not the loop index) so
+        // FUZZ_SEED=<s> FUZZ_CASES=1 replays the exact failing case,
+        // config included. Seeds ≡ 3 (mod 4) are exactly the ones the
+        // generator hands oversized tensors (`FuzzOpts::oversized`), so
+        // the tiled config always sees scratchpad-busting graphs.
+        let pm = match seed % 4 {
             0 => PassManager::default(),
             1 => PassManager { bank_mode: BankMode::Local, ..Default::default() },
-            _ => planned(AccelConfig::tiny(4 * 1024)),
+            2 => planned(AccelConfig::tiny(4 * 1024)),
+            _ => tiled(AccelConfig::tiny(4 * 1024)),
         };
         diff_pipeline(g, &pm, seed).unwrap_or_else(|e| {
             panic!("differential mismatch (replay with FUZZ_SEED={seed} FUZZ_CASES=1): {e}")
