@@ -5,11 +5,14 @@
 //!   the bank geometry?);
 //! * **A3** — eviction-crossbar flexibility (`col_flex_limit`), the
 //!   knob behind the residual copies of E2;
-//! * **A4** — scratchpad-size sweep (when do copies fall off chip?).
+//! * **A4** — scratchpad-size sweep (when do copies fall off chip?);
+//! * **A5** — joint decision search vs staged greedy: does solving the
+//!   memory decisions together (the `opt` stage) beat the independent
+//!   per-pass heuristics on a cramped chip?
 //!
 //! Run: `cargo bench --bench bench_ablations`
 
-use polymem::accel::{simulate, AccelConfig};
+use polymem::accel::{simulate, simulate_pipelined, AccelConfig};
 use polymem::ir::Program;
 use polymem::models::{parallel_wavenet, resnet50};
 use polymem::passes::bank::BankConfig;
@@ -126,4 +129,55 @@ fn main() {
         ]);
     }
     println!("{}", t4.render());
+
+    // ---- A5: joint decision search vs staged greedy ----
+    println!("A5 — joint decision search vs staged greedy (ResNet-50, 2 MiB scratchpad):");
+    use polymem::passes::manager::{AllocStage, OptStage, TileStage};
+    let mut cramped = cfg.clone();
+    cramped.bank_bytes /= 4;
+    let staged_pm = PassManager {
+        tile: Some(TileStage::for_accel(cramped.clone())),
+        alloc: Some(AllocStage::for_accel(cramped.clone())),
+        ..Default::default()
+    };
+    let srep = staged_pm.run(resnet50(1)).unwrap();
+    let staged = simulate_pipelined(
+        &srep.program,
+        srep.plan.as_ref().unwrap(),
+        &cramped,
+        None,
+    )
+    .unwrap();
+    let joint_pm = PassManager {
+        opt: Some(OptStage::for_accel(cramped.clone())),
+        alloc: Some(AllocStage::for_accel(cramped.clone())),
+        ..Default::default()
+    };
+    let jrep = joint_pm.run(resnet50(1)).unwrap();
+    let jstats = jrep.opt.as_ref().unwrap();
+    let joint = simulate_pipelined(
+        &jrep.program,
+        jrep.plan.as_ref().unwrap(),
+        &cramped,
+        None,
+    )
+    .unwrap();
+    let mut t5 = report::Table::new(&["pipeline", "off-chip", "pipelined latency", "note"]);
+    t5.row(&[
+        "staged greedy (tile+plan)".into(),
+        report::mb(staged.offchip_total()),
+        format!("{:.3} ms", staged.seconds * 1e3),
+        "per-pass local proxies".into(),
+    ]);
+    t5.row(&[
+        "joint search (opt)".into(),
+        report::mb(joint.offchip_total()),
+        format!("{:.3} ms", joint.seconds * 1e3),
+        format!("{} candidates, {}", jstats.candidates, jstats.decision),
+    ]);
+    println!("{}", t5.render());
+    assert!(
+        joint.offchip_total() <= staged.offchip_total(),
+        "joint search lost to the staged greedy it seeds from"
+    );
 }

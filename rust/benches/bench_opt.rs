@@ -1,0 +1,146 @@
+//! Bench E5: whole-model joint optimization vs the staged greedy.
+//!
+//! The acceptance scenario of `cost/` + `opt/`: on a 2 MiB scratchpad
+//! (smaller than ResNet-50's and MobileNet's early feature maps), the
+//! joint beam search over fusion / tile-budget / schedule / spill
+//! decision vectors must deliver **strictly fewer off-chip bytes**
+//! than the staged-greedy pipeline (tile + plan with each pass's local
+//! proxy) on both models — the cross-stage trades (conv-chain halo
+//! recompute keeping boundary tensors staged, converging-branch
+//! fusion) that the independent greedy heuristics are structurally
+//! unable to make. Also asserts the calibration invariant on the
+//! winning plans: predicted bytes equal simulated bytes exactly.
+//!
+//! Emits one machine-readable record per model to
+//! `$BENCH_JSON_DIR/BENCH_opt.json` (ci.sh collects it).
+//!
+//! Run: `cargo bench --bench bench_opt`
+
+use polymem::accel::{simulate_pipelined, AccelConfig, SimReport};
+use polymem::cost;
+use polymem::ir::Graph;
+use polymem::passes::manager::{AllocStage, OptStage, PassManager, TileStage};
+use polymem::report;
+use polymem::util::bench::{black_box, write_json_record, Bench, Suite};
+use polymem::util::json::Json;
+
+/// The 2 MiB configuration (inferentia-like geometry, banks shrunk).
+fn two_mib() -> AccelConfig {
+    let mut cfg = AccelConfig::inferentia_like();
+    cfg.bank_bytes /= 4; // 8 MiB -> 2 MiB
+    cfg.name = "inferentia-like/4".into();
+    cfg
+}
+
+struct Row {
+    staged: SimReport,
+    joint: SimReport,
+    opt_stats: polymem::opt::OptStats,
+}
+
+fn run_pair(g: Graph, cfg: &AccelConfig) -> Row {
+    // staged greedy: the fixed tile stage + planner, every decision
+    // scored by its own local proxy
+    let staged_pm = PassManager {
+        tile: Some(TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        ..Default::default()
+    };
+    let srep = staged_pm.run(g.clone()).expect("staged pipeline");
+    let splan = srep.plan.as_ref().expect("plan");
+    let staged =
+        simulate_pipelined(&srep.program, splan, cfg, None).expect("staged plan verifies");
+
+    // joint: the beam search over decision vectors, scored by cost/
+    let joint_pm = PassManager {
+        opt: Some(OptStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        ..Default::default()
+    };
+    let jrep = joint_pm.run(g).expect("joint pipeline");
+    let jplan = jrep.plan.as_ref().expect("plan");
+    let joint =
+        simulate_pipelined(&jrep.program, jplan, cfg, None).expect("joint plan verifies");
+
+    // calibration: the search's predicted bytes are the simulated bytes
+    let predicted = cost::evaluate(&jrep.program, jplan, cfg);
+    assert_eq!(
+        predicted.offchip_total(),
+        joint.offchip_total(),
+        "cost model out of calibration on the winning plan"
+    );
+    let opt_stats = jrep.opt.expect("opt stage ran");
+    assert_eq!(
+        opt_stats.best_offchip,
+        joint.offchip_total(),
+        "downstream replay diverged from the winning candidate"
+    );
+    Row { staged, joint, opt_stats }
+}
+
+fn main() {
+    println!("\nE5 — whole-model joint optimization vs staged greedy (2 MiB scratchpad)\n");
+    let cfg = two_mib();
+    let mut records: Vec<Json> = Vec::new();
+    let mut table = report::Table::new(&[
+        "model",
+        "staged off-chip",
+        "joint off-chip",
+        "reduction",
+        "candidates",
+        "decision",
+    ]);
+    for (name, g) in [
+        ("resnet50", polymem::models::resnet50(1)),
+        ("mobilenet", polymem::models::mobilenet_v1(1)),
+    ] {
+        let row = run_pair(g, &cfg);
+        assert!(
+            row.joint.offchip_total() < row.staged.offchip_total(),
+            "{name}: joint off-chip {} not strictly below staged greedy {}",
+            row.joint.offchip_total(),
+            row.staged.offchip_total()
+        );
+        table.row(&[
+            name.to_string(),
+            report::mb(row.staged.offchip_total()),
+            report::mb(row.joint.offchip_total()),
+            format!(
+                "{:.1}%",
+                report::pct_reduction(row.staged.offchip_total(), row.joint.offchip_total())
+            ),
+            row.opt_stats.candidates.to_string(),
+            row.opt_stats.decision.clone(),
+        ]);
+        records.push(Json::obj(vec![
+            ("model", Json::Str(name.into())),
+            ("accel", cfg.to_json()),
+            ("staged", report::sim_to_json(&row.staged)),
+            ("joint", report::sim_to_json(&row.joint)),
+            ("opt_stats", row.opt_stats.to_json()),
+            (
+                "offchip_reduction_pct",
+                Json::Num(report::pct_reduction(
+                    row.staged.offchip_total(),
+                    row.joint.offchip_total(),
+                )),
+            ),
+        ]));
+    }
+    println!("{}", table.render());
+    write_json_record("BENCH_opt.json", &Json::Arr(records));
+
+    // ---- timing ----
+    let mut suite = Suite::new("E5 timing");
+    let g = polymem::models::mobilenet_v1(1);
+    suite.add(Bench::new("opt+plan(mobilenet)").samples(2).run(|| {
+        let pm = PassManager {
+            opt: Some(OptStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            verify: false,
+            ..Default::default()
+        };
+        black_box(pm.run(g.clone()).unwrap())
+    }));
+    suite.finish();
+}

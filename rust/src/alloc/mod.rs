@@ -48,8 +48,10 @@ pub mod schedule;
 pub mod spill;
 
 pub use offsets::{Home, PlanWindow, Region, TensorPlan, ALLOC_ALIGN};
-pub use schedule::{schedule_min_footprint, ScheduleOpts, ScheduleStats};
-pub use spill::SpillAction;
+pub use schedule::{
+    schedule_groups_min_footprint, schedule_min_footprint, ScheduleOpts, ScheduleStats,
+};
+pub use spill::{SpillAction, SpillFlavor};
 
 use crate::accel::config::AccelConfig;
 use crate::ir::loopnest::Program;
@@ -74,11 +76,19 @@ pub struct AllocOpts {
     /// that require guaranteed residency turn this on; the default
     /// keeps the documented streaming fallback.
     pub require_fit: bool,
+    /// Spill victim ranking rule (see [`SpillFlavor`]); a joint-search
+    /// axis, defaulting to the historical furthest-gap policy.
+    pub spill: SpillFlavor,
 }
 
 impl Default for AllocOpts {
     fn default() -> Self {
-        AllocOpts { lookahead: 4, max_rounds: 512, require_fit: false }
+        AllocOpts {
+            lookahead: 4,
+            max_rounds: 512,
+            require_fit: false,
+            spill: SpillFlavor::FurthestGap,
+        }
     }
 }
 
@@ -523,18 +533,15 @@ pub fn plan_memory(
             }
         }
     }
-    // Tiled programs keep their schedule: the tile transform already
-    // interleaved fused chains for minimal footprint, and the node-
-    // granular scheduler would unweave them (it sorts nests by node).
+    // Tiled programs reschedule at tile-*group* granularity: the tile
+    // transform interleaved each fused chain for minimal footprint and
+    // the node-granular scheduler would unweave it, so whole groups
+    // move as units instead (each group's interleave kept verbatim).
     let tiled = program.nests.iter().any(|n| n.tile.is_some());
+    let sched_opts = ScheduleOpts { lookahead: opts.lookahead, ..Default::default() };
     let (mut program, sched) = if tiled {
-        let peak = Liveness::analyze(&program).peak_live_bytes(&program);
-        (
-            program,
-            ScheduleStats { peak_before: peak, peak_after: peak, ..Default::default() },
-        )
+        schedule_groups_min_footprint(program, &sched_opts)
     } else {
-        let sched_opts = ScheduleOpts { lookahead: opts.lookahead, ..Default::default() };
         schedule_min_footprint(program, &sched_opts)
     };
 
@@ -605,7 +612,14 @@ pub fn plan_memory(
                     dram.insert(conflict.tensor);
                     SpillAction::Stream { tensor: conflict.tensor }
                 } else {
-                    spill::resolve(&mut program, &lv, &conflict, &mut dram, &mut evictions)
+                    spill::resolve(
+                        &mut program,
+                        &lv,
+                        &conflict,
+                        &mut dram,
+                        &mut evictions,
+                        opts.spill.policy(),
+                    )
                 };
                 match action {
                     SpillAction::SplitWindow { .. } => stats.window_splits += 1,

@@ -17,11 +17,12 @@
 //! The result is guaranteed never worse than the input order: if the
 //! greedy order raises the measured peak, the input order is kept.
 
+use crate::cost::policy::{DecisionPolicy, GreedyPolicy};
 use crate::ir::graph::{Node, NodeId};
 use crate::ir::loopnest::Program;
 use crate::ir::tensor::{TensorId, TensorKind};
 use crate::passes::liveness::Liveness;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 /// Scheduler configuration.
 #[derive(Clone, Copy, Debug)]
@@ -46,7 +47,10 @@ pub struct ScheduleStats {
     pub peak_before: i64,
     /// Peak of the chosen order (== `peak_before` when unchanged).
     pub peak_after: i64,
-    /// Nodes whose schedule position changed.
+    /// Schedule items whose position changed: graph nodes under the
+    /// node-granular scheduler, tile-group *units* under
+    /// [`schedule_groups_min_footprint`] (one unit may hold many
+    /// nests, so the two counts are not comparable across modes).
     pub moved_nodes: usize,
     /// True when the greedy order was worse and the input order kept.
     pub kept_input_order: bool,
@@ -203,6 +207,16 @@ impl SchedGraph {
 /// Search a topological order minimizing peak live footprint, then
 /// reorder the program (graph nodes and nests consistently) to it.
 pub fn schedule_min_footprint(prog: Program, opts: &ScheduleOpts) -> (Program, ScheduleStats) {
+    schedule_min_footprint_with(prog, opts, &GreedyPolicy)
+}
+
+/// [`schedule_min_footprint`] with an explicit candidate-scoring
+/// policy ([`DecisionPolicy::schedule_key`]).
+pub fn schedule_min_footprint_with(
+    prog: Program,
+    opts: &ScheduleOpts,
+    policy: &dyn DecisionPolicy,
+) -> (Program, ScheduleStats) {
     let peak_before = Liveness::analyze(&prog).peak_live_bytes(&prog);
     let g = SchedGraph::build(&prog);
     let n = g.nodes.len();
@@ -222,7 +236,7 @@ pub fn schedule_min_footprint(prog: Program, opts: &ScheduleOpts) -> (Program, S
         assert!(!ready.is_empty(), "scheduler: graph has a cycle?");
         let candidates: Vec<usize> =
             ready.iter().copied().take(opts.max_candidates.max(1)).collect();
-        let mut best: Option<(i64, i64, usize)> = None; // (horizon peak, after, idx)
+        let mut best: Option<((i64, i64), usize)> = None; // (policy key, idx)
         for &c in &candidates {
             let mut probe = st.clone();
             let after = g.step(&mut probe, c);
@@ -233,15 +247,12 @@ pub fn schedule_min_footprint(prog: Program, opts: &ScheduleOpts) -> (Program, S
                     None => break,
                 }
             }
-            let key = (horizon_peak, after, c);
-            if best
-                .map(|(hp, af, i)| (key.0, key.1, key.2) < (hp, af, i))
-                .unwrap_or(true)
-            {
-                best = Some(key);
+            let key = policy.schedule_key(horizon_peak, after);
+            if best.map(|(bk, bi)| (key, c) < (bk, bi)).unwrap_or(true) {
+                best = Some((key, c));
             }
         }
-        let (_, _, chosen) = best.expect("non-empty candidate set");
+        let (_, chosen) = best.expect("non-empty candidate set");
         g.step(&mut st, chosen);
         order.push(chosen);
     }
@@ -268,6 +279,261 @@ pub fn schedule_min_footprint(prog: Program, opts: &ScheduleOpts) -> (Program, S
         };
         (reordered, stats)
     }
+}
+
+/// Tile-group-granular rescheduling.
+///
+/// Tiled programs used to skip the min-footprint search entirely: the
+/// node-granular reorder sorts nests by node and would unweave the
+/// chain interleaving (`A@0 B@0 A@1 B@1 …`) the staging detection
+/// depends on. Here the schedule units are the maximal tile-group
+/// runs ([`crate::tile::pipeline::tile_runs`]; untagged nests are
+/// singleton units): units are reordered greedily for minimum peak
+/// live footprint with the same bounded lookahead, and each unit's
+/// internal interleave is preserved verbatim. Unit dependencies are
+/// taken at *node* granularity (every unit of a producer node precedes
+/// every unit of its consumer nodes, and one node's units keep their
+/// relative order), which keeps both the nest schedule and the graph
+/// node order valid. Like the node scheduler, the result is never
+/// worse than the input: if the greedy unit order measures a higher
+/// peak, the input order is kept.
+pub fn schedule_groups_min_footprint(
+    prog: Program,
+    opts: &ScheduleOpts,
+) -> (Program, ScheduleStats) {
+    schedule_groups_min_footprint_with(prog, opts, &GreedyPolicy)
+}
+
+/// [`schedule_groups_min_footprint`] with an explicit scoring policy.
+pub fn schedule_groups_min_footprint_with(
+    prog: Program,
+    opts: &ScheduleOpts,
+    policy: &dyn DecisionPolicy,
+) -> (Program, ScheduleStats) {
+    let peak_before = Liveness::analyze(&prog).peak_live_bytes(&prog);
+    let unchanged = |prog: Program| {
+        let stats = ScheduleStats {
+            peak_before,
+            peak_after: peak_before,
+            ..Default::default()
+        };
+        (prog, stats)
+    };
+    let runs = crate::tile::pipeline::tile_runs(&prog);
+    let n = runs.len();
+    if n <= 1 {
+        return unchanged(prog);
+    }
+
+    // unit metadata: nodes per unit (first-occurrence order), tensor
+    // reads/writes per unit, footprint bytes per tensor
+    let mut units_of_node: BTreeMap<NodeId, Vec<usize>> = BTreeMap::new();
+    let mut reads: Vec<BTreeSet<TensorId>> = vec![BTreeSet::new(); n];
+    let mut writes: Vec<BTreeSet<TensorId>> = vec![BTreeSet::new(); n];
+    for (u, &(a, b)) in runs.iter().enumerate() {
+        for nest in &prog.nests[a..=b] {
+            let e = units_of_node.entry(nest.node).or_default();
+            if e.last() != Some(&u) {
+                e.push(u);
+            }
+            writes[u].insert(nest.store.tensor);
+            for load in nest.body.loads() {
+                for piece in &load.pieces {
+                    if let Some(t) = piece.tensor {
+                        reads[u].insert(t);
+                    }
+                }
+            }
+        }
+    }
+    let bytes: BTreeMap<TensorId, i64> = prog
+        .graph
+        .tensors()
+        .map(|t| {
+            let b = match t.kind {
+                TensorKind::Intermediate | TensorKind::Output => t.size_bytes(),
+                _ => 0,
+            };
+            (t.id, b)
+        })
+        .collect();
+    let first_writer: BTreeMap<TensorId, usize> = {
+        let mut m = BTreeMap::new();
+        for (u, w) in writes.iter().enumerate() {
+            for &t in w {
+                m.entry(t).or_insert(u);
+            }
+        }
+        m
+    };
+    // consumer-unit counts (usize::MAX pins graph outputs live)
+    let outputs: BTreeSet<TensorId> = prog.graph.outputs().into_iter().collect();
+    let mut consumers: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for &t in &outputs {
+        consumers.insert(t, usize::MAX);
+    }
+    for r in &reads {
+        for &t in r {
+            let c = consumers.entry(t).or_insert(0);
+            if *c != usize::MAX {
+                *c += 1;
+            }
+        }
+    }
+
+    // node-granular dependency edges between units
+    let producer_of: HashMap<TensorId, NodeId> =
+        prog.graph.nodes().iter().map(|nd| (nd.output, nd.id)).collect();
+    let mut preds: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for node in prog.graph.nodes() {
+        let Some(cu) = units_of_node.get(&node.id) else { continue };
+        for inp in &node.inputs {
+            if let Some(pn) = producer_of.get(inp) {
+                if let Some(pu) = units_of_node.get(pn) {
+                    for &a in pu {
+                        for &b in cu {
+                            if a != b {
+                                preds[b].insert(a);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for w in cu.windows(2) {
+            preds[w[1]].insert(w[0]);
+        }
+    }
+
+    // greedy min-footprint over units with bounded lookahead
+    #[derive(Clone)]
+    struct UnitState {
+        consumers_left: BTreeMap<TensorId, usize>,
+        indegree: Vec<usize>,
+        scheduled: Vec<bool>,
+        live: i64,
+    }
+    let succs: Vec<Vec<usize>> = {
+        let mut s = vec![Vec::new(); n];
+        for (b, ps) in preds.iter().enumerate() {
+            for &a in ps {
+                s[a].push(b);
+            }
+        }
+        s
+    };
+    let step = |st: &mut UnitState, u: usize| -> i64 {
+        st.scheduled[u] = true;
+        for &s in &succs[u] {
+            st.indegree[s] -= 1;
+        }
+        for &t in &writes[u] {
+            if first_writer.get(&t) == Some(&u) {
+                st.live += bytes[&t];
+            }
+        }
+        for &t in &reads[u] {
+            if let Some(c) = st.consumers_left.get_mut(&t) {
+                if *c != usize::MAX {
+                    *c -= 1;
+                    if *c == 0 {
+                        st.live -= bytes[&t];
+                        st.consumers_left.remove(&t);
+                    }
+                }
+            }
+        }
+        st.live
+    };
+    let ready = |st: &UnitState| -> Vec<usize> {
+        (0..n).filter(|&u| !st.scheduled[u] && st.indegree[u] == 0).collect()
+    };
+    let greedy_step = |st: &mut UnitState| -> Option<i64> {
+        let r = ready(st);
+        let mut best: Option<(i64, usize)> = None;
+        for &u in &r {
+            let mut probe = st.clone();
+            let after = step(&mut probe, u);
+            if best.map(|(b, _)| after < b).unwrap_or(true) {
+                best = Some((after, u));
+            }
+        }
+        let (_, u) = best?;
+        Some(step(st, u))
+    };
+
+    let init = UnitState {
+        consumers_left: consumers.clone(),
+        indegree: preds.iter().map(|p| p.len()).collect(),
+        scheduled: vec![false; n],
+        live: 0,
+    };
+    let mut st = init.clone();
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    while order.len() < n {
+        let r = ready(&st);
+        assert!(!r.is_empty(), "group scheduler: unit graph has a cycle?");
+        let candidates: Vec<usize> =
+            r.iter().copied().take(opts.max_candidates.max(1)).collect();
+        let mut best: Option<((i64, i64), usize)> = None;
+        for &c in &candidates {
+            let mut probe = st.clone();
+            let after = step(&mut probe, c);
+            let mut horizon_peak = after;
+            for _ in 0..opts.lookahead {
+                match greedy_step(&mut probe) {
+                    Some(f) => horizon_peak = horizon_peak.max(f),
+                    None => break,
+                }
+            }
+            let key = policy.schedule_key(horizon_peak, after);
+            if best.map(|(bk, bi)| (key, c) < (bk, bi)).unwrap_or(true) {
+                best = Some((key, c));
+            }
+        }
+        let (_, chosen) = best.expect("non-empty candidate set");
+        step(&mut st, chosen);
+        order.push(chosen);
+    }
+
+    // materialize: nests by unit order (internal order verbatim),
+    // graph nodes by first occurrence in the new nest order
+    let mut new_nests = Vec::with_capacity(prog.nests.len());
+    for &u in &order {
+        let (a, b) = runs[u];
+        new_nests.extend(prog.nests[a..=b].iter().cloned());
+    }
+    let mut node_rank: HashMap<NodeId, usize> = HashMap::new();
+    for (k, nest) in new_nests.iter().enumerate() {
+        node_rank.entry(nest.node).or_insert(k);
+    }
+    let mut out = prog.clone();
+    out.nests = new_nests;
+    out.graph
+        .nodes
+        .sort_by_key(|nd| node_rank.get(&nd.id).copied().unwrap_or(usize::MAX));
+
+    // only adopt a *strictly* better order: an equal-peak reorder would
+    // churn tiled schedules (and their byte-exact expectations) for
+    // nothing
+    let peak_after = Liveness::analyze(&out).peak_live_bytes(&out);
+    if peak_after >= peak_before {
+        let stats = ScheduleStats {
+            peak_before,
+            peak_after: peak_before,
+            moved_nodes: 0,
+            kept_input_order: true,
+        };
+        return (prog, stats);
+    }
+    let moved = order.iter().enumerate().filter(|&(k, &u)| k != u).count();
+    let stats = ScheduleStats {
+        peak_before,
+        peak_after,
+        moved_nodes: moved,
+        kept_input_order: false,
+    };
+    (out, stats)
 }
 
 /// Apply a node permutation to a program: graph node list and nest list
@@ -347,6 +613,75 @@ mod tests {
         let names2: Vec<String> = out.nests.iter().map(|n| n.name.clone()).collect();
         assert_eq!(names, names2);
         assert_eq!(stats.moved_nodes, 0);
+    }
+
+    #[test]
+    fn group_schedule_keeps_interleave_contiguous_and_never_worse() {
+        use crate::ir::loopnest::TileTag;
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]);
+        let f1 = b.relu("f1", x);
+        let f2 = b.sigmoid("f2", f1);
+        let s = b.slice("s", x, &[0, 0], &[8, 64], &[1, 1]);
+        let t1 = b.relu("t1", s);
+        let c = b.concat("c", &[t1, t1], 0);
+        b.mark_output(f2);
+        b.mark_output(c);
+        let mut prog = Program::lower(b.finish());
+        // tag the f1/f2 pair as one interleaved tile group
+        prog.nests[0].tile = Some(TileTag { group: 0, index: 0, count: 2 });
+        prog.nests[1].tile = Some(TileTag { group: 0, index: 1, count: 2 });
+        let before = Liveness::analyze(&prog).peak_live_bytes(&prog);
+        let (out, stats) = schedule_groups_min_footprint(prog, &ScheduleOpts::default());
+        verify_graph(&out.graph).unwrap();
+        verify_program(&out).unwrap();
+        assert_eq!(stats.peak_before, before);
+        assert!(stats.peak_after <= stats.peak_before);
+        // the tagged group's nests stay contiguous, internal order intact
+        let tagged: Vec<usize> = out
+            .nests
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.tile.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(tagged.len(), 2);
+        assert_eq!(tagged[1], tagged[0] + 1, "group interleave unwoven");
+        let names: Vec<&str> = out
+            .nests
+            .iter()
+            .filter(|n| n.tile.is_some())
+            .map(|n| n.name.as_str())
+            .collect();
+        assert_eq!(names, vec!["f1", "f2"]);
+    }
+
+    #[test]
+    fn group_schedule_moves_units_when_strictly_better() {
+        use crate::ir::loopnest::TileTag;
+        // two fat branches, each immediately reducible to a sliver:
+        // the builder order materializes both 16 KiB tensors at once
+        // (32 KiB peak); finishing one branch before starting the
+        // other caps the peak near one fat tensor
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 64]); // 16 KiB
+        let fat_a = b.relu("fat_a", x);
+        let fat_b = b.sigmoid("fat_b", x);
+        let sm_a = b.slice("sm_a", fat_a, &[0, 0], &[4, 64], &[1, 1]);
+        let sm_b = b.slice("sm_b", fat_b, &[0, 0], &[4, 64], &[1, 1]);
+        let cat = b.concat("cat", &[sm_a, sm_b], 0);
+        b.mark_output(cat);
+        let mut prog = Program::lower(b.finish());
+        prog.nests[0].tile = Some(TileTag { group: 0, index: 0, count: 1 });
+        let (out, stats) = schedule_groups_min_footprint(prog, &ScheduleOpts::default());
+        verify_graph(&out.graph).unwrap();
+        verify_program(&out).unwrap();
+        assert!(
+            stats.peak_after < stats.peak_before,
+            "expected a strict improvement: {stats:?}"
+        );
+        assert!(stats.moved_nodes > 0);
+        assert!(!stats.kept_input_order);
     }
 
     #[test]

@@ -26,12 +26,35 @@
 //! refusal to admit tensors that cannot be held.
 
 use super::offsets::Conflict;
+use crate::cost::policy::DecisionPolicy;
 use crate::ir::loopnest::{Body, LoadStmt, LoopNest, Program, StoreStmt};
 use crate::ir::op::OpKind;
 use crate::ir::tensor::{TensorId, TensorKind};
 use crate::passes::liveness::Liveness;
 use crate::poly::{AccessMap, IterDomain};
 use std::collections::{BTreeMap, BTreeSet};
+
+/// Which victim-ranking rule the spill planner applies — the
+/// plan-level knob the joint optimizer ([`crate::opt`]) explores.
+/// Maps to a [`DecisionPolicy`]: [`SpillFlavor::FurthestGap`] is
+/// [`crate::cost::GreedyPolicy`] (the historical furthest-next-use
+/// rule), [`SpillFlavor::Traffic`] is [`crate::cost::TrafficPolicy`]
+/// (rank victims by the DRAM bytes their eviction costs).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SpillFlavor {
+    FurthestGap,
+    Traffic,
+}
+
+impl SpillFlavor {
+    /// The scoring policy this flavor stands for.
+    pub fn policy(self) -> &'static dyn DecisionPolicy {
+        match self {
+            SpillFlavor::FurthestGap => &crate::cost::GreedyPolicy,
+            SpillFlavor::Traffic => &crate::cost::TrafficPolicy,
+        }
+    }
+}
 
 /// What one resolution round did (for stats).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,13 +69,16 @@ pub enum SpillAction {
 
 /// Resolve one allocation conflict. Mutates the program (for
 /// intermediate spills), `dram` (for demotions) and `evictions` (for
-/// window splits); the caller re-runs allocation afterwards.
+/// window splits); the caller re-runs allocation afterwards. The
+/// victim is the candidate the `policy` ranks highest
+/// ([`DecisionPolicy::spill_victim_key`]).
 pub(crate) fn resolve(
     prog: &mut Program,
     lv: &Liveness,
     conflict: &Conflict,
     dram: &mut BTreeSet<TensorId>,
     evictions: &mut BTreeMap<TensorId, BTreeSet<usize>>,
+    policy: &dyn DecisionPolicy,
 ) -> SpillAction {
     // Victim candidates: every contender, including the failing window
     // itself. For each, the largest idle gap between consecutive needs
@@ -60,19 +86,19 @@ pub(crate) fn resolve(
     let mut contenders: Vec<(TensorId, usize, usize)> = conflict.overlapping.clone();
     contenders.push((conflict.tensor, conflict.start, conflict.end));
 
-    let mut best: Option<(i64, TensorId, usize, usize)> = None; // (gap, t, from, to)
+    let mut best: Option<((i64, i64), TensorId, usize, usize)> = None; // (key, t, from, to)
     for &(t, _ws, _we) in &contenders {
         let Some((from, to)) = largest_gap(prog, lv, evictions, t, conflict.start, conflict.end)
         else {
             continue;
         };
-        let gap = (to - from) as i64;
+        let key = policy.spill_victim_key(prog, t, (from, to));
         let better = match best {
             None => true,
-            Some((g, bt, ..)) => gap > g || (gap == g && t < bt),
+            Some((bk, bt, ..)) => key > bk || (key == bk && t < bt),
         };
         if better {
-            best = Some((gap, t, from, to));
+            best = Some((key, t, from, to));
         }
     }
 
@@ -323,7 +349,7 @@ mod tests {
         };
         let mut dram = BTreeSet::new();
         let mut ev = BTreeMap::new();
-        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev);
+        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev, &crate::cost::GreedyPolicy);
         assert!(
             matches!(action, SpillAction::SpillPair { tensor, .. } if tensor == victim),
             "{action:?}"
@@ -359,7 +385,7 @@ mod tests {
         };
         let mut dram = BTreeSet::new();
         let mut ev = BTreeMap::new();
-        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev);
+        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev, &crate::cost::GreedyPolicy);
         assert!(matches!(action, SpillAction::SplitWindow { tensor } if tensor == w));
         assert_eq!(prog.nests.len(), n_before);
         assert_eq!(ev[&w], BTreeSet::from([0]));
@@ -385,7 +411,7 @@ mod tests {
         };
         let mut dram = BTreeSet::new();
         let mut ev = BTreeMap::new();
-        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev);
+        let action = resolve(&mut prog, &lv, &conflict, &mut dram, &mut ev, &crate::cost::GreedyPolicy);
         assert!(matches!(action, SpillAction::Stream { tensor } if tensor == t1));
         assert!(dram.contains(&t1));
     }

@@ -1,0 +1,146 @@
+//! The whole-model decision vector.
+//!
+//! One point in the joint memory-decision space: everything the
+//! pipeline is free to choose about how a model's memory is staged,
+//! gathered into a single value the optimizer can enumerate, realize
+//! and score. The pipeline's historical behavior is exactly
+//! [`DecisionVector::baseline`] — the staged-greedy configuration —
+//! which seeds every search so the joint result is never worse than
+//! what the greedy passes produce on their own.
+
+use crate::alloc::{AllocOpts, SpillFlavor};
+use crate::tile::{FusePolicy, TileOpts};
+
+/// The tiling coordinates of a decision vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileDecision {
+    /// Fraction of the scratchpad the double-buffered tile working set
+    /// may use.
+    pub budget_fraction: f64,
+    /// Fusion grouping rule for chain detection.
+    pub fuse: FusePolicy,
+}
+
+impl TileDecision {
+    /// The tiling configuration this decision stands for, **on top
+    /// of** `base`: only the search axes (budget fraction, fusion
+    /// policy) are overridden — the caller's other tiling settings
+    /// (`max_tiles`) pass through untouched.
+    pub fn to_opts_on(self, base: TileOpts) -> TileOpts {
+        TileOpts {
+            budget_fraction: self.budget_fraction,
+            fuse: self.fuse != FusePolicy::None,
+            fuse_policy: self.fuse,
+            ..base
+        }
+    }
+
+    pub fn to_opts(self) -> TileOpts {
+        self.to_opts_on(TileOpts::default())
+    }
+
+    /// The decision a caller's configured tile stage stands for — the
+    /// search's seed.
+    pub fn from_opts(opts: &TileOpts) -> TileDecision {
+        TileDecision {
+            budget_fraction: opts.budget_fraction,
+            fuse: if opts.fuse { opts.fuse_policy } else { FusePolicy::None },
+        }
+    }
+}
+
+/// The allocation coordinates of a decision vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocDecision {
+    /// Scheduler lookahead (node- or tile-group-granular).
+    pub lookahead: usize,
+    /// Spill victim policy.
+    pub spill: SpillFlavor,
+}
+
+impl AllocDecision {
+    /// The planner configuration this decision stands for, **on top
+    /// of** `base`: only the search axes (lookahead, spill flavor) are
+    /// overridden — the caller's other planner settings
+    /// (`require_fit`, `max_rounds`) pass through untouched.
+    pub fn to_opts_on(self, base: AllocOpts) -> AllocOpts {
+        AllocOpts {
+            lookahead: self.lookahead,
+            spill: self.spill,
+            ..base
+        }
+    }
+
+    pub fn to_opts(self) -> AllocOpts {
+        self.to_opts_on(AllocOpts::default())
+    }
+}
+
+/// One candidate configuration of every memory decision: schedule
+/// order (via the scheduler lookahead), fusion grouping and per-group
+/// tile sizes (via the tiling coordinates — grid sizes follow
+/// deterministically from the budget and fusion policy), residency
+/// homes (implied by what the realized plan can stage) and spill
+/// choices (via the spill flavor).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionVector {
+    /// `None` = no tiling stage for this candidate.
+    pub tile: Option<TileDecision>,
+    pub alloc: AllocDecision,
+}
+
+impl DecisionVector {
+    /// Today's staged-greedy pipeline: default tiling with elementwise
+    /// fusion, default lookahead, furthest-gap spills. The search's
+    /// seed — evaluated first, never discarded unless strictly beaten.
+    pub fn baseline() -> DecisionVector {
+        DecisionVector {
+            tile: Some(TileDecision {
+                budget_fraction: TileOpts::default().budget_fraction,
+                fuse: FusePolicy::Elementwise,
+            }),
+            alloc: AllocDecision {
+                lookahead: AllocOpts::default().lookahead,
+                spill: SpillFlavor::FurthestGap,
+            },
+        }
+    }
+
+    /// Compact human-readable form for stats and logs.
+    pub fn describe(&self) -> String {
+        let tile = match self.tile {
+            None => "untiled".to_string(),
+            Some(t) => format!("{:?}@{:.2}", t.fuse, t.budget_fraction),
+        };
+        format!(
+            "tile={tile} lookahead={} spill={:?}",
+            self.alloc.lookahead, self.alloc.spill
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_default_opts() {
+        let dv = DecisionVector::baseline();
+        let t = dv.tile.unwrap().to_opts();
+        let d = TileOpts::default();
+        assert_eq!(t.budget_fraction, d.budget_fraction);
+        assert_eq!(t.fuse_policy, FusePolicy::Elementwise);
+        assert!(t.fuse);
+        let a = dv.alloc.to_opts();
+        assert_eq!(a.lookahead, AllocOpts::default().lookahead);
+        assert_eq!(a.spill, SpillFlavor::FurthestGap);
+    }
+
+    #[test]
+    fn describe_is_stable() {
+        let dv = DecisionVector::baseline();
+        let s = dv.describe();
+        assert!(s.contains("Elementwise"), "{s}");
+        assert!(s.contains("FurthestGap"), "{s}");
+    }
+}

@@ -1,0 +1,45 @@
+//! Unified memory-access cost model.
+//!
+//! Every memory decision this compiler makes — schedule order, fusion
+//! grouping, per-group tile sizes, residency homes, spill victims —
+//! used to be scored by a *local* proxy private to the pass that made
+//! it: the scheduler minimized peak live bytes, the tile-size search
+//! ranked grids by `(stream penalty, footprint)`, the spill planner
+//! picked the largest idle gap. Each proxy is reasonable in isolation
+//! and the combination is structurally unable to trade across stages
+//! (a smaller tile that lets a *second* tensor stay staged; fusing
+//! across a conv boundary with halo recompute instead of spilling the
+//! intermediate). Following the combined-decision formulation of Li et
+//! al. (arXiv 2311.18246) and the shared-cost-model framing of Zhang
+//! et al. (arXiv 2105.12842), this module provides the one model all
+//! of them consult:
+//!
+//! * [`model`] — [`model::evaluate`]: predicted DRAM traffic and
+//!   pipelined seconds of a `(Program, MemoryPlan)` pair, as a pure
+//!   function. The prediction is **calibrated to be byte-exact**
+//!   against [`crate::accel::sim::simulate_planned`] /
+//!   [`crate::accel::sim::simulate_pipelined`] — the calibration
+//!   invariant `tests/prop_cost.rs` holds over every model builder and
+//!   the fuzz corpus. The whole-model optimizer ([`crate::opt`])
+//!   scores candidate decision vectors with it, so "fewer predicted
+//!   bytes" *is* "fewer simulated bytes".
+//! * [`policy`] — the [`policy::DecisionPolicy`] trait behind which
+//!   the staged heuristics now score their candidates.
+//!   [`policy::GreedyPolicy`] reproduces the historical local proxies
+//!   bit-for-bit (the baseline mode and the search's seed candidate);
+//!   [`policy::TrafficPolicy`] ranks spill victims by the DRAM bytes
+//!   their eviction costs instead of gap length.
+//! * [`decision`] — the whole-model [`decision::DecisionVector`]: the
+//!   coordinates of one point in the joint decision space (tiling on /
+//!   off, fusion policy, tile budget fraction, scheduler lookahead,
+//!   spill flavor). [`crate::opt`] searches over these;
+//!   [`decision::DecisionVector::baseline`] is exactly today's staged
+//!   greedy configuration.
+
+pub mod decision;
+pub mod model;
+pub mod policy;
+
+pub use decision::{AllocDecision, DecisionVector, TileDecision};
+pub use model::{compulsory_offchip, evaluate, CostBreakdown};
+pub use policy::{DecisionPolicy, GreedyPolicy, TrafficPolicy};

@@ -1,0 +1,412 @@
+//! The analytic traffic/latency model.
+//!
+//! [`evaluate`] walks a planned program once and predicts, per the
+//! plan's residency decisions, every DRAM and scratchpad byte the
+//! planned replay will charge plus both latency estimates (serial
+//! `max(compute, dma)` per step, and the double-buffered pipeline
+//! model over tile-group runs). It is the replay's accounting
+//! *re-derived as a pure function* — no scratchpad state machine, no
+//! trace, no plan verification — which is what makes it cheap enough
+//! for the joint optimizer to call once per candidate decision vector.
+//! The re-derivation (rather than sharing one accounting walker with
+//! `accel/sim.rs`) is deliberate: two independent implementations are
+//! what give the calibration property test its teeth — a shared
+//! walker would make `prop_cost` a tautology. The price is that any
+//! accounting change in `sim.rs` must be mirrored here, with the
+//! fuzzed calibration suite as the tripwire for a missed mirror.
+//!
+//! The contract (the **calibration invariant**, property-tested in
+//! `tests/prop_cost.rs`):
+//!
+//! * `evaluate(p, plan, cfg).traffic` equals
+//!   `simulate_planned(p, plan, cfg, None).traffic` byte-for-byte, per
+//!   traffic class;
+//! * `serial_seconds` equals `simulate_planned(..).seconds` and
+//!   `pipelined_seconds` equals `simulate_pipelined(..).seconds`
+//!   exactly (identical operation sequence, hence identical `f64`
+//!   bits).
+//!
+//! The accounting rules mirrored here (see `accel/sim.rs` for the
+//! authoritative prose): scratch-homed inputs/weights charge their
+//! staging bytes at window start; tile-staged tensors never touch
+//! DRAM; DRAM-homed tensors charge a full read per use — or, for tile
+//! nests, the clipped image box of the tile, with a slice identical to
+//! the one the same group's previous tile fetched charged once; copy
+//! nests move on-chip when the destination is resident and spill
+//! otherwise; compute nests with a non-resident output spill their
+//! (tile or whole) store bytes; every graph output pays one write-back.
+
+use crate::accel::config::AccelConfig;
+use crate::accel::dma::{TrafficClass, TrafficCounters};
+use crate::accel::engine;
+use crate::alloc::{Home, MemoryPlan};
+use crate::ir::loopnest::{Body, Program};
+use crate::ir::op::OpKind;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::tile::footprint::{nest_tensor_box, nest_tensor_bytes};
+use crate::tile::pipeline::{run_steps, tile_runs, NestCost};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Predicted cost of one planned program.
+#[derive(Clone, Debug)]
+pub struct CostBreakdown {
+    /// Predicted traffic, by class — byte-exact against the planned
+    /// replay's counters.
+    pub traffic: TrafficCounters,
+    /// Scratchpad deposit bytes from staging DMA.
+    pub staging_deposit_bytes: i64,
+    /// Per-nest serial latency estimate (`simulate_planned`'s model).
+    pub serial_seconds: f64,
+    /// Double-buffered pipeline latency (`simulate_pipelined`'s model).
+    pub pipelined_seconds: f64,
+    /// Planned scratchpad high-water mark.
+    pub peak_scratchpad: i64,
+}
+
+impl CostBreakdown {
+    /// All predicted DRAM bytes — the joint optimizer's primary
+    /// objective.
+    pub fn offchip_total(&self) -> i64 {
+        self.traffic.offchip_total()
+    }
+
+    /// All predicted data movement touching the scratchpad.
+    pub fn onchip_movement_total(&self) -> i64 {
+        self.staging_deposit_bytes + self.traffic.onchip_total()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offchip_total", Json::Int(self.offchip_total())),
+            ("onchip_movement_total", Json::Int(self.onchip_movement_total())),
+            ("serial_seconds", Json::Num(self.serial_seconds)),
+            ("pipelined_seconds", Json::Num(self.pipelined_seconds)),
+            ("peak_scratchpad", Json::Int(self.peak_scratchpad)),
+        ])
+    }
+}
+
+/// Predict the planned replay's traffic and latency for `(prog, plan)`
+/// on `cfg`. The plan is trusted (callers hold plans produced by
+/// [`crate::alloc::plan_memory`], which verify by construction); the
+/// simulator remains the gatekeeper that re-verifies before replay.
+pub fn evaluate(prog: &Program, plan: &MemoryPlan, cfg: &AccelConfig) -> CostBreakdown {
+    let mut traffic = TrafficCounters::new();
+    let mut staging_deposit_bytes = 0i64;
+    let mut costs: Vec<NestCost> = Vec::with_capacity(prog.nests.len());
+    // per (tile group, tensor): the slice box the last touching tile
+    // fetched (weight-slice reuse across consecutive tiles) — the same
+    // keying the planned replay uses.
+    let mut last_box: HashMap<(u32, TensorId), (u32, Vec<(i64, i64)>)> = HashMap::new();
+    let node_by_id: HashMap<_, _> =
+        prog.graph.nodes().iter().map(|n| (n.id, n)).collect();
+
+    for (pos, nest) in prog.nests.iter().enumerate() {
+        let node = node_by_id[&nest.node];
+        let mut off_in_bytes = 0i64;
+        let mut off_out_bytes = 0i64;
+        let mut on_bytes = 0i64;
+
+        // ---- operands ----
+        let mut operands: Vec<TensorId> = nest
+            .body
+            .loads()
+            .iter()
+            .flat_map(|l| l.pieces.iter().filter_map(|p| p.tensor))
+            .collect();
+        operands.sort();
+        operands.dedup();
+        for &t in &operands {
+            let info = prog.graph.tensor(t);
+            let w = plan.window_at(t, pos).expect("plan covers touched tensors");
+            let staged_class = match info.kind {
+                TensorKind::Weight => TrafficClass::WeightLoad,
+                TensorKind::Input => TrafficClass::InputLoad,
+                _ => TrafficClass::Reload,
+            };
+            match w.home {
+                Home::Scratch(_) => {
+                    let bytes = info.size_bytes();
+                    let staged_here = w.start == pos
+                        && matches!(info.kind, TensorKind::Input | TensorKind::Weight);
+                    if staged_here {
+                        traffic.add(staged_class, bytes);
+                        off_in_bytes += bytes;
+                        staging_deposit_bytes += bytes;
+                    }
+                }
+                Home::Staged(_) => {
+                    // tile handoff inside the staging region: no DMA
+                }
+                Home::Dram => {
+                    let mut bytes = info.size_bytes();
+                    let mut reuse = false;
+                    if let Some(tag) = nest.tile {
+                        match nest_tensor_box(&prog.graph, nest, t) {
+                            None => {
+                                bytes = 0;
+                                reuse = true;
+                            }
+                            Some((bbox, by)) => {
+                                bytes = by;
+                                let key = (tag.group, t);
+                                if let Some((pidx, pbox)) = last_box.get(&key) {
+                                    if *pbox == bbox
+                                        && (tag.index == *pidx || tag.index == *pidx + 1)
+                                    {
+                                        reuse = true;
+                                    }
+                                }
+                                last_box.insert(key, (tag.index, bbox));
+                            }
+                        }
+                    }
+                    if !reuse {
+                        traffic.add(staged_class, bytes);
+                        off_in_bytes += bytes;
+                        staging_deposit_bytes += bytes;
+                    }
+                }
+            }
+        }
+
+        // ---- output ----
+        let out = nest.store.tensor;
+        let out_info = prog.graph.tensor(out);
+        let out_resident = plan
+            .window_at(out, pos)
+            .expect("plan covers stored tensors")
+            .home
+            .on_chip();
+
+        // ---- execute ----
+        let elem = out_info.dtype.size_bytes();
+        match &nest.body {
+            Body::Copy { .. } => {
+                let moved = nest.domain.cardinality() * elem;
+                let is_remap = matches!(node.kind, OpKind::MemCopy);
+                if out_resident {
+                    traffic.add(
+                        if is_remap {
+                            TrafficClass::OnchipRemap
+                        } else {
+                            TrafficClass::OnchipCopy
+                        },
+                        moved,
+                    );
+                    on_bytes += moved;
+                } else {
+                    traffic.add(TrafficClass::Spill, moved);
+                    off_out_bytes += moved;
+                }
+            }
+            Body::Compute { .. } => {
+                if !out_resident {
+                    let bytes = if nest.tile.is_some() {
+                        nest_tensor_bytes(&prog.graph, nest, out)
+                    } else {
+                        out_info.size_bytes()
+                    };
+                    traffic.add(TrafficClass::Spill, bytes);
+                    off_out_bytes += bytes;
+                }
+            }
+        }
+
+        costs.push(NestCost {
+            compute: engine::compute_seconds(cfg, nest, &node.kind),
+            dma_in: engine::dma_seconds(cfg, off_in_bytes, true)
+                + engine::dma_seconds(cfg, on_bytes, false),
+            dma_out: engine::dma_seconds(cfg, off_out_bytes, true),
+        });
+    }
+
+    // ---- latency: both models over the same per-nest costs ----
+    let mut serial_seconds = 0.0f64;
+    for c in &costs {
+        serial_seconds += engine::step_seconds(c.compute, c.dma_in + c.dma_out);
+    }
+    let mut pipelined_seconds = 0.0f64;
+    for run in tile_runs(prog) {
+        if prog.nests[run.0].tile.is_some() {
+            pipelined_seconds += engine::pipeline_seconds(&run_steps(prog, run, &costs));
+        } else {
+            let c = costs[run.0];
+            pipelined_seconds += engine::step_seconds(c.compute, c.dma_in + c.dma_out);
+        }
+    }
+
+    // ---- output write-back ----
+    for out in prog.graph.outputs() {
+        let bytes = prog.graph.tensor(out).size_bytes();
+        traffic.add(TrafficClass::OutputStore, bytes);
+        let dma = engine::dma_seconds(cfg, bytes, true);
+        serial_seconds += dma;
+        pipelined_seconds += dma;
+    }
+
+    CostBreakdown {
+        traffic,
+        staging_deposit_bytes,
+        serial_seconds,
+        pipelined_seconds,
+        peak_scratchpad: plan.peak_scratchpad_bytes(),
+    }
+}
+
+/// Compulsory DRAM bytes of a program — a sound lower bound no plan
+/// can beat (the joint optimizer's branch-and-bound floor).
+///
+/// Every graph output pays one full write-back. For each *used*
+/// input/weight: any plan's charges for the tensor cover every element
+/// it actually reads (a resident window fetches it whole; streamed
+/// reads are charged by clipped image boxes that contain the reads),
+/// so the total is bounded below by any single reader's **exact** read
+/// set. A reader's exact read set equals its clipped image box only
+/// when the box has no holes — [`exact_reader_bytes`] certifies that
+/// (single guard-free affine piece, every coefficient ±1, no domain
+/// dim feeding two tensor dims) and returns `None` for anything
+/// gap-leaving (strided slices, diagonal reads), which then
+/// contributes nothing to the floor. The bound is the max over
+/// certified readers, capped at the tensor size.
+pub fn compulsory_offchip(prog: &Program) -> i64 {
+    let mut total = 0i64;
+    for t in prog.graph.tensors() {
+        if !matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+            continue;
+        }
+        let readers = prog.readers(t.id);
+        if readers.is_empty() {
+            continue;
+        }
+        let best = readers
+            .iter()
+            .filter_map(|&p| exact_reader_bytes(&prog.graph, &prog.nests[p], t.id))
+            .max()
+            .unwrap_or(0);
+        total += best.min(t.size_bytes());
+    }
+    for out in prog.graph.outputs() {
+        total += prog.graph.tensor(out).size_bytes();
+    }
+    total
+}
+
+/// The exact byte count of one nest's reads of `t`, when the clipped
+/// image box provably has no holes: exactly one guard-free affine
+/// piece whose components use only ±1 coefficients, each domain dim
+/// contributing to at most one component (a box maps to a box, densely
+/// — e.g. conv's `i + k − p`, matmul's projections). `None` when the
+/// reads may undercover their bounding box (strides, div/mod, guards,
+/// piecewise unions, repeated dims), in which case the box byte count
+/// is not a valid lower bound on delivered bytes.
+fn exact_reader_bytes(
+    g: &crate::ir::graph::Graph,
+    nest: &crate::ir::loopnest::LoopNest,
+    t: TensorId,
+) -> Option<i64> {
+    let mut found: Option<&crate::ir::loopnest::Access> = None;
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            if piece.tensor != Some(t) {
+                continue;
+            }
+            if found.is_some() {
+                return None; // piecewise: union box may overcount
+            }
+            found = Some(piece);
+        }
+    }
+    let piece = found?;
+    if !piece.guards.is_empty() || !piece.map.is_affine() {
+        return None;
+    }
+    let nd = piece.map.in_dims();
+    let mut used = vec![false; nd];
+    for e in piece.map.exprs() {
+        let (coeffs, _c) = e.as_affine(nd)?;
+        for (d, &c) in coeffs.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if c != 1 && c != -1 {
+                return None; // strided: the image box has holes
+            }
+            if used[d] {
+                return None; // diagonal: dims alias across components
+            }
+            used[d] = true;
+        }
+    }
+    Some(nest_tensor_bytes(g, nest, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{simulate_pipelined, simulate_planned};
+    use crate::ir::builder::GraphBuilder;
+    use crate::passes::manager::{AllocStage, PassManager, TileStage};
+
+    fn chain() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 16, 16]);
+        let w = b.weight("w", &[4, 4, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        let n = b.batchnorm("bn", c);
+        let r = b.relu("r", n);
+        b.mark_output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn matches_planned_replay_untiled() {
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(chain()).unwrap();
+        let plan = rep.plan.as_ref().unwrap();
+        let sim = simulate_planned(&rep.program, plan, &cfg, None).unwrap();
+        let cost = evaluate(&rep.program, plan, &cfg);
+        assert_eq!(cost.traffic, sim.traffic);
+        assert_eq!(cost.offchip_total(), sim.offchip_total());
+        assert_eq!(cost.staging_deposit_bytes, sim.staging_deposit_bytes);
+        assert_eq!(cost.serial_seconds, sim.seconds);
+        assert_eq!(cost.peak_scratchpad, sim.peak_scratchpad);
+    }
+
+    #[test]
+    fn matches_pipelined_replay_tiled() {
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = PassManager {
+            tile: Some(TileStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(chain()).unwrap();
+        let plan = rep.plan.as_ref().unwrap();
+        let planned = simulate_planned(&rep.program, plan, &cfg, None).unwrap();
+        let pipelined = simulate_pipelined(&rep.program, plan, &cfg, None).unwrap();
+        let cost = evaluate(&rep.program, plan, &cfg);
+        assert_eq!(cost.traffic, planned.traffic);
+        assert_eq!(cost.serial_seconds, planned.seconds);
+        assert_eq!(cost.pipelined_seconds, pipelined.seconds);
+    }
+
+    #[test]
+    fn compulsory_is_a_floor() {
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = PassManager {
+            tile: Some(TileStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(chain()).unwrap();
+        let plan = rep.plan.as_ref().unwrap();
+        let cost = evaluate(&rep.program, plan, &cfg);
+        assert!(cost.offchip_total() >= compulsory_offchip(&rep.program));
+    }
+}

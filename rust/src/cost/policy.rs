@@ -1,0 +1,117 @@
+//! The shared decision-scoring policy.
+//!
+//! The staged heuristics — the min-footprint scheduler
+//! (`alloc/schedule.rs`), the tile-size grid search (`tile/mod.rs`)
+//! and the spill victim selection (`alloc/spill.rs`) — no longer score
+//! candidates with private inlined proxies: each consults a
+//! [`DecisionPolicy`]. [`GreedyPolicy`] reproduces the historical
+//! proxies exactly (it *is* today's behavior, and the joint search's
+//! seed candidate); [`TrafficPolicy`] swaps the spill victim rule for
+//! a DRAM-byte-cost ranking, one of the axes the whole-model optimizer
+//! ([`crate::opt`]) explores. Keeping the scoring behind one trait is
+//! what lets a future policy route *all* of these through the full
+//! [`crate::cost::model`] without touching the passes again.
+
+use crate::accel::config::AccelConfig;
+use crate::ir::loopnest::Program;
+use crate::ir::tensor::{TensorId, TensorKind};
+use crate::tile::{chain_stream_penalty, chain_tile_footprint, Chain};
+
+/// How each staged memory decision scores its candidates.
+///
+/// All keys are ordered tuples; *lower is better* for
+/// [`Self::tile_grid_key`] and [`Self::schedule_key`], *higher is
+/// better* for [`Self::spill_victim_key`] (matching each call site's
+/// historical comparison direction).
+pub trait DecisionPolicy {
+    /// Key of candidate grid sizes `s` for `chain`. By contract `.1`
+    /// is the candidate's double-buffered tile footprint in bytes (the
+    /// grid search also checks it against the budget).
+    fn tile_grid_key(
+        &self,
+        prog: &Program,
+        chain: &Chain,
+        s: &[i64],
+        cfg: &AccelConfig,
+    ) -> (i64, i64) {
+        (
+            chain_stream_penalty(prog, chain, s, cfg),
+            chain_tile_footprint(prog, chain, s),
+        )
+    }
+
+    /// Key of one schedule candidate: the peak over the lookahead
+    /// horizon, tie-broken by the immediate footprint.
+    fn schedule_key(&self, horizon_peak: i64, after: i64) -> (i64, i64) {
+        (horizon_peak, after)
+    }
+
+    /// Key of a spill victim candidate whose usable idle gap is
+    /// `gap = (from, to)`. Higher wins.
+    fn spill_victim_key(&self, prog: &Program, t: TensorId, gap: (usize, usize)) -> (i64, i64) {
+        let _ = (prog, t);
+        ((gap.1 - gap.0) as i64, 0)
+    }
+}
+
+/// The historical staged-greedy proxies, verbatim: footprint-ranked
+/// schedules, `(stream penalty, footprint)`-ranked grids,
+/// furthest-next-use (largest gap) spill victims.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GreedyPolicy;
+
+impl DecisionPolicy for GreedyPolicy {}
+
+/// Traffic-aware spill victims: rank by the DRAM bytes the eviction
+/// will cost — a clean input/weight costs one re-stage, an
+/// intermediate costs a spill write plus a reload — preferring the
+/// cheapest eviction, gap length as the tie-break. Grid and schedule
+/// scoring stay greedy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficPolicy;
+
+impl DecisionPolicy for TrafficPolicy {
+    fn spill_victim_key(&self, prog: &Program, t: TensorId, gap: (usize, usize)) -> (i64, i64) {
+        let info = prog.graph.tensor(t);
+        let cost = match info.kind {
+            TensorKind::Input | TensorKind::Weight => info.size_bytes(),
+            _ => 2 * info.size_bytes(),
+        };
+        (-cost, (gap.1 - gap.0) as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+
+    #[test]
+    fn greedy_keys_match_historical_proxies() {
+        let g = GreedyPolicy;
+        assert_eq!(g.schedule_key(10, 4), (10, 4));
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let prog = Program::lower(b.finish());
+        assert_eq!(g.spill_victim_key(&prog, x, (2, 7)), (5, 0));
+    }
+
+    #[test]
+    fn traffic_policy_prefers_cheap_evictions() {
+        // a weight (one re-stage) must outrank an equally-gapped
+        // intermediate of the same size (spill + reload)
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let w = b.weight("w", &[8, 8]);
+        let m = b.matmul("m", x, w);
+        let t = b.transpose("t", m, &[1, 0]);
+        b.mark_output(t);
+        let prog = Program::lower(b.finish());
+        let p = TrafficPolicy;
+        let kw = p.spill_victim_key(&prog, w, (0, 5));
+        let km = p.spill_victim_key(&prog, m, (0, 5));
+        assert!(kw > km, "weight {kw:?} should outrank intermediate {km:?}");
+    }
+}

@@ -21,6 +21,15 @@
 //!   analysis, strip-mining with fused producer→elementwise chains,
 //!   and the double-buffered DMA pipeline schedule the simulator's
 //!   pipelined mode replays.
+//! * [`cost`] — the unified memory-access cost model: one analytic
+//!   prediction of DRAM traffic and pipelined seconds per
+//!   `(program, plan)` pair, byte-exact against the simulator's
+//!   planned accounting, plus the shared decision-scoring policy the
+//!   staged heuristics consult.
+//! * [`opt`] — the whole-model joint optimizer: beam search with
+//!   branch-and-bound over fusion/tiling/scheduling/spill decision
+//!   vectors, each realized through the real pipeline and scored by
+//!   [`cost`]; an optional pass-manager stage (`simulate --opt`).
 //! * [`accel`] — a simulated Inferentia-class accelerator (banked
 //!   scratchpad + DMA byte accounting) used as the measurement
 //!   substrate for the paper's two experiments.
@@ -43,9 +52,11 @@
 pub mod accel;
 pub mod alloc;
 pub mod coordinator;
+pub mod cost;
 pub mod interp;
 pub mod ir;
 pub mod models;
+pub mod opt;
 pub mod passes;
 pub mod poly;
 pub mod report;

@@ -110,42 +110,16 @@ fn cmd_compile(p: &Parsed) -> Result<(), String> {
 
 fn cmd_simulate(p: &Parsed) -> Result<(), String> {
     let g = graph_from_args(p)?;
-    let mut pm = pm_from_args(p)?;
+    let pm = pm_from_args(p)?;
     let cfg = accel_from_args(p)?;
-    if p.has_flag("tile") {
-        return cmd_simulate_tiled(g, pm, &cfg, p.has_flag("json"), p.get("model"));
+    let want_plan = p.has_flag("plan");
+    let want_tile = p.has_flag("tile");
+    let want_opt = p.has_flag("opt");
+    if want_plan || want_tile || want_opt {
+        return cmd_simulate_compare(g, pm, &cfg, p);
     }
-    // The dynamic baseline must replay the *untransformed* pipeline
-    // output (no rescheduling, no spill nests) — the same comparison
-    // bench_alloc_plan makes.
-    let baseline = if p.has_flag("plan") {
-        let base = pm.run(g.clone()).map_err(|e| e.to_string())?;
-        pm.alloc = Some(polymem::passes::AllocStage::for_accel(cfg.clone()));
-        Some(simulate(&base.program, &cfg, None))
-    } else {
-        None
-    };
     let rep = pm.run(g).map_err(|e| e.to_string())?;
-    let sim = baseline.unwrap_or_else(|| simulate(&rep.program, &cfg, None));
-    if let Some(plan) = &rep.plan {
-        let planned = polymem::accel::simulate_planned(&rep.program, plan, &cfg, None)
-            .map_err(|e| e.to_string())?;
-        if p.has_flag("json") {
-            println!(
-                "{}",
-                report::planned_vs_dynamic_json(p.get("model"), &sim, &planned, plan)
-                    .to_string_pretty()
-            );
-        } else {
-            println!(
-                "planned vs dynamic residency on '{}' ({}):\n",
-                p.get("model"),
-                cfg.name
-            );
-            println!("{}", report::e3_table(p.get("model"), &sim, &planned, plan));
-        }
-        return Ok(());
-    }
+    let sim = simulate(&rep.program, &cfg, None);
     if p.has_flag("json") {
         println!("{}", report::sim_to_json(&sim).to_string_pretty());
     } else {
@@ -164,83 +138,123 @@ fn cmd_simulate(p: &Parsed) -> Result<(), String> {
     Ok(())
 }
 
-/// `simulate --tile`: tiled double-buffer pipeline vs the untiled
-/// planned baseline on the same chip.
-fn cmd_simulate_tiled(
+/// The unified `simulate` comparison: one table (and one shared JSON
+/// schema) over the requested compiled modes — the dynamic baseline is
+/// always included, `--plan` adds the static-plan replay, `--tile` the
+/// tiled double-buffer pipeline, `--opt` the joint-optimizer pipeline.
+fn cmd_simulate_compare(
     g: polymem::ir::Graph,
-    mut pm: PassManager,
+    pm_base: PassManager,
     cfg: &AccelConfig,
-    json: bool,
-    model: &str,
+    p: &Parsed,
 ) -> Result<(), String> {
-    use polymem::accel::{simulate_pipelined, simulate_planned};
-    use polymem::passes::{AllocStage, TileStage};
+    use polymem::accel::{simulate_pipelined, simulate_planned, SimReport};
+    use polymem::passes::{AllocStage, OptStage, TileStage};
+    use polymem::util::json::Json;
 
-    pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
-    let base = pm.run(g.clone()).map_err(|e| e.to_string())?;
-    let base_plan = base.plan.as_ref().expect("alloc stage ran");
-    let untiled =
-        simulate_planned(&base.program, base_plan, cfg, None).map_err(|e| e.to_string())?;
+    struct Mode {
+        name: &'static str,
+        sim: SimReport,
+        extras: Vec<(&'static str, Json)>,
+        note: String,
+    }
+    let mut modes: Vec<Mode> = Vec::new();
 
-    pm.tile = Some(TileStage::for_accel(cfg.clone()));
-    let rep = pm.run(g).map_err(|e| e.to_string())?;
-    let plan = rep.plan.as_ref().expect("alloc stage ran");
-    let tiled = simulate_pipelined(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
-    let tstats = rep.tile.expect("tile stage ran");
+    // dynamic baseline: the untransformed pipeline output, residency
+    // improvised at replay time (the same comparison the benches make)
+    let base = pm_base.run(g.clone()).map_err(|e| e.to_string())?;
+    modes.push(Mode {
+        name: "dynamic",
+        sim: simulate(&base.program, cfg, None),
+        extras: vec![],
+        note: format!("{} nests", base.program.nests.len()),
+    });
 
-    if json {
-        let j = polymem::util::json::Json::obj(vec![
-            ("model", polymem::util::json::Json::Str(model.to_string())),
-            ("accel", cfg.to_json()),
-            ("untiled_planned", report::sim_to_json(&untiled)),
-            ("tiled_pipelined", report::sim_to_json(&tiled)),
-            ("tile_stats", tstats.to_json()),
-            ("plan", plan.to_json()),
-        ]);
+    if p.has_flag("plan") {
+        let mut pm = pm_base.clone();
+        pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
+        let rep = pm.run(g.clone()).map_err(|e| e.to_string())?;
+        let plan = rep.plan.as_ref().expect("alloc stage ran");
+        let sim = simulate_planned(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+        let s = &plan.stats;
+        modes.push(Mode {
+            name: "planned",
+            sim,
+            extras: vec![("plan", plan.to_json())],
+            note: format!(
+                "{} spill pairs, {} splits, {} streamed",
+                s.spill_pairs, s.window_splits, s.streamed
+            ),
+        });
+    }
+    if p.has_flag("tile") {
+        let mut pm = pm_base.clone();
+        pm.tile = Some(TileStage::for_accel(cfg.clone()));
+        pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
+        let rep = pm.run(g.clone()).map_err(|e| e.to_string())?;
+        let plan = rep.plan.as_ref().expect("alloc stage ran");
+        let sim =
+            simulate_pipelined(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+        let ts = rep.tile.expect("tile stage ran");
+        modes.push(Mode {
+            name: "tiled",
+            sim,
+            extras: vec![("tile_stats", ts.to_json()), ("plan", plan.to_json())],
+            note: format!(
+                "{} groups, {} fused chains, {} staged tensors",
+                ts.groups, ts.fused_chains, plan.stats.tile_staged
+            ),
+        });
+    }
+    if p.has_flag("opt") {
+        let mut pm = pm_base.clone();
+        pm.opt = Some(OptStage::for_accel(cfg.clone()));
+        pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
+        let rep = pm.run(g).map_err(|e| e.to_string())?;
+        let plan = rep.plan.as_ref().expect("alloc stage ran");
+        let sim =
+            simulate_pipelined(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+        let os = rep.opt.expect("opt stage ran");
+        let mut extras = vec![("opt_stats", os.to_json()), ("plan", plan.to_json())];
+        if let Some(ts) = &rep.tile {
+            extras.push(("tile_stats", ts.to_json()));
+        }
+        modes.push(Mode {
+            name: "opt",
+            sim,
+            extras,
+            note: format!("{} candidates, chose {}", os.candidates, os.decision),
+        });
+    }
+
+    let model = p.get("model");
+    if p.has_flag("json") {
+        let j = report::compare_json(
+            model,
+            cfg.to_json(),
+            modes
+                .into_iter()
+                .map(|m| (m.name, report::mode_json(&m.sim, m.extras)))
+                .collect(),
+        );
         println!("{}", j.to_string_pretty());
         return Ok(());
     }
-    println!(
-        "tiled double-buffer pipeline vs untiled planning on '{model}' ({}):\n",
-        cfg.name
-    );
-    let mut t = report::Table::new(&["metric", "untiled planned", "tiled pipelined"]);
-    t.row(&[
-        "off-chip bytes".into(),
-        report::mb(untiled.offchip_total()),
-        report::mb(tiled.offchip_total()),
-    ]);
-    t.row(&[
-        "on-chip movement bytes".into(),
-        report::mb(untiled.onchip_movement_total()),
-        report::mb(tiled.onchip_movement_total()),
-    ]);
-    t.row(&[
-        "peak scratchpad".into(),
-        report::mb(untiled.peak_scratchpad),
-        report::mb(tiled.peak_scratchpad),
-    ]);
-    t.row(&[
-        "estimated latency".into(),
-        format!("{:.3} ms", untiled.seconds * 1e3),
-        format!("{:.3} ms", tiled.seconds * 1e3),
-    ]);
-    t.row(&[
-        "schedule".into(),
-        format!("{} nests", base.program.nests.len()),
-        format!(
-            "{} nests ({} groups, {} fused chains, {} staged tensors)",
-            rep.program.nests.len(),
-            tstats.groups,
-            tstats.fused_chains,
-            plan.stats.tile_staged
-        ),
-    ]);
-    println!("{}", t.render());
-    println!(
-        "off-chip reduction: {:.1}%",
-        report::pct_reduction(untiled.offchip_total(), tiled.offchip_total())
-    );
+    println!("compiled-mode comparison on '{model}' ({}):\n", cfg.name);
+    let pairs: Vec<(&str, &SimReport)> =
+        modes.iter().map(|m| (m.name, &m.sim)).collect();
+    println!("{}", report::compare_table(model, &pairs));
+    for m in &modes {
+        println!("  {:<8} {}", m.name, m.note);
+    }
+    let baseline = modes[0].sim.offchip_total();
+    for m in &modes[1..] {
+        println!(
+            "off-chip reduction ({} vs dynamic): {:.1}%",
+            m.name,
+            report::pct_reduction(baseline, m.sim.offchip_total())
+        );
+    }
     Ok(())
 }
 
@@ -365,8 +379,9 @@ fn app() -> App {
                 .opt("accel-config", "", "JSON accelerator config path")
                 .flag("no-dme", "disable data-movement elimination")
                 .flag("no-verify", "skip inter-pass verification")
-                .flag("plan", "static scratchpad planning + planned-mode replay")
-                .flag("tile", "polyhedral tiling + double-buffered pipeline replay vs untiled plan")
+                .flag("plan", "add the static-plan replay to the comparison")
+                .flag("tile", "add the tiled double-buffer pipeline to the comparison")
+                .flag("opt", "add the whole-model joint optimizer to the comparison")
                 .flag("json", "machine-readable output"),
             Command::new("e1", "reproduce paper experiment 1 (WaveNet DME)"),
             Command::new("export-graph", "write a built-in model as a JSON graph")

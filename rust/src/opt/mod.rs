@@ -1,0 +1,398 @@
+//! Whole-model joint memory optimization.
+//!
+//! The staged pipeline makes its memory decisions greedily and in
+//! isolation: schedule, then fusion + tile sizes, then residency, then
+//! spills, each against its own local proxy. This module searches the
+//! *joint* space instead — the paper's "analyze all operators of a DL
+//! model together", taken to its conclusion per Li et al. (arXiv
+//! 2311.18246): a beam search with branch-and-bound pruning over
+//! [`DecisionVector`]s, where every candidate is **realized** through
+//! the real pipeline (tile → bank map + copy splice → static plan) and
+//! scored by the unified cost model ([`crate::cost::model`]), whose
+//! byte-exactness against the planned replay means the search
+//! optimizes the actual measurement, not an estimate of it.
+//!
+//! Structure of the search:
+//!
+//! 1. **Fusion/tiling axis** — candidates over `{untiled, elementwise,
+//!    wide, conv-chain} × {budget fractions}`, seeded with the
+//!    caller's configured staged-greedy vector (the tile/alloc stage
+//!    options; [`DecisionVector::baseline`] when unconfigured); the
+//!    best `beam_width` survive. This is where recompute-vs-stage is
+//!    decided: the conv-chain candidates *recompute* kernel halos to
+//!    keep boundary tensors staged, and win exactly when the cost
+//!    model says the recomputed overlap is cheaper than streaming the
+//!    intermediate through DRAM.
+//! 2. **Allocation axis** — for each survivor, scheduler lookahead and
+//!    spill-flavor variants.
+//!
+//! Branch-and-bound: no plan can beat the compulsory floor (each used
+//! input/weight's cheapest single-reader image plus every output's
+//! write-back — [`crate::cost::compulsory_offchip`]); once a candidate
+//! reaches it the remaining candidates are pruned. Spill-flavor
+//! variants are also pruned when the incumbent's plan had no spill
+//! activity for the flavor to change.
+//!
+//! The search is deterministic, so the winning tiled program plus its
+//! [`AllocOpts`] replayed by the pass manager's downstream stages
+//! reproduce the winning plan exactly — which is how the differential
+//! oracle can hold the `opt` snapshot to the same bit-identity bar as
+//! every other stage (lower → dme → **opt** → bank → plan).
+
+use crate::accel::config::AccelConfig;
+use crate::alloc::{AllocOpts, PlanError, PlanStats, SpillFlavor};
+use crate::cost::{
+    compulsory_offchip, evaluate, AllocDecision, CostBreakdown, DecisionVector, TileDecision,
+};
+use crate::ir::loopnest::Program;
+use crate::passes::bank::BankConfig;
+use crate::passes::manager::BankMode;
+use crate::tile::{FusePolicy, TileOpts, TileStats};
+use crate::util::json::Json;
+
+/// Joint-search configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct OptOpts {
+    /// Fusion/tiling candidates surviving into the allocation stage.
+    pub beam_width: usize,
+}
+
+impl Default for OptOpts {
+    fn default() -> Self {
+        OptOpts { beam_width: 3 }
+    }
+}
+
+/// What the joint search did and found.
+#[derive(Clone, Debug)]
+pub struct OptStats {
+    /// Decision vectors fully realized (tile + bank + plan + cost).
+    pub candidates: usize,
+    /// Candidates skipped by branch-and-bound or plan failure.
+    pub pruned: usize,
+    /// Predicted off-chip bytes of the staged-greedy baseline vector.
+    pub baseline_offchip: i64,
+    /// Predicted off-chip bytes of the winning vector.
+    pub best_offchip: i64,
+    /// Predicted pipelined seconds of the winning vector.
+    pub best_pipelined_seconds: f64,
+    /// Human-readable winning decision vector.
+    pub decision: String,
+}
+
+impl OptStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("candidates", Json::Int(self.candidates as i64)),
+            ("pruned", Json::Int(self.pruned as i64)),
+            ("baseline_offchip", Json::Int(self.baseline_offchip)),
+            ("best_offchip", Json::Int(self.best_offchip)),
+            ("best_pipelined_seconds", Json::Num(self.best_pipelined_seconds)),
+            ("decision", Json::Str(self.decision.clone())),
+        ])
+    }
+}
+
+/// The search's product: the winning candidate's transformed (tiled,
+/// pre-bank) program, the planner configuration that reproduces its
+/// plan downstream, and the stats.
+#[derive(Clone, Debug)]
+pub struct OptOutcome {
+    pub program: Program,
+    pub alloc_opts: AllocOpts,
+    pub tile_stats: Option<TileStats>,
+    pub stats: OptStats,
+}
+
+/// One fully realized candidate.
+struct Realized {
+    dv: DecisionVector,
+    tiled: Program,
+    tile_stats: Option<TileStats>,
+    plan_stats: PlanStats,
+    cost: CostBreakdown,
+}
+
+/// Is `a` a strictly better outcome than `b`? Primary objective is
+/// predicted off-chip bytes; predicted pipelined latency breaks ties.
+fn better(a: &CostBreakdown, b: &CostBreakdown) -> bool {
+    let (ao, bo) = (a.offchip_total(), b.offchip_total());
+    ao < bo || (ao == bo && a.pipelined_seconds < b.pipelined_seconds)
+}
+
+/// Realize one decision vector end to end: clone the (post-DME)
+/// program, tile it per the vector, run the configured bank mapping,
+/// splice the remap copies, plan memory, and score with the cost
+/// model.
+fn realize(
+    program: &Program,
+    dv: DecisionVector,
+    bank_mode: BankMode,
+    bank_cfg: &BankConfig,
+    accel: &AccelConfig,
+    base_tile: &TileOpts,
+    base_alloc: &AllocOpts,
+) -> Result<Realized, PlanError> {
+    let mut prog = program.clone();
+    let tile_stats = dv.tile.map(|td| {
+        crate::tile::run_tiling_with(
+            &mut prog,
+            accel,
+            &td.to_opts_on(*base_tile),
+            &crate::cost::GreedyPolicy,
+        )
+    });
+    let tiled = prog.clone();
+    let bank = match bank_mode {
+        BankMode::None => None,
+        BankMode::Local => Some(crate::passes::bank_local::run_local(&prog.graph, bank_cfg)),
+        BankMode::Global => {
+            Some(crate::passes::bank_global::run_global(&prog.graph, bank_cfg))
+        }
+    };
+    if let Some(b) = &bank {
+        crate::passes::manager::splice_memcopies(&mut prog, &b.graph);
+    }
+    let res =
+        crate::alloc::plan_memory(prog, bank.as_ref(), accel, &dv.alloc.to_opts_on(*base_alloc))?;
+    let cost = evaluate(&res.program, &res.plan, accel);
+    Ok(Realized {
+        dv,
+        tiled,
+        tile_stats,
+        plan_stats: res.plan.stats,
+        cost,
+    })
+}
+
+/// The fusion/tiling axis explored in stage 1: the caller's seed
+/// first, then untiled, then the fixed exploration set (minus any
+/// entry equal to the seed).
+fn tile_candidates(seed: TileDecision) -> Vec<Option<TileDecision>> {
+    let mut out: Vec<Option<TileDecision>> = vec![Some(seed), None];
+    for cand in [
+        TileDecision { budget_fraction: 0.5, fuse: FusePolicy::Elementwise },
+        TileDecision { budget_fraction: 0.25, fuse: FusePolicy::Elementwise },
+        TileDecision { budget_fraction: 0.5, fuse: FusePolicy::Wide },
+        TileDecision { budget_fraction: 0.5, fuse: FusePolicy::ConvChain { depth: 2 } },
+        TileDecision { budget_fraction: 0.25, fuse: FusePolicy::ConvChain { depth: 1 } },
+    ] {
+        if Some(cand) != out[0] {
+            out.push(Some(cand));
+        }
+    }
+    out
+}
+
+/// Run the joint search over `program` (the post-DME snapshot). The
+/// baseline vector must realize (its error propagates); every other
+/// candidate that fails to plan is pruned. `base_tile` and
+/// `base_alloc` carry the caller's configured stage options — the
+/// search varies only its own axes (budget fraction, fusion policy,
+/// lookahead, spill flavor) on top of them, so settings like
+/// `max_tiles`, `require_fit` and `max_rounds` hold for every
+/// candidate, and the seed vector is exactly the caller's staged
+/// greedy.
+pub fn search(
+    program: &Program,
+    bank_mode: BankMode,
+    bank_cfg: &BankConfig,
+    accel: &AccelConfig,
+    base_tile: &TileOpts,
+    base_alloc: &AllocOpts,
+    opts: &OptOpts,
+) -> Result<OptOutcome, PlanError> {
+    let floor = compulsory_offchip(program);
+    let mut candidates = 0usize;
+    let mut pruned = 0usize;
+
+    // ---- stage 1: fusion/tiling axis ----
+    // the seed's coordinates are the *caller's* (the true staged-greedy
+    // baseline), not the crate defaults
+    let seed_alloc = AllocDecision { lookahead: base_alloc.lookahead, spill: base_alloc.spill };
+    let mut beam: Vec<Realized> = Vec::new();
+    let mut baseline_offchip = 0i64;
+    let tiles = tile_candidates(TileDecision::from_opts(base_tile));
+    for (i, tile) in tiles.iter().enumerate() {
+        if beam.first().map(|b| b.cost.offchip_total() == floor).unwrap_or(false) {
+            pruned += tiles.len() - i;
+            break; // branch-and-bound: the incumbent hit the floor
+        }
+        let dv = DecisionVector { tile: *tile, alloc: seed_alloc };
+        match realize(program, dv, bank_mode, bank_cfg, accel, base_tile, base_alloc) {
+            Ok(r) => {
+                candidates += 1;
+                if i == 0 {
+                    baseline_offchip = r.cost.offchip_total();
+                }
+                let at = beam
+                    .iter()
+                    .position(|b| better(&r.cost, &b.cost))
+                    .unwrap_or(beam.len());
+                beam.insert(at, r);
+                beam.truncate(opts.beam_width.max(1));
+            }
+            Err(e) => {
+                if i == 0 {
+                    return Err(e); // the staged-greedy seed must plan
+                }
+                pruned += 1;
+            }
+        }
+    }
+    debug_assert!(!beam.is_empty());
+
+    // ---- stage 2: allocation axis over the surviving beam ----
+    let alloc_variants = [
+        AllocDecision { lookahead: seed_alloc.lookahead, spill: SpillFlavor::Traffic },
+        AllocDecision {
+            lookahead: 2 * seed_alloc.lookahead.max(1),
+            spill: seed_alloc.spill,
+        },
+    ];
+    let mut extra: Vec<Realized> = Vec::new();
+    for b in &beam {
+        if b.cost.offchip_total() == floor {
+            continue; // already optimal
+        }
+        let idle_spiller = b.plan_stats.spill_pairs == 0
+            && b.plan_stats.window_splits == 0
+            && b.plan_stats.streamed == 0;
+        for av in alloc_variants {
+            if av == seed_alloc {
+                pruned += 1; // identical to the beam entry already scored
+                continue;
+            }
+            if av.spill == SpillFlavor::Traffic && idle_spiller {
+                pruned += 1; // flavor cannot change an untouched plan
+                continue;
+            }
+            let dv = DecisionVector { tile: b.dv.tile, alloc: av };
+            match realize(program, dv, bank_mode, bank_cfg, accel, base_tile, base_alloc) {
+                Ok(r) => {
+                    candidates += 1;
+                    extra.push(r);
+                }
+                Err(_) => pruned += 1,
+            }
+        }
+    }
+
+    // ---- pick the winner ----
+    let mut best: Option<Realized> = None;
+    for r in beam.into_iter().chain(extra) {
+        let take = match &best {
+            None => true,
+            Some(b) => better(&r.cost, &b.cost),
+        };
+        if take {
+            best = Some(r);
+        }
+    }
+    let best = best.expect("baseline candidate realized");
+    let stats = OptStats {
+        candidates,
+        pruned,
+        baseline_offchip,
+        best_offchip: best.cost.offchip_total(),
+        best_pipelined_seconds: best.cost.pipelined_seconds,
+        decision: best.dv.describe(),
+    };
+    Ok(OptOutcome {
+        program: best.tiled,
+        alloc_opts: best.dv.alloc.to_opts_on(*base_alloc),
+        tile_stats: best.tile_stats,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::passes::manager::{AllocStage, OptStage, PassManager};
+
+    /// conv → bn → relu → conv with 16 KiB feature maps: on a tiny
+    /// chip the relu output cannot be bank-resident, so the staged
+    /// greedy streams it at the chain boundary while the conv-chain
+    /// candidate keeps it staged.
+    fn conv_conv() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 32, 32]);
+        let w1 = b.weight("w1", &[4, 4, 3, 3]);
+        let c1 = b.conv2d("c1", x, w1, 1, 1);
+        let n = b.batchnorm("bn", c1);
+        let r = b.relu("r", n);
+        let w2 = b.weight("w2", &[6, 4, 3, 3]);
+        let c2 = b.conv2d("c2", r, w2, 1, 1);
+        b.mark_output(c2);
+        b.finish()
+    }
+
+    #[test]
+    fn search_never_loses_to_the_baseline() {
+        let g = conv_conv();
+        let prog = Program::lower(g);
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let out = search(
+            &prog,
+            BankMode::Global,
+            &BankConfig::default(),
+            &cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+            &OptOpts::default(),
+        )
+        .unwrap();
+        assert!(out.stats.candidates >= 1);
+        assert!(
+            out.stats.best_offchip <= out.stats.baseline_offchip,
+            "{:?}",
+            out.stats
+        );
+        assert!(out.stats.best_offchip >= crate::cost::compulsory_offchip(&out.program));
+    }
+
+    #[test]
+    fn search_beats_staged_greedy_on_conv_boundary() {
+        // the conv→conv boundary tensor streams under elementwise
+        // fusion; the conv-chain candidate stages it, so the joint
+        // result must be strictly better than the baseline vector
+        let prog = Program::lower(conv_conv());
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let out = search(
+            &prog,
+            BankMode::Global,
+            &BankConfig::default(),
+            &cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+            &OptOpts::default(),
+        )
+        .unwrap();
+        assert!(
+            out.stats.best_offchip < out.stats.baseline_offchip,
+            "joint search found nothing on a conv-boundary workload: {:?}",
+            out.stats
+        );
+    }
+
+    #[test]
+    fn manager_replays_the_winner_exactly() {
+        // the pass manager's downstream stages must reproduce the
+        // winning candidate's plan: same program, same predicted cost
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let pm = PassManager {
+            opt: Some(OptStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(conv_conv()).unwrap();
+        let stats = rep.opt.expect("opt stage ran");
+        let plan = rep.plan.expect("alloc stage ran");
+        let cost = evaluate(&rep.program, &plan, &cfg);
+        assert_eq!(cost.offchip_total(), stats.best_offchip);
+        let sim = crate::accel::simulate_planned(&rep.program, &plan, &cfg, None).unwrap();
+        assert_eq!(sim.offchip_total(), stats.best_offchip);
+    }
+}

@@ -7,6 +7,7 @@ use crate::accel::config::AccelConfig;
 use crate::alloc::{plan_memory, AllocOpts, MemoryPlan};
 use crate::ir::loopnest::Program;
 use crate::ir::verify::{verify_graph, verify_program, VerifyError};
+use crate::opt::{OptOpts, OptStats};
 use crate::tile::{run_tiling, TileOpts, TileStats};
 use std::time::{Duration, Instant};
 
@@ -62,6 +63,23 @@ impl TileStage {
     }
 }
 
+/// The joint-optimizer stage configuration (`opt` subsystem), run
+/// between DME and bank mapping when enabled — in place of the fixed
+/// `tile` stage, whose staged-greedy configuration is the search's
+/// seed candidate.
+#[derive(Clone, Debug)]
+pub struct OptStage {
+    /// Chip the candidate plans are realized and scored against.
+    pub accel: AccelConfig,
+    pub opts: OptOpts,
+}
+
+impl OptStage {
+    pub fn for_accel(accel: AccelConfig) -> OptStage {
+        OptStage { accel, opts: OptOpts::default() }
+    }
+}
+
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PassManager {
@@ -73,6 +91,15 @@ pub struct PassManager {
     /// nests; `Some` strip-mines oversized nests so the planner can
     /// stage tensors larger than the scratchpad tile by tile.
     pub tile: Option<TileStage>,
+    /// Whole-model joint optimization (`crate::opt`): a beam search
+    /// over fusion/tiling/scheduling/spill decision vectors, each
+    /// realized through tile → bank → plan and scored by the unified
+    /// cost model. Runs between DME and bank mapping *in place of* the
+    /// fixed `tile` stage (which it supersedes when both are set); the
+    /// winning vector's tiled program continues down the pipeline and
+    /// its planner configuration overrides the `alloc` stage's, so the
+    /// downstream replay reproduces the winning plan exactly.
+    pub opt: Option<OptStage>,
     /// Static scratchpad planning (scheduling + offsets + spills).
     /// `None` (the default) leaves residency to the simulator's
     /// dynamic baseline; `Some` produces a [`MemoryPlan`] the planned
@@ -89,6 +116,7 @@ impl Default for PassManager {
             bank_mode: BankMode::Global,
             bank_cfg: BankConfig::default(),
             tile: None,
+            opt: None,
             alloc: None,
             verify: true,
         }
@@ -103,8 +131,11 @@ pub struct PassReport {
     /// spill-extended when the alloc stage ran).
     pub program: Program,
     pub dme: Option<DmeStats>,
-    /// Tiling statistics (tile stage enabled only).
+    /// Tiling statistics (tile or opt stage enabled only; under `opt`
+    /// these describe the winning candidate's tiling).
     pub tile: Option<TileStats>,
+    /// Joint-search statistics (opt stage enabled only).
+    pub opt: Option<OptStats>,
     pub bank: Option<BankAssignment>,
     /// The static memory plan (alloc stage enabled only).
     pub plan: Option<MemoryPlan>,
@@ -151,15 +182,81 @@ impl PassManager {
         }
         let dme_time = t0.elapsed();
 
-        // Tiling: strip-mine oversized nests (and fuse elementwise
-        // consumers onto their producer's grid) so residency can be
-        // planned tile by tile. Runs before bank mapping: the bank
-        // passes work on the graph, and copy splicing handles multi-
-        // nest consumers already (concat), so tile nests need nothing
-        // special downstream.
+        // Tiling / joint optimization, between DME and bank mapping.
+        // `opt` supersedes `tile`: the search explores tiling decisions
+        // (the fixed tile stage's configuration is its seed candidate)
+        // and hands back the winning candidate's tiled program plus the
+        // planner configuration that reproduces its plan downstream.
         let tt = Instant::now();
         let mut tile_stats = None;
-        if let Some(stage) = &self.tile {
+        let mut opt_stats = None;
+        let mut opt_alloc: Option<AllocOpts> = None;
+        if let Some(stage) = &self.opt {
+            // the search scores *static plans*; without an alloc stage
+            // it would report costs for plans the pipeline never
+            // produces — refuse the shape instead
+            let Some(alloc_stage) = &self.alloc else {
+                return Err(VerifyError(
+                    "opt: the opt stage requires the alloc stage (the joint search \
+                     scores static memory plans; configure `alloc` with the same \
+                     accelerator)"
+                        .to_string(),
+                ));
+            };
+            // the "downstream replays the winner exactly" contract
+            // needs both stages to target one chip: refuse a
+            // misconfigured pipeline instead of silently scoring plans
+            // (bytes via the bank geometry, latency via the engine
+            // parameters) for different hardware than the alloc stage
+            // realizes. `name` is a label and may differ.
+            {
+                let (x, y) = (&stage.accel, &alloc_stage.accel);
+                let mismatch = x.banks != y.banks
+                    || x.bank_bytes != y.bank_bytes
+                    || x.pe_rows != y.pe_rows
+                    || x.pe_cols != y.pe_cols
+                    || x.vector_lanes != y.vector_lanes
+                    || x.clock_hz != y.clock_hz
+                    || x.dram_bps != y.dram_bps
+                    || x.onchip_copy_bps != y.onchip_copy_bps;
+                if mismatch {
+                    return Err(VerifyError(format!(
+                        "opt: OptStage accel ({} banks × {} B/bank, {} B/s DRAM) != \
+                         AllocStage accel ({} banks × {} B/bank, {} B/s DRAM); the \
+                         joint search must score plans for the chip the alloc stage \
+                         plans",
+                        x.banks, x.bank_bytes, x.dram_bps, y.banks, y.bank_bytes, y.dram_bps
+                    )));
+                }
+            }
+            // the caller's configured stage options seed every
+            // candidate: the search varies only its own axes on top
+            let base_tile = self.tile.as_ref().map(|t| t.opts).unwrap_or_default();
+            let base_alloc = alloc_stage.opts;
+            let outcome = crate::opt::search(
+                &program,
+                self.bank_mode,
+                &self.bank_cfg,
+                &stage.accel,
+                &base_tile,
+                &base_alloc,
+                &stage.opts,
+            )
+            .map_err(|e| VerifyError(format!("opt: {e}")))?;
+            program = outcome.program;
+            if self.verify {
+                verify_program(&program)?;
+            }
+            observe("opt", &program);
+            tile_stats = outcome.tile_stats;
+            opt_stats = Some(outcome.stats);
+            opt_alloc = Some(outcome.alloc_opts);
+        } else if let Some(stage) = &self.tile {
+            // strip-mine oversized nests (and fuse consumers onto their
+            // producer's grid) so residency can be planned tile by
+            // tile. The bank passes work on the graph, and copy
+            // splicing handles multi-nest consumers already (concat),
+            // so tile nests need nothing special downstream.
             let stats = run_tiling(&mut program, &stage.accel, &stage.opts);
             if self.verify {
                 verify_program(&program)?;
@@ -204,7 +301,11 @@ impl PassManager {
         let t2 = Instant::now();
         let mut plan = None;
         let program = if let Some(stage) = &self.alloc {
-            let res = plan_memory(program, bank.as_ref(), &stage.accel, &stage.opts)
+            // the joint optimizer's winning planner configuration
+            // overrides the stage default, so the plan produced here is
+            // exactly the one the search scored
+            let alloc_opts = opt_alloc.unwrap_or(stage.opts);
+            let res = plan_memory(program, bank.as_ref(), &stage.accel, &alloc_opts)
                 .map_err(|e| VerifyError(format!("alloc: {e}")))?;
             if self.verify {
                 verify_graph(&res.program.graph)?;
@@ -222,6 +323,7 @@ impl PassManager {
             program,
             dme: dme_stats,
             tile: tile_stats,
+            opt: opt_stats,
             bank,
             plan,
             dme_time,
@@ -232,7 +334,9 @@ impl PassManager {
     }
 }
 
-/// Splice the bank pass's `MemCopy` nodes into a lowered program:
+/// Splice the bank pass's `MemCopy` nodes into a lowered program
+/// (`pub(crate)`: the joint optimizer realizes its candidates through
+/// the same bank → splice → plan path this manager runs):
 /// adopt the bank graph (which is the program's graph plus MemCopy
 /// nodes), add one identity copy nest per MemCopy before its consumer's
 /// first nest, and re-point that consumer's loads at the remapped
@@ -246,7 +350,7 @@ impl PassManager {
 /// producing tile so the consumer's same-index tile reads a complete
 /// copy. The tile copies inherit the producer's `TileTag` and so stay
 /// inside its pipeline group.
-fn splice_memcopies(prog: &mut Program, bank_graph: &crate::ir::Graph) {
+pub(crate) fn splice_memcopies(prog: &mut Program, bank_graph: &crate::ir::Graph) {
     use crate::ir::loopnest::{Body, LoadStmt, LoopNest, StoreStmt};
     use crate::ir::op::OpKind;
     use crate::poly::{AccessMap, Expr, IterDomain};
@@ -454,6 +558,65 @@ mod tests {
         let tile = report.tile.expect("tile stage ran");
         assert!(tile.groups >= 1, "4 KiB chip must force tiling: {tile:?}");
         assert!(report.program.nests.iter().any(|n| n.tile.is_some()));
+    }
+
+    #[test]
+    fn opt_stage_observed_between_dme_and_bank() {
+        use crate::accel::config::AccelConfig;
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = PassManager {
+            opt: Some(OptStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg)),
+            ..Default::default()
+        };
+        let mut stages: Vec<String> = Vec::new();
+        let report = pm
+            .run_observed(sample(), |s, _| stages.push(s.to_string()))
+            .unwrap();
+        assert_eq!(stages, vec!["lower", "dme", "opt", "bank", "plan"]);
+        let stats = report.opt.expect("opt stage ran");
+        assert!(stats.candidates >= 1, "{stats:?}");
+        assert!(stats.best_offchip <= stats.baseline_offchip, "{stats:?}");
+        assert!(report.plan.is_some());
+    }
+
+    #[test]
+    fn opt_requires_alloc_stage() {
+        use crate::accel::config::AccelConfig;
+        let pm = PassManager {
+            opt: Some(OptStage::for_accel(AccelConfig::tiny(4 * 1024))),
+            ..Default::default()
+        };
+        let err = pm.run(sample()).unwrap_err();
+        assert!(err.0.contains("requires the alloc stage"), "{err}");
+    }
+
+    #[test]
+    fn opt_rejects_mismatched_alloc_accel() {
+        use crate::accel::config::AccelConfig;
+        let pm = PassManager {
+            opt: Some(OptStage::for_accel(AccelConfig::tiny(4 * 1024))),
+            alloc: Some(AllocStage::for_accel(AccelConfig::tiny(8 * 1024))),
+            ..Default::default()
+        };
+        let err = pm.run(sample()).unwrap_err();
+        assert!(err.0.contains("OptStage accel"), "{err}");
+    }
+
+    #[test]
+    fn opt_supersedes_tile_stage() {
+        use crate::accel::config::AccelConfig;
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = PassManager {
+            tile: Some(TileStage::for_accel(cfg.clone())),
+            opt: Some(OptStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg)),
+            ..Default::default()
+        };
+        let mut stages: Vec<String> = Vec::new();
+        pm.run_observed(sample(), |s, _| stages.push(s.to_string())).unwrap();
+        assert!(stages.iter().any(|s| s == "opt"));
+        assert!(!stages.iter().any(|s| s == "tile"));
     }
 
     #[test]

@@ -26,4 +26,4 @@ pub mod manager;
 
 pub use bank::{Align, BankAssignment, BankConfig, Placement};
 pub use dme::{run_dme, DmeStats};
-pub use manager::{AllocStage, PassManager, PassReport, TileStage};
+pub use manager::{AllocStage, OptStage, PassManager, PassReport, TileStage};

@@ -213,6 +213,63 @@ pub fn e3_table(
     t.render()
 }
 
+/// The unified `simulate` comparison table: one column per compiled
+/// mode (dynamic / planned / tiled / opt), one row per metric — every
+/// mode measured by the same [`SimReport`] vocabulary.
+pub fn compare_table(model: &str, modes: &[(&str, &SimReport)]) -> String {
+    let header: Vec<&str> = std::iter::once("metric")
+        .chain(modes.iter().map(|&(n, _)| n))
+        .collect();
+    let mut t = Table::new(&header);
+    let rows: Vec<(String, Vec<String>)> = vec![
+        (
+            format!("{model}: off-chip bytes"),
+            modes.iter().map(|(_, s)| mb(s.offchip_total())).collect(),
+        ),
+        (
+            "off-chip copy bytes (spill churn)".to_string(),
+            modes.iter().map(|(_, s)| mb(s.offchip_copy_total())).collect(),
+        ),
+        (
+            "on-chip movement bytes".to_string(),
+            modes.iter().map(|(_, s)| mb(s.onchip_movement_total())).collect(),
+        ),
+        (
+            "peak scratchpad".to_string(),
+            modes.iter().map(|(_, s)| mb(s.peak_scratchpad)).collect(),
+        ),
+        (
+            "estimated latency".to_string(),
+            modes.iter().map(|(_, s)| format!("{:.3} ms", s.seconds * 1e3)).collect(),
+        ),
+    ];
+    for (label, cells) in rows {
+        let mut r = vec![label];
+        r.extend(cells);
+        t.row(&r);
+    }
+    t.render()
+}
+
+/// One mode's entry in the shared comparison JSON: the [`sim_to_json`]
+/// record under `"sim"`, plus any mode-specific extras (plan, tile or
+/// opt statistics).
+pub fn mode_json(sim: &SimReport, extras: Vec<(&'static str, Json)>) -> Json {
+    let mut pairs = vec![("sim", sim_to_json(sim))];
+    pairs.extend(extras);
+    Json::obj(pairs)
+}
+
+/// The shared machine-readable schema of the unified `simulate`
+/// comparison: `{"model", "accel", "modes": {<name>: mode_json…}}`.
+pub fn compare_json(model: &str, accel: Json, modes: Vec<(&'static str, Json)>) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(model.to_string())),
+        ("accel", accel),
+        ("modes", Json::obj(modes)),
+    ])
+}
+
 /// JSON record for one planned-vs-dynamic comparison, reusing the
 /// [`sim_to_json`] shape for both replays.
 pub fn planned_vs_dynamic_json(

@@ -37,13 +37,46 @@ pub mod pipeline;
 pub mod transform;
 
 use crate::accel::config::AccelConfig;
+use crate::cost::policy::{DecisionPolicy, GreedyPolicy};
 use crate::ir::loopnest::{LoopNest, Program};
 use crate::ir::op::OpKind;
 use crate::ir::tensor::{TensorId, TensorKind};
+use crate::poly::Expr;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use self::transform::{Chain, ChainMember};
+pub use self::transform::{Chain, ChainMember};
+
+/// Fusion grouping rule for chain detection.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FusePolicy {
+    /// No fusion: every tileable nest tiles alone.
+    None,
+    /// Producer → sole-consumer elementwise chains on the producer's
+    /// grid (the historical rule; the default).
+    Elementwise,
+    /// Widened legality: followers may read *any* chain tensor (not
+    /// just the immediately preceding one), a chain tensor may feed
+    /// several followers, and grid-shaped independent members
+    /// (converging branches — a projection conv next to the main path,
+    /// both feeding a residual add) may interleave into the group.
+    Wide,
+    /// [`FusePolicy::Wide`] plus halo-aware "same"-convolution
+    /// followers: a stride-1 conv may consume a chain tensor tile by
+    /// tile, with every upstream member's tiles expanded by the
+    /// kernel halo (bounded recompute of the overlap) so each consumer
+    /// tile reads a completely-written slice. At most `depth` such
+    /// joins per chain. Whether recompute beats staging/streaming is
+    /// not decided here — the joint optimizer (`crate::opt`) realizes
+    /// both and lets the cost model pick.
+    ConvChain { depth: usize },
+}
+
+/// Caps for the widened detector: halo cells a recompute join may add
+/// per grid dim (beyond this the dim is frozen instead), and members
+/// per chain (bounds the interleave the planner has to reason about).
+const MAX_HALO: i64 = 8;
+const MAX_CHAIN_MEMBERS: usize = 12;
 
 /// Tiling configuration.
 #[derive(Clone, Copy, Debug)]
@@ -54,13 +87,20 @@ pub struct TileOpts {
     pub budget_fraction: f64,
     /// Hard cap on tiles per chain (bounds schedule growth).
     pub max_tiles: usize,
-    /// Fuse elementwise consumers onto their producer's grid.
+    /// Fuse consumers onto their producer's grid at all.
     pub fuse: bool,
+    /// Which fusion legality rule applies when `fuse` is on.
+    pub fuse_policy: FusePolicy,
 }
 
 impl Default for TileOpts {
     fn default() -> Self {
-        TileOpts { budget_fraction: 0.5, max_tiles: 1024, fuse: true }
+        TileOpts {
+            budget_fraction: 0.5,
+            max_tiles: 1024,
+            fuse: true,
+            fuse_policy: FusePolicy::Elementwise,
+        }
     }
 }
 
@@ -150,9 +190,9 @@ fn elementwise_follower(prog: &Program, q: usize, y: TensorId, grid_shape: &[i64
 }
 
 /// Detect the tiling chain starting at nest position `p`: the nest
-/// itself (if tileable), extended — when `fuse` — over consecutive
-/// sole-consumer elementwise nests on the same grid.
-fn detect_chain(prog: &Program, p: usize, opts: &TileOpts) -> Option<Chain> {
+/// itself (if tileable), extended per `policy` over consecutive
+/// fusable followers.
+fn detect_chain(prog: &Program, p: usize, policy: FusePolicy) -> Option<Chain> {
     let head = &prog.nests[p];
     let node = prog.graph.node(head.node);
     if !tileable_kind(&node.kind, head) {
@@ -165,12 +205,16 @@ fn detect_chain(prog: &Program, p: usize, opts: &TileOpts) -> Option<Chain> {
         .iter()
         .map(|d| d.map(|d| ext[d]).unwrap_or(1))
         .collect();
+    let rank = grid_shape.len();
     let mut chain = Chain {
-        members: vec![ChainMember { pos: p, dim_of_grid }],
+        members: vec![ChainMember::plain(p, dim_of_grid, rank)],
+        frozen: vec![false; rank],
         grid_shape,
     };
 
-    if opts.fuse && fusable_head(prog, head, &chain.grid_shape) {
+    if policy == FusePolicy::Elementwise && fusable_head(prog, head, &chain.grid_shape) {
+        // the historical rule, verbatim: sole-consumer elementwise
+        // followers on the producer's grid, strictly adjacent
         let mut y = head.store.tensor;
         let mut q = p + 1;
         while q < prog.nests.len() {
@@ -188,15 +232,224 @@ fn detect_chain(prog: &Program, p: usize, opts: &TileOpts) -> Option<Chain> {
                 break;
             }
             let nd = chain.grid_shape.len();
+            chain.members.push(ChainMember::plain(q, (0..nd).map(Some).collect(), rank));
+            y = prog.nests[q].store.tensor;
+            q += 1;
+        }
+    } else if matches!(policy, FusePolicy::Wide | FusePolicy::ConvChain { .. })
+        && fusable_head(prog, head, &chain.grid_shape)
+    {
+        let mut convs_left = match policy {
+            FusePolicy::ConvChain { depth } => depth,
+            _ => 0,
+        };
+        let mut chain_tensors: BTreeSet<TensorId> = BTreeSet::new();
+        chain_tensors.insert(head.store.tensor);
+        let mut q = p + 1;
+        while q < prog.nests.len() && chain.members.len() < MAX_CHAIN_MEMBERS {
+            let Some(join) = widened_member(prog, q, &chain, &chain_tensors, convs_left)
+            else {
+                break;
+            };
+            convs_left -= join.convs_used;
+            // every upstream member recomputes the new follower's halo
+            for m in &mut chain.members {
+                for k in 0..rank {
+                    m.halo[k].0 += join.halo_add[k].0;
+                    m.halo[k].1 += join.halo_add[k].1;
+                }
+            }
+            for k in 0..rank {
+                chain.frozen[k] |= join.freeze[k];
+            }
             chain.members.push(ChainMember {
                 pos: q,
-                dim_of_grid: (0..nd).map(Some).collect(),
+                dim_of_grid: join.dim_of_grid,
+                halo: vec![(0, 0); rank],
             });
-            y = prog.nests[q].store.tensor;
+            chain_tensors.insert(prog.nests[q].store.tensor);
             q += 1;
         }
     }
     Some(chain)
+}
+
+/// What joining nest `q` to a widened chain requires.
+struct WidenedJoin {
+    dim_of_grid: Vec<Option<usize>>,
+    /// Halo every *upstream* member must add, per grid dim.
+    halo_add: Vec<(i64, i64)>,
+    /// Grid dims the join freezes (must never split).
+    freeze: Vec<bool>,
+    /// Conv-budget consumed (1 for a halo/reduction-reading conv).
+    convs_used: usize,
+}
+
+/// Is nest `q` an eligible widened-chain follower, and at what cost?
+///
+/// Legality is derived from the access maps (no per-op kernel/pad
+/// arithmetic), with one layout convention: the **rank-4 NCHW channel
+/// dim (index 1)** is the only dim allowed to diverge between a
+/// member and the grid — divergence freezes the grid channel dim so
+/// every tile spans full channels, which keeps channel-divergent
+/// members consistent. (Rank-3 Conv1d chains therefore never fuse
+/// across channel changes; lifting that means deriving the exempt dim
+/// from the maps instead of the NCHW convention.) The rules:
+/// * the store is an offset-free projection covering the member's own
+///   output box; output dims must match the grid except the rank-4
+///   channel dim, whose divergence freezes the grid channel dim
+///   (tiles then always span full channels, so channel-divergent
+///   members stay consistent);
+/// * every read of a chain-produced tensor is a guard-free affine
+///   single-dim access per tensor dim: an aligned unit-coefficient
+///   read contributes its probe-image halo (the kernel overhang of a
+///   "same" conv); a tile-invariant read (a conv reducing over the
+///   producer's channels) freezes that grid dim; anything else is
+///   rejected;
+/// * nonzero halo or a read-induced freeze marks a recompute join,
+///   which only a stride-1 conv under [`FusePolicy::ConvChain`] with
+///   remaining depth may make.
+fn widened_member(
+    prog: &Program,
+    q: usize,
+    chain: &Chain,
+    chain_tensors: &BTreeSet<TensorId>,
+    convs_left: usize,
+) -> Option<WidenedJoin> {
+    let nest = &prog.nests[q];
+    let node = prog.graph.node(nest.node);
+    if !tileable_kind(&node.kind, nest) {
+        return None;
+    }
+    // multi-nest nodes (concat) would need cross-nest coordination
+    if prog.writers(nest.store.tensor) != vec![q] {
+        return None;
+    }
+    let rank = chain.grid_shape.len();
+    let out_shape = prog.graph.tensor(nest.store.tensor).shape.clone();
+    if out_shape.len() != rank {
+        return None;
+    }
+    let ext = nest.domain.extents().to_vec();
+    let sm = footprint::store_dim_map(nest)?;
+    if !nest
+        .store
+        .map
+        .exprs()
+        .iter()
+        .all(|e| matches!(e, Expr::Dim(_)) || matches!(e, Expr::Cst(0)))
+    {
+        return None;
+    }
+    let mut dim_of_grid: Vec<Option<usize>> = vec![None; ext.len()];
+    let mut freeze = vec![false; rank];
+    for (j, src) in sm.iter().enumerate() {
+        match src {
+            Some(d) => {
+                if ext[*d] != out_shape[j] {
+                    return None; // store must cover the member's own box
+                }
+                if out_shape[j] == chain.grid_shape[j] {
+                    dim_of_grid[*d] = Some(j);
+                } else if rank == 4 && j == 1 {
+                    freeze[1] = true;
+                } else {
+                    return None;
+                }
+            }
+            None => {
+                if chain.grid_shape[j] != 1 || out_shape[j] != 1 {
+                    return None;
+                }
+            }
+        }
+    }
+
+    let mut halo_add = vec![(0i64, 0i64); rank];
+    let mut read_freeze = false;
+    // unit-tile probe: grid-mapped dims pinned to extent 1 at the
+    // origin; affine image widths then scale linearly with the tile
+    let probe: Vec<i64> = ext
+        .iter()
+        .enumerate()
+        .map(|(d, &e)| if dim_of_grid[d].is_some() { 1 } else { e })
+        .collect();
+    for load in nest.body.loads() {
+        for piece in &load.pieces {
+            let Some(t) = piece.tensor else { continue };
+            if !chain_tensors.contains(&t) {
+                continue;
+            }
+            if !piece.guards.is_empty() || !piece.map.is_affine() {
+                return None;
+            }
+            let tinfo = prog.graph.tensor(t);
+            if tinfo.shape.len() != rank {
+                return None;
+            }
+            for (j, e) in piece.map.exprs().iter().enumerate() {
+                if tinfo.shape[j] != chain.grid_shape[j] {
+                    // channel-divergent chain tensor: its producer
+                    // writes the dim in full every tile
+                    if rank == 4 && j == 1 {
+                        continue;
+                    }
+                    return None;
+                }
+                let (coeffs, _c) = e.as_affine(ext.len())?;
+                let mapped: Vec<usize> = coeffs
+                    .iter()
+                    .enumerate()
+                    .filter(|(d, &c)| c != 0 && dim_of_grid[*d].is_some())
+                    .map(|(d, _)| d)
+                    .collect();
+                match mapped.as_slice() {
+                    [] => {
+                        // tile-invariant read range (e.g. a conv
+                        // reducing over the producer's channels): the
+                        // producer covers it only if the dim never
+                        // splits
+                        if chain.grid_shape[j] > 1 {
+                            freeze[j] = true;
+                            read_freeze = true;
+                        }
+                    }
+                    [d] if coeffs[*d] == 1 && dim_of_grid[*d] == Some(j) => {
+                        let (lo, hi) = e.range(&probe)?;
+                        let hlo = (-lo).max(0);
+                        let hhi = hi.max(0);
+                        if hlo + hhi > MAX_HALO {
+                            if chain.grid_shape[j] > 1 {
+                                freeze[j] = true;
+                                read_freeze = true;
+                            }
+                        } else if hlo > 0 || hhi > 0 {
+                            halo_add[j].0 = halo_add[j].0.max(hlo);
+                            halo_add[j].1 = halo_add[j].1.max(hhi);
+                        }
+                    }
+                    _ => return None,
+                }
+            }
+        }
+    }
+
+    let mut convs_used = 0usize;
+    if halo_add.iter().any(|&(a, b)| a > 0 || b > 0) || read_freeze {
+        // recompute join: only a stride-1 conv may make it, and only
+        // while the chain has conv depth left
+        let stride_ok = match &node.kind {
+            OpKind::Conv2d { stride, .. } | OpKind::DepthwiseConv2d { stride, .. } => {
+                *stride == 1
+            }
+            _ => false,
+        };
+        if !stride_ok || convs_left == 0 {
+            return None;
+        }
+        convs_used = 1;
+    }
+    Some(WidenedJoin { dim_of_grid, halo_add, freeze, convs_used })
 }
 
 /// Worst-case double-buffered tile working set of a chain under grid
@@ -262,14 +515,18 @@ pub fn chain_tile_footprint(prog: &Program, chain: &Chain, s: &[i64]) -> i64 {
         let mut per_tensor: BTreeMap<TensorId, i64> = BTreeMap::new();
         for m in &chain.members {
             let nest = &prog.nests[m.pos];
-            // full-size tile box of this member (boundary tiles only shrink)
+            // full-size tile box of this member, halo included
+            // (boundary tiles only shrink)
             let ext = nest.domain.extents();
             let exts: Vec<i64> = m
                 .dim_of_grid
                 .iter()
                 .enumerate()
                 .map(|(d, k)| match k {
-                    Some(k) => s[*k].min(chain.grid_shape[*k]),
+                    Some(k) => {
+                        let (hlo, hhi) = m.halo.get(*k).copied().unwrap_or((0, 0));
+                        (s[*k].min(chain.grid_shape[*k]) + hlo + hhi).min(ext[d])
+                    }
                     None => ext[d],
                 })
                 .collect();
@@ -367,13 +624,16 @@ pub fn chain_stream_penalty(
 
 /// Greedy tile-size search: start at the whole grid and repeatedly
 /// halve a dim until the worst-case double-buffered footprint fits
-/// `budget`. Candidates are ranked by `(stream penalty, footprint)`:
-/// first avoid splits that multiply re-streaming of DRAM-bound operands
+/// `budget`. Candidates are ranked by the [`DecisionPolicy`]'s
+/// [`DecisionPolicy::tile_grid_key`] — under [`GreedyPolicy`] that is
+/// the historical `(stream penalty, footprint)` pair: first avoid
+/// splits that multiply re-streaming of DRAM-bound operands
 /// ([`chain_stream_penalty`]), then shrink the working set fastest.
-/// `None` when the chain already fits untiled (measured 1×: a single
-/// "tile" needs no buddy buffer), or when even the finest split within
-/// the tile cap cannot fit (e.g. an un-splittable invariant operand
-/// dominates).
+/// Frozen grid dims (conv-reduced channels of a widened chain) are
+/// never split. `None` when the chain already fits untiled (measured
+/// 1×: a single "tile" needs no buddy buffer), or when even the
+/// finest split within the tile cap cannot fit (e.g. an un-splittable
+/// invariant operand dominates).
 ///
 /// Terminates because every step strictly shrinks one grid dim: at
 /// most `Σ ceil(log2 grid[k])` iterations.
@@ -384,14 +644,27 @@ pub fn choose_grid_sizes(
     max_tiles: usize,
     cfg: &AccelConfig,
 ) -> Option<Vec<i64>> {
+    choose_grid_sizes_with(prog, chain, budget, max_tiles, cfg, &GreedyPolicy)
+}
+
+/// [`choose_grid_sizes`] with an explicit scoring policy.
+pub fn choose_grid_sizes_with(
+    prog: &Program,
+    chain: &Chain,
+    budget: i64,
+    max_tiles: usize,
+    cfg: &AccelConfig,
+    policy: &dyn DecisionPolicy,
+) -> Option<Vec<i64>> {
     let mut s = chain.grid_shape.clone();
     if chain_tile_footprint(prog, chain, &s) <= budget {
         return None; // fits whole — no tiling needed
     }
     loop {
-        let mut best: Option<(i64, i64, usize)> = None;
+        // key contract: `.1` is the candidate's double-buffered footprint
+        let mut best: Option<((i64, i64), usize)> = None;
         for k in 0..s.len() {
-            if s[k] <= 1 {
+            if s[k] <= 1 || chain.frozen[k] {
                 continue;
             }
             let mut s2 = s.clone();
@@ -399,50 +672,94 @@ pub fn choose_grid_sizes(
             if chain.n_tiles(&s2) > max_tiles as i64 {
                 continue;
             }
-            let fp = chain_tile_footprint(prog, chain, &s2);
-            let pen = chain_stream_penalty(prog, chain, &s2, cfg);
-            if best.map(|(bp, bf, _)| (pen, fp) < (bp, bf)).unwrap_or(true) {
-                best = Some((pen, fp, k));
+            let key = policy.tile_grid_key(prog, chain, &s2, cfg);
+            if best.map(|(bk, _)| key < bk).unwrap_or(true) {
+                best = Some((key, k));
             }
         }
-        let (_, fp, k) = best?;
+        let (key, k) = best?;
         s[k] = (s[k] + 1) / 2;
-        if fp <= budget {
+        if key.1 <= budget {
             return Some(s);
         }
     }
 }
 
+/// Size the chain at nest position `p`, trying the configured fusion
+/// policy first and downgrading (`ConvChain` → `Wide` → `Elementwise`)
+/// when a wider chain cannot be sized within the budget and tile caps
+/// — a merged chain whose invariant operands dominate must not cost
+/// the tiling the narrower chains would have delivered. `None` means
+/// "leave position `p` untiled" (not tileable, fits untiled, or
+/// unsizable at every fusion level).
+fn plan_chain_at(
+    prog: &Program,
+    p: usize,
+    cfg: &AccelConfig,
+    opts: &TileOpts,
+    budget: i64,
+    policy: &dyn DecisionPolicy,
+) -> Option<(Chain, Vec<i64>)> {
+    let effective = if opts.fuse { opts.fuse_policy } else { FusePolicy::None };
+    let ladder: Vec<FusePolicy> = match effective {
+        FusePolicy::ConvChain { .. } => {
+            vec![effective, FusePolicy::Wide, FusePolicy::Elementwise]
+        }
+        FusePolicy::Wide => vec![effective, FusePolicy::Elementwise],
+        other => vec![other],
+    };
+    for pol in ladder {
+        let chain = detect_chain(prog, p, pol)?;
+        if chain_tile_footprint(prog, &chain, &chain.grid_shape) <= budget {
+            return None; // fits whole — no tiling needed at `p`
+        }
+        if let Some(s) =
+            choose_grid_sizes_with(prog, &chain, budget, opts.max_tiles, cfg, policy)
+        {
+            return Some((chain, s));
+        }
+    }
+    None
+}
+
 /// Run the tiling stage over a lowered (post-DME) program: detect
 /// oversized nests/chains, choose grids, strip-mine in place.
 pub fn run_tiling(prog: &mut Program, cfg: &AccelConfig, opts: &TileOpts) -> TileStats {
+    run_tiling_with(prog, cfg, opts, &GreedyPolicy)
+}
+
+/// [`run_tiling`] with an explicit grid-scoring policy. Every caller
+/// — including the joint optimizer's candidate realization — routes
+/// grid ranking through [`DecisionPolicy::tile_grid_key`]; the
+/// shipped policies all rank grids greedily today, and this seam is
+/// where a cost-model-driven grid scorer plugs in without touching
+/// the search loop.
+pub fn run_tiling_with(
+    prog: &mut Program,
+    cfg: &AccelConfig,
+    opts: &TileOpts,
+    policy: &dyn DecisionPolicy,
+) -> TileStats {
     let budget = (cfg.scratchpad_bytes() as f64 * opts.budget_fraction) as i64;
     let mut stats = TileStats::default();
     let mut out: Vec<LoopNest> = Vec::with_capacity(prog.nests.len());
     let mut group: u32 = 0;
     let mut p = 0usize;
     while p < prog.nests.len() {
-        let tiled = match detect_chain(prog, p, opts) {
-            Some(chain) => match choose_grid_sizes(prog, &chain, budget, opts.max_tiles, cfg) {
-                Some(s) => {
-                    let tiles = transform::tile_chain(&prog.nests, &chain, &s, group);
-                    stats.groups += 1;
-                    stats.nests_tiled += chain.len();
-                    stats.tiles_emitted += tiles.len();
-                    if chain.len() > 1 {
-                        stats.fused_chains += 1;
-                    }
-                    stats.max_chain_len = stats.max_chain_len.max(chain.len());
-                    out.extend(tiles);
-                    group += 1;
-                    Some(chain.len())
+        match plan_chain_at(prog, p, cfg, opts, budget, policy) {
+            Some((chain, s)) => {
+                let tiles = transform::tile_chain(&prog.nests, &chain, &s, group);
+                stats.groups += 1;
+                stats.nests_tiled += chain.len();
+                stats.tiles_emitted += tiles.len();
+                if chain.len() > 1 {
+                    stats.fused_chains += 1;
                 }
-                None => None,
-            },
-            None => None,
-        };
-        match tiled {
-            Some(len) => p += len,
+                stats.max_chain_len = stats.max_chain_len.max(chain.len());
+                out.extend(tiles);
+                group += 1;
+                p += chain.len();
+            }
             None => {
                 out.push(prog.nests[p].clone());
                 p += 1;
@@ -529,10 +846,122 @@ mod tests {
         verify_program(&prog).unwrap();
     }
 
+    /// Residual-shaped graph: conv → bn on the main path, an
+    /// independent projection conv beside it, converging in add → relu.
+    fn residual_graph() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 16, 16]);
+        let w = b.weight("w", &[4, 4, 3, 3]);
+        let c = b.conv2d("c", x, w, 1, 1);
+        let n = b.batchnorm("bn", c);
+        let wp = b.weight("wp", &[4, 4, 1, 1]);
+        let pj = b.conv2d("proj", x, wp, 1, 0);
+        let a = b.add("a", n, pj);
+        let r = b.relu("r", a);
+        b.mark_output(r);
+        b.finish()
+    }
+
+    /// conv → bn → relu → conv: the chain the elementwise rule must
+    /// break at the second conv and `ConvChain` may not.
+    fn conv_conv_graph() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 4, 16, 16]);
+        let w1 = b.weight("w1", &[4, 4, 3, 3]);
+        let c1 = b.conv2d("c1", x, w1, 1, 1);
+        let n = b.batchnorm("bn", c1);
+        let r = b.relu("r", n);
+        let w2 = b.weight("w2", &[6, 4, 3, 3]);
+        let c2 = b.conv2d("c2", r, w2, 1, 1);
+        b.mark_output(c2);
+        b.finish()
+    }
+
+    #[test]
+    fn wide_policy_merges_converging_branches() {
+        let prog = Program::lower(residual_graph());
+        let narrow = detect_chain(&prog, 0, FusePolicy::Elementwise).unwrap();
+        assert_eq!(narrow.len(), 2, "elementwise must stop at the proj conv");
+        let wide = detect_chain(&prog, 0, FusePolicy::Wide).unwrap();
+        assert_eq!(wide.len(), 5, "wide must absorb proj, add and relu");
+        assert!(wide.members.iter().all(|m| m.halo.iter().all(|&h| h == (0, 0))));
+    }
+
+    #[test]
+    fn wide_fusion_is_bit_identical() {
+        let g = residual_graph();
+        let baseline = Program::lower(g.clone());
+        let mut tiled = Program::lower(g);
+        let opts = TileOpts { fuse_policy: FusePolicy::Wide, ..Default::default() };
+        let stats = run_tiling(&mut tiled, &AccelConfig::tiny(4 * 1024), &opts);
+        assert!(stats.groups >= 1, "{stats:?}");
+        assert!(stats.max_chain_len >= 5, "{stats:?}");
+        verify_program(&tiled).unwrap();
+        crate::interp::diff::assert_equivalent(&baseline, &tiled, 0x31DE);
+    }
+
+    #[test]
+    fn conv_chain_joins_with_halo_and_freezes_channels() {
+        let prog = Program::lower(conv_conv_graph());
+        let chain = detect_chain(&prog, 0, FusePolicy::ConvChain { depth: 1 }).unwrap();
+        assert_eq!(chain.len(), 4, "c1, bn, relu and c2 must fuse");
+        // the conv join reduces over the producer's channels: frozen
+        assert!(chain.frozen[1], "{:?}", chain.frozen);
+        // every upstream member recomputes the 3×3 kernel's halo
+        for m in &chain.members[..3] {
+            assert_eq!(m.halo[2], (1, 1), "{:?}", m.halo);
+            assert_eq!(m.halo[3], (1, 1), "{:?}", m.halo);
+        }
+        assert_eq!(chain.members[3].halo[2], (0, 0));
+        // without conv depth the same chain stops before c2
+        let wide = detect_chain(&prog, 0, FusePolicy::Wide).unwrap();
+        assert_eq!(wide.len(), 3);
+    }
+
+    #[test]
+    fn conv_chain_halo_recompute_is_bit_identical() {
+        let g = conv_conv_graph();
+        let baseline = Program::lower(g.clone());
+        let mut tiled = Program::lower(g);
+        let opts = TileOpts {
+            fuse_policy: FusePolicy::ConvChain { depth: 1 },
+            ..Default::default()
+        };
+        let stats = run_tiling(&mut tiled, &AccelConfig::tiny(8 * 1024), &opts);
+        assert!(stats.groups >= 1, "{stats:?}");
+        verify_program(&tiled).unwrap();
+        crate::interp::diff::assert_equivalent(&baseline, &tiled, 0xC04C);
+    }
+
+    #[test]
+    fn conv_chain_stages_the_conv_boundary_tensor() {
+        // with the conv joined, the relu output's every writer and
+        // reader sits in one tile group: the planner must stage it
+        // instead of streaming it through DRAM
+        let g = conv_conv_graph();
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let mut prog = Program::lower(g);
+        let opts = TileOpts {
+            fuse_policy: FusePolicy::ConvChain { depth: 1 },
+            ..Default::default()
+        };
+        let stats = run_tiling(&mut prog, &cfg, &opts);
+        assert!(stats.max_chain_len >= 4, "{stats:?}");
+        let res = crate::alloc::plan_memory(
+            prog,
+            None,
+            &cfg,
+            &crate::alloc::AllocOpts::default(),
+        )
+        .unwrap();
+        crate::alloc::verify_plan(&res.program, &res.plan, &cfg).unwrap();
+        assert!(res.plan.stats.tile_staged >= 1, "{:?}", res.plan.stats);
+    }
+
     #[test]
     fn grid_size_search_respects_budget() {
         let prog = Program::lower(chain_graph());
-        let chain = detect_chain(&prog, 0, &TileOpts::default()).unwrap();
+        let chain = detect_chain(&prog, 0, FusePolicy::Elementwise).unwrap();
         let budget = 2048;
         let cfg = AccelConfig::tiny(4 * 1024);
         let s = choose_grid_sizes(&prog, &chain, budget, 1024, &cfg).unwrap();

@@ -36,6 +36,23 @@ use crate::poly::IterDomain;
 pub struct ChainMember {
     pub pos: usize,
     pub dim_of_grid: Vec<Option<usize>>,
+    /// Per **grid dim**: how far this member's tile box extends beyond
+    /// the grid slice `[go, go+s)` on each side. Zero for ordinary
+    /// (elementwise-aligned) members; nonzero on members *upstream of a
+    /// halo-consuming conv follower*, whose tiles must recompute the
+    /// overlap region so the consumer's same-index tile reads a
+    /// complete slice (overlapped tiling — the recompute side of the
+    /// recompute-vs-stage trade). Overlap writes store identical bits:
+    /// each output element's full accumulation runs inside every tile
+    /// that computes it, in unchanged lexicographic order.
+    pub halo: Vec<(i64, i64)>,
+}
+
+impl ChainMember {
+    /// A member with no halo (the common case).
+    pub fn plain(pos: usize, dim_of_grid: Vec<Option<usize>>, grid_rank: usize) -> ChainMember {
+        ChainMember { pos, dim_of_grid, halo: vec![(0, 0); grid_rank] }
+    }
 }
 
 /// A tiling unit: consecutive nest positions sharing a tile grid over
@@ -44,6 +61,10 @@ pub struct ChainMember {
 pub struct Chain {
     pub members: Vec<ChainMember>,
     pub grid_shape: Vec<i64>,
+    /// Grid dims the size search must never split — e.g. the channel
+    /// dim once a conv follower reduces over it (splitting would make
+    /// the follower read channels its producer tile never wrote).
+    pub frozen: Vec<bool>,
 }
 
 impl Chain {
@@ -70,7 +91,8 @@ impl Chain {
 
     /// Tile-box `(offsets, extents)` of `member` for grid tile `go`
     /// with grid sizes `s`: grid-tiled dims take the (clipped) grid
-    /// slice, reduction dims stay full.
+    /// slice — expanded by the member's halo and re-clipped to the
+    /// domain — reduction dims stay full.
     pub fn member_box(
         &self,
         nest: &LoopNest,
@@ -83,8 +105,11 @@ impl Chain {
         let mut exts = ext.to_vec();
         for (d, grid) in member.dim_of_grid.iter().enumerate() {
             if let Some(k) = *grid {
-                offs[d] = go[k];
-                exts[d] = s[k].min(self.grid_shape[k] - go[k]);
+                let (hlo, hhi) = member.halo.get(k).copied().unwrap_or((0, 0));
+                let end = (go[k] + s[k].min(self.grid_shape[k] - go[k]) + hhi).min(ext[d]);
+                let start = (go[k] - hlo).max(0);
+                offs[d] = start;
+                exts[d] = end - start;
             }
         }
         (offs, exts)
@@ -216,8 +241,10 @@ mod tests {
         let nest = &prog.nests[pos];
         let dim_of_grid = head_dim_map(nest).expect("tileable store");
         let grid_shape: Vec<i64> = prog.graph.tensor(nest.store.tensor).shape.clone();
+        let rank = grid_shape.len();
         Chain {
-            members: vec![ChainMember { pos, dim_of_grid }],
+            members: vec![ChainMember::plain(pos, dim_of_grid, rank)],
+            frozen: vec![false; rank],
             grid_shape,
         }
     }
@@ -298,6 +325,36 @@ mod tests {
     }
 
     #[test]
+    fn halo_member_boxes_overlap_and_cover() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8]);
+        let r = b.relu("r", x);
+        b.mark_output(r);
+        let prog = Program::lower(b.finish());
+        let chain = Chain {
+            members: vec![ChainMember {
+                pos: 0,
+                dim_of_grid: vec![Some(0)],
+                halo: vec![(1, 1)],
+            }],
+            grid_shape: vec![8],
+            frozen: vec![false],
+        };
+        let s = vec![4i64];
+        let nest = &prog.nests[0];
+        let origins = chain.tile_origins(&s);
+        assert_eq!(origins, vec![vec![0], vec![4]]);
+        let (o0, e0) = chain.member_box(nest, &chain.members[0], &origins[0], &s);
+        let (o1, e1) = chain.member_box(nest, &chain.members[0], &origins[1], &s);
+        // first tile: [0, 5) (halo above clipped below at 0)
+        assert_eq!((o0[0], e0[0]), (0, 5));
+        // second tile: [3, 8) — overlapping the first by the halo
+        assert_eq!((o1[0], e1[0]), (3, 5));
+        // union covers the whole grid
+        assert!(o0[0] == 0 && o1[0] + e1[0] == 8 && o1[0] <= o0[0] + e0[0]);
+    }
+
+    #[test]
     fn chain_interleaves_members() {
         let mut b = GraphBuilder::new();
         let x = b.input("x", &[8]);
@@ -307,10 +364,11 @@ mod tests {
         let prog = Program::lower(b.finish());
         let chain = Chain {
             members: vec![
-                ChainMember { pos: 0, dim_of_grid: vec![Some(0)] },
-                ChainMember { pos: 1, dim_of_grid: vec![Some(0)] },
+                ChainMember::plain(0, vec![Some(0)], 1),
+                ChainMember::plain(1, vec![Some(0)], 1),
             ],
             grid_shape: vec![8],
+            frozen: vec![false],
         };
         let tiles = tile_chain(&prog.nests, &chain, &[4], 3);
         let names: Vec<&str> = tiles.iter().map(|n| n.name.as_str()).collect();

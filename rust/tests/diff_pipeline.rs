@@ -20,7 +20,7 @@ use polymem::ir::verify::verify_graph;
 use polymem::ir::{Graph, GraphBuilder};
 use polymem::models::{self, WaveNetConfig};
 use polymem::passes::dme::run_dme;
-use polymem::passes::manager::{AllocStage, BankMode, PassManager, TileStage};
+use polymem::passes::manager::{AllocStage, BankMode, OptStage, PassManager, TileStage};
 use polymem::poly::AccessMap;
 use polymem::util::fuzzgraph;
 
@@ -67,6 +67,14 @@ fn tiled(cfg: AccelConfig) -> PassManager {
     }
 }
 
+fn opted(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        opt: Some(OptStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
 #[test]
 fn zoo_equivalent_through_global_planned_pipeline() {
     // a cramped scratchpad so the plan stage actually splits windows /
@@ -93,6 +101,25 @@ fn zoo_equivalent_through_tiled_planned_pipeline() {
         assert!(
             rep.stages.iter().any(|s| s == "tile"),
             "{name}: tile stage not observed in {:?}",
+            rep.stages
+        );
+        assert_eq!(rep.stages.last().map(|s| s.as_str()), Some("plan"), "{name}");
+    }
+}
+
+#[test]
+fn zoo_equivalent_through_opt_pipeline() {
+    // the joint optimizer may pick widened fusion (multi-consumer,
+    // conv-chain halo recompute), a different tile budget, a group
+    // reschedule and a different spill flavor — whatever it picks, the
+    // full lower → dme → opt → bank → plan ladder must stay
+    // bit-identical
+    let pm = opted(AccelConfig::tiny(8 * 1024));
+    for (name, g) in zoo() {
+        let rep = diff_pipeline(g, &pm, SEED).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            rep.stages.iter().any(|s| s == "opt"),
+            "{name}: opt stage not observed in {:?}",
             rep.stages
         );
         assert_eq!(rep.stages.last().map(|s| s.as_str()), Some("plan"), "{name}");
@@ -142,11 +169,15 @@ fn fuzzed_graphs_equivalent_across_all_stages() {
         // FUZZ_SEED=<s> FUZZ_CASES=1 replays the exact failing case,
         // config included. Seeds ≡ 3 (mod 4) are exactly the ones the
         // generator hands oversized tensors (`FuzzOpts::oversized`), so
-        // the tiled config always sees scratchpad-busting graphs.
+        // the tiled config always sees scratchpad-busting graphs — and
+        // every 4th such oversized seed (≡ 3 mod 16) runs the joint-
+        // optimizer configuration instead, so widened fusion, halo
+        // recompute and spill-flavor choices are fuzzed too.
         let pm = match seed % 4 {
             0 => PassManager::default(),
             1 => PassManager { bank_mode: BankMode::Local, ..Default::default() },
             2 => planned(AccelConfig::tiny(4 * 1024)),
+            _ if seed % 16 == 3 => opted(AccelConfig::tiny(4 * 1024)),
             _ => tiled(AccelConfig::tiny(4 * 1024)),
         };
         diff_pipeline(g, &pm, seed).unwrap_or_else(|e| {

@@ -1,0 +1,180 @@
+//! Cost-model calibration: the invariant `cost/` stands on.
+//!
+//! The joint optimizer trusts `cost::evaluate` as a stand-in for the
+//! simulator — "fewer predicted bytes" must *be* "fewer simulated
+//! bytes". This suite holds the model to that bar **exactly**: for
+//! every pipeline that produces a plan, the predicted traffic equals
+//! `simulate_planned`'s accounting byte-for-byte per traffic class,
+//! and the predicted latencies equal `simulate_planned` /
+//! `simulate_pipelined` seconds bit-for-bit — over all 7 model
+//! builders and ≥ 200 fuzzed graphs (`FUZZ_SEED` / `FUZZ_CASES`
+//! override for replay, as in `tests/diff_pipeline.rs`).
+
+use polymem::accel::{simulate_pipelined, simulate_planned, AccelConfig};
+use polymem::cost;
+use polymem::ir::Graph;
+use polymem::models::{self, WaveNetConfig};
+use polymem::passes::manager::{AllocStage, OptStage, PassManager, TileStage};
+use polymem::util::fuzzgraph;
+
+/// Same interpreter-sized zoo as the differential suite.
+fn zoo() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("mlp", models::mlp(2, 12, 8, 4, 2)),
+        ("transformer", models::transformer_block(8, 16, 2, 32)),
+        ("resnet18", models::resnet18_scaled(1, 16, 8, 10)),
+        ("resnet50", models::resnet50_scaled(1, 16, 8, 10)),
+        ("mobilenet", models::mobilenet_v1_scaled(1, 16, 8, 10)),
+        ("inception", models::inception_stack_scaled(1, 2, 8, 4)),
+        (
+            "wavenet",
+            models::parallel_wavenet_with(WaveNetConfig {
+                flows: 2,
+                layers_per_flow: 3,
+                channels: 4,
+                time: 40,
+                kernel: 2,
+                dilation_cycle: 10,
+            }),
+        ),
+    ]
+}
+
+fn planned(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
+fn tiled(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        tile: Some(TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
+fn opted(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        opt: Some(OptStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
+/// Assert the calibration invariant for one compiled program+plan.
+fn assert_calibrated(name: &str, pm: &PassManager, g: Graph, cfg: &AccelConfig) {
+    let rep = pm.run(g).unwrap_or_else(|e| panic!("{name}: pipeline failed: {e}"));
+    let plan = rep.plan.as_ref().expect("alloc stage configured");
+    let predicted = cost::evaluate(&rep.program, plan, cfg);
+    let sim = simulate_planned(&rep.program, plan, cfg, None)
+        .unwrap_or_else(|e| panic!("{name}: plan rejected: {e}"));
+    assert_eq!(
+        predicted.traffic, sim.traffic,
+        "{name}: predicted traffic diverges from the planned replay"
+    );
+    assert_eq!(
+        predicted.offchip_total(),
+        sim.offchip_total(),
+        "{name}: off-chip bytes diverge"
+    );
+    assert_eq!(
+        predicted.staging_deposit_bytes, sim.staging_deposit_bytes,
+        "{name}: staging deposits diverge"
+    );
+    assert_eq!(
+        predicted.onchip_movement_total(),
+        sim.onchip_movement_total(),
+        "{name}: on-chip movement diverges"
+    );
+    assert_eq!(
+        predicted.peak_scratchpad, sim.peak_scratchpad,
+        "{name}: peak scratchpad diverges"
+    );
+    assert_eq!(
+        predicted.serial_seconds.to_bits(),
+        sim.seconds.to_bits(),
+        "{name}: serial seconds diverge ({} vs {})",
+        predicted.serial_seconds,
+        sim.seconds
+    );
+    let pipe = simulate_pipelined(&rep.program, plan, cfg, None).unwrap();
+    assert_eq!(
+        predicted.pipelined_seconds.to_bits(),
+        pipe.seconds.to_bits(),
+        "{name}: pipelined seconds diverge ({} vs {})",
+        predicted.pipelined_seconds,
+        pipe.seconds
+    );
+    // and no plan beats the compulsory floor
+    assert!(predicted.offchip_total() >= cost::compulsory_offchip(&rep.program), "{name}");
+}
+
+#[test]
+fn zoo_calibrated_through_planned_pipeline() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        assert_calibrated(name, &planned(cfg.clone()), g, &cfg);
+    }
+}
+
+#[test]
+fn zoo_calibrated_through_tiled_pipeline() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        assert_calibrated(name, &tiled(cfg.clone()), g, &cfg);
+    }
+}
+
+#[test]
+fn zoo_calibrated_through_opt_pipeline() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        assert_calibrated(name, &opted(cfg.clone()), g, &cfg);
+    }
+}
+
+/// Read a u64 override (decimal or 0x-hex), aborting on unparseable
+/// values (same contract as the differential suite).
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => {
+            let parsed = s
+                .strip_prefix("0x")
+                .or_else(|| s.strip_prefix("0X"))
+                .map(|h| u64::from_str_radix(h, 16))
+                .unwrap_or_else(|| s.parse());
+            parsed.unwrap_or_else(|_| panic!("{name}={s}: not a u64 (decimal or 0x-hex)"))
+        }
+    }
+}
+
+#[test]
+fn fuzzed_graphs_calibrated() {
+    // ≥ 200 seeded random DAGs through the plan-producing pipeline
+    // configurations, mirroring the differential suite's rotation:
+    // planned / tiled alternate, and every 4th oversized seed
+    // (seed ≡ 3 mod 16) runs the joint-optimizer configuration
+    let base = env_u64("FUZZ_SEED", 0xF0_2255ED);
+    let cases = env_u64("FUZZ_CASES", 200);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+        let g = fuzzgraph::fuzz_graph(seed);
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = if seed % 16 == 3 {
+            opted(cfg.clone())
+        } else if seed % 2 == 0 {
+            planned(cfg.clone())
+        } else {
+            tiled(cfg.clone())
+        };
+        assert_calibrated(
+            &format!("FUZZ_SEED={seed}"),
+            &pm,
+            g,
+            &cfg,
+        );
+    }
+}
