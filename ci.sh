@@ -37,13 +37,24 @@ echo "   (replay one differential case: FUZZ_SEED=<seed> FUZZ_CASES=1 cargo test
 # (target/BENCH_plan.json, target/BENCH_tile.json, target/BENCH_opt.json)
 # every run, so the planned-vs-dynamic, tiled-vs-untiled and
 # joint-vs-staged-greedy byte counts are tracked as artifacts rather
-# than scrollback.
-echo "== perf records: bench_alloc_plan + bench_tile + bench_opt =="
+# than scrollback. bench_compile_time adds the compiler-telemetry
+# record (per-model pass phases + joint-search profile).
+echo "== perf records: bench_alloc_plan + bench_tile + bench_opt + bench_compile_time =="
 mkdir -p target
 BENCH_JSON_DIR=target cargo bench --bench bench_alloc_plan
 BENCH_JSON_DIR=target cargo bench --bench bench_tile
 BENCH_JSON_DIR=target cargo bench --bench bench_opt
-ls -l target/BENCH_plan.json target/BENCH_tile.json target/BENCH_opt.json
+BENCH_JSON_DIR=target cargo bench --bench bench_compile_time
+ls -l target/BENCH_plan.json target/BENCH_tile.json target/BENCH_opt.json \
+      target/BENCH_compile_phases.json
+
+# Telemetry smoke: the acceptance scenario end to end — optimize full
+# ResNet-50 under a cramped 2 MiB scratchpad, export the Chrome trace,
+# print the per-layer attribution table and the compile-phase profile.
+echo "== telemetry smoke: simulate --opt --trace-out =="
+./target/release/polymem simulate --model resnet50 --scratchpad-kib 2048 \
+    --opt --profile --top-layers 8 --trace-out target/trace_resnet50_opt.json
+test -s target/trace_resnet50_opt.json
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

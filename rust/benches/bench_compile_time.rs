@@ -1,11 +1,18 @@
 //! Compile-time scaling: the optimizer must stay a negligible part of
 //! a production toolchain run across every model in the zoo.
 //!
+//! Also the compile-telemetry artifact: emits per-model pass-phase
+//! wall times and one joint-search profile (generations, best-cost
+//! trajectory, candidates/second) to
+//! `$BENCH_JSON_DIR/BENCH_compile_phases.json` (ci.sh collects it).
+//!
 //! Run: `cargo bench --bench bench_compile_time`
 
+use polymem::accel::AccelConfig;
 use polymem::ir::Graph;
-use polymem::passes::manager::{BankMode, PassManager};
-use polymem::util::bench::{black_box, Bench, Suite};
+use polymem::passes::manager::{AllocStage, OptStage, PassManager};
+use polymem::util::bench::{black_box, write_json_record, Bench, Suite};
+use polymem::util::json::Json;
 
 fn zoo() -> Vec<(&'static str, Box<dyn Fn() -> Graph>)> {
     vec![
@@ -17,27 +24,92 @@ fn zoo() -> Vec<(&'static str, Box<dyn Fn() -> Graph>)> {
     ]
 }
 
+/// The 2 MiB configuration (inferentia-like geometry, banks shrunk).
+fn two_mib() -> AccelConfig {
+    let mut cfg = AccelConfig::inferentia_like();
+    cfg.bank_bytes /= 4; // 8 MiB -> 2 MiB
+    cfg.name = "inferentia-like/4".into();
+    cfg
+}
+
 fn main() {
     let mut suite = Suite::new("compile-time scaling (full pipeline: lower + DME + global bank mapping)");
+    let mut model_records: Vec<Json> = Vec::new();
     for (name, build) in zoo() {
         let nodes = build().nodes().len();
-        suite.add(
-            Bench::new(format!("{name} ({nodes} nodes)"))
-                .samples(10)
-                .throughput_items(nodes as f64)
-                .run(|| {
-                    let pm = PassManager::default();
-                    black_box(pm.run(build()).unwrap())
-                }),
-        );
+        let stats = Bench::new(format!("{name} ({nodes} nodes)"))
+            .samples(10)
+            .throughput_items(nodes as f64)
+            .run(|| {
+                let pm = PassManager::default();
+                black_box(pm.run(build()).unwrap())
+            });
+        // one instrumented run for the per-phase wall-time record
+        let rep = PassManager::default().run(build()).unwrap();
+        model_records.push(Json::obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("nodes", Json::Int(nodes as i64)),
+            ("mean_seconds", Json::Num(stats.mean.as_secs_f64())),
+            (
+                "phases",
+                Json::Arr(rep.phases.iter().map(|p| p.to_json()).collect()),
+            ),
+        ]));
+        suite.add(stats);
     }
 
     // pass-phase breakdown on the largest model
     println!("\nphase breakdown on resnet50:");
     let pm = PassManager::default();
     let rep = pm.run(polymem::models::resnet50(1)).unwrap();
-    println!("  dme:  {:?}", rep.dme_time);
-    println!("  bank: {:?}", rep.bank_time);
+    for p in &rep.phases {
+        println!("  {:<6} {:.6}s", p.name, p.seconds);
+    }
+
+    // joint-search profile: beam generations + throughput on a model
+    // that actually searches (mobilenet feature maps overflow 2 MiB)
+    println!("\njoint-search profile (mobilenet @ 2 MiB):");
+    let cfg = two_mib();
+    let pm = PassManager {
+        opt: Some(OptStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        ..Default::default()
+    };
+    let orep = pm.run(polymem::models::mobilenet_v1(1)).unwrap();
+    let os = orep.opt.expect("opt stage ran");
+    for g in &os.generations {
+        println!(
+            "  {:<5} axis: {} generated, {} realized, {} pruned, best {}",
+            g.axis,
+            g.generated,
+            g.realized,
+            g.pruned,
+            polymem::report::mb(g.best_offchip)
+        );
+    }
+    let cps = os.candidates as f64 / os.search_seconds.max(1e-9);
+    println!(
+        "  search: {} candidates in {:.3}s ({cps:.1} candidates/s)",
+        os.candidates, os.search_seconds
+    );
+    let opt_profile = Json::obj(vec![
+        ("model", Json::Str("mobilenet".to_string())),
+        ("accel", cfg.to_json()),
+        ("opt_stats", os.to_json()),
+        (
+            "phases",
+            Json::Arr(orep.phases.iter().map(|p| p.to_json()).collect()),
+        ),
+        ("candidates_per_second", Json::Num(cps)),
+    ]);
+
+    write_json_record(
+        "BENCH_compile_phases.json",
+        &Json::obj(vec![
+            ("models", Json::Arr(model_records)),
+            ("opt_profile", opt_profile),
+        ]),
+    );
 
     // verification cost
     let mut suite2 = Suite::new("verification overhead (resnet50)");

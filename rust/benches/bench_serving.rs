@@ -49,6 +49,13 @@ fn main() {
             snap.mean_batch,
             snap.p99_latency
         );
+        if max_batch == 64 {
+            // what a metrics scrape endpoint would serve after the sweep
+            println!("\nscrape rendering (max_batch 64):");
+            for line in srv.metrics_text().lines() {
+                println!("  {line}");
+            }
+        }
         srv.shutdown();
     }
 

@@ -87,6 +87,53 @@ pub fn pipeline_seconds(steps: &[PipeStep]) -> f64 {
     dma_free.max(comp_free)
 }
 
+/// Per-step engine intervals of a pipelined tile schedule: when each
+/// tile's prefetch, compute and write-back occupy their engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PipeInterval {
+    pub in_start: f64,
+    pub in_done: f64,
+    pub comp_start: f64,
+    pub comp_done: f64,
+    pub out_start: f64,
+    pub out_done: f64,
+}
+
+/// The full engine timeline behind [`pipeline_seconds`]: the same
+/// recurrence, unrolled into per-step intervals for trace export. The
+/// makespan equals `last.out_done.max(last.comp_done)` with the exact
+/// floating-point operation order of [`pipeline_seconds`] — the
+/// bit-equivalence test below pins it, because the cost model's
+/// calibration suite compares pipelined seconds via `to_bits()`.
+pub fn pipeline_intervals(steps: &[PipeStep]) -> Vec<PipeInterval> {
+    let n = steps.len();
+    let mut out = vec![PipeInterval::default(); n];
+    if n == 0 {
+        return out;
+    }
+    out[0].in_start = 0.0;
+    let mut dma_free = steps[0].dma_in;
+    out[0].in_done = dma_free;
+    let mut comp_free = 0.0f64;
+    for t in 0..n {
+        if t + 1 < n {
+            out[t + 1].in_start = dma_free;
+            dma_free += steps[t + 1].dma_in;
+            out[t + 1].in_done = dma_free;
+        }
+        let comp_start = out[t].in_done.max(comp_free);
+        let comp_done = comp_start + steps[t].compute;
+        out[t].comp_start = comp_start;
+        out[t].comp_done = comp_done;
+        comp_free = comp_done;
+        let out_start = dma_free.max(comp_done);
+        out[t].out_start = out_start;
+        dma_free = out_start + steps[t].dma_out;
+        out[t].out_done = dma_free;
+    }
+    out
+}
+
 fn is_mxu_kind(kind: &OpKind) -> bool {
     matches!(
         kind,
@@ -178,6 +225,63 @@ mod tests {
         // compute chain dominates: in_0 + 4*compute + out_3
         assert!((t - (1.0 + 20.0 + 1.0)).abs() < 1e-9, "{t}");
         assert_eq!(pipeline_seconds(&[]), 0.0);
+    }
+
+    #[test]
+    fn intervals_bit_equal_to_pipeline_seconds() {
+        // the cost model compares pipelined seconds via to_bits(), so
+        // the interval unrolling must reproduce the recurrence exactly
+        let cases: Vec<Vec<PipeStep>> = vec![
+            vec![],
+            vec![PipeStep { dma_in: 8.0, compute: 2.0, dma_out: 8.0 }],
+            (0..8)
+                .map(|_| PipeStep { dma_in: 1.0, compute: 0.25, dma_out: 1.0 })
+                .collect(),
+            (0..17)
+                .map(|k| PipeStep {
+                    dma_in: 0.3 + 0.071 * k as f64,
+                    compute: 1.7 / (1.0 + k as f64),
+                    dma_out: 0.013 * (k % 5) as f64,
+                })
+                .collect(),
+        ];
+        for steps in cases {
+            let iv = pipeline_intervals(&steps);
+            assert_eq!(iv.len(), steps.len());
+            let makespan = iv
+                .last()
+                .map(|l| l.out_done.max(l.comp_done))
+                .unwrap_or(0.0);
+            assert_eq!(makespan.to_bits(), pipeline_seconds(&steps).to_bits());
+        }
+    }
+
+    #[test]
+    fn intervals_are_engine_consistent() {
+        let steps: Vec<PipeStep> = (0..6)
+            .map(|k| PipeStep {
+                dma_in: 1.0 + k as f64 * 0.1,
+                compute: 2.0,
+                dma_out: 0.5,
+            })
+            .collect();
+        let iv = pipeline_intervals(&steps);
+        for (k, i) in iv.iter().enumerate() {
+            // each engine's segments are well-formed
+            assert!(i.in_start <= i.in_done);
+            assert!(i.comp_start <= i.comp_done);
+            assert!(i.out_start <= i.out_done);
+            // compute waits for its prefetch; write-back for compute
+            assert!(i.comp_start >= i.in_done);
+            assert!(i.out_start >= i.comp_done);
+            if k > 0 {
+                // one DMA queue, one compute engine: no overlap
+                assert!(iv[k - 1].comp_done <= i.comp_start);
+                assert!(iv[k - 1].in_done <= i.in_start);
+                // prefetch of tile k is issued before write-back of k-1
+                assert!(i.in_done <= iv[k - 1].out_start);
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! * [`engine`] — a coarse cycle model (systolic array compute vs DMA
 //!   overlap) for end-to-end latency estimates;
 //! * [`sim`] — the schedule replayer producing a [`sim::SimReport`];
-//! * [`trace`] — optional event tracing for tests and debugging.
+//! * [`trace`] — optional telemetry side-channels: the bounded event
+//!   log, per-node × per-class byte attribution (conserved against the
+//!   traffic counters), engine timelines and scratchpad occupancy,
+//!   exportable as Chrome trace-event JSON.
 
 pub mod config;
 pub mod dma;
@@ -28,3 +31,4 @@ pub mod trace;
 pub use config::AccelConfig;
 pub use dma::{TrafficClass, TrafficCounters};
 pub use sim::{simulate, simulate_pipelined, simulate_planned, SimReport};
+pub use trace::{Attribution, Trace, TraceEvent};

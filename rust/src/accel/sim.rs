@@ -16,12 +16,27 @@
 //!   *not* movement — they are the useful work.)
 //! * **copy-only subsets** — the same totals restricted to copy nests
 //!   and remaps, i.e. the traffic the paper's passes attack.
+//!
+//! ## Telemetry (when a [`Trace`] is passed)
+//!
+//! Every `traffic.add` site pairs with an [`super::trace::Attribution`]
+//! cell charged to the nest's node (evictions to the nest that forced
+//! them; final output write-backs to the producer), so the per-node ×
+//! per-class cells sum **bit-exactly** to `SimReport::traffic` — the
+//! conservation invariant `tests/obs_telemetry.rs` checks against
+//! `cost::evaluate` as well. The replays also emit discrete events
+//! (stage / release / spill / memcopy), compute + DMA engine spans
+//! reconstructed from the latency model (per-tile prefetch / compute /
+//! write-back intervals in pipelined mode), and scratchpad-occupancy
+//! samples. None of this changes any accounted quantity: the byte and
+//! seconds arithmetic is identical with tracing on or off.
 
 use super::config::AccelConfig;
 use super::dma::{TrafficClass, TrafficCounters};
 use super::engine;
 use super::scratchpad::{EvictEvent, Scratchpad};
-use super::trace::{Trace, TraceEvent};
+use super::trace::{Engine, Trace, TraceEvent, EXTERNAL_NODE};
+use crate::ir::graph::NodeId;
 use crate::ir::loopnest::{Body, Program};
 use crate::ir::op::OpKind;
 use crate::ir::tensor::{TensorId, TensorKind};
@@ -107,7 +122,15 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
             };
             let next_use = |r: TensorId| liveness.next_use_after(prog, r, pos);
             let (events, admitted) = sp.admit(t, bytes, &next_use);
-            record_evictions(&mut traffic, &mut in_dram, &events, &mut off_bytes);
+            record_evictions(
+                &mut traffic,
+                &mut in_dram,
+                &events,
+                &mut off_bytes,
+                &mut trace,
+                pos,
+                node.id,
+            );
             traffic.add(class, bytes);
             off_bytes += bytes;
             staging_deposit_bytes += bytes; // DMA writes the scratchpad
@@ -117,6 +140,7 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
                 operand_resident = false; // streamed
             }
             if let Some(tr) = trace.as_deref_mut() {
+                tr.attr_add(node.id, class, bytes);
                 tr.push(TraceEvent::Stage { pos, tensor: t, bytes, class });
             }
         }
@@ -127,7 +151,15 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
         let out_bytes = out_info.size_bytes();
         let next_use = |r: TensorId| liveness.next_use_after(prog, r, pos);
         let (events, out_resident) = sp.admit(out, out_bytes, &next_use);
-        record_evictions(&mut traffic, &mut in_dram, &events, &mut off_bytes);
+        record_evictions(
+            &mut traffic,
+            &mut in_dram,
+            &events,
+            &mut off_bytes,
+            &mut trace,
+            pos,
+            node.id,
+        );
 
         // ---- execute ----
         let elem = out_info.dtype.size_bytes();
@@ -136,27 +168,24 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
                 copy_nests += 1;
                 let moved = nest.domain.cardinality() * elem;
                 let is_remap = matches!(node.kind, OpKind::MemCopy);
-                if operand_resident && out_resident {
-                    traffic.add(
-                        if is_remap {
-                            TrafficClass::OnchipRemap
-                        } else {
-                            TrafficClass::OnchipCopy
-                        },
-                        moved,
-                    );
-                    on_bytes += moved;
+                let onchip = operand_resident && out_resident;
+                let class = match (onchip, is_remap) {
+                    (true, true) => TrafficClass::OnchipRemap,
+                    (true, false) => TrafficClass::OnchipCopy,
+                    (false, true) => TrafficClass::OffchipRemap,
+                    (false, false) => TrafficClass::OffchipCopy,
+                };
+                // an off-chip copy round-trips DRAM (read + write)
+                let bytes = if onchip { moved } else { 2 * moved };
+                traffic.add(class, bytes);
+                if onchip {
+                    on_bytes += bytes;
                 } else {
-                    // round-trips DRAM (either side not on chip)
-                    traffic.add(
-                        if is_remap {
-                            TrafficClass::OffchipRemap
-                        } else {
-                            TrafficClass::OffchipCopy
-                        },
-                        2 * moved,
-                    );
-                    off_bytes += 2 * moved;
+                    off_bytes += bytes;
+                }
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.attr_add(node.id, class, bytes);
+                    tr.push(TraceEvent::MemCopy { pos, node: node.id, bytes, class });
                 }
             }
             Body::Compute { .. } => {
@@ -165,6 +194,10 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
                     traffic.add(TrafficClass::Spill, out_bytes);
                     off_bytes += out_bytes;
                     in_dram.insert(out);
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.attr_add(node.id, TrafficClass::Spill, out_bytes);
+                        tr.push(TraceEvent::Spill { pos, tensor: out, bytes: out_bytes });
+                    }
                 }
             }
         }
@@ -173,6 +206,10 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
         let comp_s = engine::compute_seconds(cfg, nest, &node.kind);
         let dma_s = engine::dma_seconds(cfg, off_bytes, true)
             + engine::dma_seconds(cfg, on_bytes, false);
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.push_span(Engine::Compute, nest.name.clone(), seconds, comp_s);
+            tr.push_span(Engine::Dma, format!("dma:{}", nest.name), seconds, dma_s);
+        }
         seconds += engine::step_seconds(comp_s, dma_s);
 
         // ---- release tensors dead after this step ----
@@ -188,13 +225,22 @@ pub fn simulate(prog: &Program, cfg: &AccelConfig, mut trace: Option<&mut Trace>
                 tr.push(TraceEvent::Release { pos, tensor: t });
             }
         }
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.push_occupancy(seconds, sp.used());
+        }
     }
 
     // ---- write model outputs back ----
     for out in prog.graph.outputs() {
         let bytes = prog.graph.tensor(out).size_bytes();
         traffic.add(TrafficClass::OutputStore, bytes);
-        seconds += engine::dma_seconds(cfg, bytes, true);
+        let dma = engine::dma_seconds(cfg, bytes, true);
+        if let Some(tr) = trace.as_deref_mut() {
+            let who = prog.graph.producer(out).map(|n| n.id).unwrap_or(EXTERNAL_NODE);
+            tr.attr_add(who, TrafficClass::OutputStore, bytes);
+            tr.push_span(Engine::Dma, format!("writeback:{out:?}"), seconds, dma);
+        }
+        seconds += dma;
     }
 
     SimReport {
@@ -334,6 +380,7 @@ fn replay_planned(
                         off_in_bytes += bytes;
                         staging_deposit_bytes += bytes;
                         if let Some(tr) = trace.as_deref_mut() {
+                            tr.attr_add(node.id, staged_class, bytes);
                             tr.push(TraceEvent::Stage {
                                 pos,
                                 tensor: t,
@@ -379,6 +426,7 @@ fn replay_planned(
                         off_in_bytes += bytes;
                         staging_deposit_bytes += bytes;
                         if let Some(tr) = trace.as_deref_mut() {
+                            tr.attr_add(node.id, staged_class, bytes);
                             tr.push(TraceEvent::Stage {
                                 pos,
                                 tensor: t,
@@ -408,19 +456,25 @@ fn replay_planned(
                 let is_remap = matches!(node.kind, OpKind::MemCopy);
                 if out_resident {
                     // on-chip deposit (streamed sources were charged above)
-                    traffic.add(
-                        if is_remap {
-                            TrafficClass::OnchipRemap
-                        } else {
-                            TrafficClass::OnchipCopy
-                        },
-                        moved,
-                    );
+                    let class = if is_remap {
+                        TrafficClass::OnchipRemap
+                    } else {
+                        TrafficClass::OnchipCopy
+                    };
+                    traffic.add(class, moved);
                     on_bytes += moved;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.attr_add(node.id, class, moved);
+                        tr.push(TraceEvent::MemCopy { pos, node: node.id, bytes: moved, class });
+                    }
                 } else {
                     // explicit spill write (or streamed copy result)
                     traffic.add(TrafficClass::Spill, moved);
                     off_out_bytes += moved;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.attr_add(node.id, TrafficClass::Spill, moved);
+                        tr.push(TraceEvent::Spill { pos, tensor: out, bytes: moved });
+                    }
                 }
             }
             Body::Compute { .. } => {
@@ -432,6 +486,10 @@ fn replay_planned(
                     };
                     traffic.add(TrafficClass::Spill, bytes);
                     off_out_bytes += bytes;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.attr_add(node.id, TrafficClass::Spill, bytes);
+                        tr.push(TraceEvent::Spill { pos, tensor: out, bytes });
+                    }
                 }
             }
         }
@@ -450,19 +508,33 @@ fn replay_planned(
         }
     }
 
-    // ---- latency ----
+    // ---- latency (+ engine timeline when traced) ----
     let mut seconds = 0.0f64;
     if pipelined {
         for run in tile_runs(prog) {
             if prog.nests[run.0].tile.is_some() {
-                seconds += engine::pipeline_seconds(&run_steps(prog, run, &costs));
+                let steps = run_steps(prog, run, &costs);
+                push_run_timeline(prog, plan, run, &steps, seconds, &mut trace);
+                seconds += engine::pipeline_seconds(&steps);
             } else {
                 let c = costs[run.0];
+                if let Some(tr) = trace.as_deref_mut() {
+                    let name = &prog.nests[run.0].name;
+                    tr.push_span(Engine::Compute, name.clone(), seconds, c.compute);
+                    tr.push_span(Engine::Dma, format!("dma:{name}"), seconds, c.dma_in + c.dma_out);
+                    tr.push_occupancy(seconds, plan.occupied_bytes_at(run.0));
+                }
                 seconds += engine::step_seconds(c.compute, c.dma_in + c.dma_out);
             }
         }
     } else {
-        for c in &costs {
+        for (pos, c) in costs.iter().enumerate() {
+            if let Some(tr) = trace.as_deref_mut() {
+                let name = &prog.nests[pos].name;
+                tr.push_span(Engine::Compute, name.clone(), seconds, c.compute);
+                tr.push_span(Engine::Dma, format!("dma:{name}"), seconds, c.dma_in + c.dma_out);
+                tr.push_occupancy(seconds, plan.occupied_bytes_at(pos));
+            }
             seconds += engine::step_seconds(c.compute, c.dma_in + c.dma_out);
         }
     }
@@ -471,7 +543,13 @@ fn replay_planned(
     for out in prog.graph.outputs() {
         let bytes = prog.graph.tensor(out).size_bytes();
         traffic.add(TrafficClass::OutputStore, bytes);
-        seconds += engine::dma_seconds(cfg, bytes, true);
+        let dma = engine::dma_seconds(cfg, bytes, true);
+        if let Some(tr) = trace.as_deref_mut() {
+            let who = prog.graph.producer(out).map(|n| n.id).unwrap_or(EXTERNAL_NODE);
+            tr.attr_add(who, TrafficClass::OutputStore, bytes);
+            tr.push_span(Engine::Dma, format!("writeback:{out:?}"), seconds, dma);
+        }
+        seconds += dma;
     }
 
     Ok(SimReport {
@@ -484,18 +562,84 @@ fn replay_planned(
     })
 }
 
+/// Eviction write-backs, attributed to the node whose staging forced
+/// them (`node`).
 fn record_evictions(
     traffic: &mut TrafficCounters,
     in_dram: &mut HashSet<TensorId>,
     events: &[EvictEvent],
     off_bytes: &mut i64,
+    trace: &mut Option<&mut Trace>,
+    pos: usize,
+    node: NodeId,
 ) {
     for ev in events {
         if let EvictEvent::Spilled { tensor, bytes } = ev {
             traffic.add(TrafficClass::Spill, *bytes);
             *off_bytes += bytes;
             in_dram.insert(*tensor);
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.attr_add(node, TrafficClass::Spill, *bytes);
+                tr.push(TraceEvent::Spill { pos, tensor: *tensor, bytes: *bytes });
+            }
         }
+    }
+}
+
+/// Engine timeline of one double-buffered tile run: per-step prefetch
+/// / compute / write-back intervals from
+/// [`engine::pipeline_intervals`], offset by the run's start time,
+/// plus one occupancy sample per nest at its step's compute start.
+/// Step labels mirror [`crate::tile::pipeline::run_steps`]' folding:
+/// one label per tile index (`g<group>.t<index>`), fused chain members
+/// sharing it.
+fn push_run_timeline(
+    prog: &Program,
+    plan: &crate::alloc::MemoryPlan,
+    run: (usize, usize),
+    steps: &[engine::PipeStep],
+    base: f64,
+    trace: &mut Option<&mut Trace>,
+) {
+    let Some(tr) = trace.as_deref_mut() else { return };
+    let intervals = engine::pipeline_intervals(steps);
+    // map each nest position of the run to its merged pipeline step
+    let mut step_of_pos: Vec<usize> = Vec::with_capacity(run.1 - run.0 + 1);
+    let mut labels: Vec<String> = Vec::new();
+    let mut last_index: Option<u32> = None;
+    for pos in run.0..=run.1 {
+        let tag = prog.nests[pos].tile.expect("tile run");
+        if last_index != Some(tag.index) {
+            labels.push(format!("g{}.t{}", tag.group, tag.index));
+            last_index = Some(tag.index);
+        }
+        step_of_pos.push(labels.len() - 1);
+    }
+    debug_assert_eq!(labels.len(), intervals.len());
+    for (k, iv) in intervals.iter().enumerate() {
+        let label = &labels[k];
+        tr.push_span(
+            Engine::Dma,
+            format!("prefetch:{label}"),
+            base + iv.in_start,
+            iv.in_done - iv.in_start,
+        );
+        tr.push_span(
+            Engine::Compute,
+            label.clone(),
+            base + iv.comp_start,
+            iv.comp_done - iv.comp_start,
+        );
+        tr.push_span(
+            Engine::Dma,
+            format!("writeback:{label}"),
+            base + iv.out_start,
+            iv.out_done - iv.out_start,
+        );
+    }
+    for (off, &k) in step_of_pos.iter().enumerate() {
+        let pos = run.0 + off;
+        tr.push_occupancy(base + intervals[k].comp_start, plan.occupied_bytes_at(pos));
     }
 }
 

@@ -1,8 +1,34 @@
-//! Event tracing for the simulator (tests, debugging, and the
-//! `polymem simulate --trace` flag).
+//! Event tracing + telemetry side-channels for the simulator (tests,
+//! debugging, and the `polymem simulate --trace` / `--trace-out`
+//! flags).
+//!
+//! A [`Trace`] collects four things during a replay:
+//!
+//! * **events** — the bounded log of discrete simulator actions
+//!   ([`TraceEvent`]: staging, releases, spills, copy/remap nests);
+//! * **attribution** — per-node × per-[`TrafficClass`] byte cells
+//!   ([`Attribution`]). The simulator pairs *every* traffic charge
+//!   with an attribution cell, so the cells sum bit-exactly to the
+//!   replay's `TrafficCounters` (the conservation invariant pinned in
+//!   `tests/obs_telemetry.rs`);
+//! * **engine spans** — compute/DMA busy intervals ([`EngineSpan`])
+//!   reconstructed from the latency model;
+//! * **occupancy** — `(seconds, bytes)` scratchpad samples.
+//!
+//! The event log is bounded by the constructor limit; the attribution
+//! table, spans and occupancy are proportional to the schedule, not to
+//! the event volume, and are kept even when events overflow.
 
-use super::dma::TrafficClass;
+use super::dma::{TrafficClass, TrafficCounters};
+use crate::ir::graph::NodeId;
 use crate::ir::tensor::TensorId;
+use crate::obs::ChromeTrace;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Attribution target for traffic nobody computes (a graph output
+/// written back without a producer node, e.g. a passthrough input).
+pub const EXTERNAL_NODE: NodeId = NodeId(u32::MAX);
 
 /// One simulator event.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -11,19 +37,101 @@ pub enum TraceEvent {
     Stage { pos: usize, tensor: TensorId, bytes: i64, class: TrafficClass },
     /// A dead tensor's space was released.
     Release { pos: usize, tensor: TensorId },
+    /// A tensor (or tile) was written back to DRAM: an eviction under
+    /// pressure, a non-resident result, or an explicit spill nest.
+    Spill { pos: usize, tensor: TensorId, bytes: i64 },
+    /// A copy nest / bank remap executed (`class` says which path the
+    /// bytes took).
+    MemCopy { pos: usize, node: NodeId, bytes: i64, class: TrafficClass },
 }
 
-/// Bounded event log.
+/// Which engine a span occupies.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Engine {
+    Compute,
+    Dma,
+}
+
+/// One busy interval on one engine, in simulated seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineSpan {
+    pub engine: Engine,
+    pub label: String,
+    pub start: f64,
+    pub dur: f64,
+}
+
+/// Per-node × per-class DRAM/scratchpad byte cells.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Attribution {
+    cells: BTreeMap<(NodeId, TrafficClass), i64>,
+}
+
+impl Attribution {
+    /// Charge `bytes` to `(node, class)`. Zero-byte charges are
+    /// dropped (they cannot change any total).
+    pub fn add(&mut self, node: NodeId, class: TrafficClass, bytes: i64) {
+        if bytes != 0 {
+            *self.cells.entry((node, class)).or_insert(0) += bytes;
+        }
+    }
+
+    pub fn get(&self, node: NodeId, class: TrafficClass) -> i64 {
+        self.cells.get(&(node, class)).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Iterate all non-zero cells.
+    pub fn cells(&self) -> impl Iterator<Item = (NodeId, TrafficClass, i64)> + '_ {
+        self.cells.iter().map(|(&(n, c), &b)| (n, c, b))
+    }
+
+    /// Collapse the cells back into per-class totals. Conservation:
+    /// this equals the replay's `TrafficCounters` class-for-class.
+    pub fn totals(&self) -> TrafficCounters {
+        let mut t = TrafficCounters::new();
+        for (&(_, c), &b) in &self.cells {
+            t.add(c, b);
+        }
+        t
+    }
+
+    /// Per-node off-chip bytes, largest first (ties by node id).
+    pub fn per_node_offchip(&self) -> Vec<(NodeId, i64)> {
+        let mut by: BTreeMap<NodeId, i64> = BTreeMap::new();
+        for (&(n, c), &b) in &self.cells {
+            if c.is_offchip() {
+                *by.entry(n).or_insert(0) += b;
+            }
+        }
+        let mut v: Vec<(NodeId, i64)> = by.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+}
+
+/// Bounded event log + unbounded (schedule-proportional) telemetry.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
     events: Vec<TraceEvent>,
     limit: usize,
     dropped: usize,
+    attr: Attribution,
+    spans: Vec<EngineSpan>,
+    occupancy: Vec<(f64, i64)>,
 }
+
+/// Chrome-trace thread id of the compute engine.
+pub const COMPUTE_TID: i64 = 0;
+/// Chrome-trace thread id of the DMA queue.
+pub const DMA_TID: i64 = 1;
 
 impl Trace {
     pub fn new(limit: usize) -> Self {
-        Trace { events: Vec::new(), limit, dropped: 0 }
+        Trace { limit, ..Default::default() }
     }
 
     pub fn push(&mut self, ev: TraceEvent) {
@@ -42,6 +150,56 @@ impl Trace {
         self.dropped
     }
 
+    /// The per-node × per-class byte attribution of the replay.
+    pub fn attr(&self) -> &Attribution {
+        &self.attr
+    }
+
+    pub(crate) fn attr_add(&mut self, node: NodeId, class: TrafficClass, bytes: i64) {
+        self.attr.add(node, class, bytes);
+    }
+
+    /// Engine busy intervals (simulated seconds).
+    pub fn spans(&self) -> &[EngineSpan] {
+        &self.spans
+    }
+
+    pub(crate) fn push_span(&mut self, engine: Engine, label: String, start: f64, dur: f64) {
+        if dur > 0.0 {
+            self.spans.push(EngineSpan { engine, label, start, dur });
+        }
+    }
+
+    /// `(seconds, scratchpad bytes)` occupancy samples.
+    pub fn occupancy(&self) -> &[(f64, i64)] {
+        &self.occupancy
+    }
+
+    pub(crate) fn push_occupancy(&mut self, ts: f64, bytes: i64) {
+        self.occupancy.push((ts, bytes));
+    }
+
+    /// Export the engine timeline as Chrome trace-event JSON
+    /// (`chrome://tracing` / Perfetto): thread 0 is the compute
+    /// engine, thread 1 the DMA queue, plus a scratchpad-occupancy
+    /// counter track.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut ct = ChromeTrace::new();
+        ct.thread_name(COMPUTE_TID, "compute");
+        ct.thread_name(DMA_TID, "dma");
+        for s in &self.spans {
+            let tid = match s.engine {
+                Engine::Compute => COMPUTE_TID,
+                Engine::Dma => DMA_TID,
+            };
+            ct.span(tid, &s.label, s.start, s.dur);
+        }
+        for &(ts, bytes) in &self.occupancy {
+            ct.counter("scratchpad_bytes", ts, bytes);
+        }
+        ct.to_json()
+    }
+
     /// Render a human-readable dump.
     pub fn dump(&self) -> String {
         let mut s = String::new();
@@ -55,6 +213,15 @@ impl Trace {
                 }
                 TraceEvent::Release { pos, tensor } => {
                     s.push_str(&format!("[{pos:>4}] release {tensor:?}\n"));
+                }
+                TraceEvent::Spill { pos, tensor, bytes } => {
+                    s.push_str(&format!("[{pos:>4}] spill   {tensor:?} {bytes}B\n"));
+                }
+                TraceEvent::MemCopy { pos, node, bytes, class } => {
+                    s.push_str(&format!(
+                        "[{pos:>4}] memcopy {node:?} {bytes}B ({})\n",
+                        class.label()
+                    ));
                 }
             }
         }
@@ -98,5 +265,43 @@ mod tests {
         assert_eq!(tr.events().len(), 2);
         assert_eq!(tr.dropped(), 3);
         assert!(tr.dump().contains("3 events dropped"));
+    }
+
+    #[test]
+    fn attribution_totals_and_ranking() {
+        let mut a = Attribution::default();
+        a.add(NodeId(1), TrafficClass::WeightLoad, 100);
+        a.add(NodeId(1), TrafficClass::Spill, 50);
+        a.add(NodeId(2), TrafficClass::InputLoad, 400);
+        a.add(NodeId(2), TrafficClass::OnchipCopy, 999); // on-chip: not ranked
+        a.add(NodeId(3), TrafficClass::Reload, 0); // dropped
+        assert_eq!(a.get(NodeId(1), TrafficClass::WeightLoad), 100);
+        assert_eq!(a.get(NodeId(3), TrafficClass::Reload), 0);
+        let t = a.totals();
+        assert_eq!(t.get(TrafficClass::WeightLoad), 100);
+        assert_eq!(t.offchip_total(), 550);
+        assert_eq!(
+            a.per_node_offchip(),
+            vec![(NodeId(2), 400), (NodeId(1), 150)]
+        );
+    }
+
+    #[test]
+    fn simulate_fills_attribution_and_timeline() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[16, 16]);
+        let t = b.transpose("t", x, &[1, 0]);
+        b.mark_output(t);
+        let prog = Program::lower(b.finish());
+        let mut tr = Trace::new(100);
+        let rep = simulate(&prog, &AccelConfig::inferentia_like(), Some(&mut tr));
+        // conservation: attribution cells sum to the replay's counters
+        for c in TrafficClass::ALL {
+            assert_eq!(tr.attr().totals().get(c), rep.traffic.get(c), "{}", c.label());
+        }
+        assert!(!tr.spans().is_empty());
+        assert!(!tr.occupancy().is_empty());
+        let j = tr.to_chrome_json();
+        assert!(j.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0) > 0);
     }
 }

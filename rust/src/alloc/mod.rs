@@ -211,6 +211,36 @@ impl MemoryPlan {
         peak * self.banks as i64
     }
 
+    /// Planned scratchpad occupancy at one schedule position: the same
+    /// per-position union measure [`Self::peak_scratchpad_bytes`]
+    /// maximizes, exposed for occupancy timelines.
+    pub fn occupied_bytes_at(&self, pos: usize) -> i64 {
+        let mut per_bank = 0i64;
+        for group in [Align::Row, Align::Col] {
+            let mut ranges: Vec<(i64, i64)> = self
+                .tensors
+                .values()
+                .flat_map(|tp| tp.windows.iter())
+                .filter(|w| w.start <= pos && pos <= w.end)
+                .filter_map(|w| w.home.region())
+                .filter(|r| r.group == group)
+                .map(|r| (r.offset, r.end()))
+                .collect();
+            ranges.sort_unstable();
+            let mut cur_end = 0i64;
+            for (s, e) in ranges {
+                if s >= cur_end {
+                    per_bank += e - s;
+                    cur_end = e;
+                } else if e > cur_end {
+                    per_bank += e - cur_end;
+                    cur_end = e;
+                }
+            }
+        }
+        per_bank * self.banks as i64
+    }
+
     /// Summary for reports/benches.
     pub fn to_json(&self) -> Json {
         let s = &self.stats;
@@ -697,6 +727,12 @@ mod tests {
         let peak = r.plan.peak_scratchpad_bytes();
         assert!(peak > 0);
         assert!(peak <= cfg.scratchpad_bytes());
+        // per-position occupancy is the same measure, maximized
+        let max_at = (0..r.plan.n_positions)
+            .map(|p| r.plan.occupied_bytes_at(p))
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_at, peak);
     }
 
     #[test]

@@ -1,7 +1,14 @@
 //! Serving metrics: request counters, latency distribution, batch-size
 //! histogram. Lock-protected aggregate — the request path touches it
 //! once per request, which criterion-level benches show is ≪1µs.
+//!
+//! Distributions are [`LogHistogram`]s: constant memory no matter how
+//! long the server runs (the previous per-sample `Vec<u64>` grew
+//! without bound), O(1) record, and quantiles answered from bucket
+//! means — exact whenever the observed values land in distinct
+//! buckets, within a factor of 2 otherwise.
 
+use crate::obs::LogHistogram;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -10,8 +17,8 @@ struct Inner {
     requests: u64,
     batches: u64,
     errors: u64,
-    latencies_us: Vec<u64>,
-    batch_sizes: Vec<usize>,
+    latency_us: LogHistogram,
+    batch_sizes: LogHistogram,
 }
 
 /// Thread-safe metrics sink.
@@ -30,6 +37,8 @@ pub struct Snapshot {
     pub p50_latency: Duration,
     pub p99_latency: Duration,
     pub mean_batch: f64,
+    /// The full request-latency distribution (microseconds).
+    pub latency: LogHistogram,
 }
 
 impl Metrics {
@@ -41,9 +50,9 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.requests += batch_size as u64;
-        g.batch_sizes.push(batch_size);
+        g.batch_sizes.record(batch_size as u64);
         for l in latencies {
-            g.latencies_us.push(l.as_micros() as u64);
+            g.latency_us.record(l.as_micros() as u64);
         }
     }
 
@@ -54,33 +63,57 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
-        lat.sort_unstable();
-        let pct = |p: f64| -> Duration {
-            if lat.is_empty() {
-                return Duration::ZERO;
-            }
-            Duration::from_micros(lat[((lat.len() - 1) as f64 * p) as usize])
-        };
+        let lat = &g.latency_us;
         let mean = if lat.is_empty() {
             Duration::ZERO
         } else {
-            Duration::from_micros(lat.iter().sum::<u64>() / lat.len() as u64)
+            Duration::from_micros((lat.sum() / lat.count() as u128) as u64)
         };
         let mean_batch = if g.batch_sizes.is_empty() {
             0.0
         } else {
-            g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+            g.batch_sizes.mean()
         };
         Snapshot {
             requests: g.requests,
             batches: g.batches,
             errors: g.errors,
             mean_latency: mean,
-            p50_latency: pct(0.50),
-            p99_latency: pct(0.99),
+            p50_latency: Duration::from_micros(lat.percentile(0.50)),
+            p99_latency: Duration::from_micros(lat.percentile(0.99)),
             mean_batch,
+            latency: lat.clone(),
         }
+    }
+}
+
+impl Snapshot {
+    /// Prometheus-style plain-text rendering (the coordinator's
+    /// `metrics_text` endpoint).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("polymem_requests_total {}\n", self.requests));
+        s.push_str(&format!("polymem_batches_total {}\n", self.batches));
+        s.push_str(&format!("polymem_errors_total {}\n", self.errors));
+        s.push_str(&format!("polymem_batch_size_mean {:.3}\n", self.mean_batch));
+        s.push_str(&format!(
+            "polymem_request_latency_us_count {}\n",
+            self.latency.count()
+        ));
+        s.push_str(&format!(
+            "polymem_request_latency_us_sum {}\n",
+            self.latency.sum()
+        ));
+        for (q, v) in [
+            (0.50, self.p50_latency),
+            (0.99, self.p99_latency),
+        ] {
+            s.push_str(&format!(
+                "polymem_request_latency_us{{quantile=\"{q}\"}} {}\n",
+                v.as_micros()
+            ));
+        }
+        s
     }
 }
 
@@ -113,5 +146,35 @@ mod tests {
         let m = Metrics::new();
         m.record_error(4);
         assert_eq!(m.snapshot().errors, 4);
+    }
+
+    #[test]
+    fn memory_bounded_under_sustained_load() {
+        // the sink must not grow with request count: a week of traffic
+        // is the same size as one batch
+        let m = Metrics::new();
+        for k in 0..100_000u64 {
+            m.record_batch(4, &[Duration::from_micros(50 + k % 1000)]);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 400_000);
+        assert_eq!(s.latency.count(), 100_000);
+        assert!(s.p50_latency <= s.p99_latency);
+        // LogHistogram is a fixed-size value type — snapshotting it
+        // proves the inner state is constant-size too
+        assert!(std::mem::size_of_val(&s.latency) < 64 * 1024);
+    }
+
+    #[test]
+    fn render_text_is_prometheus_shaped() {
+        let m = Metrics::new();
+        m.record_batch(2, &[Duration::from_micros(100), Duration::from_micros(300)]);
+        let text = m.snapshot().render_text();
+        assert!(text.contains("polymem_requests_total 2"));
+        assert!(text.contains("polymem_request_latency_us_count 2"));
+        assert!(text.contains("quantile=\"0.5\""));
+        assert!(text.contains("quantile=\"0.99\""));
+        let empty = Metrics::new().snapshot().render_text();
+        assert!(empty.contains("polymem_requests_total 0"));
     }
 }

@@ -155,6 +155,12 @@ impl Server {
         &self.metrics
     }
 
+    /// Prometheus-style plain-text rendering of the current metrics
+    /// (what a scrape endpoint would serve).
+    pub fn metrics_text(&self) -> String {
+        self.metrics.snapshot().render_text()
+    }
+
     /// Stop the worker and wait for it to drain.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
@@ -319,6 +325,17 @@ mod tests {
         let s = srv.metrics().snapshot();
         assert_eq!(s.requests, 64);
         assert!(s.mean_batch > 1.0, "no batching happened: {s:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn metrics_text_reflects_traffic() {
+        let srv = Server::start(EchoBackend::new(3, 8), ServerConfig::default());
+        let h = srv.submit(vec![1.0, 2.0, 3.0]).unwrap();
+        h.wait().unwrap();
+        let text = srv.metrics_text();
+        assert!(text.contains("polymem_requests_total 1"), "{text}");
+        assert!(text.contains("polymem_request_latency_us_count 1"), "{text}");
         srv.shutdown();
     }
 

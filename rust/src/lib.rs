@@ -38,6 +38,10 @@
 //!   regression-tests every pass against it.
 //! * [`models`] — ResNet-50, a Parallel-WaveNet-shaped graph, and other
 //!   workload builders.
+//! * [`obs`] — zero-dependency telemetry: counters, log-bucket
+//!   histograms, phase timings and Chrome-trace export, compiled to
+//!   no-ops when disabled; the byte-exact per-layer traffic
+//!   attribution and engine timelines ride on it.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (HLO text) from Rust.
 //! * [`coordinator`] — a batching inference server over the runtime.
@@ -56,6 +60,7 @@ pub mod cost;
 pub mod interp;
 pub mod ir;
 pub mod models;
+pub mod obs;
 pub mod opt;
 pub mod passes;
 pub mod poly;

@@ -59,7 +59,32 @@ fn accel_from_args(p: &Parsed) -> Result<AccelConfig, String> {
             cfg.banks = b;
         }
     }
+    if let Ok(kib) = p.get_usize("scratchpad-kib") {
+        if kib > 0 {
+            // total capacity spans both bank groups
+            cfg.bank_bytes = (kib as i64 * 1024) / (2 * cfg.banks as i64);
+        }
+    }
     Ok(cfg)
+}
+
+/// Write the replay's engine timeline as Chrome trace-event JSON when
+/// `--trace-out` was given.
+fn write_trace_out(p: &Parsed, trace: &polymem::accel::Trace) -> Result<(), String> {
+    let path = p.get("trace-out");
+    if path.is_empty() {
+        return Ok(());
+    }
+    let j = trace.to_chrome_json();
+    let n = j
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    std::fs::write(path, j.to_string_compact())
+        .map_err(|e| format!("writing {path}: {e}"))?;
+    println!("wrote {path} ({n} trace events; open in chrome://tracing or Perfetto)");
+    Ok(())
 }
 
 fn pm_from_args(p: &Parsed) -> Result<PassManager, String> {
@@ -109,19 +134,38 @@ fn cmd_compile(p: &Parsed) -> Result<(), String> {
 }
 
 fn cmd_simulate(p: &Parsed) -> Result<(), String> {
+    use polymem::util::json::Json;
     let g = graph_from_args(p)?;
     let pm = pm_from_args(p)?;
     let cfg = accel_from_args(p)?;
+    if p.has_flag("profile") {
+        polymem::obs::set_enabled(true);
+    }
     let want_plan = p.has_flag("plan");
     let want_tile = p.has_flag("tile");
     let want_opt = p.has_flag("opt");
     if want_plan || want_tile || want_opt {
         return cmd_simulate_compare(g, pm, &cfg, p);
     }
+    let top = p.get_usize("top-layers")?;
     let rep = pm.run(g).map_err(|e| e.to_string())?;
-    let sim = simulate(&rep.program, &cfg, None);
+    // attribution/timeline side-channels are schedule-proportional, so
+    // an event cap of 0 still yields the full telemetry
+    let mut trace = polymem::accel::Trace::new(0);
+    let sim = simulate(&rep.program, &cfg, Some(&mut trace));
+    write_trace_out(p, &trace)?;
     if p.has_flag("json") {
-        println!("{}", report::sim_to_json(&sim).to_string_pretty());
+        let mut j = report::sim_to_json(&sim);
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "attribution".to_string(),
+                report::attribution_json(&rep.program.graph, trace.attr(), top),
+            );
+            if p.has_flag("profile") {
+                m.insert("obs".to_string(), polymem::obs::global().snapshot().to_json());
+            }
+        }
+        println!("{}", j.to_string_pretty());
     } else {
         println!(
             "model={} bank_mode={} accel={}",
@@ -134,6 +178,15 @@ fn cmd_simulate(p: &Parsed) -> Result<(), String> {
         println!("off-chip total:         {}", report::mb(sim.offchip_total()));
         println!("peak scratchpad:        {}", report::mb(sim.peak_scratchpad));
         println!("estimated latency:      {:.3} ms", sim.seconds * 1e3);
+        println!("\nper-layer off-chip attribution (top {top}):");
+        println!(
+            "{}",
+            report::attribution_table(&rep.program.graph, trace.attr(), top)
+        );
+        if p.has_flag("profile") {
+            println!("compiler telemetry:");
+            print!("{}", polymem::obs::global().snapshot().render_text());
+        }
     }
     Ok(())
 }
@@ -160,6 +213,19 @@ fn cmd_simulate_compare(
     }
     let mut modes: Vec<Mode> = Vec::new();
 
+    // telemetry rides on the most advanced requested mode: its replay
+    // gets the Trace, its JSON entry the attribution, and `--trace-out`
+    // its engine timeline
+    let traced_mode = if p.has_flag("opt") {
+        "opt"
+    } else if p.has_flag("tile") {
+        "tiled"
+    } else {
+        "planned"
+    };
+    let top = p.get_usize("top-layers")?;
+    let mut attr_table: Option<String> = None;
+
     // dynamic baseline: the untransformed pipeline output, residency
     // improvised at replay time (the same comparison the benches make)
     let base = pm_base.run(g.clone()).map_err(|e| e.to_string())?;
@@ -175,12 +241,24 @@ fn cmd_simulate_compare(
         pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
         let rep = pm.run(g.clone()).map_err(|e| e.to_string())?;
         let plan = rep.plan.as_ref().expect("alloc stage ran");
-        let sim = simulate_planned(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+        let mut tr = polymem::accel::Trace::new(0);
+        let traced = traced_mode == "planned";
+        let sim = simulate_planned(&rep.program, plan, cfg, traced.then_some(&mut tr))
+            .map_err(|e| e.to_string())?;
+        let mut extras = vec![("plan", plan.to_json())];
+        if traced {
+            extras.push((
+                "attribution",
+                report::attribution_json(&rep.program.graph, tr.attr(), top),
+            ));
+            attr_table = Some(report::attribution_table(&rep.program.graph, tr.attr(), top));
+            write_trace_out(p, &tr)?;
+        }
         let s = &plan.stats;
         modes.push(Mode {
             name: "planned",
             sim,
-            extras: vec![("plan", plan.to_json())],
+            extras,
             note: format!(
                 "{} spill pairs, {} splits, {} streamed",
                 s.spill_pairs, s.window_splits, s.streamed
@@ -193,13 +271,24 @@ fn cmd_simulate_compare(
         pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
         let rep = pm.run(g.clone()).map_err(|e| e.to_string())?;
         let plan = rep.plan.as_ref().expect("alloc stage ran");
-        let sim =
-            simulate_pipelined(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+        let mut tr = polymem::accel::Trace::new(0);
+        let traced = traced_mode == "tiled";
+        let sim = simulate_pipelined(&rep.program, plan, cfg, traced.then_some(&mut tr))
+            .map_err(|e| e.to_string())?;
         let ts = rep.tile.expect("tile stage ran");
+        let mut extras = vec![("tile_stats", ts.to_json()), ("plan", plan.to_json())];
+        if traced {
+            extras.push((
+                "attribution",
+                report::attribution_json(&rep.program.graph, tr.attr(), top),
+            ));
+            attr_table = Some(report::attribution_table(&rep.program.graph, tr.attr(), top));
+            write_trace_out(p, &tr)?;
+        }
         modes.push(Mode {
             name: "tiled",
             sim,
-            extras: vec![("tile_stats", ts.to_json()), ("plan", plan.to_json())],
+            extras,
             note: format!(
                 "{} groups, {} fused chains, {} staged tensors",
                 ts.groups, ts.fused_chains, plan.stats.tile_staged
@@ -212,13 +301,20 @@ fn cmd_simulate_compare(
         pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
         let rep = pm.run(g).map_err(|e| e.to_string())?;
         let plan = rep.plan.as_ref().expect("alloc stage ran");
-        let sim =
-            simulate_pipelined(&rep.program, plan, cfg, None).map_err(|e| e.to_string())?;
+        let mut tr = polymem::accel::Trace::new(0);
+        let sim = simulate_pipelined(&rep.program, plan, cfg, Some(&mut tr))
+            .map_err(|e| e.to_string())?;
         let os = rep.opt.expect("opt stage ran");
         let mut extras = vec![("opt_stats", os.to_json()), ("plan", plan.to_json())];
         if let Some(ts) = &rep.tile {
             extras.push(("tile_stats", ts.to_json()));
         }
+        extras.push((
+            "attribution",
+            report::attribution_json(&rep.program.graph, tr.attr(), top),
+        ));
+        attr_table = Some(report::attribution_table(&rep.program.graph, tr.attr(), top));
+        write_trace_out(p, &tr)?;
         modes.push(Mode {
             name: "opt",
             sim,
@@ -229,7 +325,7 @@ fn cmd_simulate_compare(
 
     let model = p.get("model");
     if p.has_flag("json") {
-        let j = report::compare_json(
+        let mut j = report::compare_json(
             model,
             cfg.to_json(),
             modes
@@ -237,6 +333,11 @@ fn cmd_simulate_compare(
                 .map(|m| (m.name, report::mode_json(&m.sim, m.extras)))
                 .collect(),
         );
+        if p.has_flag("profile") {
+            if let Json::Obj(m) = &mut j {
+                m.insert("obs".to_string(), polymem::obs::global().snapshot().to_json());
+            }
+        }
         println!("{}", j.to_string_pretty());
         return Ok(());
     }
@@ -254,6 +355,14 @@ fn cmd_simulate_compare(
             m.name,
             report::pct_reduction(baseline, m.sim.offchip_total())
         );
+    }
+    if let Some(t) = &attr_table {
+        println!("\nper-layer off-chip attribution ({traced_mode}, top {top}):");
+        println!("{t}");
+    }
+    if p.has_flag("profile") {
+        println!("compiler telemetry:");
+        print!("{}", polymem::obs::global().snapshot().render_text());
     }
     Ok(())
 }
@@ -376,12 +485,16 @@ fn app() -> App {
                 .opt("batch", "1", "batch size")
                 .opt("bank-mode", "global", "none|local|global")
                 .opt("banks", "0", "override bank count (0 = default)")
+                .opt("scratchpad-kib", "0", "override total scratchpad KiB (0 = default)")
                 .opt("accel-config", "", "JSON accelerator config path")
+                .opt("top-layers", "8", "per-layer attribution rows to print")
+                .opt("trace-out", "", "write the engine timeline as Chrome trace-event JSON")
                 .flag("no-dme", "disable data-movement elimination")
                 .flag("no-verify", "skip inter-pass verification")
                 .flag("plan", "add the static-plan replay to the comparison")
                 .flag("tile", "add the tiled double-buffer pipeline to the comparison")
                 .flag("opt", "add the whole-model joint optimizer to the comparison")
+                .flag("profile", "collect and print compiler phase/search telemetry")
                 .flag("json", "machine-readable output"),
             Command::new("e1", "reproduce paper experiment 1 (WaveNet DME)"),
             Command::new("export-graph", "write a built-in model as a JSON graph")
@@ -391,6 +504,7 @@ fn app() -> App {
             Command::new("e2", "reproduce paper experiment 2 (ResNet-50 bank mapping)")
                 .opt("batch", "1", "batch size")
                 .opt("banks", "0", "override bank count (0 = default)")
+                .opt("scratchpad-kib", "0", "override total scratchpad KiB (0 = default)")
                 .opt("accel-config", "", "JSON accelerator config path"),
             Command::new("serve", "serve an AOT artifact with dynamic batching")
                 .opt("artifact", "artifacts/model.hlo.txt", "HLO text artifact")

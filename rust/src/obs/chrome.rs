@@ -1,0 +1,201 @@
+//! Chrome trace-event JSON export.
+//!
+//! Builds the "catapult" JSON Array/Object format that
+//! `chrome://tracing` and Perfetto load directly: `B`/`E` duration
+//! pairs per (pid, tid), `C` counter samples, and `M` thread-name
+//! metadata. Timestamps are microseconds. The builder guarantees the
+//! exported `traceEvents` are sorted by timestamp with `E` ordered
+//! before `B` at equal timestamps, so back-to-back spans never read as
+//! overlapping and the begin/end nesting stays balanced per thread —
+//! the property the golden test in `tests/obs_telemetry.rs` pins.
+
+use crate::util::json::Json;
+use std::cmp::Ordering;
+
+/// Single-process traces: everything lives under this pid.
+pub const PID: i64 = 1;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    Meta,
+    End,
+    Begin,
+    Counter,
+}
+
+impl Phase {
+    fn label(self) -> &'static str {
+        match self {
+            Phase::Meta => "M",
+            Phase::End => "E",
+            Phase::Begin => "B",
+            Phase::Counter => "C",
+        }
+    }
+
+    /// Sort rank at equal timestamps: metadata first, then `E` before
+    /// `B` (a span ending exactly where the next begins must close
+    /// first), counters last.
+    fn rank(self) -> u8 {
+        match self {
+            Phase::Meta => 0,
+            Phase::End => 1,
+            Phase::Begin => 2,
+            Phase::Counter => 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    name: String,
+    phase: Phase,
+    ts_us: f64,
+    tid: i64,
+    /// Optional `args` payload: one `(key, value)` pair.
+    arg: Option<(&'static str, Json)>,
+}
+
+/// Incremental trace builder.
+#[derive(Clone, Debug, Default)]
+pub struct ChromeTrace {
+    events: Vec<Event>,
+}
+
+impl ChromeTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Name a thread (rendered as a track label by the viewers).
+    pub fn thread_name(&mut self, tid: i64, name: &str) {
+        self.events.push(Event {
+            name: "thread_name".to_string(),
+            phase: Phase::Meta,
+            ts_us: 0.0,
+            tid,
+            arg: Some(("name", Json::Str(name.to_string()))),
+        });
+    }
+
+    /// A `[start_s, start_s + dur_s]` span on `tid` (seconds in, µs
+    /// out). Zero- and negative-duration spans are dropped: they carry
+    /// no timeline information and would break `E`-before-`B` ordering.
+    pub fn span(&mut self, tid: i64, name: &str, start_s: f64, dur_s: f64) {
+        if dur_s <= 0.0 || dur_s.is_nan() {
+            return;
+        }
+        self.events.push(Event {
+            name: name.to_string(),
+            phase: Phase::Begin,
+            ts_us: start_s * 1e6,
+            tid,
+            arg: None,
+        });
+        self.events.push(Event {
+            name: name.to_string(),
+            phase: Phase::End,
+            ts_us: (start_s + dur_s) * 1e6,
+            tid,
+            arg: None,
+        });
+    }
+
+    /// A counter sample (its own track in the viewers).
+    pub fn counter(&mut self, name: &str, ts_s: f64, value: i64) {
+        self.events.push(Event {
+            name: name.to_string(),
+            phase: Phase::Counter,
+            ts_us: ts_s * 1e6,
+            tid: 0,
+            arg: Some(("value", Json::Int(value))),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialize to the `{"traceEvents": [...]}` object form.
+    pub fn to_json(&self) -> Json {
+        let mut order: Vec<&Event> = self.events.iter().collect();
+        order.sort_by(|a, b| {
+            a.ts_us
+                .partial_cmp(&b.ts_us)
+                .unwrap_or(Ordering::Equal)
+                .then(a.phase.rank().cmp(&b.phase.rank()))
+        });
+        let items: Vec<Json> = order
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("ph", Json::Str(e.phase.label().to_string())),
+                    ("ts", Json::Num(e.ts_us)),
+                    ("pid", Json::Int(PID)),
+                    ("tid", Json::Int(e.tid)),
+                ];
+                if let Some((k, v)) = &e.arg {
+                    pairs.push(("args", Json::obj(vec![(k, v.clone())])));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(items)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_sorted_and_balanced() {
+        let mut ct = ChromeTrace::new();
+        ct.thread_name(0, "compute");
+        // inserted out of order; exporter must sort
+        ct.span(0, "b", 2.0, 1.0);
+        ct.span(0, "a", 0.0, 2.0); // ends exactly where b begins
+        ct.counter("occ", 1.0, 42);
+        let j = ct.to_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 6);
+        let mut last = f64::NEG_INFINITY;
+        let mut depth = 0i64;
+        for e in evs {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last);
+            last = ts;
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => depth += 1,
+                "E" => {
+                    depth -= 1;
+                    assert!(depth >= 0, "E before matching B");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0);
+        // the a/b handoff at ts == 2s: E(a) must precede B(b)
+        let at2: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ts").unwrap().as_f64() == Some(2e6))
+            .map(|e| e.get("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(at2, vec!["E", "B"]);
+    }
+
+    #[test]
+    fn zero_duration_spans_dropped() {
+        let mut ct = ChromeTrace::new();
+        ct.span(0, "nil", 1.0, 0.0);
+        assert!(ct.is_empty());
+    }
+}

@@ -1,0 +1,275 @@
+//! Bounded log-bucketed histogram.
+//!
+//! 65 power-of-two buckets (bucket 0 holds the value 0, bucket *i*
+//! holds `[2^(i-1), 2^i)`), each tracking a count **and** a sum, so
+//! recording is O(1), memory is constant regardless of sample volume,
+//! and quantile estimates return the *mean of the bucket at the rank*
+//! — exact whenever every sample in that bucket is equal (the common
+//! case for repeated latencies), and within the bucket's 2× width
+//! otherwise. This replaces the unbounded `Vec<u64>` +
+//! clone-and-sort-per-snapshot pattern in the serving metrics.
+
+use crate::util::json::Json;
+
+/// Bucket count: value 0, plus one bucket per bit position of u64.
+pub const BUCKETS: usize = 65;
+
+/// A log-bucketed histogram of `u64` samples.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    sums: [u128; BUCKETS],
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: [0; BUCKETS],
+            sums: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket for `v`: 0 for 0, else `64 - leading_zeros` (so bucket
+    /// *i* covers `[2^(i-1), 2^i)`).
+    fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Lower bound of bucket `b`.
+    fn bucket_lo(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else {
+            1u64 << (b - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `b`.
+    fn bucket_hi(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else if b >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << b) - 1
+        }
+    }
+
+    /// O(1) record.
+    pub fn record(&mut self, v: u64) {
+        let b = Self::bucket_index(v);
+        self.counts[b] += 1;
+        self.sums[b] += v as u128;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.is_empty() {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (the sum is exact even though quantiles are bucketed).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate: walks cumulative bucket counts to the rank
+    /// `(count - 1) * p` (the same index a sorted vector would use) and
+    /// returns that bucket's mean.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * p.clamp(0.0, 1.0)) as u64;
+        let mut cum = 0u64;
+        for b in 0..BUCKETS {
+            if self.counts[b] == 0 {
+                continue;
+            }
+            cum += self.counts[b];
+            if cum > rank {
+                return (self.sums[b] / self.counts[b] as u128) as u64;
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (bucket-wise; exact).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for b in 0..BUCKETS {
+            self.counts[b] += other.counts[b];
+            self.sums[b] += other.sums[b];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// JSON summary: totals, quantiles, and the non-empty buckets.
+    pub fn to_json(&self) -> Json {
+        let cap = |v: u128| v.min(i64::MAX as u128) as i64;
+        let mut buckets = Vec::new();
+        for b in 0..BUCKETS {
+            if self.counts[b] == 0 {
+                continue;
+            }
+            buckets.push(Json::obj(vec![
+                ("lo", Json::Int(cap(Self::bucket_lo(b) as u128))),
+                ("hi", Json::Int(cap(Self::bucket_hi(b) as u128))),
+                ("count", Json::Int(self.counts[b] as i64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("count", Json::Int(cap(self.count as u128))),
+            ("sum", Json::Int(cap(self.sum))),
+            ("min", Json::Int(cap(self.min() as u128))),
+            ("max", Json::Int(cap(self.max as u128))),
+            ("p50", Json::Int(cap(self.percentile(0.50) as u128))),
+            ("p99", Json::Int(cap(self.percentile(0.99) as u128))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(LogHistogram::bucket_index(0), 0);
+        assert_eq!(LogHistogram::bucket_index(1), 1);
+        assert_eq!(LogHistogram::bucket_index(2), 2);
+        assert_eq!(LogHistogram::bucket_index(3), 2);
+        assert_eq!(LogHistogram::bucket_index(4), 3);
+        assert_eq!(LogHistogram::bucket_index(u64::MAX), 64);
+        for b in 0..BUCKETS {
+            assert_eq!(LogHistogram::bucket_index(LogHistogram::bucket_lo(b)), b);
+            assert_eq!(LogHistogram::bucket_index(LogHistogram::bucket_hi(b)), b);
+        }
+    }
+
+    #[test]
+    fn exact_when_buckets_distinct() {
+        // samples in distinct buckets: quantiles are exact
+        let mut h = LogHistogram::new();
+        for v in [100u64, 200, 300] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 600);
+        assert!((h.mean() - 200.0).abs() < 1e-12);
+        assert_eq!(h.percentile(0.0), 100);
+        assert_eq!(h.percentile(0.5), 200);
+        assert_eq!(h.percentile(0.99), 200); // rank 1, like a sorted vec
+        assert_eq!(h.percentile(1.0), 300);
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 300);
+    }
+
+    #[test]
+    fn bounded_memory_under_sustained_load() {
+        let mut h = LogHistogram::new();
+        for i in 0..100_000u64 {
+            h.record(1000 + (i % 7));
+        }
+        assert_eq!(h.count(), 100_000);
+        // all samples share bucket [512, 1024): estimate is the bucket
+        // mean, within the true range
+        let p99 = h.percentile(0.99);
+        assert!((1000..=1006).contains(&p99), "{p99}");
+    }
+
+    #[test]
+    fn empty_and_extremes() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn merge_matches_combined_stream() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for v in 0..100u64 {
+            if v % 2 == 0 {
+                a.record(v * 3);
+            } else {
+                b.record(v * 3);
+            }
+            whole.record(v * 3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum(), whole.sum());
+        assert_eq!(a.percentile(0.5), whole.percentile(0.5));
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn json_summary_has_buckets() {
+        let mut h = LogHistogram::new();
+        h.record(5);
+        h.record(6);
+        h.record(900);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_i64()), Some(3));
+        assert_eq!(j.get("buckets").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+    }
+}

@@ -1,0 +1,265 @@
+//! Zero-dependency telemetry: counters, histograms, phase timings.
+//!
+//! Three pieces, shared by the simulator, the pass pipeline and the
+//! serving coordinator:
+//!
+//! * [`hist::LogHistogram`] — bounded log-bucket histogram (O(1)
+//!   record, constant memory, quantiles from buckets);
+//! * [`chrome::ChromeTrace`] — Chrome trace-event / Perfetto JSON
+//!   export for engine timelines (`simulate --trace-out`);
+//! * [`Collector`] — a thread-safe sink of named counters, histograms
+//!   and phase timings, with a process-global instance behind an
+//!   on/off gate.
+//!
+//! **Zero-overhead-when-disabled contract:** the free functions
+//! ([`add`], [`observe`], [`phase`]) check one relaxed atomic load and
+//! return immediately unless [`set_enabled`]`(true)` was called. Hot
+//! paths (the opt beam loop, the replay inner loops) may therefore be
+//! instrumented unconditionally; the cost when disabled is a
+//! predictable branch, which is what keeps `bench_opt` candidate
+//! throughput within noise of the uninstrumented build.
+
+pub mod chrome;
+pub mod hist;
+
+pub use chrome::ChromeTrace;
+pub use hist::LogHistogram;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is global telemetry collection on? (Off by default.)
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn global telemetry collection on or off.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// One timed phase (a compiler pass, a search stage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSample {
+    pub name: String,
+    pub seconds: f64,
+}
+
+impl PhaseSample {
+    pub fn new(name: &str, seconds: f64) -> Self {
+        PhaseSample { name: name.to_string(), seconds }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seconds", Json::Num(self.seconds)),
+        ])
+    }
+}
+
+/// Everything a [`Collector`] has accumulated.
+#[derive(Clone, Debug, Default)]
+pub struct ObsSnapshot {
+    pub counters: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, LogHistogram>,
+    pub phases: Vec<PhaseSample>,
+}
+
+impl ObsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Int(*v)))
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("histograms", Json::Obj(histograms)),
+            ("phases", Json::Arr(self.phases.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+
+    /// Deterministic plain-text rendering (one metric per line).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("counter {k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            s.push_str(&format!(
+                "hist {k} count={} sum={} min={} p50={} p99={} max={}\n",
+                h.count(),
+                h.sum(),
+                h.min(),
+                h.percentile(0.50),
+                h.percentile(0.99),
+                h.max()
+            ));
+        }
+        for p in &self.phases {
+            s.push_str(&format!("phase {} {:.6}s\n", p.name, p.seconds));
+        }
+        s
+    }
+}
+
+/// Thread-safe telemetry sink. Local instances are cheap; the
+/// process-global one is reached through [`global`] (or the gated free
+/// functions).
+pub struct Collector {
+    inner: Mutex<Option<ObsSnapshot>>,
+}
+
+impl Default for Collector {
+    fn default() -> Self {
+        Collector { inner: Mutex::new(None) }
+    }
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn with<T>(&self, f: impl FnOnce(&mut ObsSnapshot) -> T) -> T {
+        let mut guard = self.inner.lock().unwrap();
+        f(guard.get_or_insert_with(ObsSnapshot::default))
+    }
+
+    /// Increment a named counter.
+    pub fn add(&self, name: &str, delta: i64) {
+        self.with(|s| *s.counters.entry(name.to_string()).or_insert(0) += delta);
+    }
+
+    /// Record a sample into a named histogram.
+    pub fn observe(&self, name: &str, value: u64) {
+        self.with(|s| s.histograms.entry(name.to_string()).or_default().record(value));
+    }
+
+    /// Append a timed phase.
+    pub fn phase(&self, name: &str, seconds: f64) {
+        self.with(|s| s.phases.push(PhaseSample::new(name, seconds)));
+    }
+
+    /// Time `f` and record it as a phase.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phase(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn snapshot(&self) -> ObsSnapshot {
+        self.inner.lock().unwrap().clone().unwrap_or_default()
+    }
+
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = None;
+    }
+}
+
+/// The process-global collector. Always usable; the gated free
+/// functions below are the zero-overhead way to reach it from hot
+/// paths.
+pub fn global() -> &'static Collector {
+    // `Option<ObsSnapshot>` makes the initializer const-evaluable, so
+    // no lazy-init primitive is needed for the static.
+    static GLOBAL: Collector = Collector { inner: Mutex::new(None) };
+    &GLOBAL
+}
+
+/// Gated counter increment on the global collector: a single relaxed
+/// atomic load when telemetry is disabled.
+pub fn add(name: &str, delta: i64) {
+    if enabled() {
+        global().add(name, delta);
+    }
+}
+
+/// Gated histogram sample on the global collector.
+pub fn observe(name: &str, value: u64) {
+    if enabled() {
+        global().observe(name, value);
+    }
+}
+
+/// Gated phase record on the global collector.
+pub fn phase(name: &str, seconds: f64) {
+    if enabled() {
+        global().phase(name, seconds);
+    }
+}
+
+/// Serializes tests that toggle the global gate or reset the global
+/// collector (the test harness runs same-binary tests concurrently).
+#[cfg(test)]
+pub(crate) static TEST_GATE: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_accumulates() {
+        let c = Collector::new();
+        c.add("bytes", 10);
+        c.add("bytes", 5);
+        c.observe("lat", 100);
+        c.observe("lat", 300);
+        let v = c.time("work", || 42);
+        assert_eq!(v, 42);
+        let s = c.snapshot();
+        assert_eq!(s.counters.get("bytes"), Some(&15));
+        assert_eq!(s.histograms.get("lat").map(|h| h.count()), Some(2));
+        assert_eq!(s.phases.len(), 1);
+        assert_eq!(s.phases[0].name, "work");
+        assert!(s.phases[0].seconds >= 0.0);
+        let text = s.render_text();
+        assert!(text.contains("counter bytes 15"));
+        assert!(text.contains("hist lat count=2"));
+        let j = s.to_json();
+        assert_eq!(
+            j.get("counters").and_then(|c| c.get("bytes")).and_then(|v| v.as_i64()),
+            Some(10 + 5)
+        );
+        c.reset();
+        assert!(c.snapshot().counters.is_empty());
+    }
+
+    #[test]
+    fn gated_helpers_noop_when_disabled() {
+        let _g = TEST_GATE.lock().unwrap();
+        // default-off: writes through the free functions must not land
+        set_enabled(false);
+        let before = global().snapshot().counters.get("obs.test.gated").copied();
+        add("obs.test.gated", 1);
+        let after = global().snapshot().counters.get("obs.test.gated").copied();
+        assert_eq!(before, after);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn gated_helpers_record_when_enabled() {
+        let _g = TEST_GATE.lock().unwrap();
+        set_enabled(true);
+        add("obs.test.enabled", 2);
+        observe("obs.test.hist", 7);
+        phase("obs.test.phase", 0.5);
+        set_enabled(false);
+        let s = global().snapshot();
+        assert!(s.counters.get("obs.test.enabled").copied().unwrap_or(0) >= 2);
+        assert!(s.histograms.get("obs.test.hist").map(|h| h.count()).unwrap_or(0) >= 1);
+        assert!(s.phases.iter().any(|p| p.name == "obs.test.phase"));
+    }
+}

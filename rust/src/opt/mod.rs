@@ -49,6 +49,7 @@ use crate::passes::bank::BankConfig;
 use crate::passes::manager::BankMode;
 use crate::tile::{FusePolicy, TileOpts, TileStats};
 use crate::util::json::Json;
+use std::time::Instant;
 
 /// Joint-search configuration.
 #[derive(Clone, Copy, Debug)]
@@ -60,6 +61,34 @@ pub struct OptOpts {
 impl Default for OptOpts {
     fn default() -> Self {
         OptOpts { beam_width: 3 }
+    }
+}
+
+/// Per-axis search-profile row: what one beam stage generated,
+/// realized and pruned, and the best off-chip bytes seen by its end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenerationStats {
+    /// Which decision axis the stage explored: `"tile"` or `"alloc"`.
+    pub axis: &'static str,
+    /// Decision vectors the stage enumerated.
+    pub generated: usize,
+    /// Vectors fully realized (tile + bank + plan + cost).
+    pub realized: usize,
+    /// Vectors skipped by branch-and-bound or plan failure.
+    pub pruned: usize,
+    /// Best predicted off-chip bytes at the end of the stage.
+    pub best_offchip: i64,
+}
+
+impl GenerationStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("axis", Json::Str(self.axis.to_string())),
+            ("generated", Json::Int(self.generated as i64)),
+            ("realized", Json::Int(self.realized as i64)),
+            ("pruned", Json::Int(self.pruned as i64)),
+            ("best_offchip", Json::Int(self.best_offchip)),
+        ])
     }
 }
 
@@ -78,6 +107,13 @@ pub struct OptStats {
     pub best_pipelined_seconds: f64,
     /// Human-readable winning decision vector.
     pub decision: String,
+    /// Per-stage search profile, in stage order.
+    pub generations: Vec<GenerationStats>,
+    /// Best-cost trajectory: the running-minimum predicted off-chip
+    /// bytes after each realized candidate (one entry per realization).
+    pub trajectory: Vec<i64>,
+    /// Wall time of the whole search.
+    pub search_seconds: f64,
 }
 
 impl OptStats {
@@ -89,6 +125,15 @@ impl OptStats {
             ("best_offchip", Json::Int(self.best_offchip)),
             ("best_pipelined_seconds", Json::Num(self.best_pipelined_seconds)),
             ("decision", Json::Str(self.decision.clone())),
+            (
+                "generations",
+                Json::Arr(self.generations.iter().map(|g| g.to_json()).collect()),
+            ),
+            (
+                "trajectory",
+                Json::Arr(self.trajectory.iter().map(|&v| Json::Int(v)).collect()),
+            ),
+            ("search_seconds", Json::Num(self.search_seconds)),
         ])
     }
 }
@@ -202,9 +247,14 @@ pub fn search(
     base_alloc: &AllocOpts,
     opts: &OptOpts,
 ) -> Result<OptOutcome, PlanError> {
+    let t_search = Instant::now();
     let floor = compulsory_offchip(program);
     let mut candidates = 0usize;
     let mut pruned = 0usize;
+    // search profile: running-min off-chip after each realization, plus
+    // per-stage generation rows
+    let mut trajectory: Vec<i64> = Vec::new();
+    let mut best_so_far = i64::MAX;
 
     // ---- stage 1: fusion/tiling axis ----
     // the seed's coordinates are the *caller's* (the true staged-greedy
@@ -216,12 +266,16 @@ pub fn search(
     for (i, tile) in tiles.iter().enumerate() {
         if beam.first().map(|b| b.cost.offchip_total() == floor).unwrap_or(false) {
             pruned += tiles.len() - i;
+            crate::obs::add("opt.pruned", (tiles.len() - i) as i64);
             break; // branch-and-bound: the incumbent hit the floor
         }
         let dv = DecisionVector { tile: *tile, alloc: seed_alloc };
         match realize(program, dv, bank_mode, bank_cfg, accel, base_tile, base_alloc) {
             Ok(r) => {
                 candidates += 1;
+                crate::obs::add("opt.realized", 1);
+                best_so_far = best_so_far.min(r.cost.offchip_total());
+                trajectory.push(best_so_far);
                 if i == 0 {
                     baseline_offchip = r.cost.offchip_total();
                 }
@@ -237,10 +291,18 @@ pub fn search(
                     return Err(e); // the staged-greedy seed must plan
                 }
                 pruned += 1;
+                crate::obs::add("opt.pruned", 1);
             }
         }
     }
     debug_assert!(!beam.is_empty());
+    let mut generations = vec![GenerationStats {
+        axis: "tile",
+        generated: tiles.len(),
+        realized: candidates,
+        pruned,
+        best_offchip: best_so_far,
+    }];
 
     // ---- stage 2: allocation axis over the surviving beam ----
     let alloc_variants = [
@@ -251,6 +313,8 @@ pub fn search(
         },
     ];
     let mut extra: Vec<Realized> = Vec::new();
+    let (s2_cand0, s2_pruned0) = (candidates, pruned);
+    let mut s2_generated = 0usize;
     for b in &beam {
         if b.cost.offchip_total() == floor {
             continue; // already optimal
@@ -259,24 +323,40 @@ pub fn search(
             && b.plan_stats.window_splits == 0
             && b.plan_stats.streamed == 0;
         for av in alloc_variants {
+            s2_generated += 1;
             if av == seed_alloc {
                 pruned += 1; // identical to the beam entry already scored
+                crate::obs::add("opt.pruned", 1);
                 continue;
             }
             if av.spill == SpillFlavor::Traffic && idle_spiller {
                 pruned += 1; // flavor cannot change an untouched plan
+                crate::obs::add("opt.pruned", 1);
                 continue;
             }
             let dv = DecisionVector { tile: b.dv.tile, alloc: av };
             match realize(program, dv, bank_mode, bank_cfg, accel, base_tile, base_alloc) {
                 Ok(r) => {
                     candidates += 1;
+                    crate::obs::add("opt.realized", 1);
+                    best_so_far = best_so_far.min(r.cost.offchip_total());
+                    trajectory.push(best_so_far);
                     extra.push(r);
                 }
-                Err(_) => pruned += 1,
+                Err(_) => {
+                    pruned += 1;
+                    crate::obs::add("opt.pruned", 1);
+                }
             }
         }
     }
+    generations.push(GenerationStats {
+        axis: "alloc",
+        generated: s2_generated,
+        realized: candidates - s2_cand0,
+        pruned: pruned - s2_pruned0,
+        best_offchip: best_so_far,
+    });
 
     // ---- pick the winner ----
     let mut best: Option<Realized> = None;
@@ -290,6 +370,8 @@ pub fn search(
         }
     }
     let best = best.expect("baseline candidate realized");
+    let search_seconds = t_search.elapsed().as_secs_f64();
+    crate::obs::phase("opt.search", search_seconds);
     let stats = OptStats {
         candidates,
         pruned,
@@ -297,6 +379,9 @@ pub fn search(
         best_offchip: best.cost.offchip_total(),
         best_pipelined_seconds: best.cost.pipelined_seconds,
         decision: best.dv.describe(),
+        generations,
+        trajectory,
+        search_seconds,
     };
     Ok(OptOutcome {
         program: best.tiled,
@@ -375,6 +460,68 @@ mod tests {
             "joint search found nothing on a conv-boundary workload: {:?}",
             out.stats
         );
+    }
+
+    #[test]
+    fn search_profile_is_consistent() {
+        let prog = Program::lower(conv_conv());
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let out = search(
+            &prog,
+            BankMode::Global,
+            &BankConfig::default(),
+            &cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+            &OptOpts::default(),
+        )
+        .unwrap();
+        let s = &out.stats;
+        assert_eq!(s.generations.len(), 2);
+        assert_eq!(s.generations[0].axis, "tile");
+        assert_eq!(s.generations[1].axis, "alloc");
+        // per-stage rows sum back to the totals
+        assert_eq!(s.generations.iter().map(|g| g.realized).sum::<usize>(), s.candidates);
+        assert_eq!(s.generations.iter().map(|g| g.pruned).sum::<usize>(), s.pruned);
+        // one trajectory point per realization, nonincreasing, landing
+        // on the winner (the primary objective is off-chip bytes)
+        assert_eq!(s.trajectory.len(), s.candidates);
+        assert!(s.trajectory.windows(2).all(|w| w[1] <= w[0]));
+        assert_eq!(s.trajectory.last().copied(), Some(s.best_offchip));
+        assert!(s.search_seconds >= 0.0);
+        let j = s.to_json();
+        assert_eq!(
+            j.get("generations").and_then(|g| g.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        assert!(j.get("search_seconds").and_then(|v| v.as_f64()).is_some());
+    }
+
+    #[test]
+    fn search_counters_land_in_global_collector() {
+        // serialize with every test that toggles the global gate
+        let _g = crate::obs::TEST_GATE.lock().unwrap();
+        crate::obs::global().reset();
+        crate::obs::set_enabled(true);
+        let prog = Program::lower(conv_conv());
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let out = search(
+            &prog,
+            BankMode::Global,
+            &BankConfig::default(),
+            &cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+            &OptOpts::default(),
+        )
+        .unwrap();
+        crate::obs::set_enabled(false);
+        let snap = crate::obs::global().snapshot();
+        assert!(
+            snap.counters.get("opt.realized").copied().unwrap_or(0)
+                >= out.stats.candidates as i64
+        );
+        assert!(snap.phases.iter().any(|p| p.name == "opt.search"));
     }
 
     #[test]

@@ -143,6 +143,19 @@ pub struct PassReport {
     pub tile_time: Duration,
     pub bank_time: Duration,
     pub alloc_time: Duration,
+    /// Wall time of every *executed* stage, in execution order, with
+    /// the same names [`PassManager::run_observed`] reports. Each entry
+    /// is mirrored to the global telemetry collector (as
+    /// `passes.<name>`) when [`crate::obs::enabled`].
+    pub phases: Vec<crate::obs::PhaseSample>,
+}
+
+/// Record one executed stage's wall time: into the report's phase list
+/// and (gated) the global collector.
+fn record_phase(phases: &mut Vec<crate::obs::PhaseSample>, name: &str, d: Duration) {
+    let secs = d.as_secs_f64();
+    crate::obs::phase(&format!("passes.{name}"), secs);
+    phases.push(crate::obs::PhaseSample::new(name, secs));
 }
 
 impl PassManager {
@@ -162,13 +175,16 @@ impl PassManager {
         graph: crate::ir::Graph,
         mut observe: impl FnMut(&str, &Program),
     ) -> Result<PassReport, VerifyError> {
+        let mut phases: Vec<crate::obs::PhaseSample> = Vec::new();
         if self.verify {
             verify_graph(&graph)?;
         }
+        let tl = Instant::now();
         let mut program = Program::lower(graph);
         if self.verify {
             verify_program(&program)?;
         }
+        record_phase(&mut phases, "lower", tl.elapsed());
         observe("lower", &program);
 
         let mut dme_stats = None;
@@ -178,6 +194,7 @@ impl PassManager {
             if self.verify {
                 verify_program(&program)?;
             }
+            record_phase(&mut phases, "dme", t0.elapsed());
             observe("dme", &program);
         }
         let dme_time = t0.elapsed();
@@ -247,6 +264,7 @@ impl PassManager {
             if self.verify {
                 verify_program(&program)?;
             }
+            record_phase(&mut phases, "opt", tt.elapsed());
             observe("opt", &program);
             tile_stats = outcome.tile_stats;
             opt_stats = Some(outcome.stats);
@@ -261,6 +279,7 @@ impl PassManager {
             if self.verify {
                 verify_program(&program)?;
             }
+            record_phase(&mut phases, "tile", tt.elapsed());
             observe("tile", &program);
             tile_stats = Some(stats);
         }
@@ -290,6 +309,8 @@ impl PassManager {
             if self.verify {
                 verify_program(&p2)?;
             }
+            // mapping + splicing: the whole executable bank stage
+            record_phase(&mut phases, "bank", t1.elapsed());
             observe("bank", &p2);
             p2
         } else {
@@ -311,6 +332,7 @@ impl PassManager {
                 verify_graph(&res.program.graph)?;
                 verify_program(&res.program)?;
             }
+            record_phase(&mut phases, "plan", t2.elapsed());
             observe("plan", &res.program);
             plan = Some(res.plan);
             res.program
@@ -330,6 +352,7 @@ impl PassManager {
             tile_time,
             bank_time,
             alloc_time,
+            phases,
         })
     }
 }
@@ -617,6 +640,33 @@ mod tests {
         pm.run_observed(sample(), |s, _| stages.push(s.to_string())).unwrap();
         assert!(stages.iter().any(|s| s == "opt"));
         assert!(!stages.iter().any(|s| s == "tile"));
+    }
+
+    #[test]
+    fn phases_cover_executed_stages_in_order() {
+        use crate::accel::config::AccelConfig;
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = PassManager {
+            tile: Some(TileStage::for_accel(cfg.clone())),
+            alloc: Some(AllocStage::for_accel(cfg)),
+            ..Default::default()
+        };
+        let mut stages: Vec<String> = Vec::new();
+        let report = pm
+            .run_observed(sample(), |s, _| stages.push(s.to_string()))
+            .unwrap();
+        let names: Vec<&str> = report.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, stages, "phase names mirror observed stages");
+        assert!(report.phases.iter().all(|p| p.seconds >= 0.0));
+        // disabled stages leave no phase behind
+        let pm = PassManager {
+            enable_dme: false,
+            bank_mode: BankMode::None,
+            ..Default::default()
+        };
+        let report = pm.run(sample()).unwrap();
+        let names: Vec<&str> = report.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["lower"]);
     }
 
     #[test]

@@ -286,6 +286,90 @@ pub fn planned_vs_dynamic_json(
     ])
 }
 
+/// Node name lookup for attribution rows ([`EXTERNAL_NODE`] and any
+/// id not in the graph render as `<external>`).
+fn node_name(graph: &crate::ir::Graph, id: crate::ir::graph::NodeId) -> String {
+    graph
+        .nodes()
+        .iter()
+        .find(|n| n.id == id)
+        .map(|n| n.name.clone())
+        .unwrap_or_else(|| "<external>".to_string())
+}
+
+/// Per-layer traffic attribution table: the top-`top` nodes by
+/// off-chip bytes, with the off-chip total split by cause, plus a
+/// TOTAL row over *all* nodes (so the table's bottom line equals the
+/// simulator's counters even when rows are elided).
+pub fn attribution_table(
+    graph: &crate::ir::Graph,
+    attr: &crate::accel::trace::Attribution,
+    top: usize,
+) -> String {
+    use crate::accel::TrafficClass as Tc;
+    let mut t = Table::new(&[
+        "layer",
+        "off-chip",
+        "weights",
+        "inputs",
+        "spill+reload",
+        "copies",
+        "output",
+        "on-chip",
+    ]);
+    let row_cells = |name: String, get: &dyn Fn(Tc) -> i64| -> Vec<String> {
+        let offchip: i64 = Tc::ALL.iter().filter(|c| c.is_offchip()).map(|&c| get(c)).sum();
+        vec![
+            name,
+            mb(offchip),
+            mb(get(Tc::WeightLoad)),
+            mb(get(Tc::InputLoad)),
+            mb(get(Tc::Spill) + get(Tc::Reload)),
+            mb(get(Tc::OffchipCopy) + get(Tc::OffchipRemap)),
+            mb(get(Tc::OutputStore)),
+            mb(get(Tc::OnchipCopy) + get(Tc::OnchipRemap)),
+        ]
+    };
+    for (node, _) in attr.per_node_offchip().into_iter().take(top) {
+        t.row(&row_cells(node_name(graph, node), &|c| attr.get(node, c)));
+    }
+    let totals = attr.totals();
+    t.row(&row_cells("TOTAL".to_string(), &|c| totals.get(c)));
+    t.render()
+}
+
+/// Machine-readable attribution: the top-`top` per-layer rows (each
+/// with its per-class byte cells) plus the class totals.
+pub fn attribution_json(
+    graph: &crate::ir::Graph,
+    attr: &crate::accel::trace::Attribution,
+    top: usize,
+) -> Json {
+    use crate::accel::TrafficClass;
+    let top_layers: Vec<Json> = attr
+        .per_node_offchip()
+        .into_iter()
+        .take(top)
+        .map(|(node, offchip)| {
+            let classes = TrafficClass::ALL
+                .iter()
+                .filter(|&&c| attr.get(node, c) != 0)
+                .map(|&c| (c.label().to_string(), Json::Int(attr.get(node, c))))
+                .collect();
+            Json::obj(vec![
+                ("node", Json::Int(node.0 as i64)),
+                ("name", Json::Str(node_name(graph, node))),
+                ("offchip", Json::Int(offchip)),
+                ("classes", Json::Obj(classes)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("top_layers", Json::Arr(top_layers)),
+        ("totals", attr.totals().to_json()),
+    ])
+}
+
 /// JSON form of a sim report for machine-readable experiment logs.
 pub fn sim_to_json(rep: &SimReport) -> Json {
     Json::obj(vec![
@@ -322,6 +406,36 @@ mod tests {
         assert!((pct_reduction(100, 24) - 76.0).abs() < 1e-9);
         assert_eq!(pct_reduction(0, 5), 0.0);
         assert!((pct_reduction(200, 200)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attribution_table_ranks_and_totals() {
+        use crate::accel::trace::{Attribution, EXTERNAL_NODE};
+        use crate::accel::TrafficClass;
+        use crate::ir::builder::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 4]);
+        let t = b.transpose("t0", x, &[1, 0]);
+        let r = b.relu("r0", t);
+        b.mark_output(r);
+        let g = b.finish();
+        let (t_id, r_id) = (g.nodes()[0].id, g.nodes()[1].id);
+        let mut a = Attribution::default();
+        a.add(t_id, TrafficClass::InputLoad, 5_000_000);
+        a.add(r_id, TrafficClass::OutputStore, 1_000_000);
+        a.add(EXTERNAL_NODE, TrafficClass::OutputStore, 2_000_000);
+        let table = attribution_table(&g, &a, 2);
+        let lines: Vec<&str> = table.lines().collect();
+        // header + rule + 2 rows + TOTAL
+        assert_eq!(lines.len(), 5);
+        assert!(lines[2].contains("t0"), "{table}");
+        assert!(lines[3].contains("<external>"), "{table}");
+        assert!(lines[4].contains("TOTAL") && lines[4].contains("8.0 MB"), "{table}");
+        let j = attribution_json(&g, &a, 2);
+        let top = j.get("top_layers").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].get("name").and_then(|v| v.as_str()), Some("t0"));
+        assert_eq!(top[0].get("offchip").and_then(|v| v.as_i64()), Some(5_000_000));
     }
 
     #[test]

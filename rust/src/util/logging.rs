@@ -1,7 +1,14 @@
-//! Leveled stderr logging, controlled by `POLYMEM_LOG`
-//! (`error|warn|info|debug|trace`, default `info`).
+//! Leveled stderr logging, controlled by `POLYMEM_LOG`.
+//!
+//! The spec is a comma-separated list: a bare level
+//! (`error|warn|info|debug|trace`) sets the default, and
+//! `module::path=level` entries override it per module subtree —
+//! longest matching prefix wins, e.g.
+//! `POLYMEM_LOG=warn,polymem::opt=trace` silences everything below
+//! warn except the joint optimizer. Default `info`.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 #[repr(u8)]
@@ -14,20 +21,50 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+static MODS: Mutex<Option<Vec<(String, Level)>>> = Mutex::new(None);
+
+fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Parse a spec: bare levels set the default, `module=level` entries
+/// accumulate. Unparsable entries are ignored.
+fn parse_spec(spec: &str) -> (Option<Level>, Vec<(String, Level)>) {
+    let mut def = None;
+    let mut mods = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((m, l)) = part.split_once('=') {
+            if let Some(lv) = parse_level(l.trim()) {
+                mods.push((m.trim().to_string(), lv));
+            }
+        } else if let Some(lv) = parse_level(part) {
+            def = Some(lv);
+        }
+    }
+    (def, mods)
+}
 
 fn init_from_env() -> u8 {
-    let lvl = match std::env::var("POLYMEM_LOG").ok().as_deref() {
-        Some("error") => Level::Error,
-        Some("warn") => Level::Warn,
-        Some("debug") => Level::Debug,
-        Some("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
+    let spec = std::env::var("POLYMEM_LOG").unwrap_or_default();
+    let (def, mods) = parse_spec(&spec);
+    *MODS.lock().unwrap() = if mods.is_empty() { None } else { Some(mods) };
+    let lvl = def.unwrap_or(Level::Info) as u8;
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl
 }
 
-/// Current level (lazily initialized from the environment).
+/// Current default level (lazily initialized from the environment).
 pub fn level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
     let raw = if raw == 255 { init_from_env() } else { raw };
@@ -40,17 +77,50 @@ pub fn level() -> Level {
     }
 }
 
-/// Override the level programmatically (tests, benches).
+/// Override the default level programmatically (tests, benches).
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Apply a full `POLYMEM_LOG`-style spec programmatically, replacing
+/// any per-module overrides currently in effect.
+pub fn set_module_spec(spec: &str) {
+    let (def, mods) = parse_spec(spec);
+    *MODS.lock().unwrap() = if mods.is_empty() { None } else { Some(mods) };
+    if let Some(d) = def {
+        set_level(d);
+    }
+}
+
+/// Is `l` enabled at the default level (no module filtering)?
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Is `l` enabled for `module`? Per-module overrides apply to the
+/// named module and its submodules; the longest matching prefix wins,
+/// and modules with no override use the default level.
+pub fn enabled_for(l: Level, module: &str) -> bool {
+    let def = level(); // also forces env initialization of MODS
+    if let Some(mods) = MODS.lock().unwrap().as_ref() {
+        let mut best: Option<(usize, Level)> = None;
+        for (m, lv) in mods {
+            let subtree = module.len() > m.len()
+                && module.starts_with(m.as_str())
+                && module[m.len()..].starts_with("::");
+            if (module == m || subtree) && best.map(|(n, _)| m.len() > n).unwrap_or(true) {
+                best = Some((m.len(), *lv));
+            }
+        }
+        if let Some((_, lv)) = best {
+            return l <= lv;
+        }
+    }
+    l <= def
+}
+
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
-    if enabled(l) {
+    if enabled_for(l, module) {
         eprintln!("[{:5}] {}: {}", format!("{l:?}").to_uppercase(), module, msg);
     }
 }
@@ -76,9 +146,20 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Serializes tests mutating the global level/spec (the harness
+    /// runs same-binary tests concurrently).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn ordering() {
@@ -90,11 +171,34 @@ mod tests {
 
     #[test]
     fn set_and_check() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_module_spec(""); // clear any module overrides
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn module_spec_filters() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_module_spec("warn,polymem::opt=trace");
+        set_level(Level::Warn); // bare level in the spec also sets this
+        assert!(enabled_for(Level::Trace, "polymem::opt"));
+        assert!(enabled_for(Level::Trace, "polymem::opt::search"));
+        // `optx` is not in the `opt` subtree
+        assert!(!enabled_for(Level::Trace, "polymem::optx"));
+        assert!(!enabled_for(Level::Info, "polymem::tile"));
+        assert!(enabled_for(Level::Warn, "polymem::tile"));
+        // longest matching prefix wins
+        set_module_spec("info,polymem=error,polymem::opt=debug");
+        assert!(enabled_for(Level::Debug, "polymem::opt"));
+        assert!(!enabled_for(Level::Warn, "polymem::tile"));
+        assert!(enabled_for(Level::Info, "other::crate"));
+        // restore defaults for concurrent tests
+        set_module_spec("info");
+        set_level(Level::Info);
     }
 }

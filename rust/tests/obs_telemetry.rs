@@ -1,0 +1,297 @@
+//! Telemetry invariants: attribution conservation and trace export.
+//!
+//! The attribution table is only trustworthy if it is an *accounting
+//! identity*, not a sampling estimate. This suite pins that: for every
+//! replay mode (dynamic, planned, pipelined), the per-node × per-class
+//! byte cells sum **bit-exactly** per traffic class to the replay's
+//! own `TrafficCounters` — and, through the calibration invariant, to
+//! `cost::evaluate`'s predicted traffic — over all 7 model builders
+//! and ≥ 200 fuzzed graphs (`FUZZ_SEED` / `FUZZ_CASES` override for
+//! replay, as in `tests/diff_pipeline.rs`).
+//!
+//! The Chrome-trace golden test pins the export format promises:
+//! timestamps sorted nondecreasing, `B`/`E` balanced per thread, and
+//! the occupancy counter track present.
+
+use polymem::accel::{
+    simulate, simulate_pipelined, simulate_planned, AccelConfig, Trace, TrafficClass,
+};
+use polymem::cost;
+use polymem::ir::Graph;
+use polymem::models::{self, WaveNetConfig};
+use polymem::passes::manager::{AllocStage, OptStage, PassManager, TileStage};
+use polymem::util::fuzzgraph;
+use polymem::util::json;
+
+/// Same interpreter-sized zoo as the differential and calibration
+/// suites.
+fn zoo() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("mlp", models::mlp(2, 12, 8, 4, 2)),
+        ("transformer", models::transformer_block(8, 16, 2, 32)),
+        ("resnet18", models::resnet18_scaled(1, 16, 8, 10)),
+        ("resnet50", models::resnet50_scaled(1, 16, 8, 10)),
+        ("mobilenet", models::mobilenet_v1_scaled(1, 16, 8, 10)),
+        ("inception", models::inception_stack_scaled(1, 2, 8, 4)),
+        (
+            "wavenet",
+            models::parallel_wavenet_with(WaveNetConfig {
+                flows: 2,
+                layers_per_flow: 3,
+                channels: 4,
+                time: 40,
+                kernel: 2,
+                dilation_cycle: 10,
+            }),
+        ),
+    ]
+}
+
+fn planned(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
+fn tiled(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        tile: Some(TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
+fn opted(cfg: AccelConfig) -> PassManager {
+    PassManager {
+        opt: Some(OptStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg)),
+        ..Default::default()
+    }
+}
+
+/// Per-class bit-exact comparison of an attribution's totals against a
+/// replay's counters (`TrafficCounters` equality would also pass, but
+/// per-class failure messages name the leaking class).
+fn assert_totals_match(
+    name: &str,
+    mode: &str,
+    attr: &polymem::accel::Attribution,
+    traffic: &polymem::accel::TrafficCounters,
+) {
+    let totals = attr.totals();
+    for c in TrafficClass::ALL {
+        assert_eq!(
+            totals.get(c),
+            traffic.get(c),
+            "{name}/{mode}: attribution does not conserve {}",
+            c.label()
+        );
+    }
+}
+
+/// Conservation for one compiled program+plan, across both planned
+/// replay modes and against the cost model's prediction.
+fn assert_conserved(name: &str, pm: &PassManager, g: Graph, cfg: &AccelConfig) {
+    let rep = pm.run(g).unwrap_or_else(|e| panic!("{name}: pipeline failed: {e}"));
+    let plan = rep.plan.as_ref().expect("alloc stage configured");
+
+    let mut tr = Trace::new(0); // attribution is independent of the event cap
+    let sim = simulate_planned(&rep.program, plan, cfg, Some(&mut tr))
+        .unwrap_or_else(|e| panic!("{name}: plan rejected: {e}"));
+    assert_totals_match(name, "planned", tr.attr(), &sim.traffic);
+
+    // ... and therefore to the cost model's prediction (calibration)
+    let predicted = cost::evaluate(&rep.program, plan, cfg);
+    assert_totals_match(name, "predicted", tr.attr(), &predicted.traffic);
+
+    // the pipelined replay reorders time, not bytes
+    let mut trp = Trace::new(0);
+    let pipe = simulate_pipelined(&rep.program, plan, cfg, Some(&mut trp)).unwrap();
+    assert_totals_match(name, "pipelined", trp.attr(), &pipe.traffic);
+    assert_totals_match(name, "pipelined-vs-planned", trp.attr(), &sim.traffic);
+}
+
+#[test]
+fn zoo_conserved_through_planned_pipeline() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        assert_conserved(name, &planned(cfg.clone()), g, &cfg);
+    }
+}
+
+#[test]
+fn zoo_conserved_through_tiled_pipeline() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        assert_conserved(name, &tiled(cfg.clone()), g, &cfg);
+    }
+}
+
+#[test]
+fn zoo_conserved_through_opt_pipeline() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        assert_conserved(name, &opted(cfg.clone()), g, &cfg);
+    }
+}
+
+#[test]
+fn zoo_conserved_through_dynamic_simulate() {
+    // the dynamic (furthest-next-use) replay shares the same pairing
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        let rep = PassManager::default()
+            .run(g)
+            .unwrap_or_else(|e| panic!("{name}: pipeline failed: {e}"));
+        let mut tr = Trace::new(0);
+        let sim = simulate(&rep.program, &cfg, Some(&mut tr));
+        assert_totals_match(name, "dynamic", tr.attr(), &sim.traffic);
+    }
+}
+
+/// Read a u64 override (decimal or 0x-hex), aborting on unparseable
+/// values (same contract as the differential suite).
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => {
+            let parsed = s
+                .strip_prefix("0x")
+                .or_else(|| s.strip_prefix("0X"))
+                .map(|h| u64::from_str_radix(h, 16))
+                .unwrap_or_else(|| s.parse());
+            parsed.unwrap_or_else(|_| panic!("{name}={s}: not a u64 (decimal or 0x-hex)"))
+        }
+    }
+}
+
+#[test]
+fn fuzzed_graphs_conserved() {
+    // ≥ 200 seeded random DAGs, same pipeline rotation as the
+    // calibration suite: planned / tiled alternate, every seed
+    // ≡ 3 mod 16 runs the joint-optimizer configuration
+    let base = env_u64("FUZZ_SEED", 0xF0_2255ED);
+    let cases = env_u64("FUZZ_CASES", 200);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+        let g = fuzzgraph::fuzz_graph(seed);
+        let cfg = AccelConfig::tiny(4 * 1024);
+        let pm = if seed % 16 == 3 {
+            opted(cfg.clone())
+        } else if seed % 2 == 0 {
+            planned(cfg.clone())
+        } else {
+            tiled(cfg.clone())
+        };
+        assert_conserved(&format!("FUZZ_SEED={seed}"), &pm, g, &cfg);
+    }
+}
+
+/// The 2 MiB cramped configuration (inferentia-like geometry, banks
+/// shrunk — same as `tests/integration_tile.rs`).
+fn cramped() -> AccelConfig {
+    let mut cfg = AccelConfig::inferentia_like();
+    cfg.bank_bytes /= 4; // 8 MiB -> 2 MiB
+    cfg.name = "inferentia-like/4".into();
+    cfg
+}
+
+#[test]
+fn resnet50_conv1_is_an_offchip_hotspot_at_2mib() {
+    // the acceptance scenario: full ResNet-50 under a cramped 2 MiB
+    // scratchpad — the stem conv (largest feature map) must surface
+    // near the top of the per-layer off-chip ranking
+    let cfg = cramped();
+    let rep = tiled(cfg.clone()).run(models::resnet50(1)).unwrap();
+    let plan = rep.plan.as_ref().unwrap();
+    let mut tr = Trace::new(0);
+    let sim = simulate_planned(&rep.program, plan, &cfg, Some(&mut tr)).unwrap();
+    assert_totals_match("resnet50@2MiB", "planned", tr.attr(), &sim.traffic);
+
+    let conv1 = rep
+        .program
+        .graph
+        .nodes()
+        .iter()
+        .find(|n| n.name == "conv1")
+        .expect("resnet50 stem conv present")
+        .id;
+    let ranked = tr.attr().per_node_offchip();
+    let rank = ranked.iter().position(|&(n, _)| n == conv1);
+    assert!(
+        matches!(rank, Some(r) if r < 3),
+        "conv1 not in the top-3 off-chip layers: rank {rank:?} of {}",
+        ranked.len()
+    );
+
+    // and the rendered table names it
+    let table = polymem::report::attribution_table(&rep.program.graph, tr.attr(), 8);
+    assert!(table.contains("conv1"), "table missing conv1:\n{table}");
+    assert!(table.contains("TOTAL"), "table missing TOTAL row:\n{table}");
+}
+
+#[test]
+fn chrome_trace_export_is_well_formed() {
+    // golden structural properties of the exported JSON: sorted
+    // timestamps, balanced B/E nesting per thread, named threads, and
+    // the scratchpad counter track — through a serialize/parse
+    // round-trip, exactly what `--trace-out` writes
+    let cfg = AccelConfig::tiny(8 * 1024);
+    let rep = tiled(cfg.clone()).run(models::resnet18_scaled(1, 16, 8, 10)).unwrap();
+    let plan = rep.plan.as_ref().unwrap();
+    let mut tr = Trace::new(10_000);
+    simulate_pipelined(&rep.program, plan, &cfg, Some(&mut tr)).unwrap();
+    assert!(!tr.spans().is_empty());
+    assert!(!tr.occupancy().is_empty());
+
+    let text = tr.to_chrome_json().to_string_compact();
+    let j = json::parse(&text).expect("exported trace must be valid JSON");
+    assert_eq!(j.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let evs = j.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+    assert!(!evs.is_empty());
+
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut depth: std::collections::BTreeMap<i64, i64> = Default::default();
+    let (mut names, mut counters) = (0usize, 0usize);
+    for e in evs {
+        let ts = e.get("ts").and_then(|v| v.as_f64()).expect("ts");
+        assert!(ts >= last_ts, "timestamps must be nondecreasing");
+        last_ts = ts;
+        assert_eq!(e.get("pid").and_then(|v| v.as_i64()), Some(1));
+        let tid = e.get("tid").and_then(|v| v.as_i64()).expect("tid");
+        match e.get("ph").and_then(|v| v.as_str()).expect("ph") {
+            "B" => *depth.entry(tid).or_insert(0) += 1,
+            "E" => {
+                let d = depth.entry(tid).or_insert(0);
+                *d -= 1;
+                assert!(*d >= 0, "E before matching B on tid {tid}");
+            }
+            "M" => names += 1,
+            "C" => counters += 1,
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(depth.values().all(|&d| d == 0), "unbalanced spans: {depth:?}");
+    assert_eq!(names, 2, "compute + dma thread names");
+    assert!(counters > 0, "scratchpad occupancy counter track missing");
+}
+
+#[test]
+fn event_log_bounded_but_attribution_complete() {
+    // a tiny event cap must not perturb the byte accounting
+    let cfg = AccelConfig::tiny(8 * 1024);
+    let rep = tiled(cfg.clone()).run(models::resnet50_scaled(1, 16, 8, 10)).unwrap();
+    let plan = rep.plan.as_ref().unwrap();
+
+    let mut capped = Trace::new(4);
+    let sim = simulate_planned(&rep.program, plan, &cfg, Some(&mut capped)).unwrap();
+    assert!(capped.events().len() <= 4);
+    assert!(capped.dropped() > 0, "scaled resnet50 must overflow a 4-event cap");
+    assert_totals_match("resnet50-capped", "planned", capped.attr(), &sim.traffic);
+
+    // identical attribution with an uncapped log
+    let mut full = Trace::new(usize::MAX);
+    simulate_planned(&rep.program, plan, &cfg, Some(&mut full)).unwrap();
+    assert_eq!(capped.attr(), full.attr());
+}
