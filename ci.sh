@@ -33,20 +33,26 @@ echo "== cargo test -q (differential suite runs inside: FUZZ_SEED=$FUZZ_SEED FUZ
 cargo test -q
 echo "   (replay one differential case: FUZZ_SEED=<seed> FUZZ_CASES=1 cargo test --test diff_pipeline fuzzed)"
 
-# Perf trajectory: the E3/E4/E5 benches emit machine-readable records
-# (target/BENCH_plan.json, target/BENCH_tile.json, target/BENCH_opt.json)
-# every run, so the planned-vs-dynamic, tiled-vs-untiled and
-# joint-vs-staged-greedy byte counts are tracked as artifacts rather
+# Perf trajectory: the E3/E4/E5/E6 benches emit machine-readable
+# records (target/BENCH_plan.json, target/BENCH_tile.json,
+# target/BENCH_opt.json, target/BENCH_serving.json) every run, so the
+# planned-vs-dynamic, tiled-vs-untiled, joint-vs-staged-greedy and
+# bucketized-vs-fixed-batching numbers are tracked as artifacts rather
 # than scrollback. bench_compile_time adds the compiler-telemetry
-# record (per-model pass phases + joint-search profile).
-echo "== perf records: bench_alloc_plan + bench_tile + bench_opt + bench_compile_time =="
+# record (per-model pass phases + joint-search profile); bench_serving
+# also smoke-tests the AOT plan cache (ResNet-50 @ 2 MiB, buckets
+# {1,2,4,8}) and asserts the bucketized policy's strict byte win at
+# low load.
+echo "== perf records: bench_alloc_plan + bench_tile + bench_opt + bench_compile_time + bench_serving =="
 mkdir -p target
 BENCH_JSON_DIR=target cargo bench --bench bench_alloc_plan
 BENCH_JSON_DIR=target cargo bench --bench bench_tile
 BENCH_JSON_DIR=target cargo bench --bench bench_opt
 BENCH_JSON_DIR=target cargo bench --bench bench_compile_time
+BENCH_JSON_DIR=target cargo bench --bench bench_serving
 ls -l target/BENCH_plan.json target/BENCH_tile.json target/BENCH_opt.json \
-      target/BENCH_compile_phases.json
+      target/BENCH_compile_phases.json target/BENCH_serving.json
+test -s target/BENCH_serving.json
 
 # Telemetry smoke: the acceptance scenario end to end — optimize full
 # ResNet-50 under a cramped 2 MiB scratchpad, export the Chrome trace,

@@ -1,18 +1,39 @@
-//! Serving-layer benchmarks: batching policy overhead and end-to-end
-//! throughput/latency. Uses the AOT artifact when present (run
-//! `make artifacts` first), otherwise falls back to the echo backend
-//! so the coordinator numbers are always measurable.
+//! E6 — the production serving path, end to end.
+//!
+//! 1. Coordinator overhead with a zero-cost echo backend (the fixed
+//!    policy's bookkeeping floor).
+//! 2. AOT plan cache on ResNet-50 under the cramped 2 MiB scratchpad:
+//!    joint-optimized `(Program, MemoryPlan)` artifacts for the batch
+//!    buckets {1, 2, 4, 8}, with predicted off-chip bytes/request and
+//!    pipelined service time per bucket.
+//! 3. Closed-loop and Poisson load simulations at equal offered load:
+//!    cost-aware bucketized batching vs the fixed `max_batch = 8`
+//!    baseline, reporting p50/p99 latency, sustained QPS and off-chip
+//!    bytes/request per bucket set.
+//! 4. A live `Server` over the `PlannedBackend` (real threads, real
+//!    sleeps scaled down) to exercise the production wiring.
+//!
+//! Emits `$BENCH_JSON_DIR/BENCH_serving.json`.
 //!
 //! Run: `cargo bench --bench bench_serving`
 
-use polymem::coordinator::{EchoBackend, PjrtBackend, Server, ServerConfig};
-use polymem::runtime::RuntimeClient;
-use polymem::util::bench::Suite;
+use polymem::accel::AccelConfig;
+use polymem::coordinator::{BucketCost, EchoBackend, Server, ServerConfig};
+use polymem::serve::{
+    run_load, Arrivals, LoadReport, LoadSimConfig, PlanCache, PlanCacheConfig, PlannedBackend,
+};
+use polymem::util::bench::{write_json_record, Suite};
+use polymem::util::json::Json;
 use polymem::util::rng::SplitMix64;
-use std::path::Path;
 use std::time::{Duration, Instant};
 
-const CLASSES: usize = 10;
+/// The 2 MiB configuration (inferentia-like geometry, banks shrunk).
+fn two_mib() -> AccelConfig {
+    let mut cfg = AccelConfig::inferentia_like();
+    cfg.bank_bytes /= 4; // 8 MiB -> 2 MiB
+    cfg.name = "inferentia-like/4".into();
+    cfg
+}
 
 fn drive(srv: &Server, requests: usize, in_len: usize, seed: u64) -> Duration {
     let mut rng = SplitMix64::new(seed);
@@ -29,12 +50,27 @@ fn drive(srv: &Server, requests: usize, in_len: usize, seed: u64) -> Duration {
     t0.elapsed()
 }
 
+fn print_load(r: &LoadReport) {
+    println!(
+        "  {:<28} buckets {:?}: p50 {:?} p99 {:?}, {:>9.0} qps, \
+         {:>7.2} KiB/req, mean batch {:.2}, rejected {}",
+        r.label,
+        r.buckets,
+        r.p50(),
+        r.p99(),
+        r.qps,
+        r.bytes_per_request / 1024.0,
+        r.mean_batch,
+        r.rejected
+    );
+}
+
 fn main() {
     let suite = Suite::new("serving coordinator");
 
-    // ---- coordinator overhead with a zero-cost backend ----
+    // ---- 1. coordinator overhead with a zero-cost backend ----
     println!("\nbatching-policy overhead (echo backend, 4096 requests):");
-    for max_batch in [1usize, 4, 16, 64] {
+    for max_batch in [1usize, 8, 64] {
         let cfg = ServerConfig {
             max_batch,
             max_wait: Duration::from_micros(200),
@@ -49,60 +85,151 @@ fn main() {
             snap.mean_batch,
             snap.p99_latency
         );
-        if max_batch == 64 {
-            // what a metrics scrape endpoint would serve after the sweep
-            println!("\nscrape rendering (max_batch 64):");
-            for line in srv.metrics_text().lines() {
-                println!("  {line}");
-            }
-        }
         srv.shutdown();
     }
 
-    // ---- end-to-end on the real artifact ----
-    let artifact = "artifacts/model.hlo.txt";
-    if Path::new(artifact).exists() {
-        println!("\nend-to-end PJRT serving (batch sweep, 512 requests each):");
-        for batch in [1usize, 4, 8] {
-            // batch-1 artifact for batch 1, batch-8 artifact otherwise;
-            // the PjrtBackend pads partial batches.
-            let path = if batch == 1 {
-                "artifacts/model.b1.hlo.txt".to_string()
-            } else {
-                artifact.to_string()
-            };
-            let compiled_batch = if batch == 1 { 1 } else { 8 };
-            if !Path::new(&path).exists() {
-                continue;
-            }
-            let cfg = ServerConfig {
-                max_batch: batch,
-                max_wait: Duration::from_millis(2),
-                queue_cap: 4096,
-            };
-            let srv = Server::start_with(
-                move || {
-                    let rt = RuntimeClient::cpu()?;
-                    let model = rt.load_hlo_text(Path::new(&path))?;
-                    Ok(PjrtBackend::new(model, compiled_batch, &[3, 32, 32], CLASSES))
-                },
-                cfg,
-            )
-            .expect("server");
-            let elapsed = drive(&srv, 512, 3 * 32 * 32, 2);
-            let snap = srv.metrics().snapshot();
-            println!(
-                "  client batch {batch}: {:>7.1} req/s, latency mean {:?} p99 {:?}, mean batch {:.2}",
-                512.0 / elapsed.as_secs_f64(),
-                snap.mean_latency,
-                snap.p99_latency,
-                snap.mean_batch
-            );
-            srv.shutdown();
-        }
-    } else {
-        println!("\n(artifacts missing — run `make artifacts` for the PJRT end-to-end rows)");
+    // ---- 2. AOT plan cache: ResNet-50 @ 2 MiB, joint optimizer ----
+    let accel = two_mib();
+    println!("\nplan cache: resnet50 @ {} (joint optimizer):", accel.name);
+    let mut cache = PlanCache::new(
+        "resnet50",
+        PlanCacheConfig { accel: accel.clone(), joint: true, verify: false },
+    );
+    let buckets: Vec<i64> = vec![1, 2, 4, 8];
+    let arts = cache.compile_buckets(&buckets).expect("bucket compilation");
+    for a in &arts {
+        println!(
+            "  b{:<2} off-chip {:>8.2} MiB ({:>8.2} MiB/req), service {:>7.3} ms, \
+             compiled in {:>5.1} s [{}]",
+            a.batch,
+            a.cost.offchip_total() as f64 / (1 << 20) as f64,
+            a.bytes_per_request() / (1 << 20) as f64,
+            a.service_seconds * 1e3,
+            a.compile_seconds,
+            a.decision
+        );
     }
+    // memoization: a second lookup must be a cache hit, not a compile
+    let again = cache.get_or_compile(8).expect("cached");
+    assert_eq!(again.batch, 8);
+    assert_eq!(cache.hits(), 1, "plan cache failed to memoize");
+    assert_eq!(cache.misses(), buckets.len());
+
+    let costs: Vec<BucketCost> = arts
+        .iter()
+        .map(|a| BucketCost {
+            batch: a.batch as usize,
+            offchip_bytes: a.cost.offchip_total(),
+            service_seconds: a.service_seconds,
+        })
+        .collect();
+    let fixed8 = vec![*costs.last().expect("bucket 8")];
+    let svc8 = fixed8[0].service_seconds;
+    let capacity8 = 8.0 / svc8; // full-batch saturation qps
+
+    // ---- 3. load simulation: bucketized vs fixed at equal load ----
+    println!(
+        "\nclosed-loop / Poisson load simulation (bucket-8 capacity ≈ {capacity8:.0} qps):"
+    );
+    let sim_cfg = LoadSimConfig {
+        arrivals: Arrivals::Closed { clients: 12, requests: 4000 },
+        max_wait: Duration::from_secs_f64(svc8 * 2.0),
+        queue_cap: 64,
+    };
+    let loads: Vec<(&str, Arrivals)> = vec![
+        (
+            "poisson-low (0.25x cap)",
+            Arrivals::Poisson { rate_qps: 0.25 * capacity8, requests: 4000, seed: 11 },
+        ),
+        (
+            "poisson-high (0.8x cap)",
+            Arrivals::Poisson { rate_qps: 0.8 * capacity8, requests: 4000, seed: 12 },
+        ),
+        ("closed-loop (12 clients)", Arrivals::Closed { clients: 12, requests: 4000 }),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut low_load_win: Option<(f64, f64)> = None;
+    for (label, arrivals) in &loads {
+        let cfg = LoadSimConfig { arrivals: *arrivals, ..sim_cfg };
+        let bucketized = run_load(&costs, &cfg, &format!("{label} / bucketized"));
+        let fixed = run_load(&fixed8, &cfg, &format!("{label} / fixed8"));
+        print_load(&bucketized);
+        print_load(&fixed);
+        println!(
+            "    off-chip bytes/request: bucketized {:.0} vs fixed {:.0} ({:+.1}%)",
+            bucketized.bytes_per_request,
+            fixed.bytes_per_request,
+            100.0 * (bucketized.bytes_per_request - fixed.bytes_per_request)
+                / fixed.bytes_per_request
+        );
+        if label.starts_with("poisson-low") {
+            low_load_win = Some((bucketized.bytes_per_request, fixed.bytes_per_request));
+        }
+        rows.push(bucketized.to_json());
+        rows.push(fixed.to_json());
+    }
+    // the acceptance criterion: at equal offered load, cost-aware
+    // bucketized batching moves strictly fewer predicted off-chip
+    // bytes per request than the fixed max_batch=8 baseline
+    let (bucket_bpr, fixed_bpr) = low_load_win.expect("low-load row ran");
+    assert!(
+        bucket_bpr < fixed_bpr,
+        "bucketized batching did not beat the fixed baseline: {bucket_bpr} >= {fixed_bpr}"
+    );
+
+    // ---- 4. live server over the planned backend ----
+    // real threads and real (scaled) service sleeps, exercising the
+    // cost-aware flush path end to end
+    println!("\nlive server over PlannedBackend (64 requests, time 1:1):");
+    let backend = PlannedBackend::new(arts.clone()).expect("planned backend");
+    let in_len = arts[0].in_len;
+    let srv = Server::start(
+        backend,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs_f64(svc8),
+            queue_cap: 4096,
+        },
+    );
+    let elapsed = drive(&srv, 64, in_len, 3);
+    let snap = srv.metrics().snapshot();
+    println!(
+        "  {:>6.1} req/s, mean batch {:.2}, p99 {:?}, predicted off-chip {:.2} MiB",
+        64.0 / elapsed.as_secs_f64(),
+        snap.mean_batch,
+        snap.p99_latency,
+        snap.predicted_offchip_bytes as f64 / (1 << 20) as f64
+    );
+    assert!(
+        snap.predicted_offchip_bytes > 0,
+        "cost-aware flush path never engaged"
+    );
+    srv.shutdown();
+
+    // ---- machine-readable record ----
+    let record = Json::obj(vec![
+        ("model", Json::Str("resnet50".into())),
+        ("accel", accel.to_json()),
+        ("buckets", Json::Arr(arts.iter().map(|a| a.to_json()).collect())),
+        (
+            "cache",
+            Json::obj(vec![
+                ("hits", Json::Int(cache.hits() as i64)),
+                ("misses", Json::Int(cache.misses() as i64)),
+            ]),
+        ),
+        ("loads", Json::Arr(rows)),
+        (
+            "live_server",
+            Json::obj(vec![
+                ("requests", Json::Int(64)),
+                ("mean_batch", Json::Num(snap.mean_batch)),
+                ("p99_latency_us", Json::Int(snap.p99_latency.as_micros() as i64)),
+                ("predicted_offchip_bytes", Json::Int(snap.predicted_offchip_bytes)),
+            ]),
+        ),
+    ]);
+    write_json_record("BENCH_serving.json", &record);
 
     suite.finish();
 }

@@ -1,5 +1,6 @@
 //! Execution backends for the serving coordinator.
 
+use super::batcher::BucketCost;
 use crate::runtime::LoadedModel;
 use crate::util::error::Result;
 
@@ -18,6 +19,16 @@ pub trait Backend: 'static {
     /// Execute `n` requests packed row-major into `batch`
     /// (`n × input_len` elements); returns `n × output_len` elements.
     fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>>;
+
+    /// Per-bucket predicted cost table for cost-aware batching.
+    /// Backends serving a set of precompiled batch-size buckets (the
+    /// plan cache's `serve::PlannedBackend`) return one entry per
+    /// bucket; the server then sizes every flush by amortized off-chip
+    /// bytes per request. The default `None` keeps the classic fixed
+    /// `max_batch` flush policy.
+    fn bucket_costs(&self) -> Option<Vec<BucketCost>> {
+        None
+    }
 }
 
 /// Test/bench backend: output = input scaled by a constant, with an

@@ -3,7 +3,22 @@
 //! The policy is the standard serving trade-off: flush when the batch
 //! is full, or when the oldest queued request has waited `max_wait`,
 //! or (in eager mode) as soon as the queue drains.
+//!
+//! Two flush-sizing modes sit on top of the same accounting:
+//!
+//! * **fixed** — take `max_batch` requests (the classic policy);
+//! * **cost-aware bucketized** — [`choose_bucket`] consults a table of
+//!   per-bucket predicted costs (off-chip bytes and pipelined service
+//!   seconds from `cost::evaluate` over the plan cache's compiled
+//!   artifacts) and picks the bucket minimizing amortized off-chip
+//!   bytes per served request.
+//!
+//! The batcher tracks every request's enqueue timestamp in a
+//! `VecDeque`, so a partial flush leaves survivors with their true
+//! arrival times: the deadline for the next flush is still measured
+//! from when they actually arrived, never restarted.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Batching policy parameters.
@@ -33,40 +48,96 @@ pub enum Flush {
     Empty,
 }
 
+/// Predicted cost of executing one batch at a precompiled bucket size
+/// (from `cost::evaluate` over the bucket's `(Program, MemoryPlan)`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketCost {
+    /// The compiled batch size.
+    pub batch: usize,
+    /// Predicted off-chip DRAM bytes of one execution at this bucket.
+    pub offchip_bytes: i64,
+    /// Predicted pipelined service seconds of one execution.
+    pub service_seconds: f64,
+}
+
+/// Pick the flush size for `pending` queued requests from a table of
+/// per-bucket predicted costs: minimize amortized off-chip bytes per
+/// *served* request, `offchip(bucket) / min(pending, bucket)` — a
+/// bucket larger than `pending` still pays its full-batch traffic
+/// (padding), a bucket smaller leaves survivors queued. Ties prefer
+/// serving more requests, then the smaller bucket.
+///
+/// Returns `(take, bucket)` — how many requests to serve now and the
+/// bucket charged — or `None` when nothing is pending or the table is
+/// empty.
+pub fn choose_bucket(pending: usize, costs: &[BucketCost]) -> Option<(usize, BucketCost)> {
+    if pending == 0 {
+        return None;
+    }
+    let mut best: Option<(usize, BucketCost, f64)> = None;
+    for &c in costs {
+        if c.batch == 0 {
+            continue;
+        }
+        let take = pending.min(c.batch);
+        let amortized = c.offchip_bytes as f64 / take as f64;
+        let better = match &best {
+            None => true,
+            Some((bt, bc, ba)) => {
+                amortized < *ba
+                    || (amortized == *ba && take > *bt)
+                    || (amortized == *ba && take == *bt && c.batch < bc.batch)
+            }
+        };
+        if better {
+            best = Some((take, c, amortized));
+        }
+    }
+    best.map(|(take, c, _)| (take, c))
+}
+
 /// Accumulates request timestamps and decides when to flush.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    pending: usize,
-    oldest: Option<Instant>,
+    /// Enqueue timestamp of every queued request, in arrival order.
+    queue: VecDeque<Instant>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, pending: 0, oldest: None }
+        Batcher { policy, queue: VecDeque::new() }
     }
 
     pub fn pending(&self) -> usize {
-        self.pending
+        self.queue.len()
+    }
+
+    /// The policy's fixed flush size.
+    pub fn max_batch(&self) -> usize {
+        self.policy.max_batch
+    }
+
+    /// Enqueue time of the oldest pending request.
+    pub fn oldest(&self) -> Option<Instant> {
+        self.queue.front().copied()
     }
 
     /// Record an enqueued request.
     pub fn push(&mut self, now: Instant) {
-        if self.pending == 0 {
-            self.oldest = Some(now);
-        }
-        self.pending += 1;
+        self.queue.push_back(now);
     }
 
     /// Should the worker flush?
     pub fn poll(&self, now: Instant) -> Flush {
-        if self.pending == 0 {
+        let Some(&front) = self.queue.front() else {
             return Flush::Empty;
-        }
-        if self.pending >= self.policy.max_batch {
+        };
+        if self.queue.len() >= self.policy.max_batch {
             return Flush::Now;
         }
-        let waited = now.duration_since(self.oldest.unwrap());
+        // saturates to zero when `front` is in the future
+        let waited = now.duration_since(front);
         if waited >= self.policy.max_wait {
             Flush::Now
         } else {
@@ -74,13 +145,19 @@ impl Batcher {
         }
     }
 
-    /// Remove up to `max_batch` requests from the accounting; returns
-    /// the batch size taken. Caller drains the actual queue.
-    pub fn take(&mut self, now: Instant) -> usize {
-        let n = self.pending.min(self.policy.max_batch);
-        self.pending -= n;
-        self.oldest = if self.pending > 0 { Some(now) } else { None };
-        n
+    /// Remove the `n` oldest requests from the accounting (capped at
+    /// what is pending); returns the count taken. Survivors keep their
+    /// original enqueue times, so their deadline still dates from when
+    /// they actually arrived. Caller drains the actual queue.
+    pub fn take(&mut self, n: usize) -> usize {
+        let k = n.min(self.queue.len());
+        self.queue.drain(..k);
+        k
+    }
+
+    /// Fixed-policy flush: take up to `max_batch`.
+    pub fn take_max(&mut self) -> usize {
+        self.take(self.policy.max_batch)
     }
 }
 
@@ -107,7 +184,7 @@ mod tests {
         assert!(matches!(b.poll(t), Flush::Wait(_)));
         b.push(t);
         assert_eq!(b.poll(t), Flush::Now);
-        assert_eq!(b.take(t), 3);
+        assert_eq!(b.take_max(), 3);
         assert_eq!(b.poll(t), Flush::Empty);
     }
 
@@ -122,7 +199,7 @@ mod tests {
         }
         let later = t0 + Duration::from_millis(11);
         assert_eq!(b.poll(later), Flush::Now);
-        assert_eq!(b.take(later), 1);
+        assert_eq!(b.take_max(), 1);
     }
 
     #[test]
@@ -132,10 +209,49 @@ mod tests {
         for _ in 0..10 {
             b.push(t);
         }
-        assert_eq!(b.take(t), 4);
+        assert_eq!(b.take_max(), 4);
         assert_eq!(b.pending(), 6);
-        // remaining requests restart the wait clock
-        assert!(matches!(b.poll(t), Flush::Now | Flush::Wait(_)));
+        // leftovers keep their true enqueue time: still overdue (or
+        // immediately full again) — the wait clock does NOT restart
+        assert_eq!(b.oldest(), Some(t));
+        assert_eq!(b.poll(t + Duration::from_millis(1)), Flush::Now);
+    }
+
+    #[test]
+    fn leftovers_keep_enqueue_times() {
+        // regression: take() used to reset `oldest = now` for the
+        // surviving requests, letting them wait up to 2× max_wait
+        let mut b = Batcher::new(pol(4, 10));
+        let t0 = Instant::now();
+        for _ in 0..6 {
+            b.push(t0);
+        }
+        assert_eq!(b.take(4), 4);
+        assert_eq!(b.pending(), 2);
+        // at t0+4ms the survivors have 6ms left, not a fresh 10ms
+        match b.poll(t0 + Duration::from_millis(4)) {
+            Flush::Wait(d) => assert!(
+                d <= Duration::from_millis(6),
+                "wait clock restarted: {d:?} left"
+            ),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        // and at t0+10ms they are due exactly on their own deadline
+        assert_eq!(b.poll(t0 + Duration::from_millis(10)), Flush::Now);
+    }
+
+    #[test]
+    fn partial_take_tracks_per_request_ages() {
+        let mut b = Batcher::new(pol(8, 10));
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(5);
+        b.push(t0);
+        b.push(t1);
+        assert_eq!(b.take(1), 1); // serves the t0 request
+        assert_eq!(b.oldest(), Some(t1));
+        // the t1 request's deadline is t1+10ms, not t0+10ms
+        assert!(matches!(b.poll(t0 + Duration::from_millis(11)), Flush::Wait(_)));
+        assert_eq!(b.poll(t1 + Duration::from_millis(10)), Flush::Now);
     }
 
     #[test]
@@ -150,5 +266,52 @@ mod tests {
             panic!()
         };
         assert!(d2 < d1);
+    }
+
+    // synthetic bucket table: off-chip bytes = weights + batch ×
+    // activations, the shape the plan cache produces for real models
+    fn table(weights: i64, act: i64, buckets: &[usize]) -> Vec<BucketCost> {
+        buckets
+            .iter()
+            .map(|&b| BucketCost {
+                batch: b,
+                offchip_bytes: weights + act * b as i64,
+                service_seconds: 1e-3 * b as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn choose_bucket_amortizes_weights() {
+        let t = table(1000, 10, &[1, 2, 4, 8]);
+        // a full queue always amortizes best on the largest bucket
+        let (take, c) = choose_bucket(12, &t).unwrap();
+        assert_eq!((take, c.batch), (8, 8));
+        // pending=3: bucket 4 pads one slot but amortizes the weights
+        // over 3 requests at lower total bytes than bucket 8 would
+        let (take, c) = choose_bucket(3, &t).unwrap();
+        assert_eq!(take, 3);
+        assert_eq!(c.batch, 4);
+        // a single request is cheapest on the batch-1 plan only when
+        // activations dominate; with heavy weights it still prefers
+        // the smallest bucket (same amortization, fewer total bytes)
+        let (take, c) = choose_bucket(1, &t).unwrap();
+        assert_eq!((take, c.batch), (1, 1));
+    }
+
+    #[test]
+    fn choose_bucket_prefers_serving_more_on_ties() {
+        // zero activation cost: every bucket has identical total bytes,
+        // so amortization strictly favors serving more requests
+        let t = table(1000, 0, &[1, 2, 4]);
+        let (take, c) = choose_bucket(3, &t).unwrap();
+        assert_eq!(take, 3);
+        assert_eq!(c.batch, 4);
+    }
+
+    #[test]
+    fn choose_bucket_empty_inputs() {
+        assert!(choose_bucket(0, &table(1, 1, &[1])).is_none());
+        assert!(choose_bucket(5, &[]).is_none());
     }
 }

@@ -19,6 +19,10 @@ struct Inner {
     errors: u64,
     latency_us: LogHistogram,
     batch_sizes: LogHistogram,
+    /// Cost-model-predicted off-chip DRAM bytes of every executed
+    /// batch (cost-aware bucketized flushes only; 0 for fixed-policy
+    /// backends with no bucket table).
+    predicted_offchip_bytes: i64,
 }
 
 /// Thread-safe metrics sink.
@@ -37,6 +41,9 @@ pub struct Snapshot {
     pub p50_latency: Duration,
     pub p99_latency: Duration,
     pub mean_batch: f64,
+    /// Predicted off-chip bytes accumulated across executed batches
+    /// (cost-aware bucketized serving only).
+    pub predicted_offchip_bytes: i64,
     /// The full request-latency distribution (microseconds).
     pub latency: LogHistogram,
 }
@@ -61,6 +68,13 @@ impl Metrics {
         g.errors += batch_size as u64;
     }
 
+    /// Account one executed batch's predicted off-chip traffic (the
+    /// chosen bucket's `cost::evaluate` bytes).
+    pub fn record_offchip(&self, bytes: i64) {
+        let mut g = self.inner.lock().unwrap();
+        g.predicted_offchip_bytes += bytes.max(0);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let lat = &g.latency_us;
@@ -82,6 +96,7 @@ impl Metrics {
             p50_latency: Duration::from_micros(lat.percentile(0.50)),
             p99_latency: Duration::from_micros(lat.percentile(0.99)),
             mean_batch,
+            predicted_offchip_bytes: g.predicted_offchip_bytes,
             latency: lat.clone(),
         }
     }
@@ -96,6 +111,10 @@ impl Snapshot {
         s.push_str(&format!("polymem_batches_total {}\n", self.batches));
         s.push_str(&format!("polymem_errors_total {}\n", self.errors));
         s.push_str(&format!("polymem_batch_size_mean {:.3}\n", self.mean_batch));
+        s.push_str(&format!(
+            "polymem_predicted_offchip_bytes_total {}\n",
+            self.predicted_offchip_bytes
+        ));
         s.push_str(&format!(
             "polymem_request_latency_us_count {}\n",
             self.latency.count()
@@ -146,6 +165,16 @@ mod tests {
         let m = Metrics::new();
         m.record_error(4);
         assert_eq!(m.snapshot().errors, 4);
+    }
+
+    #[test]
+    fn offchip_bytes_accumulate() {
+        let m = Metrics::new();
+        m.record_offchip(1000);
+        m.record_offchip(500);
+        let s = m.snapshot();
+        assert_eq!(s.predicted_offchip_bytes, 1500);
+        assert!(s.render_text().contains("polymem_predicted_offchip_bytes_total 1500"));
     }
 
     #[test]

@@ -3,11 +3,18 @@
 //! A batching inference server in the vLLM-router mold, scaled to this
 //! repo's inference-compiler scope: requests enter a bounded queue, a
 //! batcher thread groups them under a size/deadline policy, a worker
-//! executes each batch on a [`Backend`] (the PJRT runtime in
-//! production, mocks in tests), and metrics record the latency
-//! distribution. Built on std threads + channels (tokio is not in the
-//! offline crate cache; the request path is compute-bound, not
-//! I/O-bound, so threads are a faithful substitute).
+//! executes each batch on a [`Backend`] (the PJRT runtime or the
+//! plan-cache-backed `serve::PlannedBackend` in production, mocks in
+//! tests), and metrics record the latency distribution. Built on std
+//! threads + channels (tokio is not in the offline crate cache; the
+//! request path is compute-bound, not I/O-bound, so threads are a
+//! faithful substitute).
+//!
+//! Flush sizing is cost-aware when the backend publishes a
+//! [`BucketCost`] table: each flush picks the precompiled batch-size
+//! bucket minimizing predicted off-chip bytes per served request (see
+//! [`batcher::choose_bucket`]); otherwise the classic fixed
+//! `max_batch` policy applies.
 
 pub mod backend;
 pub mod batcher;
@@ -15,6 +22,6 @@ pub mod metrics;
 pub mod server;
 
 pub use backend::{Backend, EchoBackend, PjrtBackend};
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{choose_bucket, BatchPolicy, Batcher, BucketCost};
 pub use metrics::Metrics;
 pub use server::{Server, ServerConfig};

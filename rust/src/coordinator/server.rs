@@ -3,13 +3,29 @@
 //! One worker thread owns the backend (PJRT executables are not Sync);
 //! callers submit from any thread and block on (or poll) a per-request
 //! response channel.
+//!
+//! Shutdown is deterministic: [`Server::shutdown`] (and `Drop`) takes
+//! the submission sender out of its slot and drops it. The worker's
+//! receiver then reports `Disconnected` — but only after every request
+//! already sent has been pulled — so the worker drains and answers
+//! everything that was accepted, then exits. There is no timeout
+//! polling and no window in which an accepted request can be dropped:
+//! `submit` holds the sender slot's lock across the send, so a request
+//! either observes the sender gone (rejected with "server stopped",
+//! its backpressure slot released) or lands in the channel before the
+//! disconnect and is served.
+//!
+//! Flush sizing is cost-aware when the backend exposes a bucket table
+//! ([`Backend::bucket_costs`], e.g. the plan-cache backed
+//! `serve::PlannedBackend`): each flush serves the bucket minimizing
+//! predicted off-chip bytes per request. Otherwise the classic fixed
+//! `max_batch` policy applies.
 
 use super::backend::Backend;
-use crate::util::error::Result;
-use super::batcher::{BatchPolicy, Batcher, Flush};
+use super::batcher::{choose_bucket, BatchPolicy, Batcher, BucketCost, Flush};
 use super::metrics::Metrics;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use crate::util::error::Result;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -66,12 +82,13 @@ impl ResponseHandle {
 
 /// Batching inference server.
 pub struct Server {
-    tx: Sender<Request>,
+    /// Submission sender; `None` once shutdown has begun. Dropping it
+    /// is the shutdown signal the worker observes as a disconnect.
+    tx: Mutex<Option<Sender<Request>>>,
     queued: Arc<Mutex<usize>>,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     input_len: usize,
 }
 
@@ -88,13 +105,11 @@ impl Server {
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<usize>>();
         let metrics = Arc::new(Metrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
         let queued = Arc::new(Mutex::new(0usize));
         let worker = std::thread::Builder::new()
             .name("polymem-serve".into())
             .spawn({
                 let metrics = metrics.clone();
-                let stop = stop.clone();
                 let queued = queued.clone();
                 move || {
                     let backend = match factory() {
@@ -107,7 +122,7 @@ impl Server {
                             return;
                         }
                     };
-                    worker_loop(backend, cfg, rx, metrics, stop, queued)
+                    worker_loop(backend, cfg, rx, metrics, queued)
                 }
             })
             .expect("spawning server worker");
@@ -115,12 +130,11 @@ impl Server {
             .recv()
             .map_err(|_| crate::format_err!("server worker died during startup"))??;
         Ok(Server {
-            tx,
+            tx: Mutex::new(Some(tx)),
             queued,
             cfg,
             metrics,
-            stop,
-            worker: Some(worker),
+            worker: Mutex::new(Some(worker)),
             input_len,
         })
     }
@@ -131,7 +145,8 @@ impl Server {
     }
 
     /// Submit one request. Fails fast when the queue is saturated
-    /// (backpressure) or the input length is wrong.
+    /// (backpressure), the input length is wrong, or the server has
+    /// stopped. A rejected submit never consumes a backpressure slot.
     pub fn submit(&self, input: Vec<f32>) -> Result<ResponseHandle> {
         crate::ensure!(
             input.len() == self.input_len,
@@ -145,10 +160,29 @@ impl Server {
             *q += 1;
         }
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { input, enqueued: Instant::now(), respond: rtx })
-            .map_err(|_| crate::format_err!("server stopped"))?;
+        let req = Request { input, enqueued: Instant::now(), respond: rtx };
+        // hold the sender slot across the send: a successful send is
+        // then guaranteed to precede the shutdown disconnect, so every
+        // accepted request is drained and answered
+        let sent = match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(req).is_ok(),
+            None => false,
+        };
+        if !sent {
+            // release the slot taken above — the request never reached
+            // the worker (this used to leak, shrinking queue_cap
+            // permanently)
+            let mut q = self.queued.lock().unwrap();
+            *q = q.saturating_sub(1);
+            crate::bail!("server stopped");
+        }
         Ok(ResponseHandle { rx: rrx })
+    }
+
+    /// Requests currently holding a backpressure slot (submitted but
+    /// not yet handed to the backend).
+    pub fn queued(&self) -> usize {
+        *self.queued.lock().unwrap()
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -161,10 +195,11 @@ impl Server {
         self.metrics.snapshot().render_text()
     }
 
-    /// Stop the worker and wait for it to drain.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(w) = self.worker.take() {
+    /// Stop accepting requests, drain everything already accepted, and
+    /// wait for the worker to exit. Idempotent.
+    pub fn shutdown(&self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(w) = self.worker.lock().unwrap().take() {
             let _ = w.join();
         }
     }
@@ -172,10 +207,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -184,12 +216,22 @@ fn worker_loop<B: Backend>(
     cfg: ServerConfig,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
     queued: Arc<Mutex<usize>>,
 ) {
-    let policy = BatchPolicy::new(cfg.max_batch.min(backend.max_batch()), cfg.max_wait);
+    let max_batch = cfg.max_batch.min(backend.max_batch());
+    let policy = BatchPolicy::new(max_batch.max(1), cfg.max_wait);
     let mut batcher = Batcher::new(policy);
     let mut pending: Vec<Request> = Vec::new();
+    // cost-aware flush sizing when the backend publishes per-bucket
+    // predicted costs (plan-cache backends); fixed max_batch otherwise
+    let costs: Option<Vec<BucketCost>> = backend
+        .bucket_costs()
+        .map(|v| {
+            v.into_iter()
+                .filter(|c| c.batch >= 1 && c.batch <= policy.max_batch)
+                .collect::<Vec<_>>()
+        })
+        .filter(|v| !v.is_empty());
 
     loop {
         // pull everything currently queued
@@ -201,51 +243,82 @@ fn worker_loop<B: Backend>(
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
-                    // all senders gone: drain and exit
-                    flush_all(&mut backend, &mut pending, &metrics, &queued);
+                    // shutdown: every accepted request is already in
+                    // `pending` (the channel drained before the
+                    // disconnect was reported) — answer them all
+                    flush_all(
+                        &mut backend,
+                        &mut batcher,
+                        &mut pending,
+                        &metrics,
+                        &queued,
+                        costs.as_deref(),
+                    );
                     return;
                 }
             }
         }
         match batcher.poll(Instant::now()) {
             Flush::Now => {
-                let n = batcher.take(Instant::now());
+                let n = take_flush(&mut batcher, costs.as_deref(), &metrics);
                 execute_batch(&mut backend, &mut pending, n, &metrics, &queued);
             }
-            Flush::Wait(d) => {
-                // sleep until deadline or next arrival
-                match rx.recv_timeout(d.min(Duration::from_millis(5))) {
-                    Ok(req) => {
-                        batcher.push(req.enqueued);
-                        pending.push(req);
-                    }
-                    Err(_) => {}
+            Flush::Wait(d) => match rx.recv_timeout(d) {
+                Ok(req) => {
+                    batcher.push(req.enqueued);
+                    pending.push(req);
                 }
-            }
-            Flush::Empty => {
-                if stop.load(Ordering::SeqCst) {
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    flush_all(
+                        &mut backend,
+                        &mut batcher,
+                        &mut pending,
+                        &metrics,
+                        &queued,
+                        costs.as_deref(),
+                    );
                     return;
                 }
-                match rx.recv_timeout(Duration::from_millis(5)) {
-                    Ok(req) => {
-                        batcher.push(req.enqueued);
-                        pending.push(req);
-                    }
-                    Err(_) => {}
+            },
+            Flush::Empty => match rx.recv() {
+                Ok(req) => {
+                    batcher.push(req.enqueued);
+                    pending.push(req);
                 }
-            }
+                // disconnected with nothing pending: clean exit
+                Err(_) => return,
+            },
         }
+    }
+}
+
+/// Decide this flush's size: cost-aware bucket choice when a bucket
+/// table is available (recording the bucket's predicted off-chip
+/// traffic), the fixed `max_batch` policy otherwise.
+fn take_flush(batcher: &mut Batcher, costs: Option<&[BucketCost]>, metrics: &Metrics) -> usize {
+    match costs {
+        Some(table) => match choose_bucket(batcher.pending(), table) {
+            Some((take, bucket)) => {
+                metrics.record_offchip(bucket.offchip_bytes);
+                batcher.take(take)
+            }
+            None => batcher.take_max(),
+        },
+        None => batcher.take_max(),
     }
 }
 
 fn flush_all<B: Backend>(
     backend: &mut B,
+    batcher: &mut Batcher,
     pending: &mut Vec<Request>,
     metrics: &Metrics,
     queued: &Mutex<usize>,
+    costs: Option<&[BucketCost]>,
 ) {
     while !pending.is_empty() {
-        let n = pending.len().min(backend.max_batch());
+        let n = take_flush(batcher, costs, metrics);
         execute_batch(backend, pending, n, metrics, queued);
     }
 }
@@ -384,5 +457,94 @@ mod tests {
             let _ = h.wait();
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn rejected_submit_releases_backpressure_slot() {
+        // regression: the "server stopped" path used to keep the
+        // queued slot it had taken, permanently shrinking queue_cap
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 2,
+        };
+        let srv = Server::start(EchoBackend::new(1, 1), cfg);
+        srv.shutdown();
+        for _ in 0..8 {
+            let e = srv.submit(vec![1.0]).unwrap_err().to_string();
+            // with the leak, slot 3+ would fail as "queue full" instead
+            assert!(e.contains("server stopped"), "leaked slot surfaced as: {e}");
+        }
+        assert_eq!(srv.queued(), 0, "rejected submits must not hold slots");
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_requests() {
+        // regression: shutdown used to flip a flag the worker only saw
+        // from its Empty branch via 5 ms polls; accepted requests could
+        // be dropped without a response. Dropping the sender makes the
+        // drain deterministic: shutdown() returns only after every
+        // accepted request has been answered.
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 1024,
+        };
+        let mut be = EchoBackend::new(1, 4);
+        be.delay = Duration::from_millis(1);
+        let srv = Server::start(be, cfg);
+        let handles: Vec<_> =
+            (0..64).map(|k| srv.submit(vec![k as f32]).unwrap()).collect();
+        srv.shutdown();
+        for (k, h) in handles.into_iter().enumerate() {
+            assert_eq!(
+                h.wait().unwrap(),
+                vec![2.0 * k as f32],
+                "request {k} dropped across shutdown"
+            );
+        }
+        assert_eq!(srv.queued(), 0);
+    }
+
+    #[test]
+    fn concurrent_shutdown_never_drops_accepted_requests() {
+        // accepted ⇒ answered, even when submits race the shutdown
+        for _ in 0..10 {
+            let mut be = EchoBackend::new(1, 4);
+            be.delay = Duration::from_micros(300);
+            let cfg = ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 256,
+            };
+            let srv = std::sync::Arc::new(Server::start(be, cfg));
+            let submitter = std::thread::spawn({
+                let srv = srv.clone();
+                move || {
+                    let mut handles = vec![];
+                    for k in 0..100_000 {
+                        match srv.submit(vec![k as f32]) {
+                            Ok(h) => handles.push((k, h)),
+                            // backpressure rejects are expected mid-run;
+                            // only the shutdown rejection ends the race
+                            Err(e) if e.to_string().contains("server stopped") => break,
+                            Err(_) => std::thread::yield_now(),
+                        }
+                    }
+                    handles
+                }
+            });
+            std::thread::sleep(Duration::from_micros(500));
+            srv.shutdown();
+            let handles = submitter.join().unwrap();
+            for (k, h) in handles {
+                assert_eq!(
+                    h.wait().unwrap(),
+                    vec![2.0 * k as f32],
+                    "accepted request {k} lost in shutdown race"
+                );
+            }
+            assert_eq!(srv.queued(), 0);
+        }
     }
 }

@@ -44,7 +44,13 @@
 //!   attribution and engine timelines ride on it.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (HLO text) from Rust.
-//! * [`coordinator`] — a batching inference server over the runtime.
+//! * [`coordinator`] — a batching inference server over the runtime,
+//!   with cost-aware bucketized flush sizing.
+//! * [`serve`] — the production serving path: the AOT plan cache
+//!   (memoized optimized `(Program, MemoryPlan)` artifacts per
+//!   batch-size bucket), the planned backend that replays predicted
+//!   pipelined service times, and the deterministic closed-loop /
+//!   Poisson load simulation behind `bench_serving`.
 //! * [`report`] — paper-table formatting for the benchmark harness.
 //! * [`util`] — offline substitutes for clap/serde/criterion/proptest.
 //!
@@ -66,5 +72,6 @@ pub mod passes;
 pub mod poly;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tile;
 pub mod util;

@@ -18,18 +18,11 @@ use polymem::util::cli::{App, Command, Parsed};
 use std::time::{Duration, Instant};
 
 fn model_by_name(name: &str, batch: i64) -> Result<Graph, String> {
-    match name {
-        "resnet50" => Ok(polymem::models::resnet50(batch)),
-        "resnet18" => Ok(polymem::models::resnet18(batch)),
-        "wavenet" => Ok(polymem::models::parallel_wavenet()),
-        "mlp" => Ok(polymem::models::mlp(batch, 784, 512, 10, 4)),
-        "transformer" => Ok(polymem::models::transformer_block(128, 256, 8, 1024)),
-        "mobilenet" => Ok(polymem::models::mobilenet_v1(batch)),
-        "inception" => Ok(polymem::models::inception_stack(batch, 4)),
-        other => Err(format!(
-            "unknown model '{other}' (try resnet50|resnet18|wavenet|mlp|transformer|mobilenet|inception)"
-        )),
-    }
+    polymem::models::by_name(name, batch).ok_or_else(|| {
+        format!(
+            "unknown model '{name}' (try resnet50|resnet18|wavenet|mlp|transformer|mobilenet|inception)"
+        )
+    })
 }
 
 /// Resolve the workload: `--graph file.json` wins over `--model name`.

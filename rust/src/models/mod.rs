@@ -23,3 +23,22 @@ pub use mobilenet::{mobilenet_v1, mobilenet_v1_scaled};
 pub use resnet::{resnet18, resnet18_scaled, resnet50, resnet50_scaled};
 pub use transformer::transformer_block;
 pub use wavenet::{parallel_wavenet, parallel_wavenet_with, WaveNetConfig};
+
+/// The zoo by CLI name, with the same default dimensions the `polymem`
+/// binary uses (`--model ...`). This is also the model registry the
+/// serving plan cache compiles from, so CLI and serving agree on what
+/// a name means. `batch` is ignored by the workloads that have no
+/// batch dimension (wavenet, transformer). Returns `None` for unknown
+/// names.
+pub fn by_name(name: &str, batch: i64) -> Option<crate::ir::Graph> {
+    match name {
+        "resnet50" => Some(resnet50(batch)),
+        "resnet18" => Some(resnet18(batch)),
+        "wavenet" => Some(parallel_wavenet()),
+        "mlp" => Some(mlp(batch, 784, 512, 10, 4)),
+        "transformer" => Some(transformer_block(128, 256, 8, 1024)),
+        "mobilenet" => Some(mobilenet_v1(batch)),
+        "inception" => Some(inception_stack(batch, 4)),
+        _ => None,
+    }
+}

@@ -1,0 +1,124 @@
+//! The planned backend: serving over compiled plan-cache artifacts.
+//!
+//! `PlannedBackend` implements the coordinator's [`Backend`] trait
+//! over a set of batch-size buckets from the [`super::plans`] cache.
+//! Its `infer` is a **service-time model**, not a numeric kernel: it
+//! routes the batch to the smallest bucket that fits, then replays
+//! that bucket's pipelined execution time (`service_seconds`, equal by
+//! calibration to `simulate_pipelined`'s latency for the bucket's
+//! `(Program, MemoryPlan)`). End-to-end serving numbers therefore
+//! reflect exactly the memory behavior the optimizer predicted.
+//! Output values are a deterministic placeholder (first input element
+//! × 2 per request) — value correctness is the interpreter's and the
+//! PJRT runtime's domain, not the serving simulator's.
+//!
+//! The backend also publishes its per-bucket cost table
+//! ([`Backend::bucket_costs`]), which switches the server's flush
+//! policy to cost-aware bucketized batching.
+
+use super::plans::PlannedArtifact;
+use crate::coordinator::{Backend, BucketCost};
+use crate::util::error::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serves a model from precompiled batch-size buckets, modeling each
+/// batch's service time as its bucket's pipelined replay latency.
+pub struct PlannedBackend {
+    /// Bucket artifacts, sorted ascending by batch size.
+    buckets: Vec<Arc<PlannedArtifact>>,
+    /// Wall-clock seconds slept per modeled service second (1.0 =
+    /// real time; 0.0 disables sleeping for tests).
+    time_scale: f64,
+}
+
+impl PlannedBackend {
+    pub fn new(mut buckets: Vec<Arc<PlannedArtifact>>) -> Result<PlannedBackend> {
+        crate::ensure!(!buckets.is_empty(), "planned backend needs at least one bucket");
+        buckets.sort_by_key(|a| a.batch);
+        for w in buckets.windows(2) {
+            crate::ensure!(
+                w[0].batch != w[1].batch,
+                "duplicate bucket batch {}",
+                w[0].batch
+            );
+            crate::ensure!(
+                w[0].in_len == w[1].in_len && w[0].out_len == w[1].out_len,
+                "buckets disagree on per-request shape: b{} is {}→{}, b{} is {}→{}",
+                w[0].batch,
+                w[0].in_len,
+                w[0].out_len,
+                w[1].batch,
+                w[1].in_len,
+                w[1].out_len
+            );
+        }
+        Ok(PlannedBackend { buckets, time_scale: 1.0 })
+    }
+
+    /// Scale (or zero out) the modeled service sleeps.
+    pub fn with_time_scale(mut self, scale: f64) -> PlannedBackend {
+        self.time_scale = scale.max(0.0);
+        self
+    }
+
+    /// The smallest bucket serving `n` requests (the largest bucket
+    /// when `n` exceeds every bucket — callers cap `n` at
+    /// `max_batch`).
+    pub fn bucket_for(&self, n: usize) -> &Arc<PlannedArtifact> {
+        self.buckets
+            .iter()
+            .find(|a| a.batch as usize >= n)
+            .unwrap_or_else(|| self.buckets.last().expect("non-empty by construction"))
+    }
+
+    pub fn buckets(&self) -> &[Arc<PlannedArtifact>] {
+        &self.buckets
+    }
+}
+
+impl Backend for PlannedBackend {
+    fn input_len(&self) -> usize {
+        self.buckets[0].in_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.buckets[0].out_len
+    }
+
+    fn max_batch(&self) -> usize {
+        self.buckets.last().expect("non-empty").batch as usize
+    }
+
+    fn bucket_costs(&self) -> Option<Vec<BucketCost>> {
+        Some(
+            self.buckets
+                .iter()
+                .map(|a| BucketCost {
+                    batch: a.batch as usize,
+                    offchip_bytes: a.cost.offchip_total(),
+                    service_seconds: a.service_seconds,
+                })
+                .collect(),
+        )
+    }
+
+    fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
+        let in_len = self.input_len();
+        let out_len = self.output_len();
+        crate::ensure!(n >= 1, "empty batch");
+        crate::ensure!(n <= self.max_batch(), "batch {n} exceeds largest bucket");
+        crate::ensure!(batch.len() == n * in_len, "bad batch packing");
+        let art = self.bucket_for(n);
+        let service = art.service_seconds * self.time_scale;
+        if service > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(service));
+        }
+        // deterministic placeholder payload (see module docs)
+        let mut out = vec![0f32; n * out_len];
+        for (k, row) in out.chunks_mut(out_len).enumerate() {
+            row.fill(2.0 * batch[k * in_len]);
+        }
+        Ok(out)
+    }
+}

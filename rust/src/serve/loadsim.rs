@@ -1,0 +1,334 @@
+//! Closed-loop / open-loop load simulation over planned service times.
+//!
+//! A deterministic discrete-event simulation of the serving pipeline:
+//! arrivals (Poisson open loop, or a fixed client population closed
+//! loop) enter a bounded queue; a single worker flushes batches under
+//! the size/deadline policy, sizing each flush with the same
+//! [`choose_bucket`] the live server uses; each flush occupies the
+//! worker for its bucket's predicted pipelined service time and
+//! charges the bucket's predicted off-chip bytes. Time is virtual
+//! (u64 nanoseconds), so runs are exactly reproducible and complete in
+//! microseconds of wall clock regardless of the simulated load.
+//!
+//! This is how `bench_serving` compares bucket sets at *equal offered
+//! load*: the same seed produces the identical arrival sequence for
+//! every policy under test.
+
+use crate::coordinator::{choose_bucket, BucketCost};
+use crate::obs::LogHistogram;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Duration;
+
+/// Arrival process.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Open loop: Poisson arrivals at `rate_qps` until `requests` have
+    /// arrived. Arrivals beyond `queue_cap` are rejected (backpressure).
+    Poisson { rate_qps: f64, requests: usize, seed: u64 },
+    /// Closed loop: `clients` concurrent callers, each resubmitting
+    /// the instant its previous request completes, until `requests`
+    /// total have been issued. Measures sustained saturation QPS.
+    Closed { clients: usize, requests: usize },
+}
+
+/// Load-simulation parameters (mirrors `ServerConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSimConfig {
+    pub arrivals: Arrivals,
+    /// Flush deadline for the oldest queued request.
+    pub max_wait: Duration,
+    /// Queue bound; arrivals beyond it are rejected.
+    pub queue_cap: usize,
+}
+
+/// What one simulated run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub label: String,
+    /// The bucket set the flush policy chose from.
+    pub buckets: Vec<usize>,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    /// Virtual time from first arrival to last completion.
+    pub makespan_seconds: f64,
+    /// Sustained throughput: completed / makespan.
+    pub qps: f64,
+    /// End-to-end request latency (queue wait + service), microseconds.
+    pub latency_us: LogHistogram,
+    /// Total predicted off-chip DRAM bytes charged by executed batches.
+    pub offchip_bytes: i64,
+    /// Amortized off-chip bytes per completed request.
+    pub bytes_per_request: f64,
+    pub mean_batch: f64,
+}
+
+impl LoadReport {
+    pub fn p50(&self) -> Duration {
+        Duration::from_micros(self.latency_us.percentile(0.50))
+    }
+
+    pub fn p99(&self) -> Duration {
+        Duration::from_micros(self.latency_us.percentile(0.99))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            (
+                "buckets",
+                Json::Arr(self.buckets.iter().map(|&b| Json::Int(b as i64)).collect()),
+            ),
+            ("submitted", Json::Int(self.submitted as i64)),
+            ("completed", Json::Int(self.completed as i64)),
+            ("rejected", Json::Int(self.rejected as i64)),
+            ("batches", Json::Int(self.batches as i64)),
+            ("makespan_seconds", Json::Num(self.makespan_seconds)),
+            ("qps", Json::Num(self.qps)),
+            ("p50_latency_us", Json::Int(self.latency_us.percentile(0.50) as i64)),
+            ("p99_latency_us", Json::Int(self.latency_us.percentile(0.99) as i64)),
+            ("mean_latency_us", Json::Num(self.latency_us.mean())),
+            ("offchip_bytes", Json::Int(self.offchip_bytes)),
+            ("bytes_per_request", Json::Num(self.bytes_per_request)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+        ])
+    }
+}
+
+const NS: f64 = 1e9;
+
+/// Run one load simulation over a bucket cost table. A single-bucket
+/// table reproduces the fixed `max_batch` baseline; a multi-bucket
+/// table is cost-aware bucketized batching.
+pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadReport {
+    assert!(!costs.is_empty(), "load sim needs at least one bucket");
+    let max_bucket = costs.iter().map(|c| c.batch).max().unwrap_or(1).max(1);
+    let max_wait_ns = cfg.max_wait.as_nanos() as u64;
+
+    // future arrival times (ns); closed-loop refills on completion
+    let mut arrivals: BinaryHeap<Reverse<u64>> = BinaryHeap::new();
+    let (total_requests, mut issued) = match cfg.arrivals {
+        Arrivals::Poisson { rate_qps, requests, seed } => {
+            assert!(rate_qps > 0.0, "Poisson rate must be positive");
+            let mut rng = SplitMix64::new(seed);
+            let mut t = 0.0f64;
+            for _ in 0..requests {
+                // exponential inter-arrival via inverse transform
+                let u = rng.next_f64().max(1e-12);
+                t += -u.ln() / rate_qps;
+                arrivals.push(Reverse((t * NS) as u64));
+            }
+            (requests, requests)
+        }
+        Arrivals::Closed { clients, requests } => {
+            let initial = if clients < 1 { 1 } else { clients }.min(requests);
+            for _ in 0..initial {
+                arrivals.push(Reverse(0));
+            }
+            (requests, initial)
+        }
+    };
+    let closed = matches!(cfg.arrivals, Arrivals::Closed { .. });
+
+    let mut queue: VecDeque<u64> = VecDeque::new(); // enqueue times (ns)
+    let mut now = 0u64;
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    let mut batches = 0u64;
+    let mut offchip: i64 = 0;
+    let mut batch_size_sum = 0u64;
+    let mut last_completion = 0u64;
+    let mut latency_us = LogHistogram::new();
+
+    loop {
+        // admit every arrival due by `now`
+        while let Some(&Reverse(t)) = arrivals.peek() {
+            if t > now {
+                break;
+            }
+            arrivals.pop();
+            submitted += 1;
+            if queue.len() < cfg.queue_cap {
+                queue.push_back(t);
+            } else {
+                rejected += 1;
+            }
+        }
+        let Some(&oldest) = queue.front() else {
+            // idle: jump to the next arrival, or finish
+            match arrivals.peek() {
+                Some(&Reverse(t)) => {
+                    now = t;
+                    continue;
+                }
+                None => break,
+            }
+        };
+        let deadline = oldest + max_wait_ns;
+        if queue.len() < max_bucket && now < deadline {
+            // wait for the batch to fill or the deadline to pass
+            let next_arrival = arrivals.peek().map(|&Reverse(t)| t).unwrap_or(u64::MAX);
+            now = deadline.min(next_arrival);
+            continue;
+        }
+        // flush: cost-aware bucket choice, then the worker is busy for
+        // the bucket's predicted pipelined service time
+        let (take, bucket) =
+            choose_bucket(queue.len(), costs).expect("non-empty queue and table");
+        let done = now + (bucket.service_seconds * NS) as u64;
+        for _ in 0..take {
+            let enq = queue.pop_front().expect("take <= queue.len()");
+            latency_us.record((done - enq) / 1_000);
+            completed += 1;
+            if closed && issued < total_requests {
+                // this client immediately submits its next request
+                arrivals.push(Reverse(done));
+                issued += 1;
+            }
+        }
+        batches += 1;
+        batch_size_sum += take as u64;
+        offchip += bucket.offchip_bytes;
+        last_completion = done;
+        now = done;
+    }
+
+    let makespan = (last_completion as f64 / NS).max(1e-12);
+    let mut buckets: Vec<usize> = costs.iter().map(|c| c.batch).collect();
+    buckets.sort_unstable();
+    LoadReport {
+        label: label.to_string(),
+        buckets,
+        submitted,
+        completed,
+        rejected,
+        batches,
+        makespan_seconds: makespan,
+        qps: completed as f64 / makespan,
+        latency_us,
+        offchip_bytes: offchip,
+        bytes_per_request: if completed > 0 {
+            offchip as f64 / completed as f64
+        } else {
+            0.0
+        },
+        mean_batch: if batches > 0 {
+            batch_size_sum as f64 / batches as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // synthetic model shaped like the real artifacts: off-chip bytes =
+    // weights + batch × activations, service time ∝ bytes / bandwidth
+    fn table(buckets: &[usize]) -> Vec<BucketCost> {
+        const WEIGHTS: i64 = 8_000_000;
+        const ACT: i64 = 500_000;
+        buckets
+            .iter()
+            .map(|&b| {
+                let bytes = WEIGHTS + ACT * b as i64;
+                BucketCost {
+                    batch: b,
+                    offchip_bytes: bytes,
+                    service_seconds: bytes as f64 / 50e9,
+                }
+            })
+            .collect()
+    }
+
+    fn cfg(arrivals: Arrivals) -> LoadSimConfig {
+        LoadSimConfig {
+            arrivals,
+            max_wait: Duration::from_micros(500),
+            queue_cap: 64,
+        }
+    }
+
+    #[test]
+    fn closed_loop_completes_everything() {
+        let r = run_load(
+            &table(&[1, 2, 4, 8]),
+            &cfg(Arrivals::Closed { clients: 12, requests: 500 }),
+            "closed",
+        );
+        assert_eq!(r.completed, 500);
+        assert_eq!(r.submitted, 500);
+        assert_eq!(r.rejected, 0);
+        assert!(r.qps > 0.0);
+        assert!(r.mean_batch >= 1.0);
+        assert!(r.p50() <= r.p99());
+    }
+
+    #[test]
+    fn poisson_conserves_requests() {
+        let r = run_load(
+            &table(&[1, 2, 4, 8]),
+            &LoadSimConfig {
+                // offered load above the bucket-8 service capacity
+                // (~33k qps): the tight queue must shed requests
+                arrivals: Arrivals::Poisson { rate_qps: 60_000.0, requests: 2_000, seed: 7 },
+                max_wait: Duration::from_micros(500),
+                queue_cap: 8, // tight: force rejects
+            },
+            "poisson",
+        );
+        assert_eq!(r.submitted, 2_000);
+        assert_eq!(r.completed + r.rejected, 2_000);
+        assert!(r.rejected > 0, "tight queue never rejected");
+    }
+
+    #[test]
+    fn bucketized_beats_fixed_at_low_load() {
+        // low offered load: deadline flushes run partial batches, which
+        // the bucketized policy serves on small-batch plans instead of
+        // paying the full batch-8 traffic
+        let all = table(&[1, 2, 4, 8]);
+        let fixed = vec![all[3]];
+        let arrivals = Arrivals::Poisson { rate_qps: 3_000.0, requests: 2_000, seed: 42 };
+        let bucketized = run_load(&all, &cfg(arrivals), "bucketized");
+        let baseline = run_load(&fixed, &cfg(arrivals), "fixed8");
+        assert_eq!(bucketized.submitted, baseline.submitted, "unequal offered load");
+        assert!(
+            bucketized.bytes_per_request < baseline.bytes_per_request,
+            "bucketized {} >= fixed {}",
+            bucketized.bytes_per_request,
+            baseline.bytes_per_request
+        );
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let t = table(&[1, 4, 8]);
+        let arrivals = Arrivals::Poisson { rate_qps: 10_000.0, requests: 1_000, seed: 3 };
+        let a = run_load(&t, &cfg(arrivals), "a");
+        let b = run_load(&t, &cfg(arrivals), "b");
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.offchip_bytes, b.offchip_bytes);
+        assert_eq!(a.latency_us.percentile(0.99), b.latency_us.percentile(0.99));
+        assert_eq!(a.qps, b.qps);
+    }
+
+    #[test]
+    fn single_bucket_is_the_fixed_policy() {
+        let r = run_load(
+            &table(&[8]),
+            &cfg(Arrivals::Closed { clients: 16, requests: 400 }),
+            "fixed",
+        );
+        // saturated closed loop with one bucket: every flush is a full 8
+        assert_eq!(r.completed, 400);
+        assert!((r.mean_batch - 8.0).abs() < 1e-9, "mean batch {}", r.mean_batch);
+    }
+}

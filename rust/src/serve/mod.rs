@@ -1,0 +1,28 @@
+//! The production serving path: AOT plan cache → planned backend →
+//! cost-aware bucketized batching → load simulation.
+//!
+//! This module connects the compile-time stack (`passes`, `opt`,
+//! `cost`) to the runtime stack (`coordinator`):
+//!
+//! * [`plans`] — the AOT **plan cache**, keyed by
+//!   `(model, batch, AccelConfig, decision)`: compiles and memoizes an
+//!   optimized `(Program, MemoryPlan)` artifact per batch-size bucket,
+//!   with the unified cost model's prediction verified bit-exact
+//!   against the pipelined replay (the service-time contract).
+//! * [`backend`] — [`PlannedBackend`], a coordinator `Backend` that
+//!   routes each batch to the smallest fitting bucket and replays its
+//!   predicted pipelined service time; it publishes the per-bucket
+//!   cost table that switches the server's flush policy to cost-aware
+//!   bucketized batching (`coordinator::choose_bucket`).
+//! * [`loadsim`] — deterministic virtual-time load simulation
+//!   (Poisson open loop and fixed-population closed loop) used by
+//!   `bench_serving` to report p50/p99 latency, sustained QPS and
+//!   off-chip bytes/request per bucket set at equal offered load.
+
+pub mod backend;
+pub mod loadsim;
+pub mod plans;
+
+pub use backend::PlannedBackend;
+pub use loadsim::{run_load, Arrivals, LoadReport, LoadSimConfig};
+pub use plans::{PlanCache, PlanCacheConfig, PlanKey, PlannedArtifact};

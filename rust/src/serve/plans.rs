@@ -1,0 +1,284 @@
+//! AOT plan cache: compile once, serve forever.
+//!
+//! Production serving runs a small set of precompiled batch-size
+//! *buckets* per model (static-shape accelerators cannot batch
+//! dynamically), so the cache key is everything that determines a
+//! compiled artifact: `(model, batch, AccelConfig, decision)`. Each
+//! entry memoizes the optimized `(Program, MemoryPlan)` from the pass
+//! pipeline — joint beam search (`opt`) or staged-greedy tiling — plus
+//! the unified cost model's prediction for it.
+//!
+//! **Service-time contract:** the artifact's `service_seconds` is
+//! `cost::evaluate(..).pipelined_seconds`, and compilation re-replays
+//! the plan through `accel::simulate_pipelined` and insists the two
+//! agree bit-exactly (the repo-wide calibration invariant). The
+//! serving layer can therefore treat the cost model's numbers as the
+//! ground-truth service model without re-simulating per request.
+
+use crate::accel::{simulate_pipelined, AccelConfig};
+use crate::alloc::MemoryPlan;
+use crate::cost::{evaluate, CostBreakdown, DecisionVector};
+use crate::ir::Program;
+use crate::passes::{AllocStage, OptStage, PassManager, TileStage};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Everything that determines a compiled serving artifact.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub model: String,
+    pub batch: i64,
+    /// Accelerator fingerprint: every geometry/bandwidth field that
+    /// changes compilation (`AccelConfig` itself is not `Eq`/`Hash`).
+    pub accel: String,
+    /// Requested decision configuration: `"joint"` for the beam
+    /// search (the winner is recorded per-artifact), otherwise the
+    /// staged-greedy baseline decision vector.
+    pub decision: String,
+}
+
+impl PlanKey {
+    pub fn describe(&self) -> String {
+        format!(
+            "{}@b{} on {} [{}]",
+            self.model, self.batch, self.accel, self.decision
+        )
+    }
+}
+
+fn accel_fingerprint(cfg: &AccelConfig) -> String {
+    format!(
+        "{}:{}x{}B:pe{}x{}:v{}:clk{:e}:dram{:e}:copy{:e}",
+        cfg.name,
+        cfg.banks,
+        cfg.bank_bytes,
+        cfg.pe_rows,
+        cfg.pe_cols,
+        cfg.vector_lanes,
+        cfg.clock_hz,
+        cfg.dram_bps,
+        cfg.onchip_copy_bps
+    )
+}
+
+/// One compiled serving artifact: the optimized program and plan for a
+/// single `(model, batch)` point, with the cost model's prediction for
+/// it and the pipelined service time the planned backend replays.
+#[derive(Clone, Debug)]
+pub struct PlannedArtifact {
+    pub key: PlanKey,
+    pub program: Program,
+    pub plan: MemoryPlan,
+    /// Unified cost-model prediction for `(program, plan)`.
+    pub cost: CostBreakdown,
+    /// Seconds of one batch execution under the double-buffered
+    /// pipeline replay. Equal to `cost.pipelined_seconds` — verified
+    /// against `simulate_pipelined` at compile time.
+    pub service_seconds: f64,
+    /// The decision vector the artifact was realized with (the joint
+    /// search's winner, or the staged-greedy baseline).
+    pub decision: String,
+    pub batch: i64,
+    /// Flattened per-request input length (batch dim divided out).
+    pub in_len: usize,
+    /// Flattened per-request output length.
+    pub out_len: usize,
+    pub compile_seconds: f64,
+}
+
+impl PlannedArtifact {
+    /// Predicted off-chip DRAM bytes amortized per request at full
+    /// occupancy of this bucket.
+    pub fn bytes_per_request(&self) -> f64 {
+        self.cost.offchip_total() as f64 / self.batch as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.key.model.clone())),
+            ("batch", Json::Int(self.batch)),
+            ("accel", Json::Str(self.key.accel.clone())),
+            ("requested_decision", Json::Str(self.key.decision.clone())),
+            ("decision", Json::Str(self.decision.clone())),
+            ("offchip_bytes", Json::Int(self.cost.offchip_total())),
+            ("bytes_per_request", Json::Num(self.bytes_per_request())),
+            ("service_seconds", Json::Num(self.service_seconds)),
+            ("peak_scratchpad", Json::Int(self.cost.peak_scratchpad)),
+            ("in_len", Json::Int(self.in_len as i64)),
+            ("out_len", Json::Int(self.out_len as i64)),
+            ("compile_seconds", Json::Num(self.compile_seconds)),
+        ])
+    }
+}
+
+/// How the cache compiles: which chip, and joint search vs staged
+/// greedy.
+#[derive(Clone, Debug)]
+pub struct PlanCacheConfig {
+    pub accel: AccelConfig,
+    /// `true`: whole-model joint beam search (`opt` stage); `false`:
+    /// staged-greedy tiling (`tile` stage). Both end in the alloc
+    /// stage so every artifact carries a `MemoryPlan`.
+    pub joint: bool,
+    /// Inter-pass IR verification while compiling (slower; on for
+    /// tests, typically off for bulk bucket compilation).
+    pub verify: bool,
+}
+
+/// Memoizing AOT compiler for one model's batch-size buckets.
+pub struct PlanCache {
+    model: String,
+    cfg: PlanCacheConfig,
+    entries: HashMap<i64, Arc<PlannedArtifact>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl PlanCache {
+    pub fn new(model: impl Into<String>, cfg: PlanCacheConfig) -> PlanCache {
+        PlanCache { model: model.into(), cfg, entries: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// The cache key a given batch size resolves to.
+    pub fn key(&self, batch: i64) -> PlanKey {
+        PlanKey {
+            model: self.model.clone(),
+            batch,
+            accel: accel_fingerprint(&self.cfg.accel),
+            decision: if self.cfg.joint {
+                "joint".to_string()
+            } else {
+                DecisionVector::baseline().describe()
+            },
+        }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fetch the artifact for `batch`, compiling and memoizing it on
+    /// first use.
+    pub fn get_or_compile(&mut self, batch: i64) -> Result<Arc<PlannedArtifact>> {
+        if let Some(a) = self.entries.get(&batch) {
+            self.hits += 1;
+            return Ok(a.clone());
+        }
+        let art = Arc::new(self.compile(batch)?);
+        self.misses += 1;
+        self.entries.insert(batch, art.clone());
+        Ok(art)
+    }
+
+    /// Compile (or fetch) every bucket, returned in the given order —
+    /// the artifact set a `PlannedBackend` serves.
+    pub fn compile_buckets(&mut self, buckets: &[i64]) -> Result<Vec<Arc<PlannedArtifact>>> {
+        buckets.iter().map(|&b| self.get_or_compile(b)).collect()
+    }
+
+    fn compile(&self, batch: i64) -> Result<PlannedArtifact> {
+        crate::ensure!(batch >= 1, "bucket batch must be >= 1, got {batch}");
+        let t0 = Instant::now();
+        let key = self.key(batch);
+        let g = crate::models::by_name(&self.model, batch).ok_or_else(|| {
+            crate::format_err!("plan cache: unknown model '{}'", self.model)
+        })?;
+        let total_in: i64 = g.inputs().iter().map(|&id| g.tensor(id).numel()).sum();
+        let total_out: i64 = g.outputs().iter().map(|&id| g.tensor(id).numel()).sum();
+        crate::ensure!(
+            total_in % batch == 0 && total_out % batch == 0,
+            "model '{}' does not scale with batch {batch} (in {total_in}, out {total_out})",
+            self.model
+        );
+        let accel = self.cfg.accel.clone();
+        let pm = PassManager {
+            opt: self.cfg.joint.then(|| OptStage::for_accel(accel.clone())),
+            tile: (!self.cfg.joint).then(|| TileStage::for_accel(accel.clone())),
+            alloc: Some(AllocStage::for_accel(accel.clone())),
+            verify: self.cfg.verify,
+            ..PassManager::default()
+        };
+        let rep = pm
+            .run(g)
+            .map_err(|e| crate::format_err!("compiling {}: {e}", key.describe()))?;
+        let decision = rep
+            .opt
+            .as_ref()
+            .map(|s| s.decision.clone())
+            .unwrap_or_else(|| DecisionVector::baseline().describe());
+        let program = rep.program;
+        let plan = rep.plan.expect("alloc stage always configured");
+        let cost = evaluate(&program, &plan, &accel);
+        // the service-time contract: the pipelined replay must agree
+        // with the prediction the serving layer hands out
+        let sim = simulate_pipelined(&program, &plan, &accel, None)
+            .map_err(|e| crate::format_err!("replaying {}: {e}", key.describe()))?;
+        crate::ensure!(
+            sim.seconds == cost.pipelined_seconds
+                && sim.offchip_total() == cost.offchip_total(),
+            "calibration broken for {}: simulated {}s/{}B vs predicted {}s/{}B",
+            key.describe(),
+            sim.seconds,
+            sim.offchip_total(),
+            cost.pipelined_seconds,
+            cost.offchip_total()
+        );
+        Ok(PlannedArtifact {
+            key,
+            program,
+            plan,
+            service_seconds: cost.pipelined_seconds,
+            cost,
+            decision,
+            batch,
+            in_len: (total_in / batch) as usize,
+            out_len: (total_out / batch) as usize,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let mut c = PlanCache::new(
+            "no-such-model",
+            PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true },
+        );
+        assert!(c.get_or_compile(1).is_err());
+        assert_eq!(c.misses(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn keys_distinguish_batch_accel_and_mode() {
+        let mk = |joint, accel| {
+            PlanCache::new("mlp", PlanCacheConfig { accel, joint, verify: true })
+        };
+        let a = mk(false, AccelConfig::tiny(64 * 1024));
+        let b = mk(true, AccelConfig::tiny(64 * 1024));
+        let c = mk(false, AccelConfig::tiny(128 * 1024));
+        assert_ne!(a.key(1), a.key(2));
+        assert_ne!(a.key(1), b.key(1));
+        assert_ne!(a.key(1), c.key(1));
+        assert_eq!(a.key(4), a.key(4));
+    }
+}

@@ -159,6 +159,65 @@ fn injected_failures_are_isolated() {
     srv.shutdown();
 }
 
+/// Conservation under multi-threaded load against a slow backend and a
+/// small queue: every submit either resolves (correctly) or is rejected
+/// at the door, accepted + rejected == attempted, and the queue is
+/// empty once the server drains.
+#[test]
+fn stress_conserves_every_request() {
+    const THREADS: u32 = 8;
+    const PER_THREAD: u32 = 150; // 1200 total
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64, // small: backpressure must engage
+    };
+    let mut be = EchoBackend::new(4, 8);
+    be.delay = Duration::from_micros(300); // slow enough to fill the queue
+    let srv = std::sync::Arc::new(Server::start(be, cfg));
+    let mut joins = vec![];
+    for t in 0..THREADS {
+        let srv = srv.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut oks = 0u64;
+            let mut rejects = 0u64;
+            for k in 0..PER_THREAD {
+                let v = (t * 10_000 + k) as f32;
+                match srv.submit(vec![v; 4]) {
+                    Ok(h) => {
+                        let out = h.wait().expect("accepted request must resolve");
+                        assert_eq!(out, vec![2.0 * v; 4], "response corrupted");
+                        oks += 1;
+                    }
+                    Err(e) => {
+                        assert!(e.to_string().contains("queue full"), "{e}");
+                        rejects += 1;
+                    }
+                }
+            }
+            (oks, rejects)
+        }));
+    }
+    let mut oks = 0u64;
+    let mut rejects = 0u64;
+    for j in joins {
+        let (o, r) = j.join().unwrap();
+        oks += o;
+        rejects += r;
+    }
+    assert_eq!(
+        oks + rejects,
+        u64::from(THREADS * PER_THREAD),
+        "requests lost or invented"
+    );
+    assert!(oks > 0, "nothing was ever served");
+    srv.shutdown();
+    assert_eq!(srv.queued(), 0, "queue slots leaked");
+    let snap = srv.metrics().snapshot();
+    assert_eq!(snap.requests, oks, "served != accepted");
+    assert_eq!(snap.errors, 0);
+}
+
 #[test]
 fn startup_failure_reported() {
     let cfg = ServerConfig::default();

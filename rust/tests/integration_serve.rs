@@ -1,0 +1,139 @@
+//! Integration: the production serving path — plan cache, planned
+//! backend, cost-aware bucketized batching, load simulation — on a
+//! small model so the whole path runs in tier-1 time.
+
+use polymem::accel::AccelConfig;
+use polymem::coordinator::{Backend, BucketCost, Server, ServerConfig};
+use polymem::serve::{run_load, Arrivals, LoadSimConfig, PlanCache, PlanCacheConfig, PlannedBackend};
+use std::time::Duration;
+
+fn tiny() -> AccelConfig {
+    AccelConfig::tiny(64 * 1024)
+}
+
+fn mlp_cache() -> PlanCache {
+    PlanCache::new(
+        "mlp",
+        PlanCacheConfig { accel: tiny(), joint: false, verify: true },
+    )
+}
+
+#[test]
+fn plan_cache_memoizes_and_buckets_scale() {
+    let mut cache = mlp_cache();
+    let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
+    assert_eq!(cache.misses(), 3);
+    assert_eq!(cache.hits(), 0);
+    assert_eq!(cache.len(), 3);
+
+    let again = cache.get_or_compile(2).unwrap();
+    assert_eq!(cache.hits(), 1, "second lookup must be a cache hit");
+    assert_eq!(again.batch, 2);
+
+    for a in &arts {
+        // per-request shapes agree across buckets (mlp: 784 -> 10)
+        assert_eq!(a.in_len, 784);
+        assert_eq!(a.out_len, 10);
+        assert!(a.service_seconds > 0.0, "b{}: zero service time", a.batch);
+        assert!(a.cost.offchip_total() > 0);
+        assert!(a.compile_seconds > 0.0);
+    }
+    // off-chip bytes grow with batch (activations scale) …
+    let o: Vec<i64> = arts.iter().map(|a| a.cost.offchip_total()).collect();
+    assert!(o[0] < o[1] && o[1] < o[2], "off-chip not increasing: {o:?}");
+    // … but sublinearly per request (weights amortize): b4 beats 4×b1
+    assert!(
+        o[2] < 4 * o[0],
+        "no amortization: batch-4 {} vs 4 × batch-1 {}",
+        o[2],
+        4 * o[0]
+    );
+}
+
+#[test]
+fn planned_backend_routes_to_smallest_fitting_bucket() {
+    let mut cache = mlp_cache();
+    let arts = cache.compile_buckets(&[4, 1, 2]).unwrap(); // any order in
+    let be = PlannedBackend::new(arts).unwrap();
+    assert_eq!(be.max_batch(), 4);
+    assert_eq!(be.bucket_for(1).batch, 1);
+    assert_eq!(be.bucket_for(2).batch, 2);
+    assert_eq!(be.bucket_for(3).batch, 4); // padded onto the 4-bucket
+    assert_eq!(be.bucket_for(4).batch, 4);
+    let costs = be.bucket_costs().expect("planned backends publish costs");
+    assert_eq!(costs.len(), 3);
+    assert!(costs.windows(2).all(|w| w[0].batch < w[1].batch));
+}
+
+#[test]
+fn planned_backend_serves_through_server() {
+    let mut cache = mlp_cache();
+    let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
+    let in_len = arts[0].in_len;
+    let out_len = arts[0].out_len;
+    // time_scale 0: model the bytes, skip the sleeps (test speed)
+    let be = PlannedBackend::new(arts).unwrap().with_time_scale(0.0);
+    let srv = Server::start(
+        be,
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+        },
+    );
+    let handles: Vec<_> = (0..32)
+        .map(|k| srv.submit(vec![k as f32; in_len]).unwrap())
+        .collect();
+    for (k, h) in handles.into_iter().enumerate() {
+        let out = h.wait().unwrap();
+        assert_eq!(out, vec![2.0 * k as f32; out_len], "request {k} misrouted");
+    }
+    let snap = srv.metrics().snapshot();
+    assert_eq!(snap.requests, 32);
+    assert_eq!(snap.errors, 0);
+    // the cost-aware flush path charged predicted traffic
+    assert!(snap.predicted_offchip_bytes > 0, "bucket accounting never engaged");
+    assert!(srv
+        .metrics_text()
+        .contains("polymem_predicted_offchip_bytes_total"));
+    srv.shutdown();
+    assert_eq!(srv.queued(), 0);
+}
+
+#[test]
+fn bucketized_serving_saves_bytes_on_planned_artifacts() {
+    // the acceptance shape on a tier-1-sized model: real compiled
+    // artifacts, equal offered load, strictly fewer predicted off-chip
+    // bytes per request than the fixed max-batch baseline
+    let mut cache = mlp_cache();
+    let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
+    let costs: Vec<BucketCost> = arts
+        .iter()
+        .map(|a| BucketCost {
+            batch: a.batch as usize,
+            offchip_bytes: a.cost.offchip_total(),
+            service_seconds: a.service_seconds,
+        })
+        .collect();
+    let fixed = vec![*costs.last().unwrap()];
+    let svc_max = fixed[0].service_seconds;
+    let low_rate = 0.25 * 4.0 / svc_max;
+    let cfg = LoadSimConfig {
+        arrivals: Arrivals::Poisson { rate_qps: low_rate, requests: 1500, seed: 5 },
+        max_wait: Duration::from_secs_f64(svc_max * 2.0),
+        queue_cap: 64,
+    };
+    let bucketized = run_load(&costs, &cfg, "bucketized");
+    let baseline = run_load(&fixed, &cfg, "fixed");
+    assert_eq!(bucketized.submitted, baseline.submitted);
+    assert!(
+        bucketized.bytes_per_request < baseline.bytes_per_request,
+        "bucketized {} >= fixed {}",
+        bucketized.bytes_per_request,
+        baseline.bytes_per_request
+    );
+    // conservation in both runs
+    for r in [&bucketized, &baseline] {
+        assert_eq!(r.completed + r.rejected, r.submitted, "{}: lost requests", r.label);
+    }
+}

@@ -52,7 +52,7 @@ fn batcher_never_exceeds_max_batch() {
                 b.push(t0);
                 pushed += 1;
             } else {
-                let n = b.take(t0);
+                let n = b.take(max_batch);
                 assert!(n <= max_batch);
                 taken += n;
             }
@@ -60,7 +60,7 @@ fn batcher_never_exceeds_max_batch() {
         }
         // drain
         loop {
-            let n = b.take(t0);
+            let n = b.take(max_batch);
             if n == 0 {
                 break;
             }
