@@ -54,6 +54,21 @@ ls -l target/BENCH_plan.json target/BENCH_tile.json target/BENCH_opt.json \
       target/BENCH_compile_phases.json target/BENCH_serving.json
 test -s target/BENCH_serving.json
 
+# Benchmark regression gate: the serving record is compared against the
+# committed baseline in BENCH_baseline/ with a per-metric tolerance.
+# Deterministic virtual-time metrics (qps, bytes/request, latency
+# quantiles of the load sims) are gated; wall-clock-noisy paths
+# (compile times, the live-server section) are skipped. On a fresh
+# checkout with no baseline yet, --seed-missing adopts the current run
+# (commit the generated file to tighten the gate from then on).
+echo "== bench-regress: BENCH_serving.json vs BENCH_baseline/ =="
+./target/release/polymem bench-regress \
+    --baseline BENCH_baseline/BENCH_serving.json \
+    --current target/BENCH_serving.json \
+    --tol 0.15 \
+    --skip compile_seconds,live_server \
+    --seed-missing
+
 # Telemetry smoke: the acceptance scenario end to end — optimize full
 # ResNet-50 under a cramped 2 MiB scratchpad, export the Chrome trace,
 # print the per-layer attribution table and the compile-phase profile.
@@ -61,6 +76,15 @@ echo "== telemetry smoke: simulate --opt --trace-out =="
 ./target/release/polymem simulate --model resnet50 --scratchpad-kib 2048 \
     --opt --profile --top-layers 8 --trace-out target/trace_resnet50_opt.json
 test -s target/trace_resnet50_opt.json
+
+# Serving-trace smoke: the observability path end to end — compile the
+# ResNet-50 serving buckets at the same cramped 2 MiB scratchpad, run a
+# traced load simulation over them, and export the request span chains
+# as Chrome trace-event JSON.
+echo "== serving-trace smoke: simulate --serve-trace-out =="
+./target/release/polymem simulate --model resnet50 --scratchpad-kib 2048 \
+    --serve-trace-out target/serve_trace_resnet50.json
+test -s target/serve_trace_resnet50.json
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

@@ -34,6 +34,7 @@ fn main() {
         max_batch: BATCH,
         max_wait: Duration::from_millis(2),
         queue_cap: 4096,
+        ..Default::default()
     };
     let artifact2 = artifact.clone();
     let srv = Server::start_with(

@@ -21,6 +21,7 @@ use polymem::accel::AccelConfig;
 use polymem::coordinator::{BucketCost, EchoBackend, Server, ServerConfig};
 use polymem::serve::{
     run_load, Arrivals, LoadReport, LoadSimConfig, PlanCache, PlanCacheConfig, PlannedBackend,
+    SloSpec,
 };
 use polymem::util::bench::{write_json_record, Suite};
 use polymem::util::json::Json;
@@ -63,6 +64,12 @@ fn print_load(r: &LoadReport) {
         r.mean_batch,
         r.rejected
     );
+    if let Some(slo) = &r.slo {
+        println!(
+            "    {:<26} SLO {}us@{:.0}%: attainment {:.4}, error-budget burn {:.2}x",
+            "", slo.objective_us, slo.target * 100.0, slo.attainment, slo.error_budget_burn
+        );
+    }
 }
 
 fn main() {
@@ -75,6 +82,7 @@ fn main() {
             max_batch,
             max_wait: Duration::from_micros(200),
             queue_cap: 1 << 16,
+            ..Default::default()
         };
         let srv = Server::start(EchoBackend::new(64, max_batch), cfg);
         let elapsed = drive(&srv, 4096, 64, 1);
@@ -131,10 +139,14 @@ fn main() {
     println!(
         "\nclosed-loop / Poisson load simulation (bucket-8 capacity ≈ {capacity8:.0} qps):"
     );
+    // score every run against a shared latency SLO: 4x the full-batch
+    // service time at 99% attainment (loose enough for the low-load
+    // runs, tight enough that saturation shows up as budget burn)
     let sim_cfg = LoadSimConfig {
         arrivals: Arrivals::Closed { clients: 12, requests: 4000 },
         max_wait: Duration::from_secs_f64(svc8 * 2.0),
         queue_cap: 64,
+        slo: Some(SloSpec { latency: Duration::from_secs_f64(svc8 * 4.0), target: 0.99 }),
     };
     let loads: Vec<(&str, Arrivals)> = vec![
         (
@@ -189,6 +201,7 @@ fn main() {
             max_batch: 8,
             max_wait: Duration::from_secs_f64(svc8),
             queue_cap: 4096,
+            ..Default::default()
         },
     );
     let elapsed = drive(&srv, 64, in_len, 3);
@@ -203,6 +216,16 @@ fn main() {
     assert!(
         snap.predicted_offchip_bytes > 0,
         "cost-aware flush path never engaged"
+    );
+    // the drift auditor must read zero for the planned backend: its
+    // replayed actuals are the same numbers the plan cache predicted
+    for (b, d) in &snap.drift {
+        assert_eq!(d.bytes_drift(), 0, "off-chip byte drift on bucket {b}");
+        assert_eq!(d.seconds_drift(), 0.0, "service-seconds drift on bucket {b}");
+    }
+    println!(
+        "  cost drift: 0 bytes / 0.0 s across {} audited bucket(s)",
+        snap.drift.len()
     );
     srv.shutdown();
 

@@ -4,6 +4,23 @@ use super::batcher::BucketCost;
 use crate::runtime::LoadedModel;
 use crate::util::error::Result;
 
+/// Measured actuals of one executed batch, reported by backends that
+/// can attribute their own memory traffic and service time (the
+/// plan-replay `serve::PlannedBackend`). The server's cost-drift
+/// auditor compares these against the bucket table's predictions per
+/// flush — for planned backends the two must agree byte- and
+/// bit-exactly (the plan cache's service-time contract, made
+/// observable).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchActuals {
+    /// The bucket (compiled batch size) that actually executed.
+    pub bucket_batch: usize,
+    /// Off-chip DRAM bytes of the execution, from the pipelined replay.
+    pub offchip_bytes: i64,
+    /// Service seconds of the execution, from the pipelined replay.
+    pub service_seconds: f64,
+}
+
 /// Executes a batch of same-shaped requests. The coordinator owns
 /// exactly one backend per worker thread. Backends need not be `Send`
 /// (PJRT executables are not): [`crate::coordinator::Server::start`]
@@ -27,6 +44,15 @@ pub trait Backend: 'static {
     /// bytes per request. The default `None` keeps the classic fixed
     /// `max_batch` flush policy.
     fn bucket_costs(&self) -> Option<Vec<BucketCost>> {
+        None
+    }
+
+    /// Measured actuals of the most recent successful [`Self::infer`]
+    /// call, for backends that can attribute them (plan-replay
+    /// backends). The server feeds these to the per-bucket cost-drift
+    /// auditor after every batch; the default `None` leaves the
+    /// auditor silent.
+    fn last_batch_actuals(&self) -> Option<BatchActuals> {
         None
     }
 }

@@ -13,10 +13,14 @@
 //!   artifacts) and picks the bucket minimizing amortized off-chip
 //!   bytes per served request.
 //!
-//! The batcher tracks every request's enqueue timestamp in a
-//! `VecDeque`, so a partial flush leaves survivors with their true
-//! arrival times: the deadline for the next flush is still measured
-//! from when they actually arrived, never restarted.
+//! The batcher tracks every request's enqueue timestamp **and span
+//! id** in a `VecDeque`, so a partial flush leaves survivors with
+//! their true arrival times (the deadline for the next flush is still
+//! measured from when they actually arrived, never restarted) and
+//! every flush reports exactly which requests it served — the span ids
+//! [`Batcher::take`] returns are what the server's flight recorder
+//! stitches into per-request chains, and the identity "ids taken ==
+//! requests executed" is asserted on every batch.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -96,12 +100,14 @@ pub fn choose_bucket(pending: usize, costs: &[BucketCost]) -> Option<(usize, Buc
     best.map(|(take, c, _)| (take, c))
 }
 
-/// Accumulates request timestamps and decides when to flush.
+/// Accumulates request timestamps + span ids and decides when to
+/// flush.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    /// Enqueue timestamp of every queued request, in arrival order.
-    queue: VecDeque<Instant>,
+    /// `(enqueue time, span id)` of every queued request, in arrival
+    /// order.
+    queue: VecDeque<(Instant, u64)>,
 }
 
 impl Batcher {
@@ -120,17 +126,17 @@ impl Batcher {
 
     /// Enqueue time of the oldest pending request.
     pub fn oldest(&self) -> Option<Instant> {
-        self.queue.front().copied()
+        self.queue.front().map(|&(t, _)| t)
     }
 
-    /// Record an enqueued request.
-    pub fn push(&mut self, now: Instant) {
-        self.queue.push_back(now);
+    /// Record an enqueued request under its tracing span id.
+    pub fn push(&mut self, now: Instant, span: u64) {
+        self.queue.push_back((now, span));
     }
 
     /// Should the worker flush?
     pub fn poll(&self, now: Instant) -> Flush {
-        let Some(&front) = self.queue.front() else {
+        let Some(&(front, _)) = self.queue.front() else {
             return Flush::Empty;
         };
         if self.queue.len() >= self.policy.max_batch {
@@ -146,17 +152,17 @@ impl Batcher {
     }
 
     /// Remove the `n` oldest requests from the accounting (capped at
-    /// what is pending); returns the count taken. Survivors keep their
-    /// original enqueue times, so their deadline still dates from when
-    /// they actually arrived. Caller drains the actual queue.
-    pub fn take(&mut self, n: usize) -> usize {
+    /// what is pending); returns their span ids in arrival order.
+    /// Survivors keep their original enqueue times, so their deadline
+    /// still dates from when they actually arrived. Caller drains the
+    /// actual queue and must serve exactly these requests.
+    pub fn take(&mut self, n: usize) -> Vec<u64> {
         let k = n.min(self.queue.len());
-        self.queue.drain(..k);
-        k
+        self.queue.drain(..k).map(|(_, span)| span).collect()
     }
 
     /// Fixed-policy flush: take up to `max_batch`.
-    pub fn take_max(&mut self) -> usize {
+    pub fn take_max(&mut self) -> Vec<u64> {
         self.take(self.policy.max_batch)
     }
 }
@@ -179,12 +185,13 @@ mod tests {
     fn flushes_on_full_batch() {
         let mut b = Batcher::new(pol(3, 1000));
         let t = Instant::now();
-        b.push(t);
-        b.push(t);
+        b.push(t, 1);
+        b.push(t, 2);
         assert!(matches!(b.poll(t), Flush::Wait(_)));
-        b.push(t);
+        b.push(t, 3);
         assert_eq!(b.poll(t), Flush::Now);
-        assert_eq!(b.take_max(), 3);
+        // the flush reports exactly the span ids it served, in order
+        assert_eq!(b.take_max(), vec![1, 2, 3]);
         assert_eq!(b.poll(t), Flush::Empty);
     }
 
@@ -192,24 +199,24 @@ mod tests {
     fn flushes_on_deadline() {
         let mut b = Batcher::new(pol(100, 10));
         let t0 = Instant::now();
-        b.push(t0);
+        b.push(t0, 7);
         match b.poll(t0) {
             Flush::Wait(d) => assert!(d <= Duration::from_millis(10)),
             other => panic!("expected Wait, got {other:?}"),
         }
         let later = t0 + Duration::from_millis(11);
         assert_eq!(b.poll(later), Flush::Now);
-        assert_eq!(b.take_max(), 1);
+        assert_eq!(b.take_max(), vec![7]);
     }
 
     #[test]
     fn take_caps_at_max_batch() {
         let mut b = Batcher::new(pol(4, 1));
         let t = Instant::now();
-        for _ in 0..10 {
-            b.push(t);
+        for k in 0..10 {
+            b.push(t, k);
         }
-        assert_eq!(b.take_max(), 4);
+        assert_eq!(b.take_max(), vec![0, 1, 2, 3]);
         assert_eq!(b.pending(), 6);
         // leftovers keep their true enqueue time: still overdue (or
         // immediately full again) — the wait clock does NOT restart
@@ -223,10 +230,10 @@ mod tests {
         // surviving requests, letting them wait up to 2× max_wait
         let mut b = Batcher::new(pol(4, 10));
         let t0 = Instant::now();
-        for _ in 0..6 {
-            b.push(t0);
+        for k in 0..6 {
+            b.push(t0, k);
         }
-        assert_eq!(b.take(4), 4);
+        assert_eq!(b.take(4).len(), 4);
         assert_eq!(b.pending(), 2);
         // at t0+4ms the survivors have 6ms left, not a fresh 10ms
         match b.poll(t0 + Duration::from_millis(4)) {
@@ -245,9 +252,9 @@ mod tests {
         let mut b = Batcher::new(pol(8, 10));
         let t0 = Instant::now();
         let t1 = t0 + Duration::from_millis(5);
-        b.push(t0);
-        b.push(t1);
-        assert_eq!(b.take(1), 1); // serves the t0 request
+        b.push(t0, 10);
+        b.push(t1, 11);
+        assert_eq!(b.take(1), vec![10]); // serves the t0 request
         assert_eq!(b.oldest(), Some(t1));
         // the t1 request's deadline is t1+10ms, not t0+10ms
         assert!(matches!(b.poll(t0 + Duration::from_millis(11)), Flush::Wait(_)));
@@ -258,7 +265,7 @@ mod tests {
     fn wait_decreases_over_time() {
         let mut b = Batcher::new(pol(10, 100));
         let t0 = Instant::now();
-        b.push(t0);
+        b.push(t0, 0);
         let Flush::Wait(d1) = b.poll(t0 + Duration::from_millis(10)) else {
             panic!()
         };

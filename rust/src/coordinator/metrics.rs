@@ -8,9 +8,42 @@
 //! means — exact whenever the observed values land in distinct
 //! buckets, within a factor of 2 otherwise.
 
-use crate::obs::LogHistogram;
+use crate::obs::{LogHistogram, TextEncoder};
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Per-bucket predicted-vs-actual accounting for the cost-drift
+/// auditor: what the plan cache's bucket table promised for every
+/// flush executed at this bucket, against what the backend measured.
+/// For `serve::PlannedBackend` both drifts are exactly zero (the
+/// service-time contract); any other value means a backend diverged
+/// from its published cost table.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BucketDrift {
+    /// Batches executed at this bucket.
+    pub batches: u64,
+    /// Sum of the bucket table's predicted off-chip bytes.
+    pub predicted_bytes: i64,
+    /// Sum of the backend-measured off-chip bytes.
+    pub actual_bytes: i64,
+    /// Sum of the bucket table's predicted service seconds.
+    pub predicted_seconds: f64,
+    /// Sum of the backend-measured service seconds.
+    pub actual_seconds: f64,
+}
+
+impl BucketDrift {
+    /// Actual minus predicted off-chip bytes (0 = byte-exact).
+    pub fn bytes_drift(&self) -> i64 {
+        self.actual_bytes - self.predicted_bytes
+    }
+
+    /// Actual minus predicted service seconds (0.0 = bit-exact).
+    pub fn seconds_drift(&self) -> f64 {
+        self.actual_seconds - self.predicted_seconds
+    }
+}
 
 #[derive(Debug, Default, Clone)]
 struct Inner {
@@ -23,6 +56,8 @@ struct Inner {
     /// batch (cost-aware bucketized flushes only; 0 for fixed-policy
     /// backends with no bucket table).
     predicted_offchip_bytes: i64,
+    /// Cost-drift audit, keyed by bucket batch size.
+    drift: BTreeMap<usize, BucketDrift>,
 }
 
 /// Thread-safe metrics sink.
@@ -46,6 +81,9 @@ pub struct Snapshot {
     pub predicted_offchip_bytes: i64,
     /// The full request-latency distribution (microseconds).
     pub latency: LogHistogram,
+    /// Per-bucket cost-drift audit (empty until a backend reports
+    /// actuals).
+    pub drift: BTreeMap<usize, BucketDrift>,
 }
 
 impl Metrics {
@@ -75,6 +113,25 @@ impl Metrics {
         g.predicted_offchip_bytes += bytes.max(0);
     }
 
+    /// Audit one executed batch: the bucket table's prediction against
+    /// what the backend measured.
+    pub fn record_drift(
+        &self,
+        bucket: usize,
+        predicted_bytes: i64,
+        actual_bytes: i64,
+        predicted_seconds: f64,
+        actual_seconds: f64,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let d = g.drift.entry(bucket).or_default();
+        d.batches += 1;
+        d.predicted_bytes += predicted_bytes;
+        d.actual_bytes += actual_bytes;
+        d.predicted_seconds += predicted_seconds;
+        d.actual_seconds += actual_seconds;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let lat = &g.latency_us;
@@ -98,41 +155,47 @@ impl Metrics {
             mean_batch,
             predicted_offchip_bytes: g.predicted_offchip_bytes,
             latency: lat.clone(),
+            drift: g.drift.clone(),
         }
     }
 }
 
 impl Snapshot {
     /// Prometheus-style plain-text rendering (the coordinator's
-    /// `metrics_text` endpoint).
+    /// `metrics_text` endpoint), framed by the shared
+    /// [`TextEncoder`]. Metric-naming convention: `polymem_*_total`
+    /// for monotone counters, `polymem_*_us` + `quantile` label for
+    /// latency summaries, `polymem_cost_drift_*` + `bucket` label for
+    /// the drift gauges (see DESIGN.md §Observability).
     pub fn render_text(&self) -> String {
-        let mut s = String::new();
-        s.push_str(&format!("polymem_requests_total {}\n", self.requests));
-        s.push_str(&format!("polymem_batches_total {}\n", self.batches));
-        s.push_str(&format!("polymem_errors_total {}\n", self.errors));
-        s.push_str(&format!("polymem_batch_size_mean {:.3}\n", self.mean_batch));
-        s.push_str(&format!(
-            "polymem_predicted_offchip_bytes_total {}\n",
-            self.predicted_offchip_bytes
-        ));
-        s.push_str(&format!(
-            "polymem_request_latency_us_count {}\n",
-            self.latency.count()
-        ));
-        s.push_str(&format!(
-            "polymem_request_latency_us_sum {}\n",
-            self.latency.sum()
-        ));
+        let mut enc = TextEncoder::new();
+        enc.metric("polymem_requests_total", self.requests);
+        enc.metric("polymem_batches_total", self.batches);
+        enc.metric("polymem_errors_total", self.errors);
+        enc.metric("polymem_batch_size_mean", format_args!("{:.3}", self.mean_batch));
+        enc.metric(
+            "polymem_predicted_offchip_bytes_total",
+            self.predicted_offchip_bytes,
+        );
+        enc.metric("polymem_request_latency_us_count", self.latency.count());
+        enc.metric("polymem_request_latency_us_sum", self.latency.sum());
         for (q, v) in [
             (0.50, self.p50_latency),
             (0.99, self.p99_latency),
         ] {
-            s.push_str(&format!(
-                "polymem_request_latency_us{{quantile=\"{q}\"}} {}\n",
-                v.as_micros()
-            ));
+            enc.metric_with("polymem_request_latency_us", "quantile", q, v.as_micros());
         }
-        s
+        for (bucket, d) in &self.drift {
+            enc.metric_with("polymem_bucket_batches_total", "bucket", bucket, d.batches);
+            enc.metric_with("polymem_cost_drift_bytes", "bucket", bucket, d.bytes_drift());
+            enc.metric_with(
+                "polymem_cost_drift_seconds",
+                "bucket",
+                bucket,
+                d.seconds_drift(),
+            );
+        }
+        enc.finish()
     }
 }
 
@@ -175,6 +238,29 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.predicted_offchip_bytes, 1500);
         assert!(s.render_text().contains("polymem_predicted_offchip_bytes_total 1500"));
+    }
+
+    #[test]
+    fn drift_audit_accumulates_per_bucket() {
+        let m = Metrics::new();
+        // bucket 4: prediction held exactly (the planned-backend case)
+        m.record_drift(4, 1000, 1000, 0.25, 0.25);
+        m.record_drift(4, 1000, 1000, 0.25, 0.25);
+        // bucket 8: a backend that diverged from its published table
+        m.record_drift(8, 2000, 2600, 0.5, 0.75);
+        let s = m.snapshot();
+        let d4 = s.drift.get(&4).unwrap();
+        assert_eq!(d4.batches, 2);
+        assert_eq!(d4.bytes_drift(), 0);
+        assert_eq!(d4.seconds_drift(), 0.0);
+        let d8 = s.drift.get(&8).unwrap();
+        assert_eq!(d8.bytes_drift(), 600);
+        assert!((d8.seconds_drift() - 0.25).abs() < 1e-12);
+        let text = s.render_text();
+        assert!(text.contains("polymem_bucket_batches_total{bucket=\"4\"} 2"), "{text}");
+        assert!(text.contains("polymem_cost_drift_bytes{bucket=\"4\"} 0"), "{text}");
+        assert!(text.contains("polymem_cost_drift_seconds{bucket=\"4\"} 0"), "{text}");
+        assert!(text.contains("polymem_cost_drift_bytes{bucket=\"8\"} 600"), "{text}");
     }
 
     #[test]

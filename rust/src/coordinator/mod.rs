@@ -21,7 +21,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use backend::{Backend, EchoBackend, PjrtBackend};
+pub use backend::{Backend, BatchActuals, EchoBackend, PjrtBackend};
 pub use batcher::{choose_bucket, BatchPolicy, Batcher, BucketCost};
-pub use metrics::Metrics;
+pub use metrics::{BucketDrift, Metrics};
 pub use server::{Server, ServerConfig};

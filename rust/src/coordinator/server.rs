@@ -24,6 +24,8 @@
 use super::backend::Backend;
 use super::batcher::{choose_bucket, BatchPolicy, Batcher, BucketCost, Flush};
 use super::metrics::Metrics;
+use crate::obs::span::{FlightRecorder, SpanPhase, DEFAULT_CAPACITY};
+use crate::obs::TextEncoder;
 use crate::util::error::Result;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -37,6 +39,10 @@ pub struct ServerConfig {
     /// Bound on queued requests (backpressure): submits fail fast
     /// beyond it.
     pub queue_cap: usize,
+    /// Event capacity of the always-on span flight recorder (the
+    /// oldest events are overwritten beyond it, so memory stays
+    /// bounded no matter how long the server runs).
+    pub span_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +51,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
+            span_cap: DEFAULT_CAPACITY,
         }
     }
 }
@@ -52,6 +59,12 @@ impl Default for ServerConfig {
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
+    /// Tracing span id (allocated at submit; threaded through the
+    /// batcher so every flush can prove it served exactly these
+    /// requests).
+    span: u64,
+    /// Recorder-clock acceptance time (start of the Enqueue phase).
+    enqueued_ns: u64,
     respond: Sender<Result<Vec<f32>>>,
 }
 
@@ -88,6 +101,7 @@ pub struct Server {
     queued: Arc<Mutex<usize>>,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
+    recorder: Arc<FlightRecorder>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     input_len: usize,
 }
@@ -105,11 +119,13 @@ impl Server {
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<usize>>();
         let metrics = Arc::new(Metrics::new());
+        let recorder = Arc::new(FlightRecorder::new(cfg.span_cap));
         let queued = Arc::new(Mutex::new(0usize));
         let worker = std::thread::Builder::new()
             .name("polymem-serve".into())
             .spawn({
                 let metrics = metrics.clone();
+                let recorder = recorder.clone();
                 let queued = queued.clone();
                 move || {
                     let backend = match factory() {
@@ -122,7 +138,7 @@ impl Server {
                             return;
                         }
                     };
-                    worker_loop(backend, cfg, rx, metrics, queued)
+                    worker_loop(backend, cfg, rx, metrics, queued, recorder)
                 }
             })
             .expect("spawning server worker");
@@ -134,6 +150,7 @@ impl Server {
             queued,
             cfg,
             metrics,
+            recorder,
             worker: Mutex::new(Some(worker)),
             input_len,
         })
@@ -148,6 +165,7 @@ impl Server {
     /// (backpressure), the input length is wrong, or the server has
     /// stopped. A rejected submit never consumes a backpressure slot.
     pub fn submit(&self, input: Vec<f32>) -> Result<ResponseHandle> {
+        let t_submit = self.recorder.now_ns();
         crate::ensure!(
             input.len() == self.input_len,
             "input length {} != expected {}",
@@ -160,7 +178,18 @@ impl Server {
             *q += 1;
         }
         let (rtx, rrx) = channel();
-        let req = Request { input, enqueued: Instant::now(), respond: rtx };
+        let span = self.recorder.next_span_id();
+        // acceptance timestamp captured *before* the send: every
+        // worker-side event of this span is then guaranteed to carry a
+        // later timestamp, keeping the chain monotone
+        let t_accept = self.recorder.now_ns();
+        let req = Request {
+            input,
+            enqueued: Instant::now(),
+            span,
+            enqueued_ns: t_accept,
+            respond: rtx,
+        };
         // hold the sender slot across the send: a successful send is
         // then guaranteed to precede the shutdown disconnect, so every
         // accepted request is drained and answered
@@ -171,11 +200,14 @@ impl Server {
         if !sent {
             // release the slot taken above — the request never reached
             // the worker (this used to leak, shrinking queue_cap
-            // permanently)
+            // permanently). No span events were recorded for it, so
+            // rejected submits leave no orphan chains.
             let mut q = self.queued.lock().unwrap();
             *q = q.saturating_sub(1);
             crate::bail!("server stopped");
         }
+        self.recorder
+            .record_phase(span, SpanPhase::Submit, t_submit, t_accept, 0);
         Ok(ResponseHandle { rx: rrx })
     }
 
@@ -189,10 +221,33 @@ impl Server {
         &self.metrics
     }
 
+    /// The span flight recorder (request phases of recent traffic).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
     /// Prometheus-style plain-text rendering of the current metrics
-    /// (what a scrape endpoint would serve).
+    /// (what a scrape endpoint would serve): traffic counters, latency
+    /// quantiles, per-bucket cost-drift gauges, and the flight
+    /// recorder's own accounting.
     pub fn metrics_text(&self) -> String {
-        self.metrics.snapshot().render_text()
+        let mut text = self.metrics.snapshot().render_text();
+        let mut enc = TextEncoder::new();
+        enc.metric("polymem_spans_started_total", self.recorder.spans_started());
+        enc.metric("polymem_span_events", self.recorder.len());
+        enc.metric(
+            "polymem_span_events_overwritten_total",
+            self.recorder.overwritten(),
+        );
+        text.push_str(&enc.finish());
+        text
+    }
+
+    /// Chrome trace-event JSON of the retained request spans — load in
+    /// `chrome://tracing` or Perfetto. One lane per concurrent
+    /// request, plus a `bucket` counter track of flush decisions.
+    pub fn trace_chrome_json(&self) -> String {
+        self.recorder.to_chrome().to_json().to_string_pretty()
     }
 
     /// Stop accepting requests, drain everything already accepted, and
@@ -217,6 +272,7 @@ fn worker_loop<B: Backend>(
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
     queued: Arc<Mutex<usize>>,
+    recorder: Arc<FlightRecorder>,
 ) {
     let max_batch = cfg.max_batch.min(backend.max_batch());
     let policy = BatchPolicy::new(max_batch.max(1), cfg.max_wait);
@@ -238,7 +294,7 @@ fn worker_loop<B: Backend>(
         loop {
             match rx.try_recv() {
                 Ok(req) => {
-                    batcher.push(req.enqueued);
+                    batcher.push(req.enqueued, req.span);
                     pending.push(req);
                 }
                 Err(TryRecvError::Empty) => break,
@@ -253,6 +309,7 @@ fn worker_loop<B: Backend>(
                         &metrics,
                         &queued,
                         costs.as_deref(),
+                        &recorder,
                     );
                     return;
                 }
@@ -260,12 +317,20 @@ fn worker_loop<B: Backend>(
         }
         match batcher.poll(Instant::now()) {
             Flush::Now => {
-                let n = take_flush(&mut batcher, costs.as_deref(), &metrics);
-                execute_batch(&mut backend, &mut pending, n, &metrics, &queued);
+                let (spans, chosen) = take_flush(&mut batcher, costs.as_deref(), &metrics);
+                execute_batch(
+                    &mut backend,
+                    &mut pending,
+                    &spans,
+                    chosen,
+                    &metrics,
+                    &queued,
+                    &recorder,
+                );
             }
             Flush::Wait(d) => match rx.recv_timeout(d) {
                 Ok(req) => {
-                    batcher.push(req.enqueued);
+                    batcher.push(req.enqueued, req.span);
                     pending.push(req);
                 }
                 Err(RecvTimeoutError::Timeout) => {}
@@ -277,13 +342,14 @@ fn worker_loop<B: Backend>(
                         &metrics,
                         &queued,
                         costs.as_deref(),
+                        &recorder,
                     );
                     return;
                 }
             },
             Flush::Empty => match rx.recv() {
                 Ok(req) => {
-                    batcher.push(req.enqueued);
+                    batcher.push(req.enqueued, req.span);
                     pending.push(req);
                 }
                 // disconnected with nothing pending: clean exit
@@ -295,17 +361,24 @@ fn worker_loop<B: Backend>(
 
 /// Decide this flush's size: cost-aware bucket choice when a bucket
 /// table is available (recording the bucket's predicted off-chip
-/// traffic), the fixed `max_batch` policy otherwise.
-fn take_flush(batcher: &mut Batcher, costs: Option<&[BucketCost]>, metrics: &Metrics) -> usize {
+/// traffic), the fixed `max_batch` policy otherwise. Returns the span
+/// ids taken plus the chosen bucket's predicted cost (None under the
+/// fixed policy), which the drift auditor compares against the
+/// backend's measured actuals.
+fn take_flush(
+    batcher: &mut Batcher,
+    costs: Option<&[BucketCost]>,
+    metrics: &Metrics,
+) -> (Vec<u64>, Option<BucketCost>) {
     match costs {
         Some(table) => match choose_bucket(batcher.pending(), table) {
             Some((take, bucket)) => {
                 metrics.record_offchip(bucket.offchip_bytes);
-                batcher.take(take)
+                (batcher.take(take), Some(bucket))
             }
-            None => batcher.take_max(),
+            None => (batcher.take_max(), None),
         },
-        None => batcher.take_max(),
+        None => (batcher.take_max(), None),
     }
 }
 
@@ -316,27 +389,42 @@ fn flush_all<B: Backend>(
     metrics: &Metrics,
     queued: &Mutex<usize>,
     costs: Option<&[BucketCost]>,
+    recorder: &FlightRecorder,
 ) {
     while !pending.is_empty() {
-        let n = take_flush(batcher, costs, metrics);
-        execute_batch(backend, pending, n, metrics, queued);
+        let (spans, chosen) = take_flush(batcher, costs, metrics);
+        execute_batch(backend, pending, &spans, chosen, metrics, queued, recorder);
     }
 }
 
 fn execute_batch<B: Backend>(
     backend: &mut B,
     pending: &mut Vec<Request>,
-    n: usize,
+    spans: &[u64],
+    chosen: Option<BucketCost>,
     metrics: &Metrics,
     queued: &Mutex<usize>,
+    recorder: &FlightRecorder,
 ) {
+    let n = spans.len();
     if n == 0 {
         return;
     }
     let batch: Vec<Request> = pending.drain(..n).collect();
+    // conservation between the batcher's accounting and the request
+    // queue: a flush serves exactly the requests whose ids it took
+    for (r, &s) in batch.iter().zip(spans) {
+        assert_eq!(r.span, s, "batcher/queue span mismatch: flush would serve the wrong request");
+    }
     {
         let mut q = queued.lock().unwrap();
         *q = q.saturating_sub(n);
+    }
+    let t_choice = recorder.now_ns();
+    let bucket_value = chosen.map(|c| c.batch as i64).unwrap_or(n as i64);
+    for r in &batch {
+        recorder.record_phase(r.span, SpanPhase::Enqueue, r.enqueued_ns, t_choice, 0);
+        recorder.record_phase(r.span, SpanPhase::BucketChoice, t_choice, t_choice, bucket_value);
     }
     let in_len = backend.input_len();
     let out_len = backend.output_len();
@@ -344,20 +432,45 @@ fn execute_batch<B: Backend>(
     for r in &batch {
         packed.extend_from_slice(&r.input);
     }
+    let t_exec = recorder.now_ns();
+    for r in &batch {
+        recorder.record_phase(r.span, SpanPhase::Flush, t_choice, t_exec, n as i64);
+    }
     match backend.infer(&packed, n) {
         Ok(out) => {
+            let t_done = recorder.now_ns();
+            for r in &batch {
+                recorder.record_phase(r.span, SpanPhase::Replay, t_exec, t_done, n as i64);
+            }
+            // cost-drift audit: the bucket table's prediction for this
+            // flush against what the backend measured
+            if let (Some(pred), Some(act)) = (chosen, backend.last_batch_actuals()) {
+                metrics.record_drift(
+                    pred.batch,
+                    pred.offchip_bytes,
+                    act.offchip_bytes,
+                    pred.service_seconds,
+                    act.service_seconds,
+                );
+            }
             let now = Instant::now();
             let latencies: Vec<Duration> =
                 batch.iter().map(|r| now.duration_since(r.enqueued)).collect();
             metrics.record_batch(n, &latencies);
             for (k, r) in batch.into_iter().enumerate() {
                 let slice = out[k * out_len..(k + 1) * out_len].to_vec();
+                // recorded before the send: once the caller unblocks,
+                // its full chain is already in the recorder
+                recorder.record_phase(r.span, SpanPhase::Respond, t_done, recorder.now_ns(), 0);
                 let _ = r.respond.send(Ok(slice));
             }
         }
         Err(e) => {
+            let t_done = recorder.now_ns();
             metrics.record_error(n);
             for r in batch {
+                recorder.record_phase(r.span, SpanPhase::Replay, t_exec, t_done, n as i64);
+                recorder.record_phase(r.span, SpanPhase::Respond, t_done, recorder.now_ns(), 0);
                 let _ = r.respond.send(Err(crate::format_err!("inference failed: {e}")));
             }
         }
@@ -385,6 +498,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(20),
             queue_cap: 1024,
+            ..Default::default()
         };
         let mut be = EchoBackend::new(2, 8);
         be.delay = Duration::from_millis(2); // slow enough to queue up
@@ -413,6 +527,58 @@ mod tests {
     }
 
     #[test]
+    fn span_chains_complete_per_request() {
+        let srv = Server::start(EchoBackend::new(2, 4), ServerConfig::default());
+        let hs: Vec<_> =
+            (0..10).map(|k| srv.submit(vec![k as f32, 0.0]).unwrap()).collect();
+        for h in hs {
+            h.wait().unwrap();
+        }
+        srv.shutdown();
+        assert_eq!(srv.recorder().spans_started(), 10);
+        let chains = srv.recorder().chains();
+        assert_eq!(chains.len(), 10, "one chain per accepted request");
+        for (span, c) in &chains {
+            assert!(c.is_complete(), "span {span} incomplete: {c:?}");
+        }
+        let text = srv.metrics_text();
+        assert!(text.contains("polymem_spans_started_total 10"), "{text}");
+        // chrome export parses and every E has a preceding B
+        let j = crate::util::json::parse(&srv.trace_chrome_json()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        let mut depth = 0i64;
+        for e in evs {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => depth += 1,
+                "E" => {
+                    depth -= 1;
+                    assert!(depth >= 0, "E before matching B");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced trace");
+    }
+
+    #[test]
+    fn bounded_recorder_never_perturbs_responses() {
+        // a recorder far smaller than the traffic must overwrite
+        // silently — every response still correct, no chain corruption
+        // visible to callers
+        let cfg = ServerConfig { span_cap: 8, ..Default::default() };
+        let srv = Server::start(EchoBackend::new(1, 4), cfg);
+        let hs: Vec<_> = (0..50).map(|k| srv.submit(vec![k as f32]).unwrap()).collect();
+        for (k, h) in hs.into_iter().enumerate() {
+            assert_eq!(h.wait().unwrap(), vec![2.0 * k as f32]);
+        }
+        srv.shutdown();
+        assert!(srv.recorder().len() <= 8);
+        assert!(srv.recorder().overwritten() > 0, "tiny ring never wrapped");
+        assert_eq!(srv.metrics().snapshot().requests, 50);
+    }
+
+    #[test]
     fn wrong_input_len_rejected() {
         let srv = Server::start(EchoBackend::new(3, 8), ServerConfig::default());
         assert!(srv.submit(vec![1.0]).is_err());
@@ -435,6 +601,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_millis(1),
             queue_cap: 4,
+            ..Default::default()
         };
         let mut be = EchoBackend::new(1, 1);
         be.delay = Duration::from_millis(50);
@@ -467,6 +634,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_millis(1),
             queue_cap: 2,
+            ..Default::default()
         };
         let srv = Server::start(EchoBackend::new(1, 1), cfg);
         srv.shutdown();
@@ -489,6 +657,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(50),
             queue_cap: 1024,
+            ..Default::default()
         };
         let mut be = EchoBackend::new(1, 4);
         be.delay = Duration::from_millis(1);
@@ -516,6 +685,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_micros(200),
                 queue_cap: 256,
+                ..Default::default()
             };
             let srv = std::sync::Arc::new(Server::start(be, cfg));
             let submitter = std::thread::spawn({

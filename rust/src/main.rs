@@ -6,7 +6,9 @@
 //!   traffic report (optionally JSON);
 //! * `e1` / `e2` — regenerate the paper's two experiments as tables;
 //! * `serve`    — load an AOT artifact and run the batching server over
-//!   a synthetic request stream, printing latency/throughput.
+//!   a synthetic request stream, printing latency/throughput;
+//! * `bench-regress` — gate a fresh benchmark JSON record against a
+//!   committed baseline with per-metric tolerances.
 
 use polymem::accel::{simulate, AccelConfig};
 use polymem::coordinator::{PjrtBackend, Server, ServerConfig};
@@ -126,11 +128,91 @@ fn cmd_compile(p: &Parsed) -> Result<(), String> {
     Ok(())
 }
 
+/// `simulate --serve-trace-out`: compile the model's serving buckets,
+/// run a traced virtual-time load simulation over them, and write the
+/// request span chains as Chrome trace-event JSON.
+fn cmd_serve_trace(p: &Parsed, cfg: &AccelConfig) -> Result<(), String> {
+    use polymem::coordinator::BucketCost;
+    use polymem::obs::FlightRecorder;
+    use polymem::serve::{
+        run_load_traced, Arrivals, LoadSimConfig, PlanCache, PlanCacheConfig, SloSpec,
+    };
+
+    let model = p.get("model");
+    let buckets: Vec<i64> = p
+        .get("serve-buckets")
+        .split(',')
+        .map(|s| s.trim().parse::<i64>().map_err(|_| format!("bad --serve-buckets entry '{s}'")))
+        .collect::<Result<_, _>>()?;
+    let requests = p.get_usize("serve-requests")?;
+    // staged-greedy compilation keeps the smoke path fast; the joint
+    // search's artifacts trace identically (bench_serving covers them)
+    let mut cache = PlanCache::new(
+        model,
+        PlanCacheConfig { accel: cfg.clone(), joint: false, verify: false },
+    );
+    let arts = cache.compile_buckets(&buckets).map_err(|e| e.to_string())?;
+    let costs: Vec<BucketCost> = arts
+        .iter()
+        .map(|a| BucketCost {
+            batch: a.batch as usize,
+            offchip_bytes: a.cost.offchip_total(),
+            service_seconds: a.service_seconds,
+        })
+        .collect();
+    let svc_max = costs.iter().map(|c| c.service_seconds).fold(0.0f64, f64::max);
+
+    let recorder = FlightRecorder::new((requests * 8).max(1024));
+    let sim_cfg = LoadSimConfig {
+        arrivals: Arrivals::Closed { clients: 8, requests },
+        max_wait: Duration::from_secs_f64(svc_max * 2.0),
+        queue_cap: 256,
+        slo: Some(SloSpec {
+            latency: Duration::from_secs_f64(svc_max * 8.0),
+            target: 0.99,
+        }),
+    };
+    let rep = run_load_traced(&costs, &sim_cfg, &format!("{model}/serve-trace"), Some(&recorder));
+    println!(
+        "serve trace: {model} on {} — {} requests, {:.0} qps, p50 {:?} p99 {:?}, \
+         {:.2} KiB/req, mean batch {:.2}",
+        cfg.name,
+        rep.completed,
+        rep.qps,
+        rep.p50(),
+        rep.p99(),
+        rep.bytes_per_request / 1024.0,
+        rep.mean_batch
+    );
+    if let Some(slo) = &rep.slo {
+        println!(
+            "  SLO {}us@{:.0}%: attainment {:.4}, error-budget burn {:.2}x",
+            slo.objective_us,
+            slo.target * 100.0,
+            slo.attainment,
+            slo.error_budget_burn
+        );
+    }
+    let path = p.get("serve-trace-out");
+    let trace = recorder.to_chrome();
+    let n = trace.len();
+    std::fs::write(path, trace.to_json().to_string_compact())
+        .map_err(|e| format!("writing {path}: {e}"))?;
+    println!(
+        "wrote {path} ({n} trace events from {} spans; open in chrome://tracing or Perfetto)",
+        recorder.spans_started()
+    );
+    Ok(())
+}
+
 fn cmd_simulate(p: &Parsed) -> Result<(), String> {
     use polymem::util::json::Json;
     let g = graph_from_args(p)?;
     let pm = pm_from_args(p)?;
     let cfg = accel_from_args(p)?;
+    if !p.get("serve-trace-out").is_empty() {
+        return cmd_serve_trace(p, &cfg);
+    }
     if p.has_flag("profile") {
         polymem::obs::set_enabled(true);
     }
@@ -418,6 +500,7 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
         max_batch: batch,
         max_wait: Duration::from_millis(p.get_u64("max-wait-ms")?),
         queue_cap: 4096,
+        ..Default::default()
     };
     let in_shape2 = in_shape.clone();
     let srv = Server::start_with(
@@ -460,6 +543,59 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_bench_regress(p: &Parsed) -> Result<(), String> {
+    use polymem::util::regress::{compare, RegressOptions};
+    let baseline_path = p.get("baseline");
+    let current_path = p.get("current");
+    let current_text = std::fs::read_to_string(current_path)
+        .map_err(|e| format!("reading current run {current_path}: {e}"))?;
+    let current = polymem::util::json::parse(&current_text)
+        .map_err(|e| format!("parsing {current_path}: {e}"))?;
+    let baseline_text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) if p.has_flag("seed-missing") => {
+            // first run on a fresh checkout: adopt the current results
+            // as the committed baseline and pass
+            if let Some(dir) = std::path::Path::new(baseline_path).parent() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+            }
+            std::fs::write(baseline_path, &current_text)
+                .map_err(|e| format!("seeding {baseline_path}: {e}"))?;
+            println!("seeded baseline {baseline_path} from {current_path}");
+            return Ok(());
+        }
+        Err(e) => return Err(format!("reading baseline {baseline_path}: {e}")),
+    };
+    let baseline = polymem::util::json::parse(&baseline_text)
+        .map_err(|e| format!("parsing {baseline_path}: {e}"))?;
+    let opts = RegressOptions {
+        rel_tol: p.get_f64("tol")?,
+        skip: p
+            .get("skip")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    };
+    let rep = compare(&baseline, &current, &opts);
+    print!(
+        "bench-regress: {current_path} vs baseline {baseline_path} (tol {:.0}%)\n{}",
+        opts.rel_tol * 100.0,
+        rep.render()
+    );
+    if rep.passed() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} metric(s) regressed past the {:.0}% tolerance, {} missing",
+            rep.regressions().len(),
+            opts.rel_tol * 100.0,
+            rep.missing.len()
+        ))
+    }
+}
+
 fn app() -> App {
     App {
         name: "polymem",
@@ -482,6 +618,14 @@ fn app() -> App {
                 .opt("accel-config", "", "JSON accelerator config path")
                 .opt("top-layers", "8", "per-layer attribution rows to print")
                 .opt("trace-out", "", "write the engine timeline as Chrome trace-event JSON")
+                .opt(
+                    "serve-trace-out",
+                    "",
+                    "run a traced serving load-sim over the model's buckets and write \
+                     request span chains as Chrome trace-event JSON",
+                )
+                .opt("serve-buckets", "1,2,4,8", "bucket batch sizes for --serve-trace-out")
+                .opt("serve-requests", "512", "simulated requests for --serve-trace-out")
                 .flag("no-dme", "disable data-movement elimination")
                 .flag("no-verify", "skip inter-pass verification")
                 .flag("plan", "add the static-plan replay to the comparison")
@@ -507,6 +651,12 @@ fn app() -> App {
                 .opt("channels", "3", "input channels")
                 .opt("classes", "10", "output classes")
                 .opt("max-wait-ms", "2", "batching deadline"),
+            Command::new("bench-regress", "gate a benchmark JSON record against a baseline")
+                .req("baseline", "committed baseline JSON path")
+                .req("current", "freshly produced benchmark JSON path")
+                .opt("tol", "0.15", "allowed relative regression per gated metric")
+                .opt("skip", "", "comma-separated path substrings to exclude")
+                .flag("seed-missing", "adopt the current run as baseline when none exists"),
         ],
     }
 }
@@ -528,6 +678,7 @@ fn main() {
         "export-graph" => cmd_export_graph(&parsed),
         "e2" => cmd_e2(&parsed),
         "serve" => cmd_serve(&parsed),
+        "bench-regress" => cmd_bench_regress(&parsed),
         _ => unreachable!(),
     };
     if let Err(e) = result {

@@ -118,25 +118,60 @@ impl LogHistogram {
         }
     }
 
-    /// Quantile estimate: walks cumulative bucket counts to the rank
-    /// `(count - 1) * p` (the same index a sorted vector would use) and
-    /// returns that bucket's mean.
-    pub fn percentile(&self, p: f64) -> u64 {
-        if self.count == 0 {
-            return 0;
-        }
-        let rank = ((self.count - 1) as f64 * p.clamp(0.0, 1.0)) as u64;
+    /// Estimate of the `i`-th order statistic (what `sorted[i]` would
+    /// be): exact when the bucket holding rank `i` has one sample, and
+    /// a linear ramp across the bucket's effective range otherwise.
+    /// The range is clipped to the recorded global `[min, max]`, so
+    /// single-bucket mass of equal samples collapses to the exact
+    /// value.
+    fn sample_estimate(&self, i: u64) -> f64 {
         let mut cum = 0u64;
         for b in 0..BUCKETS {
             if self.counts[b] == 0 {
                 continue;
             }
-            cum += self.counts[b];
-            if cum > rank {
-                return (self.sums[b] / self.counts[b] as u128) as u64;
+            if i < cum + self.counts[b] {
+                let n = self.counts[b];
+                if n == 1 {
+                    return self.sums[b] as f64;
+                }
+                let lo = Self::bucket_lo(b).max(self.min) as f64;
+                let hi = Self::bucket_hi(b).min(self.max) as f64;
+                let local = (i - cum) as f64 / (n - 1) as f64;
+                return lo + (hi - lo) * local;
             }
+            cum += self.counts[b];
         }
-        self.max
+        self.max as f64
+    }
+
+    /// Quantile estimate with the sorted-sample convention: fractional
+    /// rank `r = (count - 1) * p`, linearly interpolated between the
+    /// order-statistic estimates at `floor(r)` and `ceil(r)`, each
+    /// itself linearly interpolated within its bucket. Exact for any
+    /// `p` when the mass at the rank sits in a single bucket of equal
+    /// samples (e.g. repeated latencies), and within the bucket's 2×
+    /// width otherwise.
+    pub fn percentile_f64(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let r = (self.count - 1) as f64 * p.clamp(0.0, 1.0);
+        let lo_i = r.floor() as u64;
+        let hi_i = r.ceil() as u64;
+        let lo_v = self.sample_estimate(lo_i);
+        if hi_i == lo_i {
+            return lo_v;
+        }
+        let hi_v = self.sample_estimate(hi_i);
+        let frac = r - r.floor();
+        lo_v + (hi_v - lo_v) * frac
+    }
+
+    /// [`Self::percentile_f64`] rounded to the nearest integer sample
+    /// value.
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.percentile_f64(p).round() as u64
     }
 
     /// Merge another histogram into this one (bucket-wise; exact).
@@ -207,7 +242,9 @@ mod tests {
         assert!((h.mean() - 200.0).abs() < 1e-12);
         assert_eq!(h.percentile(0.0), 100);
         assert_eq!(h.percentile(0.5), 200);
-        assert_eq!(h.percentile(0.99), 200); // rank 1, like a sorted vec
+        // fractional rank 1.98 interpolates between samples 200 and
+        // 300, exactly like numpy's linear quantile on the sorted vec
+        assert_eq!(h.percentile(0.99), 298);
         assert_eq!(h.percentile(1.0), 300);
         assert_eq!(h.min(), 100);
         assert_eq!(h.max(), 300);
@@ -260,6 +297,60 @@ mod tests {
         assert_eq!(a.percentile(0.5), whole.percentile(0.5));
         assert_eq!(a.min(), whole.min());
         assert_eq!(a.max(), whole.max());
+    }
+
+    /// numpy-style linear quantile on the exact sorted samples.
+    fn exact_quantile(sorted: &[u64], p: f64) -> f64 {
+        let r = (sorted.len() - 1) as f64 * p;
+        let lo = sorted[r.floor() as usize] as f64;
+        let hi = sorted[r.ceil() as usize] as f64;
+        lo + (hi - lo) * (r - r.floor())
+    }
+
+    #[test]
+    fn interpolated_quantiles_track_exact_sorted_samples() {
+        // known distributions: uniform ramp, repeated mass, geometric
+        let distributions: Vec<Vec<u64>> = vec![
+            (1..=1000u64).collect(),
+            (0..5000u64).map(|i| 1000 + (i % 7)).collect(),
+            (0..200u64).map(|i| 1u64 << (i % 20)).collect(),
+            vec![42; 999],
+        ];
+        for samples in distributions {
+            let mut h = LogHistogram::new();
+            let mut sorted = samples.clone();
+            for &v in &samples {
+                h.record(v);
+            }
+            sorted.sort_unstable();
+            for &p in &[0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let exact = exact_quantile(&sorted, p);
+                let est = h.percentile_f64(p);
+                // the estimate must stay within the bucket holding the
+                // rank: never off by more than 2x (one log2 bucket)
+                assert!(
+                    est <= exact * 2.0 + 1.0 && exact <= est * 2.0 + 1.0,
+                    "p={p}: est {est} vs exact {exact}"
+                );
+            }
+            // single-bucket mass of equal samples is exact at every p
+            if sorted.first() == sorted.last() {
+                for &p in &[0.0, 0.5, 0.99, 1.0] {
+                    assert_eq!(h.percentile_f64(p), sorted[0] as f64);
+                }
+            }
+        }
+        // exact case the issue calls out: every sample in its own
+        // bucket means p50/p99 match the sorted vector to the sample
+        let mut h = LogHistogram::new();
+        let vals = [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+        for &v in &vals {
+            h.record(v);
+        }
+        for &p in &[0.0, 0.5, 0.99, 1.0] {
+            let exact = exact_quantile(&vals, p);
+            assert!((h.percentile_f64(p) - exact).abs() < 1e-9, "p={p}");
+        }
     }
 
     #[test]

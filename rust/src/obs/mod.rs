@@ -21,9 +21,13 @@
 
 pub mod chrome;
 pub mod hist;
+pub mod span;
+pub mod text;
 
 pub use chrome::ChromeTrace;
 pub use hist::LogHistogram;
+pub use span::{FlightRecorder, SpanChain, SpanEvent, SpanPhase};
+pub use text::TextEncoder;
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -90,27 +94,32 @@ impl ObsSnapshot {
         ])
     }
 
-    /// Deterministic plain-text rendering (one metric per line).
+    /// Deterministic plain-text rendering (one metric per line),
+    /// framed by the shared [`TextEncoder`].
     pub fn render_text(&self) -> String {
-        let mut s = String::new();
+        let mut enc = TextEncoder::new();
         for (k, v) in &self.counters {
-            s.push_str(&format!("counter {k} {v}\n"));
+            enc.keyed("counter", k, v);
         }
         for (k, h) in &self.histograms {
-            s.push_str(&format!(
-                "hist {k} count={} sum={} min={} p50={} p99={} max={}\n",
-                h.count(),
-                h.sum(),
-                h.min(),
-                h.percentile(0.50),
-                h.percentile(0.99),
-                h.max()
-            ));
+            enc.keyed(
+                "hist",
+                k,
+                format_args!(
+                    "count={} sum={} min={} p50={} p99={} max={}",
+                    h.count(),
+                    h.sum(),
+                    h.min(),
+                    h.percentile(0.50),
+                    h.percentile(0.99),
+                    h.max()
+                ),
+            );
         }
         for p in &self.phases {
-            s.push_str(&format!("phase {} {:.6}s\n", p.name, p.seconds));
+            enc.keyed("phase", &p.name, format_args!("{:.6}s", p.seconds));
         }
-        s
+        enc.finish()
     }
 }
 

@@ -1,0 +1,415 @@
+//! Request-scoped span tracing: a bounded, lock-light flight recorder.
+//!
+//! Every request accepted by the serving path gets a process-unique
+//! **span id**; each stage of its life records one [`SpanEvent`]
+//! (phase + start/end timestamps in nanoseconds) into a
+//! [`FlightRecorder`] — a fixed-capacity ring buffer that overwrites
+//! its oldest events under sustained load, so tracing is *always on*
+//! without unbounded memory. The recorder is time-base agnostic: the
+//! live `coordinator::Server` stamps events with wall-clock nanoseconds
+//! since the recorder's epoch ([`FlightRecorder::now_ns`]), while
+//! `serve::loadsim` stamps them with its virtual (u64 ns) clock, so the
+//! same conservation checks and Chrome export work on both.
+//!
+//! **Span taxonomy** (one complete chain per accepted request; see
+//! DESIGN.md §Observability):
+//!
+//! | phase          | interval                                  |
+//! |----------------|-------------------------------------------|
+//! | `Submit`       | submit() entry → request accepted         |
+//! | `Enqueue`      | accepted → drained into a flush           |
+//! | `BucketChoice` | instant at flush; `value` = chosen bucket |
+//! | `Flush`        | flush decision → backend execution start  |
+//! | `Replay`       | backend execution (predicted service time)|
+//! | `Respond`      | execution end → response delivered        |
+//!
+//! **Conservation identity:** every accepted request yields exactly one
+//! event per phase, with monotone timestamps — no orphan and no
+//! duplicate spans. `tests/obs_serving.rs` and the coordinator stress
+//! test pin this; [`FlightRecorder::chains`] is the shared checker.
+//!
+//! Export: [`FlightRecorder::to_chrome`] lays the chains out on a
+//! minimal set of lanes (greedy interval assignment, so concurrent
+//! requests never overlap on one track) and emits the bucket choices
+//! as a counter track — loadable directly in `chrome://tracing` /
+//! Perfetto via `Server::trace_chrome_json` or
+//! `simulate --serve-trace-out`.
+
+use super::chrome::ChromeTrace;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Stages of one request's life through the serving path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanPhase {
+    /// `submit()` entry until the request is accepted.
+    Submit,
+    /// Accepted until drained into a flush (queue wait).
+    Enqueue,
+    /// Instant of the flush's bucket decision; `value` is the bucket.
+    BucketChoice,
+    /// Flush decision until backend execution starts.
+    Flush,
+    /// Backend execution (the bucket's predicted service replay).
+    Replay,
+    /// Execution end until the response is delivered.
+    Respond,
+}
+
+impl SpanPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanPhase::Submit => "submit",
+            SpanPhase::Enqueue => "enqueue",
+            SpanPhase::BucketChoice => "bucket_choice",
+            SpanPhase::Flush => "flush",
+            SpanPhase::Replay => "replay",
+            SpanPhase::Respond => "respond",
+        }
+    }
+
+    /// Every phase of a complete chain, in chain order.
+    pub fn all() -> [SpanPhase; 6] {
+        [
+            SpanPhase::Submit,
+            SpanPhase::Enqueue,
+            SpanPhase::BucketChoice,
+            SpanPhase::Flush,
+            SpanPhase::Replay,
+            SpanPhase::Respond,
+        ]
+    }
+}
+
+/// One recorded phase of one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// The request's process-unique span id.
+    pub span: u64,
+    pub phase: SpanPhase,
+    /// Start, nanoseconds since the recorder's time base.
+    pub start_ns: u64,
+    /// End, nanoseconds; equal to `start_ns` for instant phases.
+    pub end_ns: u64,
+    /// Phase payload: the chosen bucket for `BucketChoice`, the batch
+    /// size for `Flush`/`Replay`, 0 otherwise.
+    pub value: i64,
+}
+
+/// One request's reassembled chain (see [`FlightRecorder::chains`]).
+#[derive(Clone, Debug, Default)]
+pub struct SpanChain {
+    /// Events in phase order (complete chains have one per phase).
+    pub events: Vec<SpanEvent>,
+}
+
+impl SpanChain {
+    /// A chain is complete when it has exactly one event per phase and
+    /// the phase intervals are monotone (each starts no earlier than
+    /// the previous ends, instants included).
+    pub fn is_complete(&self) -> bool {
+        let order = SpanPhase::all();
+        if self.events.len() != order.len() {
+            return false;
+        }
+        for (ev, want) in self.events.iter().zip(order.iter()) {
+            if ev.phase != *want || ev.end_ns < ev.start_ns {
+                return false;
+            }
+        }
+        self.events
+            .windows(2)
+            .all(|w| w[1].start_ns >= w[0].start_ns && w[1].end_ns >= w[0].end_ns)
+    }
+}
+
+/// Fixed-capacity ring of span events. Recording takes one short
+/// mutex hold (push or overwrite, O(1)); span ids and the overwrite
+/// counter are plain atomics, so the request path never blocks on the
+/// exporter for long.
+pub struct FlightRecorder {
+    epoch: Instant,
+    next_span: AtomicU64,
+    overwritten: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next overwrite position once `buf` has reached capacity.
+    head: usize,
+    cap: usize,
+}
+
+/// Default event capacity of a server's always-on recorder: bounds
+/// memory at roughly `DEFAULT_CAPACITY × size_of::<SpanEvent>()`
+/// (~0.75 MiB) no matter how long the server runs.
+pub const DEFAULT_CAPACITY: usize = 16 * 1024;
+
+impl FlightRecorder {
+    /// A recorder holding at most `capacity` events (min 1).
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            next_span: AtomicU64::new(0),
+            overwritten: AtomicU64::new(0),
+            ring: Mutex::new(Ring { buf: Vec::new(), head: 0, cap: capacity.max(1) }),
+        }
+    }
+
+    /// Nanoseconds since this recorder was created (the wall-clock
+    /// time base; virtual-time users stamp events themselves).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Allocate the next span id (1-based, process-unique per
+    /// recorder).
+    pub fn next_span_id(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Span ids handed out so far.
+    pub fn spans_started(&self) -> u64 {
+        self.next_span.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted to keep the ring within capacity.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record one event (O(1); evicts the oldest event when full).
+    pub fn record(&self, ev: SpanEvent) {
+        let mut g = self.ring.lock().unwrap();
+        if g.buf.len() < g.cap {
+            g.buf.push(ev);
+        } else {
+            let h = g.head;
+            g.buf[h] = ev;
+            g.head = (h + 1) % g.cap;
+            self.overwritten.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Convenience: record a `[start, end]` phase of `span`.
+    pub fn record_phase(&self, span: u64, phase: SpanPhase, start_ns: u64, end_ns: u64, value: i64) {
+        self.record(SpanEvent { span, phase, start_ns, end_ns: end_ns.max(start_ns), value });
+    }
+
+    /// Every retained event, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let g = self.ring.lock().unwrap();
+        let mut out = Vec::with_capacity(g.buf.len());
+        out.extend_from_slice(&g.buf[g.head..]);
+        out.extend_from_slice(&g.buf[..g.head]);
+        out
+    }
+
+    /// Retained events reassembled per span, each chain sorted into
+    /// phase order (ties by start time). Complete chains satisfy
+    /// [`SpanChain::is_complete`].
+    pub fn chains(&self) -> BTreeMap<u64, SpanChain> {
+        let mut map: BTreeMap<u64, SpanChain> = BTreeMap::new();
+        for ev in self.snapshot() {
+            map.entry(ev.span).or_default().events.push(ev);
+        }
+        for chain in map.values_mut() {
+            chain.events.sort_by_key(|e| (e.phase, e.start_ns));
+        }
+        map
+    }
+
+    /// Export the retained chains as a Chrome trace. Chains are packed
+    /// onto the fewest lanes such that concurrent requests never share
+    /// one (greedy interval assignment in arrival order); the bucket
+    /// choices become a `bucket` counter track.
+    pub fn to_chrome(&self) -> ChromeTrace {
+        let chains = self.chains();
+        // chain interval = [first event start, last event end]
+        let mut intervals: Vec<(u64, u64, &SpanChain)> = chains
+            .values()
+            .filter(|c| !c.events.is_empty())
+            .map(|c| {
+                let lo = c.events.iter().map(|e| e.start_ns).min().unwrap_or(0);
+                let hi = c.events.iter().map(|e| e.end_ns).max().unwrap_or(0);
+                (lo, hi, c)
+            })
+            .collect();
+        intervals.sort_by_key(|&(lo, hi, _)| (lo, hi));
+        let mut ct = ChromeTrace::new();
+        let mut lane_free_at: Vec<u64> = Vec::new();
+        for (lo, hi, chain) in intervals {
+            let lane = match lane_free_at.iter().position(|&free| free <= lo) {
+                Some(l) => l,
+                None => {
+                    lane_free_at.push(0);
+                    ct.thread_name(lane_free_at.len() as i64 - 1, &format!(
+                        "req-lane-{}",
+                        lane_free_at.len() - 1
+                    ));
+                    lane_free_at.len() - 1
+                }
+            };
+            lane_free_at[lane] = hi.max(lo + 1);
+            for ev in &chain.events {
+                let start_s = ev.start_ns as f64 / 1e9;
+                let dur_s = (ev.end_ns - ev.start_ns) as f64 / 1e9;
+                ct.span(lane as i64, ev.phase.name(), start_s, dur_s);
+                if ev.phase == SpanPhase::BucketChoice {
+                    ct.counter("bucket", start_s, ev.value);
+                }
+            }
+        }
+        ct
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_events(span: u64, t0: u64, bucket: i64) -> Vec<SpanEvent> {
+        let p = SpanPhase::all();
+        vec![
+            SpanEvent { span, phase: p[0], start_ns: t0, end_ns: t0 + 10, value: 0 },
+            SpanEvent { span, phase: p[1], start_ns: t0 + 10, end_ns: t0 + 100, value: 0 },
+            SpanEvent { span, phase: p[2], start_ns: t0 + 100, end_ns: t0 + 100, value: bucket },
+            SpanEvent { span, phase: p[3], start_ns: t0 + 100, end_ns: t0 + 110, value: bucket },
+            SpanEvent { span, phase: p[4], start_ns: t0 + 110, end_ns: t0 + 500, value: bucket },
+            SpanEvent { span, phase: p[5], start_ns: t0 + 500, end_ns: t0 + 510, value: 0 },
+        ]
+    }
+
+    #[test]
+    fn span_ids_are_unique_and_dense() {
+        let fr = FlightRecorder::new(8);
+        assert_eq!(fr.next_span_id(), 1);
+        assert_eq!(fr.next_span_id(), 2);
+        assert_eq!(fr.spans_started(), 2);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let fr = FlightRecorder::new(4);
+        for k in 0..10u64 {
+            fr.record(SpanEvent {
+                span: k,
+                phase: SpanPhase::Submit,
+                start_ns: k,
+                end_ns: k + 1,
+                value: 0,
+            });
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.overwritten(), 6);
+        let spans: Vec<u64> = fr.snapshot().iter().map(|e| e.span).collect();
+        assert_eq!(spans, vec![6, 7, 8, 9], "oldest events must go first");
+    }
+
+    #[test]
+    fn chains_reassemble_and_complete() {
+        let fr = FlightRecorder::new(64);
+        // interleave two chains out of order
+        let a = chain_events(1, 0, 4);
+        let b = chain_events(2, 50, 8);
+        for k in 0..a.len() {
+            fr.record(b[k]);
+            fr.record(a[a.len() - 1 - k]);
+        }
+        let chains = fr.chains();
+        assert_eq!(chains.len(), 2);
+        for (span, chain) in &chains {
+            assert!(chain.is_complete(), "span {span} incomplete: {chain:?}");
+        }
+        // dropping one phase breaks completeness
+        let fr2 = FlightRecorder::new(64);
+        for ev in a.iter().skip(1) {
+            fr2.record(*ev);
+        }
+        assert!(!fr2.chains()[&1].is_complete());
+        // a duplicated phase breaks completeness too
+        let fr3 = FlightRecorder::new(64);
+        for ev in &a {
+            fr3.record(*ev);
+        }
+        fr3.record(a[2]);
+        assert!(!fr3.chains()[&1].is_complete());
+    }
+
+    #[test]
+    fn chrome_export_is_balanced_and_laned() {
+        let fr = FlightRecorder::new(64);
+        // two overlapping chains -> two lanes; one later chain reuses
+        // lane 0
+        for ev in chain_events(1, 0, 4) {
+            fr.record(ev);
+        }
+        for ev in chain_events(2, 100, 8) {
+            fr.record(ev);
+        }
+        for ev in chain_events(3, 10_000, 2) {
+            fr.record(ev);
+        }
+        let j = fr.to_chrome().to_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // per-tid B/E balance
+        let mut depth: BTreeMap<i64, i64> = BTreeMap::new();
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut lanes: std::collections::BTreeSet<i64> = Default::default();
+        for e in evs {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "unsorted trace");
+            last_ts = ts;
+            let tid = e.get("tid").unwrap().as_i64().unwrap();
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => {
+                    *depth.entry(tid).or_insert(0) += 1;
+                    lanes.insert(tid);
+                }
+                "E" => {
+                    let d = depth.entry(tid).or_insert(0);
+                    *d -= 1;
+                    assert!(*d >= 0, "E before B on lane {tid}");
+                }
+                _ => {}
+            }
+        }
+        assert!(depth.values().all(|&d| d == 0), "unbalanced lanes: {depth:?}");
+        assert_eq!(lanes.len(), 2, "expected exactly 2 lanes, got {lanes:?}");
+        // the bucket decisions surface as a counter track
+        assert!(evs.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("C")
+                && e.get("name").unwrap().as_str() == Some("bucket")
+        }));
+    }
+
+    #[test]
+    fn record_phase_clamps_backwards_intervals() {
+        let fr = FlightRecorder::new(4);
+        fr.record_phase(1, SpanPhase::Replay, 100, 50, 0);
+        let ev = fr.snapshot()[0];
+        assert_eq!(ev.start_ns, 100);
+        assert_eq!(ev.end_ns, 100, "end must be clamped to start");
+    }
+}

@@ -1,0 +1,73 @@
+//! One shared plain-text metric encoder.
+//!
+//! `coordinator::metrics::Snapshot::render_text` (Prometheus
+//! exposition) and [`super::ObsSnapshot::render_text`] (the keyed
+//! human-readable dump) used to hand-roll their line formats
+//! separately; both are now expressed on this encoder so the framing
+//! (one metric per line, trailing newline, `name{label="v"} value`
+//! label syntax) lives in exactly one place. Output is byte-for-byte
+//! what the hand-rolled versions produced — tests pin it.
+
+use std::fmt;
+use std::fmt::Write as _;
+
+/// Line-oriented metric text builder.
+#[derive(Default)]
+pub struct TextEncoder {
+    buf: String,
+}
+
+impl TextEncoder {
+    pub fn new() -> TextEncoder {
+        TextEncoder::default()
+    }
+
+    /// Prometheus unlabelled sample: `name value`.
+    pub fn metric(&mut self, name: &str, value: impl fmt::Display) {
+        let _ = writeln!(self.buf, "{name} {value}");
+    }
+
+    /// Prometheus sample with one label pair: `name{label="lv"} value`.
+    pub fn metric_with(
+        &mut self,
+        name: &str,
+        label: &str,
+        label_value: impl fmt::Display,
+        value: impl fmt::Display,
+    ) {
+        let _ = writeln!(self.buf, "{name}{{{label}=\"{label_value}\"}} {value}");
+    }
+
+    /// Keyed human-readable line: `kind name rest` (the obs snapshot
+    /// dump format).
+    pub fn keyed(&mut self, kind: &str, name: &str, rest: impl fmt::Display) {
+        let _ = writeln!(self.buf, "{kind} {name} {rest}");
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_match_the_hand_rolled_formats() {
+        let mut e = TextEncoder::new();
+        e.metric("polymem_requests_total", 2u64);
+        e.metric("polymem_batch_size_mean", format_args!("{:.3}", 1.5f64));
+        e.metric_with("polymem_request_latency_us", "quantile", 0.5f64, 200u128);
+        e.keyed("counter", "bytes", 15i64);
+        e.keyed("phase", "work", format_args!("{:.6}s", 0.25f64));
+        assert_eq!(
+            e.finish(),
+            "polymem_requests_total 2\n\
+             polymem_batch_size_mean 1.500\n\
+             polymem_request_latency_us{quantile=\"0.5\"} 200\n\
+             counter bytes 15\n\
+             phase work 0.250000s\n"
+        );
+    }
+}

@@ -17,7 +17,7 @@
 //! policy to cost-aware bucketized batching.
 
 use super::plans::PlannedArtifact;
-use crate::coordinator::{Backend, BucketCost};
+use crate::coordinator::{Backend, BatchActuals, BucketCost};
 use crate::util::error::Result;
 use std::sync::Arc;
 use std::time::Duration;
@@ -30,6 +30,9 @@ pub struct PlannedBackend {
     /// Wall-clock seconds slept per modeled service second (1.0 =
     /// real time; 0.0 disables sleeping for tests).
     time_scale: f64,
+    /// Replay actuals of the most recent `infer` (for the server's
+    /// cost-drift auditor).
+    last_actuals: Option<BatchActuals>,
 }
 
 impl PlannedBackend {
@@ -53,7 +56,7 @@ impl PlannedBackend {
                 w[1].out_len
             );
         }
-        Ok(PlannedBackend { buckets, time_scale: 1.0 })
+        Ok(PlannedBackend { buckets, time_scale: 1.0, last_actuals: None })
     }
 
     /// Scale (or zero out) the modeled service sleeps.
@@ -103,14 +106,25 @@ impl Backend for PlannedBackend {
         )
     }
 
+    fn last_batch_actuals(&self) -> Option<BatchActuals> {
+        self.last_actuals
+    }
+
     fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
         let in_len = self.input_len();
         let out_len = self.output_len();
         crate::ensure!(n >= 1, "empty batch");
         crate::ensure!(n <= self.max_batch(), "batch {n} exceeds largest bucket");
         crate::ensure!(batch.len() == n * in_len, "bad batch packing");
-        let art = self.bucket_for(n);
+        let art = self.bucket_for(n).clone();
         let service = art.service_seconds * self.time_scale;
+        // report the *replayed* numbers, not the predicted ones: the
+        // drift auditor's whole point is comparing the two
+        self.last_actuals = Some(BatchActuals {
+            bucket_batch: art.batch as usize,
+            offchip_bytes: art.replayed_offchip_bytes,
+            service_seconds: art.replayed_seconds,
+        });
         if service > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(service));
         }

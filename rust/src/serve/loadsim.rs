@@ -15,11 +15,12 @@
 //! every policy under test.
 
 use crate::coordinator::{choose_bucket, BucketCost};
+use crate::obs::span::{FlightRecorder, SpanPhase};
 use crate::obs::LogHistogram;
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::time::Duration;
 
 /// Arrival process.
@@ -34,6 +35,48 @@ pub enum Arrivals {
     Closed { clients: usize, requests: usize },
 }
 
+/// Latency service-level objective for a load-sim run.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    /// End-to-end latency objective per request.
+    pub latency: Duration,
+    /// Target attainment fraction (e.g. 0.99 = 99% of requests within
+    /// the objective).
+    pub target: f64,
+}
+
+/// SLO outcome of one run: attainment against the objective and how
+/// fast the run burned its error budget. Rejected requests count as
+/// misses — shedding load is an SLO violation from the caller's view.
+#[derive(Clone, Copy, Debug)]
+pub struct SloReport {
+    pub objective_us: u64,
+    pub target: f64,
+    /// Requests completed within the objective.
+    pub met: u64,
+    /// Late completions plus rejections.
+    pub missed: u64,
+    /// `met / (met + missed)`.
+    pub attainment: f64,
+    /// Error-budget burn rate: observed miss rate over the allowed
+    /// miss rate `1 − target`. 1.0 = exactly on budget; above 1 the
+    /// budget is burning faster than the objective allows.
+    pub error_budget_burn: f64,
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("objective_us", Json::Int(self.objective_us as i64)),
+            ("target", Json::Num(self.target)),
+            ("met", Json::Int(self.met as i64)),
+            ("missed", Json::Int(self.missed as i64)),
+            ("attainment", Json::Num(self.attainment)),
+            ("error_budget_burn", Json::Num(self.error_budget_burn)),
+        ])
+    }
+}
+
 /// Load-simulation parameters (mirrors `ServerConfig`).
 #[derive(Clone, Copy, Debug)]
 pub struct LoadSimConfig {
@@ -42,6 +85,8 @@ pub struct LoadSimConfig {
     pub max_wait: Duration,
     /// Queue bound; arrivals beyond it are rejected.
     pub queue_cap: usize,
+    /// Latency objective to score the run against (optional).
+    pub slo: Option<SloSpec>,
 }
 
 /// What one simulated run measured.
@@ -65,6 +110,10 @@ pub struct LoadReport {
     /// Amortized off-chip bytes per completed request.
     pub bytes_per_request: f64,
     pub mean_batch: f64,
+    /// Flush count per chosen bucket batch size.
+    pub flushes_by_bucket: BTreeMap<usize, u64>,
+    /// SLO scoring, when the config set an objective.
+    pub slo: Option<SloReport>,
 }
 
 impl LoadReport {
@@ -77,7 +126,7 @@ impl LoadReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("label", Json::Str(self.label.clone())),
             (
                 "buckets",
@@ -95,7 +144,20 @@ impl LoadReport {
             ("offchip_bytes", Json::Int(self.offchip_bytes)),
             ("bytes_per_request", Json::Num(self.bytes_per_request)),
             ("mean_batch", Json::Num(self.mean_batch)),
-        ])
+            (
+                "flushes_by_bucket",
+                Json::Obj(
+                    self.flushes_by_bucket
+                        .iter()
+                        .map(|(&b, &n)| (format!("b{b}"), Json::Int(n as i64)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        if let (Json::Obj(pairs), Some(slo)) = (&mut j, &self.slo) {
+            pairs.insert("slo".to_string(), slo.to_json());
+        }
+        j
     }
 }
 
@@ -105,7 +167,25 @@ const NS: f64 = 1e9;
 /// table reproduces the fixed `max_batch` baseline; a multi-bucket
 /// table is cost-aware bucketized batching.
 pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadReport {
+    run_load_traced(costs, cfg, label, None)
+}
+
+/// [`run_load`] with an optional flight recorder: every admitted
+/// request records the same six-phase span chain the live server does,
+/// stamped with *virtual* nanoseconds, so a simulated run exports to
+/// the identical Chrome trace format as a live `Server`.
+pub fn run_load_traced(
+    costs: &[BucketCost],
+    cfg: &LoadSimConfig,
+    label: &str,
+    recorder: Option<&FlightRecorder>,
+) -> LoadReport {
     assert!(!costs.is_empty(), "load sim needs at least one bucket");
+    let rec = |span: u64, phase: SpanPhase, s: u64, e: u64, v: i64| {
+        if let Some(r) = recorder {
+            r.record_phase(span, phase, s, e, v);
+        }
+    };
     let max_bucket = costs.iter().map(|c| c.batch).max().unwrap_or(1).max(1);
     let max_wait_ns = cfg.max_wait.as_nanos() as u64;
 
@@ -134,7 +214,8 @@ pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadR
     };
     let closed = matches!(cfg.arrivals, Arrivals::Closed { .. });
 
-    let mut queue: VecDeque<u64> = VecDeque::new(); // enqueue times (ns)
+    // queued requests: (enqueue time ns, span id)
+    let mut queue: VecDeque<(u64, u64)> = VecDeque::new();
     let mut now = 0u64;
     let mut submitted = 0u64;
     let mut completed = 0u64;
@@ -144,6 +225,9 @@ pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadR
     let mut batch_size_sum = 0u64;
     let mut last_completion = 0u64;
     let mut latency_us = LogHistogram::new();
+    let mut flushes_by_bucket: BTreeMap<usize, u64> = BTreeMap::new();
+    let (mut slo_met, mut slo_missed) = (0u64, 0u64);
+    let objective_ns = cfg.slo.map(|s| s.latency.as_nanos() as u64);
 
     loop {
         // admit every arrival due by `now`
@@ -154,12 +238,19 @@ pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadR
             arrivals.pop();
             submitted += 1;
             if queue.len() < cfg.queue_cap {
-                queue.push_back(t);
+                // rejected arrivals allocate no span — matches the
+                // live server, where backpressure precedes span birth
+                let span = recorder.map(|r| r.next_span_id()).unwrap_or(0);
+                rec(span, SpanPhase::Submit, t, t, 0);
+                queue.push_back((t, span));
             } else {
                 rejected += 1;
+                if objective_ns.is_some() {
+                    slo_missed += 1; // shed load misses the SLO
+                }
             }
         }
-        let Some(&oldest) = queue.front() else {
+        let Some(&(oldest, _)) = queue.front() else {
             // idle: jump to the next arrival, or finish
             match arrivals.peek() {
                 Some(&Reverse(t)) => {
@@ -182,8 +273,21 @@ pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadR
             choose_bucket(queue.len(), costs).expect("non-empty queue and table");
         let done = now + (bucket.service_seconds * NS) as u64;
         for _ in 0..take {
-            let enq = queue.pop_front().expect("take <= queue.len()");
-            latency_us.record((done - enq) / 1_000);
+            let (enq, span) = queue.pop_front().expect("take <= queue.len()");
+            rec(span, SpanPhase::Enqueue, enq, now, 0);
+            rec(span, SpanPhase::BucketChoice, now, now, bucket.batch as i64);
+            rec(span, SpanPhase::Flush, now, now, take as i64);
+            rec(span, SpanPhase::Replay, now, done, take as i64);
+            rec(span, SpanPhase::Respond, done, done, 0);
+            let lat_ns = done - enq;
+            latency_us.record(lat_ns / 1_000);
+            if let Some(obj) = objective_ns {
+                if lat_ns <= obj {
+                    slo_met += 1;
+                } else {
+                    slo_missed += 1;
+                }
+            }
             completed += 1;
             if closed && issued < total_requests {
                 // this client immediately submits its next request
@@ -193,6 +297,7 @@ pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadR
         }
         batches += 1;
         batch_size_sum += take as u64;
+        *flushes_by_bucket.entry(bucket.batch).or_insert(0) += 1;
         offchip += bucket.offchip_bytes;
         last_completion = done;
         now = done;
@@ -222,6 +327,24 @@ pub fn run_load(costs: &[BucketCost], cfg: &LoadSimConfig, label: &str) -> LoadR
         } else {
             0.0
         },
+        flushes_by_bucket,
+        slo: cfg.slo.map(|spec| {
+            let eligible = slo_met + slo_missed;
+            let attainment = if eligible > 0 {
+                slo_met as f64 / eligible as f64
+            } else {
+                1.0
+            };
+            let miss_rate = 1.0 - attainment;
+            SloReport {
+                objective_us: spec.latency.as_micros() as u64,
+                target: spec.target,
+                met: slo_met,
+                missed: slo_missed,
+                attainment,
+                error_budget_burn: miss_rate / (1.0 - spec.target).max(1e-9),
+            }
+        }),
     }
 }
 
@@ -252,6 +375,7 @@ mod tests {
             arrivals,
             max_wait: Duration::from_micros(500),
             queue_cap: 64,
+            slo: None,
         }
     }
 
@@ -280,6 +404,7 @@ mod tests {
                 arrivals: Arrivals::Poisson { rate_qps: 60_000.0, requests: 2_000, seed: 7 },
                 max_wait: Duration::from_micros(500),
                 queue_cap: 8, // tight: force rejects
+                slo: None,
             },
             "poisson",
         );
@@ -330,5 +455,59 @@ mod tests {
         // saturated closed loop with one bucket: every flush is a full 8
         assert_eq!(r.completed, 400);
         assert!((r.mean_batch - 8.0).abs() < 1e-9, "mean batch {}", r.mean_batch);
+        assert_eq!(r.flushes_by_bucket.get(&8), Some(&50));
+        assert_eq!(r.flushes_by_bucket.len(), 1);
+    }
+
+    #[test]
+    fn slo_report_counts_and_burn_are_consistent() {
+        // generous objective: everything meets it, burn is zero
+        let mut c = cfg(Arrivals::Closed { clients: 4, requests: 200 });
+        c.slo = Some(SloSpec { latency: Duration::from_secs(60), target: 0.99 });
+        let r = run_load(&table(&[1, 2, 4, 8]), &c, "slo-loose");
+        let slo = r.slo.expect("slo configured");
+        assert_eq!(slo.met + slo.missed, 200);
+        assert_eq!(slo.missed, 0);
+        assert!((slo.attainment - 1.0).abs() < 1e-12);
+        assert_eq!(slo.error_budget_burn, 0.0);
+
+        // impossible objective: every completion (and any reject)
+        // misses; burn saturates at miss_rate / (1 - target)
+        let mut c = cfg(Arrivals::Closed { clients: 4, requests: 200 });
+        c.slo = Some(SloSpec { latency: Duration::from_nanos(1), target: 0.99 });
+        let r = run_load(&table(&[1, 2, 4, 8]), &c, "slo-tight");
+        let slo = r.slo.expect("slo configured");
+        assert_eq!(slo.met, 0);
+        assert_eq!(slo.missed, 200);
+        assert_eq!(slo.attainment, 0.0);
+        assert!((slo.error_budget_burn - 1.0 / 0.01).abs() < 1e-6);
+        // and the report serializes the section
+        let txt = r.to_json().to_string_compact();
+        assert!(txt.contains("\"slo\""), "missing slo in {txt}");
+        assert!(txt.contains("\"error_budget_burn\""));
+    }
+
+    #[test]
+    fn traced_run_records_one_complete_chain_per_completion() {
+        use crate::obs::FlightRecorder;
+        let r = FlightRecorder::new(64 * 1024);
+        let rep = run_load_traced(
+            &table(&[1, 2, 4, 8]),
+            &cfg(Arrivals::Closed { clients: 6, requests: 300 }),
+            "traced",
+            Some(&r),
+        );
+        assert_eq!(rep.completed, 300);
+        let chains = r.chains();
+        assert_eq!(chains.len(), 300, "one chain per completed request");
+        assert!(chains.values().all(|c| c.is_complete()), "incomplete span chain");
+        // tracing must not perturb the simulation itself
+        let untraced = run_load(
+            &table(&[1, 2, 4, 8]),
+            &cfg(Arrivals::Closed { clients: 6, requests: 300 }),
+            "untraced",
+        );
+        assert_eq!(rep.qps, untraced.qps);
+        assert_eq!(rep.offchip_bytes, untraced.offchip_bytes);
     }
 }

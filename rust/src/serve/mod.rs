@@ -24,5 +24,7 @@ pub mod loadsim;
 pub mod plans;
 
 pub use backend::PlannedBackend;
-pub use loadsim::{run_load, Arrivals, LoadReport, LoadSimConfig};
+pub use loadsim::{
+    run_load, run_load_traced, Arrivals, LoadReport, LoadSimConfig, SloReport, SloSpec,
+};
 pub use plans::{PlanCache, PlanCacheConfig, PlanKey, PlannedArtifact};

@@ -78,6 +78,16 @@ pub struct PlannedArtifact {
     /// pipeline replay. Equal to `cost.pipelined_seconds` — verified
     /// against `simulate_pipelined` at compile time.
     pub service_seconds: f64,
+    /// What `simulate_pipelined` actually measured at compile time:
+    /// seconds of one execution. Stored separately from the
+    /// prediction so the serving drift auditor compares two
+    /// independently produced numbers (they are `ensure!`d equal here,
+    /// but a future backend that stops replaying the plan would
+    /// diverge — and the audit would show it).
+    pub replayed_seconds: f64,
+    /// What `simulate_pipelined` actually measured: off-chip bytes of
+    /// one execution.
+    pub replayed_offchip_bytes: i64,
     /// The decision vector the artifact was realized with (the joint
     /// search's winner, or the staged-greedy baseline).
     pub decision: String,
@@ -243,6 +253,8 @@ impl PlanCache {
             program,
             plan,
             service_seconds: cost.pipelined_seconds,
+            replayed_seconds: sim.seconds,
+            replayed_offchip_bytes: sim.offchip_total(),
             cost,
             decision,
             batch,

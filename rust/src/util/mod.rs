@@ -14,6 +14,8 @@
 //! * [`json`] — a minimal JSON writer/parser for configs and reports.
 //! * [`cli`] — a small declarative argument parser for the `polymem`
 //!   binary and examples.
+//! * [`regress`] — tolerance-based benchmark regression comparator
+//!   (the `bench-regress` CI gate).
 //! * [`logging`] — leveled stderr logging.
 //! * [`fuzzgraph`] — seeded random operator-DAG generator for the
 //!   differential equivalence fuzzer.
@@ -25,4 +27,5 @@ pub mod fuzzgraph;
 pub mod json;
 pub mod logging;
 pub mod prop;
+pub mod regress;
 pub mod rng;

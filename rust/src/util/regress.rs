@@ -1,0 +1,317 @@
+//! Benchmark regression gate: tolerance-based comparison of two
+//! benchmark JSON records (a committed baseline vs the current run).
+//!
+//! The comparator flattens both documents to dot-path → numeric-leaf
+//! maps (`loads.poisson-low (0.25x cap) / bucketized.qps`), classifies
+//! each metric's improvement direction from its leaf name (latency and
+//! byte counts should fall, qps and attainment should rise), and flags
+//! a regression when the current value moves past the baseline in the
+//! *bad* direction by more than the relative tolerance. Metrics whose
+//! direction is unknown are recorded but never gated, and noisy
+//! wall-clock paths (e.g. `compile_seconds`, the live-server section)
+//! are excluded via substring skip patterns so the gate only binds on
+//! the deterministic virtual-time numbers.
+//!
+//! Array elements are keyed by their `"label"` field when present, so
+//! reordering load-sim rows does not shuffle the comparison.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Which way a metric is supposed to move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+    /// Direction unknown: compared and reported, never gated.
+    Informational,
+}
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::LowerIsBetter => "lower-better",
+            Direction::HigherIsBetter => "higher-better",
+            Direction::Informational => "info",
+        }
+    }
+}
+
+/// Classify a metric path by its leaf name.
+pub fn direction_for(path: &str) -> Direction {
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    const LOWER: &[&str] = &[
+        "latency", "bytes", "seconds", "missed", "rejected", "burn", "overwritten", "spill",
+    ];
+    const HIGHER: &[&str] =
+        &["qps", "attainment", "met", "completed", "hits", "throughput"];
+    if LOWER.iter().any(|k| leaf.contains(k)) {
+        Direction::LowerIsBetter
+    } else if HIGHER.iter().any(|k| leaf.contains(k)) {
+        Direction::HigherIsBetter
+    } else {
+        Direction::Informational
+    }
+}
+
+/// Comparison options.
+#[derive(Clone, Debug)]
+pub struct RegressOptions {
+    /// Allowed relative movement in the bad direction (0.15 = 15%).
+    pub rel_tol: f64,
+    /// Path substrings excluded from gating entirely.
+    pub skip: Vec<String>,
+}
+
+impl Default for RegressOptions {
+    fn default() -> RegressOptions {
+        RegressOptions { rel_tol: 0.15, skip: Vec::new() }
+    }
+}
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct MetricCheck {
+    pub path: String,
+    pub direction: Direction,
+    pub baseline: f64,
+    pub current: f64,
+    pub regressed: bool,
+}
+
+impl MetricCheck {
+    /// Signed relative movement vs baseline (positive = value rose).
+    pub fn rel_change(&self) -> f64 {
+        (self.current - self.baseline) / self.baseline.abs().max(1e-12)
+    }
+}
+
+/// Full comparison outcome.
+#[derive(Clone, Debug, Default)]
+pub struct RegressReport {
+    pub checks: Vec<MetricCheck>,
+    /// Gated metrics present in the baseline but absent from the
+    /// current run — losing a metric is itself a regression.
+    pub missing: Vec<String>,
+    /// Metrics present only in the current run (never a failure).
+    pub added: Vec<String>,
+    /// Metrics excluded by skip patterns.
+    pub skipped: usize,
+}
+
+impl RegressReport {
+    pub fn regressions(&self) -> Vec<&MetricCheck> {
+        self.checks.iter().filter(|c| c.regressed).collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.missing.is_empty() && self.checks.iter().all(|c| !c.regressed)
+    }
+
+    /// Human-readable verdict table (regressions first).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in self.regressions() {
+            let _ = writeln!(
+                out,
+                "REGRESSED  {:<60} {:>14.4} -> {:>14.4} ({:+.1}%, {})",
+                c.path,
+                c.baseline,
+                c.current,
+                100.0 * c.rel_change(),
+                c.direction.name()
+            );
+        }
+        for m in &self.missing {
+            let _ = writeln!(out, "MISSING    {m} (present in baseline, absent now)");
+        }
+        let gated = self
+            .checks
+            .iter()
+            .filter(|c| c.direction != Direction::Informational)
+            .count();
+        let _ = writeln!(
+            out,
+            "{}: {} metrics compared ({} gated, {} informational, {} skipped), \
+             {} regressed, {} missing, {} new",
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.checks.len(),
+            gated,
+            self.checks.len() - gated,
+            self.skipped,
+            self.regressions().len(),
+            self.missing.len(),
+            self.added.len()
+        );
+        out
+    }
+}
+
+/// Flatten numeric leaves to `path -> value`. Object keys join with
+/// `.`; array elements use their `"label"` field when present, else
+/// the index.
+pub fn flatten(j: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    walk(j, String::new(), &mut out);
+    out
+}
+
+fn join(prefix: &str, seg: &str) -> String {
+    if prefix.is_empty() {
+        seg.to_string()
+    } else {
+        format!("{prefix}.{seg}")
+    }
+}
+
+fn walk(j: &Json, prefix: String, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Int(v) => {
+            out.insert(prefix, *v as f64);
+        }
+        Json::Num(v) => {
+            if v.is_finite() {
+                out.insert(prefix, *v);
+            }
+        }
+        Json::Obj(pairs) => {
+            for (k, v) in pairs {
+                walk(v, join(&prefix, k), out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                let seg = v
+                    .get("label")
+                    .and_then(|l| l.as_str())
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| i.to_string());
+                walk(v, join(&prefix, &seg), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Compare a current benchmark record against a baseline.
+pub fn compare(baseline: &Json, current: &Json, opts: &RegressOptions) -> RegressReport {
+    let base = flatten(baseline);
+    let cur = flatten(current);
+    let skip = |path: &str| opts.skip.iter().any(|s| !s.is_empty() && path.contains(s));
+    let mut rep = RegressReport::default();
+    for (path, &b) in &base {
+        if skip(path) {
+            rep.skipped += 1;
+            continue;
+        }
+        let dir = direction_for(path);
+        let Some(&c) = cur.get(path) else {
+            if dir != Direction::Informational {
+                rep.missing.push(path.clone());
+            }
+            continue;
+        };
+        // movement past the baseline in the bad direction, beyond the
+        // tolerance band scaled by the baseline's magnitude
+        let band = opts.rel_tol * b.abs().max(1e-12);
+        let regressed = match dir {
+            Direction::LowerIsBetter => c - b > band,
+            Direction::HigherIsBetter => b - c > band,
+            Direction::Informational => false,
+        };
+        rep.checks.push(MetricCheck { path: path.clone(), direction: dir, baseline: b, current: c, regressed });
+    }
+    for path in cur.keys() {
+        if !base.contains_key(path) && !skip(path) {
+            rep.added.push(path.clone());
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(qps: f64, p99: i64, bpr: f64) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str("m".into())),
+            (
+                "loads",
+                Json::Arr(vec![Json::obj(vec![
+                    ("label", Json::Str("low".into())),
+                    ("qps", Json::Num(qps)),
+                    ("p99_latency_us", Json::Int(p99)),
+                    ("bytes_per_request", Json::Num(bpr)),
+                    ("mean_batch", Json::Num(3.0)),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let a = doc(1000.0, 500, 4096.0);
+        let rep = compare(&a, &a, &RegressOptions::default());
+        assert!(rep.passed(), "{}", rep.render());
+        assert!(rep.regressions().is_empty());
+        assert!(rep.missing.is_empty() && rep.added.is_empty());
+    }
+
+    #[test]
+    fn directional_gating() {
+        let base = doc(1000.0, 500, 4096.0);
+        // qps fell 50%, latency doubled, bytes doubled: three regressions
+        let bad = compare(&base, &doc(500.0, 1000, 8192.0), &RegressOptions::default());
+        assert_eq!(bad.regressions().len(), 3, "{}", bad.render());
+        assert!(!bad.passed());
+        // everything *improved* by the same magnitudes: no regression
+        let good = compare(&base, &doc(2000.0, 250, 2048.0), &RegressOptions::default());
+        assert!(good.passed(), "{}", good.render());
+        // within tolerance: 10% worse everywhere passes at 15%
+        let ok = compare(&base, &doc(900.0, 550, 4505.0), &RegressOptions::default());
+        assert!(ok.passed(), "{}", ok.render());
+    }
+
+    #[test]
+    fn informational_metrics_never_gate() {
+        let base = doc(1000.0, 500, 4096.0);
+        let mut cur = doc(1000.0, 500, 4096.0);
+        if let Json::Obj(pairs) = &mut cur {
+            if let Some(Json::Arr(items)) = pairs.get_mut("loads") {
+                if let Json::Obj(row) = &mut items[0] {
+                    // wildly different, but direction unknown: not gated
+                    row.insert("mean_batch".to_string(), Json::Num(8.0));
+                }
+            }
+        }
+        let rep = compare(&base, &cur, &RegressOptions::default());
+        assert!(rep.passed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn missing_gated_metric_fails_and_skip_excuses_it() {
+        let base = doc(1000.0, 500, 4096.0);
+        let cur = Json::obj(vec![("model", Json::Str("m".into()))]);
+        let rep = compare(&base, &cur, &RegressOptions::default());
+        assert!(!rep.passed());
+        assert!(!rep.missing.is_empty());
+        let skipped = compare(
+            &base,
+            &cur,
+            &RegressOptions { rel_tol: 0.15, skip: vec!["loads".into()] },
+        );
+        assert!(skipped.passed(), "{}", skipped.render());
+        assert!(skipped.skipped > 0);
+    }
+
+    #[test]
+    fn labels_key_array_rows() {
+        let flat = flatten(&doc(1.0, 2, 3.0));
+        assert!(flat.contains_key("loads.low.qps"), "{flat:?}");
+        assert_eq!(direction_for("loads.low.qps"), Direction::HigherIsBetter);
+        assert_eq!(direction_for("loads.low.p99_latency_us"), Direction::LowerIsBetter);
+        assert_eq!(direction_for("loads.low.mean_batch"), Direction::Informational);
+    }
+}

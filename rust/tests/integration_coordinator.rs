@@ -12,6 +12,7 @@ fn concurrent_submitters() {
         max_batch: 8,
         max_wait: Duration::from_millis(1),
         queue_cap: 1 << 14,
+        ..Default::default()
     };
     let srv = std::sync::Arc::new(Server::start(EchoBackend::new(4, 8), cfg));
     let mut joins = vec![];
@@ -40,6 +41,7 @@ fn shutdown_drains_inflight() {
         max_batch: 4,
         max_wait: Duration::from_millis(5),
         queue_cap: 1024,
+        ..Default::default()
     };
     let mut be = EchoBackend::new(2, 4);
     be.delay = Duration::from_millis(1);
@@ -65,6 +67,7 @@ fn pjrt_backend_end_to_end() {
         max_batch: 8,
         max_wait: Duration::from_millis(2),
         queue_cap: 2048,
+        ..Default::default()
     };
     let srv = Server::start_with(
         move || {
@@ -130,6 +133,7 @@ fn injected_failures_are_isolated() {
         max_batch: 4,
         max_wait: Duration::from_millis(1),
         queue_cap: 4096,
+        ..Default::default()
     };
     let be = FlakyBackend { inner: EchoBackend::new(2, 4), calls: 0, fail_every: 3 };
     let srv = Server::start(be, cfg);
@@ -171,6 +175,7 @@ fn stress_conserves_every_request() {
         max_batch: 8,
         max_wait: Duration::from_micros(200),
         queue_cap: 64, // small: backpressure must engage
+        ..Default::default()
     };
     let mut be = EchoBackend::new(4, 8);
     be.delay = Duration::from_micros(300); // slow enough to fill the queue
@@ -216,6 +221,74 @@ fn stress_conserves_every_request() {
     let snap = srv.metrics().snapshot();
     assert_eq!(snap.requests, oks, "served != accepted");
     assert_eq!(snap.errors, 0);
+    // span conservation: every accepted request left exactly one
+    // complete six-phase chain behind — no orphans, no duplicates —
+    // and rejected submits left none (span ids are allocated after
+    // the backpressure gate)
+    assert_eq!(srv.recorder().spans_started(), oks, "span ids != accepted requests");
+    assert_eq!(srv.recorder().overwritten(), 0, "default ring too small for this load");
+    let chains = srv.recorder().chains();
+    assert_eq!(chains.len() as u64, oks, "orphan or missing span chains");
+    for (span, c) in &chains {
+        assert!(c.is_complete(), "span {span} has a broken chain: {c:?}");
+    }
+    // and the Chrome export of those chains stays B/E balanced
+    let j = polymem::util::json::parse(&srv.trace_chrome_json()).unwrap();
+    let mut depth = 0i64;
+    for e in j.get("traceEvents").unwrap().as_arr().unwrap() {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "B" => depth += 1,
+            "E" => {
+                depth -= 1;
+                assert!(depth >= 0, "E before matching B");
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(depth, 0, "unbalanced trace events");
+}
+
+/// The same threaded load against a deliberately tiny flight recorder:
+/// overwriting must stay invisible to callers — every accepted request
+/// still resolves correctly, and the ring stays at its bound.
+#[test]
+fn stress_bounded_recorder_never_perturbs_responses() {
+    const THREADS: u32 = 8;
+    const PER_THREAD: u32 = 150;
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        span_cap: 64, // far below 1200 requests × 6 events
+    };
+    let mut be = EchoBackend::new(4, 8);
+    be.delay = Duration::from_micros(300);
+    let srv = std::sync::Arc::new(Server::start(be, cfg));
+    let mut joins = vec![];
+    for t in 0..THREADS {
+        let srv = srv.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut oks = 0u64;
+            for k in 0..PER_THREAD {
+                let v = (t * 10_000 + k) as f32;
+                if let Ok(h) = srv.submit(vec![v; 4]) {
+                    assert_eq!(
+                        h.wait().expect("accepted request must resolve"),
+                        vec![2.0 * v; 4],
+                        "response corrupted under a wrapping recorder"
+                    );
+                    oks += 1;
+                }
+            }
+            oks
+        }));
+    }
+    let oks: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    srv.shutdown();
+    assert!(oks > 0);
+    assert!(srv.recorder().len() <= 64, "ring exceeded its bound");
+    assert!(srv.recorder().overwritten() > 0, "tiny ring never wrapped");
+    assert_eq!(srv.metrics().snapshot().requests, oks);
 }
 
 #[test]

@@ -79,6 +79,7 @@ fn planned_backend_serves_through_server() {
             max_batch: 4,
             max_wait: Duration::from_micros(200),
             queue_cap: 1024,
+            ..Default::default()
         },
     );
     let handles: Vec<_> = (0..32)
@@ -122,6 +123,7 @@ fn bucketized_serving_saves_bytes_on_planned_artifacts() {
         arrivals: Arrivals::Poisson { rate_qps: low_rate, requests: 1500, seed: 5 },
         max_wait: Duration::from_secs_f64(svc_max * 2.0),
         queue_cap: 64,
+        slo: None,
     };
     let bucketized = run_load(&costs, &cfg, "bucketized");
     let baseline = run_load(&fixed, &cfg, "fixed");

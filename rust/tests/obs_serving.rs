@@ -1,0 +1,198 @@
+//! Integration: request-scoped observability across the serving stack —
+//! span conservation in traced load simulations (synthetic zoo tables
+//! and real compiled artifacts), the cost-drift auditor on a live
+//! planned-backend server, and the Chrome export of virtual-time spans.
+
+use polymem::accel::AccelConfig;
+use polymem::coordinator::{BucketCost, Server, ServerConfig};
+use polymem::obs::FlightRecorder;
+use polymem::serve::{
+    run_load_traced, Arrivals, LoadSimConfig, PlanCache, PlanCacheConfig, PlannedBackend,
+};
+use std::time::Duration;
+
+/// Synthetic bucket table: off-chip bytes = weights + batch ×
+/// activations (the shape the plan cache produces for real models).
+fn table(weights: i64, act: i64, buckets: &[usize]) -> Vec<BucketCost> {
+    buckets
+        .iter()
+        .map(|&b| {
+            let bytes = weights + act * b as i64;
+            BucketCost { batch: b, offchip_bytes: bytes, service_seconds: bytes as f64 / 50e9 }
+        })
+        .collect()
+}
+
+fn sim_cfg(arrivals: Arrivals, queue_cap: usize) -> LoadSimConfig {
+    LoadSimConfig {
+        arrivals,
+        max_wait: Duration::from_micros(500),
+        queue_cap,
+        slo: None,
+    }
+}
+
+/// Every admitted request in a traced load sim must leave exactly one
+/// complete six-phase chain; rejected arrivals must leave none — across
+/// a zoo of cost-table shapes and arrival processes, including runs
+/// where backpressure sheds load.
+#[test]
+fn zoo_load_sims_conserve_spans() {
+    let zoo: Vec<(&str, Vec<BucketCost>)> = vec![
+        ("weights-heavy", table(8_000_000, 500_000, &[1, 2, 4, 8])),
+        ("activation-heavy", table(200_000, 4_000_000, &[1, 2, 4, 8])),
+        ("single-bucket", table(8_000_000, 500_000, &[8])),
+        ("sparse-buckets", table(2_000_000, 1_000_000, &[1, 16])),
+    ];
+    let loads: Vec<(&str, Arrivals, usize)> = vec![
+        ("closed", Arrivals::Closed { clients: 12, requests: 600 }, 64),
+        (
+            "poisson-low",
+            Arrivals::Poisson { rate_qps: 3_000.0, requests: 600, seed: 42 },
+            64,
+        ),
+        // far over capacity with a tight queue: rejects must happen
+        (
+            "poisson-shed",
+            Arrivals::Poisson { rate_qps: 60_000.0, requests: 600, seed: 7 },
+            8,
+        ),
+    ];
+    let mut shed_seen = false;
+    for (model, costs) in &zoo {
+        for (load, arrivals, queue_cap) in &loads {
+            let r = FlightRecorder::new(600 * 8);
+            let rep = run_load_traced(
+                costs,
+                &sim_cfg(*arrivals, *queue_cap),
+                &format!("{model}/{load}"),
+                Some(&r),
+            );
+            assert_eq!(
+                rep.completed + rep.rejected,
+                rep.submitted,
+                "{model}/{load}: requests lost"
+            );
+            // spans allocated only for admitted requests
+            assert_eq!(
+                r.spans_started(),
+                rep.completed,
+                "{model}/{load}: span ids != admitted requests"
+            );
+            let chains = r.chains();
+            assert_eq!(
+                chains.len() as u64,
+                rep.completed,
+                "{model}/{load}: orphan or missing chains"
+            );
+            for (span, c) in &chains {
+                assert!(c.is_complete(), "{model}/{load}: span {span} broken: {c:?}");
+            }
+            shed_seen |= rep.rejected > 0;
+        }
+    }
+    assert!(shed_seen, "no run ever shed load — the reject path went untested");
+}
+
+/// The same conservation over *real* compiled artifacts: plan-cache
+/// buckets for the mlp on the tiny 64 KiB accelerator, and the Chrome
+/// export of the resulting virtual-time spans stays B/E balanced.
+#[test]
+fn traced_load_sim_over_compiled_artifacts_exports_chrome() {
+    let mut cache = PlanCache::new(
+        "mlp",
+        PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true },
+    );
+    let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
+    let costs: Vec<BucketCost> = arts
+        .iter()
+        .map(|a| BucketCost {
+            batch: a.batch as usize,
+            offchip_bytes: a.cost.offchip_total(),
+            service_seconds: a.service_seconds,
+        })
+        .collect();
+    let svc_max = costs.iter().map(|c| c.service_seconds).fold(0.0f64, f64::max);
+    let r = FlightRecorder::new(500 * 8);
+    let rep = run_load_traced(
+        &costs,
+        &LoadSimConfig {
+            arrivals: Arrivals::Closed { clients: 6, requests: 500 },
+            max_wait: Duration::from_secs_f64(svc_max * 2.0),
+            queue_cap: 64,
+            slo: None,
+        },
+        "mlp/traced",
+        Some(&r),
+    );
+    assert_eq!(rep.completed, 500);
+    let chains = r.chains();
+    assert_eq!(chains.len(), 500);
+    assert!(chains.values().all(|c| c.is_complete()));
+    // flush accounting is consistent with the chains
+    let flushes: u64 = rep.flushes_by_bucket.values().sum();
+    assert_eq!(flushes, rep.batches);
+    // the chrome export parses, balances, and carries the bucket
+    // counter track of flush decisions
+    let j = polymem::util::json::parse(&r.to_chrome().to_json().to_string_compact()).unwrap();
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let mut depth = 0i64;
+    let mut counters = 0usize;
+    for e in evs {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "B" => depth += 1,
+            "E" => {
+                depth -= 1;
+                assert!(depth >= 0, "E before matching B");
+            }
+            "C" => counters += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(depth, 0, "unbalanced trace");
+    assert!(counters > 0, "no bucket counter events exported");
+}
+
+/// The drift auditor's contract on a live server: a `PlannedBackend`
+/// replays exactly the plan-cache numbers it published, so per-bucket
+/// drift is byte-exact zero (bytes) and bit-exact zero (seconds).
+#[test]
+fn planned_backend_cost_drift_is_exactly_zero() {
+    let mut cache = PlanCache::new(
+        "mlp",
+        PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true },
+    );
+    let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
+    let in_len = arts[0].in_len;
+    let be = PlannedBackend::new(arts).unwrap().with_time_scale(0.0);
+    let srv = Server::start(
+        be,
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> = (0..48)
+        .map(|k| srv.submit(vec![k as f32; in_len]).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let snap = srv.metrics().snapshot();
+    assert_eq!(snap.requests, 48);
+    assert!(!snap.drift.is_empty(), "drift auditor never engaged");
+    let mut audited = 0u64;
+    for (bucket, d) in &snap.drift {
+        audited += d.batches;
+        assert_eq!(d.bytes_drift(), 0, "bucket {bucket}: off-chip bytes drifted");
+        assert_eq!(d.seconds_drift(), 0.0, "bucket {bucket}: service seconds drifted");
+    }
+    assert_eq!(audited, snap.batches, "some batches escaped the audit");
+    let text = srv.metrics_text();
+    assert!(text.contains("polymem_cost_drift_bytes"), "{text}");
+    assert!(text.contains("polymem_cost_drift_seconds"), "{text}");
+    srv.shutdown();
+}

@@ -18,6 +18,7 @@ fn every_request_answered_correctly() {
             max_batch,
             max_wait: Duration::from_micros(100 + g.u64() % 2000),
             queue_cap: 1 << 14,
+            ..Default::default()
         };
         let srv = Server::start(be, cfg);
         let handles: Vec<_> = (0..n)
@@ -45,28 +46,30 @@ fn batcher_never_exceeds_max_batch() {
         let policy = BatchPolicy::new(max_batch, Duration::from_millis(g.u64() % 50));
         let mut b = Batcher::new(policy);
         let t0 = Instant::now();
-        let mut pushed = 0usize;
-        let mut taken = 0usize;
+        let mut pushed = 0u64;
+        let mut taken: Vec<u64> = Vec::new();
         for _ in 0..g.usize_in(1, 100) {
             if g.bool() {
-                b.push(t0);
+                b.push(t0, pushed);
                 pushed += 1;
             } else {
-                let n = b.take(max_batch);
-                assert!(n <= max_batch);
-                taken += n;
+                let ids = b.take(max_batch);
+                assert!(ids.len() <= max_batch);
+                taken.extend(ids);
             }
-            assert_eq!(b.pending(), pushed - taken, "accounting broken");
+            assert_eq!(b.pending() as u64, pushed - taken.len() as u64, "accounting broken");
         }
         // drain
         loop {
-            let n = b.take(max_batch);
-            if n == 0 {
+            let ids = b.take(max_batch);
+            if ids.is_empty() {
                 break;
             }
-            taken += n;
+            taken.extend(ids);
         }
-        assert_eq!(pushed, taken, "requests lost or invented");
+        // conservation with identity: every pushed span id comes back
+        // exactly once, in FIFO order
+        assert_eq!(taken, (0..pushed).collect::<Vec<u64>>(), "ids lost, invented or reordered");
     });
 }
 
@@ -79,8 +82,8 @@ fn batcher_poll_consistent() {
         let t0 = Instant::now();
         assert_eq!(b.poll(t0), Flush::Empty);
         let n = g.usize_in(1, 40);
-        for _ in 0..n {
-            b.push(t0);
+        for k in 0..n {
+            b.push(t0, k as u64);
         }
         match b.poll(t0) {
             Flush::Now => assert!(n >= max_batch),
