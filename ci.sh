@@ -69,6 +69,23 @@ echo "== bench-regress: BENCH_serving.json vs BENCH_baseline/ =="
     --skip compile_seconds,live_server \
     --seed-missing
 
+# Compiler-speed gate: the compile-phases record tracks joint-search
+# throughput (candidates/second at beam widths 3/8/16, and the
+# incremental-vs-full-serial speedup ratio — higher-is-better) plus the
+# deterministic search outcomes (best_offchip, pipelined seconds —
+# lower-is-better). Raw wall-clock paths (per-model mean_seconds, pass
+# phase times, search/pool wall seconds) stay informational via --skip;
+# throughput gets a generous 50% band since it is machine-sensitive,
+# while the outcome metrics are bit-deterministic and effectively gated
+# at equality.
+echo "== bench-regress: BENCH_compile_phases.json vs BENCH_baseline/ =="
+./target/release/polymem bench-regress \
+    --baseline BENCH_baseline/BENCH_compile_phases.json \
+    --current target/BENCH_compile_phases.json \
+    --tol 0.5 \
+    --skip mean_seconds,search_seconds,wall_seconds,phases,busy \
+    --seed-missing
+
 # Telemetry smoke: the acceptance scenario end to end — optimize full
 # ResNet-50 under a cramped 2 MiB scratchpad, export the Chrome trace,
 # print the per-layer attribution table and the compile-phase profile.

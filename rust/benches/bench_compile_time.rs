@@ -2,17 +2,26 @@
 //! a production toolchain run across every model in the zoo.
 //!
 //! Also the compile-telemetry artifact: emits per-model pass-phase
-//! wall times and one joint-search profile (generations, best-cost
-//! trajectory, candidates/second) to
-//! `$BENCH_JSON_DIR/BENCH_compile_phases.json` (ci.sh collects it).
+//! wall times, one joint-search profile (generations, best-cost
+//! trajectory, candidates/second) and the beam-width sweep — search
+//! throughput at widths {3, 8, 16} against the pre-memoization
+//! full-serial realization path — to
+//! `$BENCH_JSON_DIR/BENCH_compile_phases.json` (ci.sh collects it and
+//! gates it against `BENCH_baseline/`).
 //!
 //! Run: `cargo bench --bench bench_compile_time`
 
 use polymem::accel::AccelConfig;
+use polymem::alloc::AllocOpts;
+use polymem::ir::loopnest::Program;
 use polymem::ir::Graph;
-use polymem::passes::manager::{AllocStage, OptStage, PassManager};
+use polymem::opt::{realize_full, search, OptOpts};
+use polymem::passes::manager::{AllocStage, BankMode, OptStage, PassManager};
+use polymem::passes::{run_dme, BankConfig};
+use polymem::tile::TileOpts;
 use polymem::util::bench::{black_box, write_json_record, Bench, Suite};
 use polymem::util::json::Json;
+use std::time::Instant;
 
 fn zoo() -> Vec<(&'static str, Box<dyn Fn() -> Graph>)> {
     vec![
@@ -35,18 +44,25 @@ fn two_mib() -> AccelConfig {
 fn main() {
     let mut suite = Suite::new("compile-time scaling (full pipeline: lower + DME + global bank mapping)");
     let mut model_records: Vec<Json> = Vec::new();
+    let mut resnet50_phases: Vec<polymem::obs::PhaseSample> = Vec::new();
     for (name, build) in zoo() {
         let nodes = build().nodes().len();
+        // every sample is instrumented (PassReport always carries phase
+        // times); the last sample's report doubles as the phase record,
+        // so the old separate phase-record run is gone
+        let mut last = None;
         let stats = Bench::new(format!("{name} ({nodes} nodes)"))
             .samples(10)
             .throughput_items(nodes as f64)
             .run(|| {
-                let pm = PassManager::default();
-                black_box(pm.run(build()).unwrap())
+                last = Some(PassManager::default().run(build()).unwrap());
             });
-        // one instrumented run for the per-phase wall-time record
-        let rep = PassManager::default().run(build()).unwrap();
+        let rep = last.expect("bench ran at least one sample");
+        if name == "resnet50" {
+            resnet50_phases = rep.phases.clone();
+        }
         model_records.push(Json::obj(vec![
+            ("label", Json::Str(name.to_string())),
             ("model", Json::Str(name.to_string())),
             ("nodes", Json::Int(nodes as i64)),
             ("mean_seconds", Json::Num(stats.mean.as_secs_f64())),
@@ -58,11 +74,10 @@ fn main() {
         suite.add(stats);
     }
 
-    // pass-phase breakdown on the largest model
+    // pass-phase breakdown on the largest model (reused from the
+    // sample loop, not a fresh pipeline run)
     println!("\nphase breakdown on resnet50:");
-    let pm = PassManager::default();
-    let rep = pm.run(polymem::models::resnet50(1)).unwrap();
-    for p in &rep.phases {
+    for p in &resnet50_phases {
         println!("  {:<6} {:.6}s", p.name, p.seconds);
     }
 
@@ -89,8 +104,8 @@ fn main() {
     }
     let cps = os.candidates as f64 / os.search_seconds.max(1e-9);
     println!(
-        "  search: {} candidates in {:.3}s ({cps:.1} candidates/s)",
-        os.candidates, os.search_seconds
+        "  search: {} candidates in {:.3}s ({cps:.1} candidates/s, {} threads)",
+        os.candidates, os.search_seconds, os.threads
     );
     let opt_profile = Json::obj(vec![
         ("model", Json::Str("mobilenet".to_string())),
@@ -103,11 +118,92 @@ fn main() {
         ("candidates_per_second", Json::Num(cps)),
     ]);
 
+    // beam-width sweep: the incremental+parallel search vs the
+    // pre-memoization reference on the acceptance workload. For each
+    // width the exact audited candidate set is re-realized from
+    // scratch, serially, through the unshared tile → bank → splice →
+    // plan path (`realize_full`) — which both times the old cost per
+    // candidate honestly and live-checks the calibration contract.
+    println!("\njoint-search beam sweep (resnet50 @ 2 MiB):");
+    let prog = {
+        let mut p = Program::lower(polymem::models::resnet50(1));
+        run_dme(&mut p);
+        p
+    };
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for width in [3usize, 8, 16] {
+        let opts = OptOpts { beam_width: width, threads: 0 };
+        let t0 = Instant::now();
+        let out = search(
+            &prog,
+            BankMode::Global,
+            &BankConfig::default(),
+            &cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+            &opts,
+        )
+        .unwrap();
+        let search_wall = t0.elapsed().as_secs_f64();
+        let cand_per_s = out.stats.candidates as f64 / search_wall.max(1e-9);
+        let t1 = Instant::now();
+        for (dv, cost) in &out.audit {
+            let full = realize_full(
+                &prog,
+                *dv,
+                BankMode::Global,
+                &BankConfig::default(),
+                &cfg,
+                &TileOpts::default(),
+                &AllocOpts::default(),
+            )
+            .unwrap();
+            assert!(
+                full.bits_eq(cost),
+                "calibration violated at beam {width}: {}",
+                dv.describe()
+            );
+            black_box(full);
+        }
+        let serial_wall = t1.elapsed().as_secs_f64();
+        let serial_per_s = out.audit.len() as f64 / serial_wall.max(1e-9);
+        let speedup = serial_wall / search_wall.max(1e-9);
+        println!(
+            "  beam {width:>2}: {} candidates | incremental {cand_per_s:>8.1} cand/s \
+             ({} threads) | full-serial {serial_per_s:>8.1} cand/s | speedup {speedup:>5.1}x \
+             | best {} via {}",
+            out.stats.candidates,
+            out.stats.threads,
+            polymem::report::mb(out.stats.best_offchip),
+            out.stats.decision
+        );
+        sweep_rows.push(Json::obj(vec![
+            ("label", Json::Str(format!("beam{width}"))),
+            ("beam_width", Json::Int(width as i64)),
+            ("threads", Json::Int(out.stats.threads as i64)),
+            ("candidates", Json::Int(out.stats.candidates as i64)),
+            ("pruned", Json::Int(out.stats.pruned as i64)),
+            ("search_wall_seconds", Json::Num(search_wall)),
+            ("candidates_per_second", Json::Num(cand_per_s)),
+            ("full_serial_wall_seconds", Json::Num(serial_wall)),
+            ("full_serial_candidates_per_second", Json::Num(serial_per_s)),
+            ("speedup_vs_full_serial", Json::Num(speedup)),
+            ("best_offchip", Json::Int(out.stats.best_offchip)),
+            ("decision", Json::Str(out.stats.decision.clone())),
+        ]));
+    }
+    let beam_sweep = Json::obj(vec![
+        ("model", Json::Str("resnet50".to_string())),
+        ("accel", cfg.to_json()),
+        ("widths", Json::Arr(sweep_rows)),
+    ]);
+
     write_json_record(
         "BENCH_compile_phases.json",
         &Json::obj(vec![
             ("models", Json::Arr(model_records)),
             ("opt_profile", opt_profile),
+            ("beam_sweep", beam_sweep),
         ]),
     );
 

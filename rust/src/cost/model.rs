@@ -76,6 +76,19 @@ impl CostBreakdown {
         self.staging_deposit_bytes + self.traffic.onchip_total()
     }
 
+    /// Bit-exact equality: every traffic class byte-for-byte, the
+    /// latency estimates compared on raw `f64` bits (`to_bits`, so
+    /// NaN == NaN and -0.0 != 0.0). This is the bar the joint search's
+    /// memoized scores are held to against the from-scratch
+    /// realization path (`tests/opt_calibration.rs`).
+    pub fn bits_eq(&self, other: &CostBreakdown) -> bool {
+        self.traffic == other.traffic
+            && self.staging_deposit_bytes == other.staging_deposit_bytes
+            && self.serial_seconds.to_bits() == other.serial_seconds.to_bits()
+            && self.pipelined_seconds.to_bits() == other.pipelined_seconds.to_bits()
+            && self.peak_scratchpad == other.peak_scratchpad
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("offchip_total", Json::Int(self.offchip_total())),
@@ -376,6 +389,26 @@ mod tests {
         assert_eq!(cost.staging_deposit_bytes, sim.staging_deposit_bytes);
         assert_eq!(cost.serial_seconds, sim.seconds);
         assert_eq!(cost.peak_scratchpad, sim.peak_scratchpad);
+    }
+
+    #[test]
+    fn bits_eq_is_bitwise_on_seconds() {
+        let cfg = AccelConfig::tiny(8 * 1024);
+        let pm = PassManager {
+            alloc: Some(AllocStage::for_accel(cfg.clone())),
+            ..Default::default()
+        };
+        let rep = pm.run(chain()).unwrap();
+        let plan = rep.plan.as_ref().unwrap();
+        let a = evaluate(&rep.program, plan, &cfg);
+        let b = evaluate(&rep.program, plan, &cfg);
+        assert!(a.bits_eq(&b), "deterministic evaluate must be bit-stable");
+        let mut flipped = a.clone();
+        flipped.pipelined_seconds = f64::from_bits(flipped.pipelined_seconds.to_bits() ^ 1);
+        assert!(!a.bits_eq(&flipped), "a single flipped mantissa bit must be caught");
+        let mut bumped = a.clone();
+        bumped.staging_deposit_bytes += 1;
+        assert!(!a.bits_eq(&bumped));
     }
 
     #[test]

@@ -372,7 +372,10 @@ fn cmd_simulate_compare(
     }
     if p.has_flag("opt") {
         let mut pm = pm_base.clone();
-        pm.opt = Some(OptStage::for_accel(cfg.clone()));
+        let mut stage = OptStage::for_accel(cfg.clone());
+        // 0 keeps the auto default (POLYMEM_SEARCH_THREADS, else cores)
+        stage.opts.threads = p.get_usize("search-threads").unwrap_or(0);
+        pm.opt = Some(stage);
         pm.alloc = Some(AllocStage::for_accel(cfg.clone()));
         let rep = pm.run(g).map_err(|e| e.to_string())?;
         let plan = rep.plan.as_ref().expect("alloc stage ran");
@@ -626,6 +629,12 @@ fn app() -> App {
                 )
                 .opt("serve-buckets", "1,2,4,8", "bucket batch sizes for --serve-trace-out")
                 .opt("serve-requests", "512", "simulated requests for --serve-trace-out")
+                .opt(
+                    "search-threads",
+                    "0",
+                    "joint-search worker threads for --opt \
+                     (0 = auto: POLYMEM_SEARCH_THREADS, else all cores)",
+                )
                 .flag("no-dme", "disable data-movement elimination")
                 .flag("no-verify", "skip inter-pass verification")
                 .flag("plan", "add the static-plan replay to the comparison")

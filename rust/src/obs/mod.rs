@@ -169,6 +169,24 @@ impl Collector {
         out
     }
 
+    /// Merge a whole snapshot into this collector: counters add,
+    /// histograms merge bucket-wise, phases append. This is how the
+    /// joint search folds per-worker telemetry into the global
+    /// collector in one locked step — workers record into plain
+    /// [`ObsSnapshot`]s (or [`crate::opt`]'s pool reports) off to the
+    /// side instead of contending on the global mutex per sample.
+    pub fn absorb(&self, other: &ObsSnapshot) {
+        self.with(|s| {
+            for (k, v) in &other.counters {
+                *s.counters.entry(k.clone()).or_insert(0) += v;
+            }
+            for (k, h) in &other.histograms {
+                s.histograms.entry(k.clone()).or_default().merge(h);
+            }
+            s.phases.extend(other.phases.iter().cloned());
+        });
+    }
+
     pub fn snapshot(&self) -> ObsSnapshot {
         self.inner.lock().unwrap().clone().unwrap_or_default()
     }
@@ -244,6 +262,34 @@ mod tests {
         );
         c.reset();
         assert!(c.snapshot().counters.is_empty());
+    }
+
+    #[test]
+    fn absorb_merges_counters_histograms_and_phases() {
+        let worker_a = {
+            let c = Collector::new();
+            c.add("pool.jobs", 3);
+            c.observe("pool.lat", 10);
+            c.phase("pool.busy", 0.25);
+            c.snapshot()
+        };
+        let worker_b = {
+            let c = Collector::new();
+            c.add("pool.jobs", 4);
+            c.observe("pool.lat", 30);
+            c.phase("pool.busy", 0.5);
+            c.snapshot()
+        };
+        let sink = Collector::new();
+        sink.add("pool.jobs", 1); // pre-existing counts accumulate, not overwrite
+        sink.absorb(&worker_a);
+        sink.absorb(&worker_b);
+        let s = sink.snapshot();
+        assert_eq!(s.counters.get("pool.jobs"), Some(&8));
+        assert_eq!(s.histograms.get("pool.lat").map(|h| h.count()), Some(2));
+        assert_eq!(s.histograms.get("pool.lat").map(|h| h.sum()), Some(40));
+        assert_eq!(s.phases.len(), 2);
+        assert!(s.phases.iter().all(|p| p.name == "pool.busy"));
     }
 
     #[test]

@@ -33,11 +33,46 @@
 //! variants are also pruned when the incumbent's plan had no spill
 //! activity for the flavor to change.
 //!
-//! The search is deterministic, so the winning tiled program plus its
-//! [`AllocOpts`] replayed by the pass manager's downstream stages
-//! reproduce the winning plan exactly — which is how the differential
-//! oracle can hold the `opt` snapshot to the same bit-identity bar as
-//! every other stage (lower → dme → **opt** → bank → plan).
+//! # Incremental realization (the memoization tiers)
+//!
+//! Realization is factored so work shared between neighboring decision
+//! vectors is computed once instead of per candidate:
+//!
+//! * **tier 0, once per search** — the bank mapping. Tiling rewrites
+//!   only `Program::nests`; the graph the bank passes consume is
+//!   untouched by every tiling decision, so one assignment (and its
+//!   remap graph) serves every candidate. The old path recomputed it
+//!   on each realization.
+//! * **tier 1, once per tiling decision** — [`stage_tile`] produces a
+//!   [`Staged`] artifact: the tiled program plus the copy-spliced
+//!   planning input. Every alloc-axis variant of one tile survivor
+//!   shares it through an `Arc` (the old path re-tiled and re-spliced
+//!   per spill-flavor/lookahead variant).
+//! * **tier 2, per decision vector** — [`realize_alloc`]: static plan
+//!   plus [`evaluate`] on the shared staged artifact. This is the only
+//!   per-candidate work, and it *is* the score — no approximation is
+//!   introduced anywhere, which is why the memoized scores are
+//!   byte-identical to the from-scratch path ([`realize_full`], held
+//!   to bit-exactness by `tests/opt_calibration.rs`).
+//!
+//! # Parallel realization and the determinism contract
+//!
+//! Each stage's generation is realized concurrently by a zero-dep
+//! scoped worker pool ([`pool`]) — [`OptOpts::threads`], with the
+//! `POLYMEM_SEARCH_THREADS` env override — and then **reduced in
+//! candidate-generation order**, replaying exactly the serial search's
+//! branch-and-bound decisions: the compulsory-floor cut depends only
+//! on already-reduced candidates, and stage-2 pruning (seed-equal and
+//! idle-spiller variants) is decided from stage-1 results before any
+//! stage-2 job is enqueued. Parallelism can therefore only realize
+//! candidates *speculatively past* a serial cut (counted as pruned,
+//! exactly as the serial search counts them) — `trajectory`,
+//! [`GenerationStats`], and the winning [`DecisionVector`] are
+//! independent of thread count (`tests/opt_threads.rs`), so the
+//! differential oracle's lower → dme → **opt** → bank → plan
+//! bit-identity holds at any thread count.
+
+mod pool;
 
 use crate::accel::config::AccelConfig;
 use crate::alloc::{AllocOpts, PlanError, PlanStats, SpillFlavor};
@@ -45,22 +80,50 @@ use crate::cost::{
     compulsory_offchip, evaluate, AllocDecision, CostBreakdown, DecisionVector, TileDecision,
 };
 use crate::ir::loopnest::Program;
-use crate::passes::bank::BankConfig;
+use crate::passes::bank::{BankAssignment, BankConfig};
 use crate::passes::manager::BankMode;
 use crate::tile::{FusePolicy, TileOpts, TileStats};
 use crate::util::json::Json;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Joint-search configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct OptOpts {
     /// Fusion/tiling candidates surviving into the allocation stage.
+    /// The winner is monotone in this width (a wider beam only adds
+    /// candidates to a min), and the extra stage-2 expansions ride the
+    /// cheap memoized tier — which is what paid for raising the
+    /// default from 3 to 8.
     pub beam_width: usize,
+    /// Worker threads for candidate realization. `0` means auto:
+    /// `POLYMEM_SEARCH_THREADS` if set, else all available cores.
+    /// Never affects the search outcome — only wall time.
+    pub threads: usize,
 }
 
 impl Default for OptOpts {
     fn default() -> Self {
-        OptOpts { beam_width: 3 }
+        OptOpts { beam_width: 8, threads: 0 }
+    }
+}
+
+impl OptOpts {
+    /// The worker count [`search`] will actually use: an explicit
+    /// `threads` wins, else the `POLYMEM_SEARCH_THREADS` environment
+    /// override, else the machine's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Ok(v) = std::env::var("POLYMEM_SEARCH_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 }
 
@@ -114,6 +177,9 @@ pub struct OptStats {
     pub trajectory: Vec<i64>,
     /// Wall time of the whole search.
     pub search_seconds: f64,
+    /// Worker threads the search actually used (resolved from
+    /// [`OptOpts::threads`] / `POLYMEM_SEARCH_THREADS` / core count).
+    pub threads: usize,
 }
 
 impl OptStats {
@@ -134,26 +200,54 @@ impl OptStats {
                 Json::Arr(self.trajectory.iter().map(|&v| Json::Int(v)).collect()),
             ),
             ("search_seconds", Json::Num(self.search_seconds)),
+            ("threads", Json::Int(self.threads as i64)),
         ])
     }
 }
 
 /// The search's product: the winning candidate's transformed (tiled,
 /// pre-bank) program, the planner configuration that reproduces its
-/// plan downstream, and the stats.
+/// plan downstream, the stats, and the audit trail — every realized
+/// candidate with its memoized score, in realization order (what the
+/// calibration test replays through [`realize_full`]).
 #[derive(Clone, Debug)]
 pub struct OptOutcome {
     pub program: Program,
     pub alloc_opts: AllocOpts,
     pub tile_stats: Option<TileStats>,
     pub stats: OptStats,
+    pub audit: Vec<(DecisionVector, CostBreakdown)>,
+}
+
+/// Everything the search holds constant across candidates, plus the
+/// tier-0 memo: the bank assignment, computed once per search (tiling
+/// never touches the graph the bank passes read).
+struct SearchCtx<'a> {
+    program: &'a Program,
+    bank: Option<BankAssignment>,
+    accel: &'a AccelConfig,
+    base_tile: &'a TileOpts,
+    base_alloc: &'a AllocOpts,
+}
+
+/// Tier-1 memo: everything downstream of one fusion/tiling decision
+/// that is invariant across its alloc-axis variants. Shared by `Arc` —
+/// stage 2 never re-tiles or re-splices.
+struct Staged {
+    tile: Option<TileDecision>,
+    /// The tiled, pre-bank program (what [`OptOutcome::program`]
+    /// carries for the winner).
+    tiled: Program,
+    /// The tiled program with bank remap copies spliced in: the
+    /// planning input for every alloc variant of this tile decision.
+    spliced: Program,
+    tile_stats: Option<TileStats>,
 }
 
 /// One fully realized candidate.
 struct Realized {
     dv: DecisionVector,
-    tiled: Program,
-    tile_stats: Option<TileStats>,
+    staged: Arc<Staged>,
     plan_stats: PlanStats,
     cost: CostBreakdown,
 }
@@ -165,11 +259,59 @@ fn better(a: &CostBreakdown, b: &CostBreakdown) -> bool {
     ao < bo || (ao == bo && a.pipelined_seconds < b.pipelined_seconds)
 }
 
-/// Realize one decision vector end to end: clone the (post-DME)
-/// program, tile it per the vector, run the configured bank mapping,
-/// splice the remap copies, plan memory, and score with the cost
-/// model.
-fn realize(
+/// Tier 1: tile the program per the decision and splice the (shared)
+/// bank's remap copies — the artifact every alloc-axis variant of this
+/// tiling decision reuses.
+fn stage_tile(ctx: &SearchCtx, tile: Option<TileDecision>) -> Staged {
+    let mut prog = ctx.program.clone();
+    let tile_stats = tile.map(|td| {
+        crate::tile::run_tiling_with(
+            &mut prog,
+            ctx.accel,
+            &td.to_opts_on(*ctx.base_tile),
+            &crate::cost::GreedyPolicy,
+        )
+    });
+    let tiled = prog.clone();
+    if let Some(b) = &ctx.bank {
+        crate::passes::manager::splice_memcopies(&mut prog, &b.graph);
+    }
+    Staged { tile, tiled, spliced: prog, tile_stats }
+}
+
+/// Tier 2: plan and score one alloc variant on a shared staged
+/// artifact. This is the per-candidate work — and the score it
+/// produces is the full cost model on the fully planned program, not
+/// an estimate.
+fn realize_alloc(
+    ctx: &SearchCtx,
+    staged: &Arc<Staged>,
+    av: AllocDecision,
+) -> Result<Realized, PlanError> {
+    let res = crate::alloc::plan_memory(
+        staged.spliced.clone(),
+        ctx.bank.as_ref(),
+        ctx.accel,
+        &av.to_opts_on(*ctx.base_alloc),
+    )?;
+    let cost = evaluate(&res.program, &res.plan, ctx.accel);
+    Ok(Realized {
+        dv: DecisionVector { tile: staged.tile, alloc: av },
+        staged: Arc::clone(staged),
+        plan_stats: res.plan.stats,
+        cost,
+    })
+}
+
+/// Realize one decision vector **from scratch** through the full
+/// tile → bank → splice → plan → score path, sharing nothing between
+/// candidates: the pre-memoization reference implementation. The
+/// incremental search is calibrated against it —
+/// `tests/opt_calibration.rs` holds every audited candidate score to
+/// byte-exact (seconds bit-exact) equality with this path, and
+/// `bench_compile_time` times it over the audited candidate set to
+/// measure the memoization speedup honestly.
+pub fn realize_full(
     program: &Program,
     dv: DecisionVector,
     bank_mode: BankMode,
@@ -177,17 +319,16 @@ fn realize(
     accel: &AccelConfig,
     base_tile: &TileOpts,
     base_alloc: &AllocOpts,
-) -> Result<Realized, PlanError> {
+) -> Result<CostBreakdown, PlanError> {
     let mut prog = program.clone();
-    let tile_stats = dv.tile.map(|td| {
+    if let Some(td) = dv.tile {
         crate::tile::run_tiling_with(
             &mut prog,
             accel,
             &td.to_opts_on(*base_tile),
             &crate::cost::GreedyPolicy,
-        )
-    });
-    let tiled = prog.clone();
+        );
+    }
     let bank = match bank_mode {
         BankMode::None => None,
         BankMode::Local => Some(crate::passes::bank_local::run_local(&prog.graph, bank_cfg)),
@@ -200,19 +341,13 @@ fn realize(
     }
     let res =
         crate::alloc::plan_memory(prog, bank.as_ref(), accel, &dv.alloc.to_opts_on(*base_alloc))?;
-    let cost = evaluate(&res.program, &res.plan, accel);
-    Ok(Realized {
-        dv,
-        tiled,
-        tile_stats,
-        plan_stats: res.plan.stats,
-        cost,
-    })
+    Ok(evaluate(&res.program, &res.plan, accel))
 }
 
 /// The fusion/tiling axis explored in stage 1: the caller's seed
-/// first, then untiled, then the fixed exploration set (minus any
-/// entry equal to the seed).
+/// first, then untiled, then the fixed exploration set — minus any
+/// entry equal to one already pushed (the seed may coincide with any
+/// member of the fixed set, not just `out[0]`).
 fn tile_candidates(seed: TileDecision) -> Vec<Option<TileDecision>> {
     let mut out: Vec<Option<TileDecision>> = vec![Some(seed), None];
     for cand in [
@@ -222,11 +357,31 @@ fn tile_candidates(seed: TileDecision) -> Vec<Option<TileDecision>> {
         TileDecision { budget_fraction: 0.5, fuse: FusePolicy::ConvChain { depth: 2 } },
         TileDecision { budget_fraction: 0.25, fuse: FusePolicy::ConvChain { depth: 1 } },
     ] {
-        if Some(cand) != out[0] {
+        if !out.contains(&Some(cand)) {
             out.push(Some(cand));
         }
     }
     out
+}
+
+/// Fold a worker pool's per-thread activity into the global telemetry
+/// collector in one locked absorb (workers never touch the collector
+/// themselves, so realization stays side-effect free and reorderable).
+fn merge_pool_obs(stage: &str, rep: &pool::PoolReport) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let mut snap = crate::obs::ObsSnapshot::default();
+    snap.counters.insert(format!("{stage}.workers"), rep.per_thread.len() as i64);
+    snap.counters.insert(format!("{stage}.jobs"), rep.jobs() as i64);
+    for (t, st) in rep.per_thread.iter().enumerate() {
+        snap.counters.insert(format!("{stage}.worker{t}.jobs"), st.jobs as i64);
+        snap.phases.push(crate::obs::PhaseSample::new(
+            &format!("{stage}.worker{t}.busy"),
+            st.busy_seconds,
+        ));
+    }
+    crate::obs::global().absorb(&snap);
 }
 
 /// Run the joint search over `program` (the post-DME snapshot). The
@@ -248,34 +403,74 @@ pub fn search(
     opts: &OptOpts,
 ) -> Result<OptOutcome, PlanError> {
     let t_search = Instant::now();
+    let threads = opts.resolved_threads();
     let floor = compulsory_offchip(program);
+
+    // tier 0: one bank mapping serves every candidate — tiling only
+    // rewrites nests, so the graph the bank passes read is identical
+    // for all of them (the differential suite pins this: the spliced
+    // programs match the old per-candidate recomputation bit-exactly)
+    let t_bank = Instant::now();
+    let bank = match bank_mode {
+        BankMode::None => None,
+        BankMode::Local => Some(crate::passes::bank_local::run_local(&program.graph, bank_cfg)),
+        BankMode::Global => {
+            Some(crate::passes::bank_global::run_global(&program.graph, bank_cfg))
+        }
+    };
+    crate::obs::phase("opt.bank_once", t_bank.elapsed().as_secs_f64());
+    let ctx = SearchCtx { program, bank, accel, base_tile, base_alloc };
+
     let mut candidates = 0usize;
     let mut pruned = 0usize;
     // search profile: running-min off-chip after each realization, plus
-    // per-stage generation rows
+    // per-stage generation rows and the per-candidate audit trail
     let mut trajectory: Vec<i64> = Vec::new();
+    let mut audit: Vec<(DecisionVector, CostBreakdown)> = Vec::new();
     let mut best_so_far = i64::MAX;
 
     // ---- stage 1: fusion/tiling axis ----
     // the seed's coordinates are the *caller's* (the true staged-greedy
     // baseline), not the crate defaults
     let seed_alloc = AllocDecision { lookahead: base_alloc.lookahead, spill: base_alloc.spill };
+    let tiles = tile_candidates(TileDecision::from_opts(base_tile));
+    let realize_tile = |tile: &Option<TileDecision>| {
+        let staged = Arc::new(stage_tile(&ctx, *tile));
+        realize_alloc(&ctx, &staged, seed_alloc)
+    };
+    // multi-threaded: realize the whole generation speculatively, then
+    // reduce in generation order below (work past the floor cut is
+    // discarded). single-threaded: realize lazily inside the reduction
+    // so the cut skips the work exactly like the pre-parallel search.
+    let results: Box<dyn Iterator<Item = Result<Realized, PlanError>> + '_> = if threads > 1 {
+        let (r, rep) = pool::parallel_map(&tiles, threads, |_, tile| realize_tile(tile));
+        merge_pool_obs("opt.pool.tile", &rep);
+        Box::new(r.into_iter())
+    } else {
+        Box::new(tiles.iter().map(&realize_tile))
+    };
+
+    let mut results = results;
     let mut beam: Vec<Realized> = Vec::new();
     let mut baseline_offchip = 0i64;
-    let tiles = tile_candidates(TileDecision::from_opts(base_tile));
-    for (i, tile) in tiles.iter().enumerate() {
+    let mut i = 0usize;
+    loop {
+        // check the cut BEFORE pulling the next result: on the lazy
+        // serial path this skips the realization itself, exactly like
+        // the pre-parallel search
         if beam.first().map(|b| b.cost.offchip_total() == floor).unwrap_or(false) {
             pruned += tiles.len() - i;
             crate::obs::add("opt.pruned", (tiles.len() - i) as i64);
             break; // branch-and-bound: the incumbent hit the floor
         }
-        let dv = DecisionVector { tile: *tile, alloc: seed_alloc };
-        match realize(program, dv, bank_mode, bank_cfg, accel, base_tile, base_alloc) {
+        let Some(res) = results.next() else { break };
+        match res {
             Ok(r) => {
                 candidates += 1;
                 crate::obs::add("opt.realized", 1);
                 best_so_far = best_so_far.min(r.cost.offchip_total());
                 trajectory.push(best_so_far);
+                audit.push((r.dv, r.cost.clone()));
                 if i == 0 {
                     baseline_offchip = r.cost.offchip_total();
                 }
@@ -294,7 +489,9 @@ pub fn search(
                 crate::obs::add("opt.pruned", 1);
             }
         }
+        i += 1;
     }
+    drop(results);
     debug_assert!(!beam.is_empty());
     let mut generations = vec![GenerationStats {
         axis: "tile",
@@ -305,6 +502,11 @@ pub fn search(
     }];
 
     // ---- stage 2: allocation axis over the surviving beam ----
+    // pruning here (floor survivors, seed-equal variants, idle-spiller
+    // flavors) depends only on stage-1 results, so it is decided while
+    // building the job list — before any parallel work — and the
+    // realized jobs reduce in the same generation order the serial
+    // search visited them.
     let alloc_variants = [
         AllocDecision { lookahead: seed_alloc.lookahead, spill: SpillFlavor::Traffic },
         AllocDecision {
@@ -312,9 +514,9 @@ pub fn search(
             spill: seed_alloc.spill,
         },
     ];
-    let mut extra: Vec<Realized> = Vec::new();
     let (s2_cand0, s2_pruned0) = (candidates, pruned);
     let mut s2_generated = 0usize;
+    let mut s2_jobs: Vec<(Arc<Staged>, AllocDecision)> = Vec::new();
     for b in &beam {
         if b.cost.offchip_total() == floor {
             continue; // already optimal
@@ -334,19 +536,28 @@ pub fn search(
                 crate::obs::add("opt.pruned", 1);
                 continue;
             }
-            let dv = DecisionVector { tile: b.dv.tile, alloc: av };
-            match realize(program, dv, bank_mode, bank_cfg, accel, base_tile, base_alloc) {
-                Ok(r) => {
-                    candidates += 1;
-                    crate::obs::add("opt.realized", 1);
-                    best_so_far = best_so_far.min(r.cost.offchip_total());
-                    trajectory.push(best_so_far);
-                    extra.push(r);
-                }
-                Err(_) => {
-                    pruned += 1;
-                    crate::obs::add("opt.pruned", 1);
-                }
+            s2_jobs.push((Arc::clone(&b.staged), av));
+        }
+    }
+    let (s2_results, s2_rep) =
+        pool::parallel_map(&s2_jobs, threads, |_, job| realize_alloc(&ctx, &job.0, job.1));
+    if threads > 1 {
+        merge_pool_obs("opt.pool.alloc", &s2_rep);
+    }
+    let mut extra: Vec<Realized> = Vec::new();
+    for res in s2_results {
+        match res {
+            Ok(r) => {
+                candidates += 1;
+                crate::obs::add("opt.realized", 1);
+                best_so_far = best_so_far.min(r.cost.offchip_total());
+                trajectory.push(best_so_far);
+                audit.push((r.dv, r.cost.clone()));
+                extra.push(r);
+            }
+            Err(_) => {
+                pruned += 1;
+                crate::obs::add("opt.pruned", 1);
             }
         }
     }
@@ -382,12 +593,14 @@ pub fn search(
         generations,
         trajectory,
         search_seconds,
+        threads,
     };
     Ok(OptOutcome {
-        program: best.tiled,
+        program: best.staged.tiled.clone(),
         alloc_opts: best.dv.alloc.to_opts_on(*base_alloc),
-        tile_stats: best.tile_stats,
+        tile_stats: best.staged.tile_stats,
         stats,
+        audit,
     })
 }
 
@@ -412,6 +625,21 @@ mod tests {
         let c2 = b.conv2d("c2", r, w2, 1, 1);
         b.mark_output(c2);
         b.finish()
+    }
+
+    fn search_with_threads(threads: usize) -> OptOutcome {
+        let prog = Program::lower(conv_conv());
+        let cfg = AccelConfig::tiny(8 * 1024);
+        search(
+            &prog,
+            BankMode::Global,
+            &BankConfig::default(),
+            &cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+            &OptOpts { threads, ..OptOpts::default() },
+        )
+        .unwrap()
     }
 
     #[test]
@@ -488,13 +716,68 @@ mod tests {
         assert_eq!(s.trajectory.len(), s.candidates);
         assert!(s.trajectory.windows(2).all(|w| w[1] <= w[0]));
         assert_eq!(s.trajectory.last().copied(), Some(s.best_offchip));
+        // the audit trail mirrors the trajectory one-to-one
+        assert_eq!(out.audit.len(), s.candidates);
         assert!(s.search_seconds >= 0.0);
+        assert!(s.threads >= 1);
         let j = s.to_json();
         assert_eq!(
             j.get("generations").and_then(|g| g.as_arr()).map(|a| a.len()),
             Some(2)
         );
         assert!(j.get("search_seconds").and_then(|v| v.as_f64()).is_some());
+        assert!(j.get("threads").and_then(|v| v.as_i64()).is_some());
+    }
+
+    #[test]
+    fn search_outcome_is_thread_count_invariant() {
+        // the broad invariance suite lives in tests/opt_threads.rs;
+        // this is the in-crate smoke version on the conv boundary
+        let base = search_with_threads(1);
+        for threads in [2usize, 4] {
+            let alt = search_with_threads(threads);
+            assert_eq!(base.stats.decision, alt.stats.decision, "threads={threads}");
+            assert_eq!(base.stats.best_offchip, alt.stats.best_offchip);
+            assert_eq!(base.stats.trajectory, alt.stats.trajectory);
+            assert_eq!(base.stats.generations, alt.stats.generations);
+            assert_eq!(base.audit.len(), alt.audit.len());
+            for ((d1, c1), (d2, c2)) in base.audit.iter().zip(&alt.audit) {
+                assert_eq!(d1.describe(), d2.describe());
+                assert!(c1.bits_eq(c2), "threads={threads}: {} diverged", d1.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn tile_candidates_dedup_against_all_entries() {
+        // a seed distinct from the fixed set keeps every entry
+        let distinct = TileDecision { budget_fraction: 0.75, fuse: FusePolicy::Elementwise };
+        assert_eq!(tile_candidates(distinct).len(), 7);
+        // a seed equal to ANY fixed-set member (not just the first)
+        // must not be realized twice
+        for fixed in [
+            TileDecision { budget_fraction: 0.5, fuse: FusePolicy::Elementwise },
+            TileDecision { budget_fraction: 0.25, fuse: FusePolicy::Elementwise },
+            TileDecision { budget_fraction: 0.5, fuse: FusePolicy::Wide },
+            TileDecision { budget_fraction: 0.5, fuse: FusePolicy::ConvChain { depth: 2 } },
+            TileDecision { budget_fraction: 0.25, fuse: FusePolicy::ConvChain { depth: 1 } },
+        ] {
+            let out = tile_candidates(fixed);
+            assert_eq!(out.len(), 6, "seed {fixed:?} duplicated");
+            for (a, entry) in out.iter().enumerate() {
+                for other in &out[a + 1..] {
+                    assert_ne!(entry, other, "duplicate candidate for seed {fixed:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_threads_win_over_env_auto() {
+        let explicit = OptOpts { threads: 3, ..OptOpts::default() };
+        assert_eq!(explicit.resolved_threads(), 3);
+        let auto = OptOpts { threads: 0, ..OptOpts::default() };
+        assert!(auto.resolved_threads() >= 1);
     }
 
     #[test]
@@ -522,6 +805,7 @@ mod tests {
                 >= out.stats.candidates as i64
         );
         assert!(snap.phases.iter().any(|p| p.name == "opt.search"));
+        assert!(snap.phases.iter().any(|p| p.name == "opt.bank_once"));
     }
 
     #[test]

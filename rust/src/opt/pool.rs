@@ -1,0 +1,158 @@
+//! Zero-dependency worker pool for parallel candidate realization.
+//!
+//! [`parallel_map`] fans a slice of jobs over `threads` scoped
+//! `std::thread` workers and returns the results **indexed by job
+//! position**, so the caller can reduce them in candidate-generation
+//! order regardless of completion order. Work is handed out through an
+//! atomic cursor (dynamic load balancing: a worker that drew a cheap
+//! candidate immediately pulls the next one) and results come back
+//! over an mpsc channel; per-thread activity is returned in a
+//! [`PoolReport`] so the search can merge worker telemetry into the
+//! global collector in one step.
+//!
+//! Determinism contract: the pool affects *scheduling* only. Each
+//! job's result is a pure function of the job itself, and the caller
+//! consumes the returned `Vec` in index order — so every statistic
+//! derived from it is independent of the thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// What one worker thread did.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct ThreadStats {
+    /// Jobs this worker pulled and completed.
+    pub jobs: usize,
+    /// Wall time spent inside job closures.
+    pub busy_seconds: f64,
+}
+
+/// Per-pool telemetry: one entry per worker thread (a single entry on
+/// the serial fast path).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct PoolReport {
+    pub per_thread: Vec<ThreadStats>,
+}
+
+impl PoolReport {
+    pub fn jobs(&self) -> usize {
+        self.per_thread.iter().map(|t| t.jobs).sum()
+    }
+
+    fn serial(jobs: usize, busy_seconds: f64) -> PoolReport {
+        PoolReport { per_thread: vec![ThreadStats { jobs, busy_seconds }] }
+    }
+}
+
+/// Map `f` over `jobs` on up to `threads` workers; `out[i]` is
+/// `f(i, &jobs[i])`. With `threads <= 1` (or at most one job) no
+/// thread is spawned and the map runs inline — the parallel and serial
+/// paths produce identical vectors by construction, differing only in
+/// wall time.
+pub(crate) fn parallel_map<J, R, F>(jobs: &[J], threads: usize, f: F) -> (Vec<R>, PoolReport)
+where
+    J: Sync,
+    R: Send,
+    F: Fn(usize, &J) -> R + Sync,
+{
+    let n = jobs.len();
+    let workers = threads.min(n).max(1);
+    if workers == 1 {
+        let t0 = Instant::now();
+        let out: Vec<R> = jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
+        return (out, PoolReport::serial(n, t0.elapsed().as_secs_f64()));
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let report = std::thread::scope(|s| {
+        let cursor = &cursor;
+        let f = &f;
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let tx = tx.clone();
+            handles.push(s.spawn(move || {
+                let mut st = ThreadStats::default();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    let r = f(i, &jobs[i]);
+                    st.busy_seconds += t0.elapsed().as_secs_f64();
+                    st.jobs += 1;
+                    if tx.send((i, r)).is_err() {
+                        break; // receiver gone: a sibling panicked mid-scope
+                    }
+                }
+                st
+            }));
+        }
+        drop(tx); // workers hold the remaining senders; rx drains until they finish
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        PoolReport {
+            per_thread: handles
+                .into_iter()
+                .map(|h| h.join().expect("search worker panicked"))
+                .collect(),
+        }
+    });
+    let out: Vec<R> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("worker pool lost job {i}")))
+        .collect();
+    (out, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_index_ordered_for_every_thread_count() {
+        let jobs: Vec<u64> = (0..97).collect();
+        for threads in [0usize, 1, 2, 3, 8, 128] {
+            let (out, report) = parallel_map(&jobs, threads, |i, j| (i as u64) * 1000 + j * j);
+            let want: Vec<u64> = jobs.iter().enumerate().map(|(i, j)| (i as u64) * 1000 + j * j).collect();
+            assert_eq!(out, want, "threads={threads}");
+            assert_eq!(report.jobs(), jobs.len(), "threads={threads}");
+            // never more workers than jobs, always at least one
+            assert!(!report.per_thread.is_empty());
+            assert!(report.per_thread.len() <= jobs.len().max(1));
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs_stay_serial() {
+        let none: Vec<u32> = vec![];
+        let (out, report) = parallel_map(&none, 8, |_, j| *j);
+        assert!(out.is_empty());
+        assert_eq!(report.per_thread.len(), 1);
+        assert_eq!(report.jobs(), 0);
+
+        let one = [41u32];
+        let (out, report) = parallel_map(&one, 8, |_, j| j + 1);
+        assert_eq!(out, vec![42]);
+        assert_eq!(report.per_thread.len(), 1);
+        assert_eq!(report.jobs(), 1);
+    }
+
+    #[test]
+    fn fallible_jobs_round_trip() {
+        let jobs: Vec<i32> = (0..20).collect();
+        let (out, _) = parallel_map(&jobs, 4, |_, j| if j % 3 == 0 { Err(*j) } else { Ok(j * 2) });
+        for (j, r) in jobs.iter().zip(&out) {
+            match r {
+                Ok(v) => assert_eq!(*v, j * 2),
+                Err(e) => assert_eq!(e, j),
+            }
+        }
+    }
+}

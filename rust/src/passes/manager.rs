@@ -67,6 +67,13 @@ impl TileStage {
 /// between DME and bank mapping when enabled — in place of the fixed
 /// `tile` stage, whose staged-greedy configuration is the search's
 /// seed candidate.
+///
+/// Candidate realization inside the search is memoized (the bank
+/// mapping once per search, the tiled+spliced program once per tile
+/// survivor) and fans out over `opts.threads` workers; both are
+/// outcome-invariant, so the stage's downstream replay — and the
+/// differential oracle's opt-stage snapshot — stay bit-identical at
+/// any thread count.
 #[derive(Clone, Debug)]
 pub struct OptStage {
     /// Chip the candidate plans are realized and scored against.
@@ -77,6 +84,12 @@ pub struct OptStage {
 impl OptStage {
     pub fn for_accel(accel: AccelConfig) -> OptStage {
         OptStage { accel, opts: OptOpts::default() }
+    }
+
+    /// Same stage with an explicit worker count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> OptStage {
+        self.opts.threads = threads;
+        self
     }
 }
 

@@ -38,18 +38,23 @@ impl Direction {
     }
 }
 
-/// Classify a metric path by its leaf name.
+/// Classify a metric path by its leaf name. Rate and ratio names are
+/// checked first: a throughput leaf like `candidates_per_second`
+/// contains the substring `seconds`, so testing the lower-is-better
+/// set first would gate it backwards.
 pub fn direction_for(path: &str) -> Direction {
     let leaf = path.rsplit('.').next().unwrap_or(path);
+    const HIGHER: &[&str] = &[
+        "qps", "attainment", "met", "completed", "hits", "throughput", "per_second", "speedup",
+    ];
     const LOWER: &[&str] = &[
         "latency", "bytes", "seconds", "missed", "rejected", "burn", "overwritten", "spill",
+        "offchip",
     ];
-    const HIGHER: &[&str] =
-        &["qps", "attainment", "met", "completed", "hits", "throughput"];
-    if LOWER.iter().any(|k| leaf.contains(k)) {
-        Direction::LowerIsBetter
-    } else if HIGHER.iter().any(|k| leaf.contains(k)) {
+    if HIGHER.iter().any(|k| leaf.contains(k)) {
         Direction::HigherIsBetter
+    } else if LOWER.iter().any(|k| leaf.contains(k)) {
+        Direction::LowerIsBetter
     } else {
         Direction::Informational
     }
@@ -313,5 +318,23 @@ mod tests {
         assert_eq!(direction_for("loads.low.qps"), Direction::HigherIsBetter);
         assert_eq!(direction_for("loads.low.p99_latency_us"), Direction::LowerIsBetter);
         assert_eq!(direction_for("loads.low.mean_batch"), Direction::Informational);
+    }
+
+    #[test]
+    fn rates_beat_their_unit_suffix() {
+        // throughput leaves whose names embed a time unit must still
+        // gate higher-is-better — the compile-phases record depends on
+        // this for candidates/second and the memoization speedup
+        assert_eq!(
+            direction_for("beam_sweep.beam8.candidates_per_second"),
+            Direction::HigherIsBetter
+        );
+        assert_eq!(direction_for("beam_sweep.beam8.speedup_vs_full_serial"), Direction::HigherIsBetter);
+        // plain wall-time leaves still fall the right way
+        assert_eq!(direction_for("opt_profile.opt_stats.search_seconds"), Direction::LowerIsBetter);
+        assert_eq!(direction_for("beam_sweep.beam8.best_offchip"), Direction::LowerIsBetter);
+        // unchanged serving leaves keep their classification
+        assert_eq!(direction_for("loads.low.bytes_per_request"), Direction::LowerIsBetter);
+        assert_eq!(direction_for("loads.low.deadline_met"), Direction::HigherIsBetter);
     }
 }

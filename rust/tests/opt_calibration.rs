@@ -1,0 +1,167 @@
+//! Incremental-vs-full calibration of the joint search.
+//!
+//! `opt::search` memoizes realization (one bank mapping per search,
+//! one tiled+spliced program per tile survivor) and scores candidates
+//! on the shared artifacts. This suite holds that incremental path to
+//! the pre-memoization bar: for **every** candidate the search
+//! realized — recorded in `OptOutcome::audit` in realization order —
+//! a from-scratch `opt::realize_full` (clone → tile → bank → splice →
+//! plan → `cost::evaluate`, sharing nothing) must produce the same
+//! `CostBreakdown` byte-exactly, seconds compared on raw f64 bits.
+//!
+//! Reproduce a fuzz failure: `FUZZ_SEED=<seed> FUZZ_CASES=1 cargo test
+//! --test opt_calibration fuzzed`.
+
+use polymem::accel::AccelConfig;
+use polymem::alloc::AllocOpts;
+use polymem::ir::loopnest::Program;
+use polymem::ir::Graph;
+use polymem::models::{self, WaveNetConfig};
+use polymem::opt::{realize_full, search, OptOpts};
+use polymem::passes::dme::run_dme;
+use polymem::passes::manager::BankMode;
+use polymem::passes::BankConfig;
+use polymem::tile::TileOpts;
+use polymem::util::fuzzgraph;
+
+fn zoo() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("mlp", models::mlp(2, 12, 8, 4, 2)),
+        ("transformer", models::transformer_block(8, 16, 2, 32)),
+        ("resnet18", models::resnet18_scaled(1, 16, 8, 10)),
+        ("resnet50", models::resnet50_scaled(1, 16, 8, 10)),
+        ("mobilenet", models::mobilenet_v1_scaled(1, 16, 8, 10)),
+        ("inception", models::inception_stack_scaled(1, 2, 8, 4)),
+        (
+            "wavenet",
+            models::parallel_wavenet_with(WaveNetConfig {
+                flows: 2,
+                layers_per_flow: 3,
+                channels: 4,
+                time: 40,
+                kernel: 2,
+                dilation_cycle: 10,
+            }),
+        ),
+    ]
+}
+
+fn post_dme(g: Graph) -> Program {
+    let mut p = Program::lower(g);
+    run_dme(&mut p);
+    p
+}
+
+/// Search, then replay every audited candidate through the unshared
+/// reference path and demand bit-exact agreement.
+fn assert_calibrated(name: &str, prog: &Program, cfg: &AccelConfig, bank_mode: BankMode) {
+    let out = match search(
+        prog,
+        bank_mode,
+        &BankConfig::default(),
+        cfg,
+        &TileOpts::default(),
+        &AllocOpts::default(),
+        &OptOpts::default(),
+    ) {
+        Ok(out) => out,
+        // a graph whose seed cannot plan has nothing to calibrate
+        Err(_) => return,
+    };
+    assert!(!out.audit.is_empty(), "{name}: empty audit trail");
+    assert_eq!(
+        out.audit.len(),
+        out.stats.candidates,
+        "{name}: audit must cover every realized candidate"
+    );
+    let mut best_seen = i64::MAX;
+    for (i, (dv, cost)) in out.audit.iter().enumerate() {
+        let full = realize_full(
+            prog,
+            *dv,
+            bank_mode,
+            &BankConfig::default(),
+            cfg,
+            &TileOpts::default(),
+            &AllocOpts::default(),
+        )
+        .unwrap_or_else(|e| {
+            panic!("{name}: audited candidate {} failed the reference path: {e}", dv.describe())
+        });
+        assert!(
+            full.bits_eq(cost),
+            "{name}: candidate {} (index {i}) diverged from the reference realization:\n\
+             memoized: {:?}\nfull:     {:?}",
+            dv.describe(),
+            cost,
+            full
+        );
+        best_seen = best_seen.min(cost.offchip_total());
+        assert_eq!(
+            out.stats.trajectory[i], best_seen,
+            "{name}: trajectory entry {i} disagrees with the audited scores"
+        );
+    }
+    // the winner's score is the audit's running minimum
+    assert_eq!(out.stats.best_offchip, best_seen, "{name}: winner not the audited minimum");
+}
+
+#[test]
+fn zoo_search_scores_match_full_realization() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        let prog = post_dme(g);
+        assert_calibrated(name, &prog, &cfg, BankMode::Global);
+    }
+}
+
+#[test]
+fn zoo_search_scores_match_full_realization_under_local_banking() {
+    // local mode splices the most remap copies, so the memoized
+    // spliced program carries the most shared structure to get wrong
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo().into_iter().take(3) {
+        let prog = post_dme(g);
+        assert_calibrated(name, &prog, &cfg, BankMode::Local);
+    }
+}
+
+#[test]
+fn unbanked_search_scores_match_full_realization() {
+    // BankMode::None: no tier-0 memo at all — the staged artifact is
+    // the tiled program itself and the calibration must still hold
+    let cfg = AccelConfig::tiny(8 * 1024);
+    let (name, g) = ("resnet18", models::resnet18_scaled(1, 16, 8, 10));
+    let prog = post_dme(g);
+    assert_calibrated(name, &prog, &cfg, BankMode::None);
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => {
+            let parsed = s
+                .strip_prefix("0x")
+                .or_else(|| s.strip_prefix("0X"))
+                .map(|h| u64::from_str_radix(h, 16))
+                .unwrap_or_else(|| s.parse());
+            parsed.unwrap_or_else(|_| panic!("{name}={s}: not a u64 (decimal or 0x-hex)"))
+        }
+    }
+}
+
+#[test]
+fn fuzzed_search_scores_match_full_realization() {
+    // seeded random DAGs on a cramped 4 KiB scratchpad, alternating
+    // bank modes — the property must hold off the curated zoo too
+    let base = env_u64("FUZZ_SEED", 0xCA11_B8A7E);
+    let cases = env_u64("FUZZ_CASES", 25);
+    let cfg = AccelConfig::tiny(4 * 1024);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+        let g = fuzzgraph::fuzz_graph(seed);
+        let prog = post_dme(g);
+        let bank_mode = if seed % 2 == 0 { BankMode::Global } else { BankMode::Local };
+        assert_calibrated(&format!("FUZZ_SEED={seed}"), &prog, &cfg, bank_mode);
+    }
+}

@@ -1,0 +1,182 @@
+//! Thread-count invariance of the joint search.
+//!
+//! The determinism contract of `opt::search`'s parallel candidate
+//! realization: the worker pool affects wall time only. For the full
+//! 7-builder zoo and ≥ 50 fuzzed graphs, running the search with 1, 2
+//! and 8 threads must produce the identical winning decision string,
+//! `best_offchip`, best-cost `trajectory`, `GenerationStats` rows, and
+//! a bit-exact audit trail — which is what lets the differential
+//! oracle hold the opt pipeline to bit-identity at any thread count.
+//!
+//! Reproduce a fuzz failure: `FUZZ_SEED=<seed> FUZZ_CASES=1 cargo test
+//! --test opt_threads fuzzed`.
+
+use polymem::accel::AccelConfig;
+use polymem::alloc::AllocOpts;
+use polymem::ir::loopnest::Program;
+use polymem::ir::Graph;
+use polymem::models::{self, WaveNetConfig};
+use polymem::opt::{search, OptOpts, OptOutcome};
+use polymem::passes::dme::run_dme;
+use polymem::passes::manager::BankMode;
+use polymem::passes::BankConfig;
+use polymem::tile::TileOpts;
+use polymem::util::fuzzgraph;
+
+/// The same 7 interpreter-sized builders the differential suite uses.
+fn zoo() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("mlp", models::mlp(2, 12, 8, 4, 2)),
+        ("transformer", models::transformer_block(8, 16, 2, 32)),
+        ("resnet18", models::resnet18_scaled(1, 16, 8, 10)),
+        ("resnet50", models::resnet50_scaled(1, 16, 8, 10)),
+        ("mobilenet", models::mobilenet_v1_scaled(1, 16, 8, 10)),
+        ("inception", models::inception_stack_scaled(1, 2, 8, 4)),
+        (
+            "wavenet",
+            models::parallel_wavenet_with(WaveNetConfig {
+                flows: 2,
+                layers_per_flow: 3,
+                channels: 4,
+                time: 40,
+                kernel: 2,
+                dilation_cycle: 10,
+            }),
+        ),
+    ]
+}
+
+/// What the manager's opt stage sees: the post-DME snapshot.
+fn post_dme(g: Graph) -> Program {
+    let mut p = Program::lower(g);
+    run_dme(&mut p);
+    p
+}
+
+fn run(
+    prog: &Program,
+    cfg: &AccelConfig,
+    bank_mode: BankMode,
+    threads: usize,
+) -> Result<OptOutcome, polymem::alloc::PlanError> {
+    search(
+        prog,
+        bank_mode,
+        &BankConfig::default(),
+        cfg,
+        &TileOpts::default(),
+        &AllocOpts::default(),
+        &OptOpts { threads, ..OptOpts::default() },
+    )
+}
+
+/// Assert 2- and 8-thread searches land exactly where 1 thread does.
+fn assert_invariant(name: &str, prog: &Program, cfg: &AccelConfig, bank_mode: BankMode) {
+    let base = run(prog, cfg, bank_mode, 1);
+    for threads in [2usize, 8] {
+        let alt = run(prog, cfg, bank_mode, threads);
+        match (&base, &alt) {
+            (Ok(b), Ok(a)) => {
+                let (bs, als) = (&b.stats, &a.stats);
+                assert_eq!(bs.decision, als.decision, "{name} t={threads}: decision");
+                assert_eq!(bs.best_offchip, als.best_offchip, "{name} t={threads}: best_offchip");
+                assert_eq!(
+                    bs.best_pipelined_seconds.to_bits(),
+                    als.best_pipelined_seconds.to_bits(),
+                    "{name} t={threads}: best_pipelined_seconds"
+                );
+                assert_eq!(
+                    bs.baseline_offchip, als.baseline_offchip,
+                    "{name} t={threads}: baseline_offchip"
+                );
+                assert_eq!(bs.candidates, als.candidates, "{name} t={threads}: candidates");
+                assert_eq!(bs.pruned, als.pruned, "{name} t={threads}: pruned");
+                assert_eq!(bs.trajectory, als.trajectory, "{name} t={threads}: trajectory");
+                assert_eq!(bs.generations, als.generations, "{name} t={threads}: generations");
+                // the winning artifact itself, not just its score
+                assert_eq!(
+                    b.alloc_opts.lookahead, a.alloc_opts.lookahead,
+                    "{name} t={threads}: winner lookahead"
+                );
+                assert_eq!(
+                    b.program.nests.len(),
+                    a.program.nests.len(),
+                    "{name} t={threads}: winner program shape"
+                );
+                // audit trail: same candidates in the same order with
+                // bit-exact scores
+                assert_eq!(b.audit.len(), a.audit.len(), "{name} t={threads}: audit length");
+                for ((d1, c1), (d2, c2)) in b.audit.iter().zip(&a.audit) {
+                    assert_eq!(d1.describe(), d2.describe(), "{name} t={threads}: audit order");
+                    assert!(
+                        c1.bits_eq(c2),
+                        "{name} t={threads}: audit score diverged for {}",
+                        d1.describe()
+                    );
+                }
+            }
+            (Err(be), Err(ae)) => {
+                // a seed that cannot plan must fail identically at any
+                // thread count
+                assert_eq!(
+                    be.to_string(),
+                    ae.to_string(),
+                    "{name} t={threads}: error diverged"
+                );
+            }
+            (Ok(_), Err(e)) => panic!("{name} t={threads}: parallel search failed: {e}"),
+            (Err(e), Ok(_)) => panic!("{name} t={threads}: only serial search failed: {e}"),
+        }
+    }
+}
+
+#[test]
+fn zoo_search_is_thread_count_invariant() {
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo() {
+        let prog = post_dme(g);
+        assert_invariant(name, &prog, &cfg, BankMode::Global);
+    }
+}
+
+#[test]
+fn zoo_search_is_thread_count_invariant_under_local_banking() {
+    // local mode maximizes spliced MemCopy nodes, so the shared
+    // tier-1 staged artifact carries the most extra structure here
+    let cfg = AccelConfig::tiny(8 * 1024);
+    for (name, g) in zoo().into_iter().take(3) {
+        let prog = post_dme(g);
+        assert_invariant(name, &prog, &cfg, BankMode::Local);
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => {
+            let parsed = s
+                .strip_prefix("0x")
+                .or_else(|| s.strip_prefix("0X"))
+                .map(|h| u64::from_str_radix(h, 16))
+                .unwrap_or_else(|| s.parse());
+            parsed.unwrap_or_else(|_| panic!("{name}={s}: not a u64 (decimal or 0x-hex)"))
+        }
+    }
+}
+
+#[test]
+fn fuzzed_search_is_thread_count_invariant() {
+    // ≥ 50 seeded random DAGs on a cramped 4 KiB scratchpad so tiling,
+    // staging and spill decisions all engage; FUZZ_SEED / FUZZ_CASES
+    // override for replay, same scheme as the differential suite
+    let base = env_u64("FUZZ_SEED", 0x0077_11EA0);
+    let cases = env_u64("FUZZ_CASES", 50);
+    let cfg = AccelConfig::tiny(4 * 1024);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+        let g = fuzzgraph::fuzz_graph(seed);
+        let prog = post_dme(g);
+        let bank_mode = if seed % 2 == 0 { BankMode::Global } else { BankMode::Local };
+        assert_invariant(&format!("FUZZ_SEED={seed}"), &prog, &cfg, bank_mode);
+    }
+}
