@@ -43,16 +43,19 @@ echo "   (replay one differential case: FUZZ_SEED=<seed> FUZZ_CASES=1 cargo test
 # also smoke-tests the AOT plan cache (ResNet-50 @ 2 MiB, buckets
 # {1,2,4,8}) and asserts the bucketized policy's strict byte win at
 # low load.
-echo "== perf records: bench_alloc_plan + bench_tile + bench_opt + bench_compile_time + bench_serving =="
+echo "== perf records: bench_alloc_plan + bench_tile + bench_opt + bench_compile_time + bench_serving + bench_multicore =="
 mkdir -p target
 BENCH_JSON_DIR=target cargo bench --bench bench_alloc_plan
 BENCH_JSON_DIR=target cargo bench --bench bench_tile
 BENCH_JSON_DIR=target cargo bench --bench bench_opt
 BENCH_JSON_DIR=target cargo bench --bench bench_compile_time
 BENCH_JSON_DIR=target cargo bench --bench bench_serving
+BENCH_JSON_DIR=target cargo bench --bench bench_multicore
 ls -l target/BENCH_plan.json target/BENCH_tile.json target/BENCH_opt.json \
-      target/BENCH_compile_phases.json target/BENCH_serving.json
+      target/BENCH_compile_phases.json target/BENCH_serving.json \
+      target/BENCH_multicore.json
 test -s target/BENCH_serving.json
+test -s target/BENCH_multicore.json
 
 # Benchmark regression gate: the serving record is compared against the
 # committed baseline in BENCH_baseline/ with a per-metric tolerance.
@@ -67,6 +70,19 @@ echo "== bench-regress: BENCH_serving.json vs BENCH_baseline/ =="
     --current target/BENCH_serving.json \
     --tol 0.15 \
     --skip compile_seconds,live_server \
+    --seed-missing
+
+# Multi-core sharding gate (E7): the record's QPS rows (single-core vs
+# sharded at equal offered load, plus the sharded speedup ratio) and
+# byte counters (off-chip, inter-core fabric) are deterministic
+# virtual-time numbers and gated at the standard tolerance; wall-clock
+# paths (stage compile times, the shard search) are skipped.
+echo "== bench-regress: BENCH_multicore.json vs BENCH_baseline/ =="
+./target/release/polymem bench-regress \
+    --baseline BENCH_baseline/BENCH_multicore.json \
+    --current target/BENCH_multicore.json \
+    --tol 0.15 \
+    --skip compile_seconds,search_seconds \
     --seed-missing
 
 # Compiler-speed gate: the compile-phases record tracks joint-search
@@ -93,6 +109,15 @@ echo "== telemetry smoke: simulate --opt --trace-out =="
 ./target/release/polymem simulate --model resnet50 --scratchpad-kib 2048 \
     --opt --profile --top-layers 8 --trace-out target/trace_resnet50_opt.json
 test -s target/trace_resnet50_opt.json
+
+# Multi-core smoke: the shard search end to end — cut ResNet-18 across
+# two cores, verify the bit-exact multi-engine replay (the command
+# fails on any calibration drift), and export the per-core pipeline
+# timeline as Chrome trace-event JSON.
+echo "== multi-core smoke: simulate --cores 2 --trace-out =="
+./target/release/polymem simulate --model resnet18 --scratchpad-kib 2048 \
+    --cores 2 --opt --trace-out target/trace_resnet18_sharded.json
+test -s target/trace_resnet18_sharded.json
 
 # Serving-trace smoke: the observability path end to end — compile the
 # ResNet-50 serving buckets at the same cramped 2 MiB scratchpad, run a

@@ -1,0 +1,209 @@
+//! E7 — multi-core pipeline sharding vs the single-core serving path.
+//!
+//! 1. Compile ResNet-50 @ the cramped 2 MiB scratchpad twice through
+//!    the AOT plan cache: once single-core, once on a 4-core chip —
+//!    the multi-core compile attaches a `ShardedPlan` (stage cuts,
+//!    per-stage artifacts, fabric bytes, combined cost).
+//! 2. Re-verify the sharded calibration from the outside: the
+//!    search's predicted `ShardedCost` must be byte-exact on traffic
+//!    and bit-exact on seconds against an independent multi-engine
+//!    replay of the stage artifacts.
+//! 3. Report the amortized-cost placement decision for 4 idle cores
+//!    (shard one pipeline vs 4 independent replicas).
+//! 4. Load simulation at equal offered load (closed loop, identical
+//!    client population): single-core `run_load` baseline vs the
+//!    sharded pipeline under `run_load_pipelined`, with the 4-replica
+//!    alternative as a reference row. **Acceptance:** the sharded
+//!    pipeline sustains strictly higher QPS than the single core.
+//!
+//! Emits `$BENCH_JSON_DIR/BENCH_multicore.json`.
+//!
+//! Run: `cargo bench --bench bench_multicore`
+
+use polymem::accel::AccelConfig;
+use polymem::coordinator::BucketCost;
+use polymem::serve::{
+    choose_placement, run_load, run_load_pipelined, Arrivals, LoadReport, LoadSimConfig,
+    PipelinedBucket, PlanCache, PlanCacheConfig,
+};
+use polymem::shard;
+use polymem::util::bench::{write_json_record, Suite};
+use polymem::util::json::Json;
+use std::time::Duration;
+
+const CORES: usize = 4;
+
+/// The 2 MiB configuration (inferentia-like geometry, banks shrunk).
+fn two_mib() -> AccelConfig {
+    let mut cfg = AccelConfig::inferentia_like();
+    cfg.bank_bytes /= 4; // 8 MiB -> 2 MiB
+    cfg.name = "inferentia-like/4".into();
+    cfg
+}
+
+fn print_load(r: &LoadReport) {
+    println!(
+        "  {:<30} p50 {:?} p99 {:?}, {:>9.0} qps, {:>7.2} KiB/req, \
+         mean batch {:.2}, rejected {}",
+        r.label,
+        r.p50(),
+        r.p99(),
+        r.qps,
+        r.bytes_per_request / 1024.0,
+        r.mean_batch,
+        r.rejected
+    );
+}
+
+fn main() {
+    let suite = Suite::new("multi-core sharding");
+
+    // ---- 1. plan-cache compiles: 1 core vs 4 cores ----
+    let single_accel = two_mib();
+    let multi_accel = two_mib().with_cores(CORES);
+    println!(
+        "\nplan cache: resnet50 b8 @ {} (joint optimizer), 1 vs {} cores:",
+        single_accel.name, CORES
+    );
+    let mut single_cache = PlanCache::new(
+        "resnet50",
+        PlanCacheConfig { accel: single_accel.clone(), joint: true, verify: false, max_entries: 0 },
+    );
+    let single = single_cache.get_or_compile(8).expect("single-core compile");
+    let mut multi_cache = PlanCache::new(
+        "resnet50",
+        PlanCacheConfig { accel: multi_accel.clone(), joint: true, verify: false, max_entries: 0 },
+    );
+    let multi = multi_cache.get_or_compile(8).expect("multi-core compile");
+    let plan = multi
+        .sharded
+        .as_ref()
+        .expect("a multi-core plan-cache compile attaches a sharding");
+
+    println!(
+        "  single core : service {:>7.3} ms, off-chip {:>8.2} MiB  [{}]",
+        single.service_seconds * 1e3,
+        single.cost.offchip_total() as f64 / (1 << 20) as f64,
+        single.decision
+    );
+    println!(
+        "  {} cores     : {} stage(s), interval {:>7.3} ms, fill latency {:>7.3} ms, \
+         off-chip {:>8.2} MiB, fabric {:>7.2} MiB/batch",
+        CORES,
+        plan.stages.len(),
+        plan.interval_seconds() * 1e3,
+        plan.latency_seconds() * 1e3,
+        plan.cost.offchip_total() as f64 / (1 << 20) as f64,
+        plan.cost.traffic.intercore_total() as f64 / (1 << 20) as f64
+    );
+    println!("    {}", plan.decision);
+
+    // ---- 2. independent calibration check: multi-engine replay ----
+    let replay = shard::replay_sharded(&plan.stages, &plan.transfer_bytes, &multi_accel)
+        .expect("multi-engine replay");
+    assert!(
+        plan.cost.bits_eq(&replay),
+        "sharded calibration broke: search prediction != multi-engine replay"
+    );
+    println!("  calibration: traffic byte-exact, seconds bit-exact vs multi-engine replay");
+
+    // the sharding must actually pipeline: steady-state interval
+    // strictly under the single-core service time, or the QPS
+    // acceptance below cannot hold
+    assert!(
+        plan.interval_seconds() < single.service_seconds,
+        "sharded interval {} >= single-core service {}",
+        plan.interval_seconds(),
+        single.service_seconds
+    );
+
+    // ---- 3. per-core placement decision ----
+    let placement = choose_placement(single.service_seconds, plan.interval_seconds(), CORES);
+    println!(
+        "  placement on {CORES} idle cores: {:?} (sharded interval {:.3} ms vs \
+         service/cores {:.3} ms)",
+        placement,
+        plan.interval_seconds() * 1e3,
+        single.service_seconds / CORES as f64 * 1e3
+    );
+
+    // ---- 4. equal offered load: single core vs sharded pipeline ----
+    let svc = single.service_seconds;
+    let single_cost = BucketCost {
+        batch: single.batch as usize,
+        offchip_bytes: single.cost.offchip_total(),
+        service_seconds: svc,
+    };
+    // the sharded service model: a batch occupies the pipeline head
+    // for one interval and completes after the fill latency
+    let sharded_bucket = PipelinedBucket {
+        cost: BucketCost {
+            batch: multi.batch as usize,
+            offchip_bytes: plan.cost.offchip_total(),
+            service_seconds: plan.latency_seconds(),
+        },
+        interval_seconds: plan.interval_seconds(),
+    };
+    let replica_bucket = PipelinedBucket { cost: single_cost, interval_seconds: svc };
+
+    let sim = LoadSimConfig {
+        arrivals: Arrivals::Closed { clients: 64, requests: 4000 },
+        max_wait: Duration::from_secs_f64(svc * 2.0),
+        queue_cap: 256,
+        slo: None,
+    };
+    println!("\nclosed-loop load (64 clients, 4000 requests, identical offered load):");
+    let base = run_load(&[single_cost], &sim, "closed-loop / single-core");
+    let pipe = run_load_pipelined(&[sharded_bucket], 1, &sim, "closed-loop / sharded-4core");
+    let repl = run_load_pipelined(
+        &[replica_bucket],
+        CORES,
+        &sim,
+        "closed-loop / replicas-4core",
+    );
+    print_load(&base);
+    print_load(&pipe);
+    print_load(&repl);
+
+    assert_eq!(
+        base.completed, pipe.completed,
+        "offered load diverged between the single-core and sharded runs"
+    );
+    // the acceptance criterion: at equal offered load, the sharded
+    // pipeline sustains strictly higher QPS than one core
+    assert!(
+        pipe.qps > base.qps,
+        "sharding did not raise saturated QPS: {} <= {}",
+        pipe.qps,
+        base.qps
+    );
+    let speedup = pipe.qps / base.qps;
+    println!(
+        "  sharded vs single-core QPS speedup: {speedup:.2}x \
+         (replicas reference: {:.2}x)",
+        repl.qps / base.qps
+    );
+
+    // ---- machine-readable record ----
+    let record = Json::obj(vec![
+        ("model", Json::Str("resnet50".into())),
+        ("cores", Json::Int(CORES as i64)),
+        ("accel", multi_accel.to_json()),
+        (
+            "single_core",
+            Json::obj(vec![
+                ("batch", Json::Int(single.batch)),
+                ("service_seconds", Json::Num(single.service_seconds)),
+                ("offchip_bytes", Json::Int(single.cost.offchip_total())),
+            ]),
+        ),
+        ("sharded", plan.to_json()),
+        ("placement", Json::Str(format!("{placement:?}"))),
+        ("calibration_bits_exact", Json::Int(1)),
+        ("loads", Json::Arr(vec![base.to_json(), pipe.to_json(), repl.to_json()])),
+        ("sharded_qps_speedup", Json::Num(speedup)),
+    ]);
+    write_json_record("BENCH_multicore.json", &record);
+
+    suite.finish();
+}

@@ -101,7 +101,7 @@ fn main() {
     println!("\nplan cache: resnet50 @ {} (joint optimizer):", accel.name);
     let mut cache = PlanCache::new(
         "resnet50",
-        PlanCacheConfig { accel: accel.clone(), joint: true, verify: false },
+        PlanCacheConfig { accel: accel.clone(), joint: true, verify: false, max_entries: 0 },
     );
     let buckets: Vec<i64> = vec![1, 2, 4, 8];
     let arts = cache.compile_buckets(&buckets).expect("bucket compilation");

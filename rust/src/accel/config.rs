@@ -30,6 +30,16 @@ pub struct AccelConfig {
     /// On-chip bank-to-bank copy bandwidth, bytes/second (the slow
     /// shared path the paper refers to).
     pub onchip_copy_bps: f64,
+    /// Cores on the chip available for pipeline-parallel sharding.
+    /// 1 (the default everywhere) keeps every existing single-engine
+    /// path — and every committed benchmark baseline — bit-identical;
+    /// multi-core runs opt in via [`AccelConfig::with_cores`] or
+    /// `simulate --cores N`.
+    pub num_cores: usize,
+    /// Core-to-core fabric bandwidth, bytes/second (NeuronLink-class:
+    /// faster than DRAM, slower than the in-core scratchpad paths).
+    /// Charged once per stage boundary a cut tensor crosses.
+    pub intercore_bps: f64,
 }
 
 impl AccelConfig {
@@ -45,6 +55,8 @@ impl AccelConfig {
             clock_hz: 1.4e9,
             dram_bps: 50e9,
             onchip_copy_bps: 200e9,
+            num_cores: 1,
+            intercore_bps: 100e9,
         }
     }
 
@@ -61,7 +73,15 @@ impl AccelConfig {
             clock_hz: 1e9,
             dram_bps: 1e9,
             onchip_copy_bps: 4e9,
+            num_cores: 1,
+            intercore_bps: 2e9,
         }
+    }
+
+    /// The same chip with `n` cores enabled for sharding.
+    pub fn with_cores(mut self, n: usize) -> Self {
+        self.num_cores = n.max(1);
+        self
     }
 
     /// Total scratchpad capacity in bytes (both groups).
@@ -81,6 +101,8 @@ impl AccelConfig {
             ("clock_hz", Json::Num(self.clock_hz)),
             ("dram_bps", Json::Num(self.dram_bps)),
             ("onchip_copy_bps", Json::Num(self.onchip_copy_bps)),
+            ("num_cores", Json::Int(self.num_cores as i64)),
+            ("intercore_bps", Json::Num(self.intercore_bps)),
         ])
     }
 
@@ -114,8 +136,17 @@ impl AccelConfig {
         if let Some(v) = j.get("onchip_copy_bps").and_then(|v| v.as_f64()) {
             cfg.onchip_copy_bps = v;
         }
+        if let Some(v) = j.get("num_cores").and_then(|v| v.as_i64()) {
+            cfg.num_cores = v as usize;
+        }
+        if let Some(v) = j.get("intercore_bps").and_then(|v| v.as_f64()) {
+            cfg.intercore_bps = v;
+        }
         if cfg.banks == 0 || cfg.bank_bytes <= 0 {
             return Err("accel config: banks/bank_bytes must be positive".into());
+        }
+        if cfg.num_cores == 0 || !(cfg.intercore_bps > 0.0) {
+            return Err("accel config: num_cores/intercore_bps must be positive".into());
         }
         Ok(cfg)
     }
@@ -154,5 +185,20 @@ mod tests {
     fn json_rejects_zero_banks() {
         let j = crate::util::json::parse(r#"{"banks": 0}"#).unwrap();
         assert!(AccelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cores_default_single_and_roundtrip() {
+        // the single-core default keeps every pre-sharding path intact
+        assert_eq!(AccelConfig::inferentia_like().num_cores, 1);
+        assert_eq!(AccelConfig::tiny(8 * 1024).num_cores, 1);
+        let c = AccelConfig::inferentia_like().with_cores(4);
+        let c2 = AccelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.num_cores, 4);
+        assert_eq!(c2.intercore_bps.to_bits(), c.intercore_bps.to_bits());
+        // fabric sits between DRAM and the on-chip copy path
+        assert!(c.dram_bps < c.intercore_bps && c.intercore_bps <= c.onchip_copy_bps);
+        let bad = crate::util::json::parse(r#"{"num_cores": 0}"#).unwrap();
+        assert!(AccelConfig::from_json(&bad).is_err());
     }
 }

@@ -28,11 +28,21 @@ pub enum TrafficClass {
     OnchipCopy,
     /// Inter-bank remap inside the scratchpad (`MemCopy` node).
     OnchipRemap,
+    // ---- core-to-core fabric ----
+    /// Cut-edge tensor shipped between pipeline stages over the
+    /// inter-core fabric (charged once per stage boundary crossed).
+    /// Neither DRAM nor scratchpad traffic: it rides its own
+    /// `intercore_bps` link, so it joins neither the off-chip nor the
+    /// on-chip total.
+    InterCore,
 }
 
 impl TrafficClass {
     pub fn is_offchip(self) -> bool {
-        !matches!(self, TrafficClass::OnchipCopy | TrafficClass::OnchipRemap)
+        !matches!(
+            self,
+            TrafficClass::OnchipCopy | TrafficClass::OnchipRemap | TrafficClass::InterCore
+        )
     }
 
     pub fn label(self) -> &'static str {
@@ -46,10 +56,11 @@ impl TrafficClass {
             TrafficClass::OffchipRemap => "offchip_remap",
             TrafficClass::OnchipCopy => "onchip_copy",
             TrafficClass::OnchipRemap => "onchip_remap",
+            TrafficClass::InterCore => "intercore",
         }
     }
 
-    pub const ALL: [TrafficClass; 9] = [
+    pub const ALL: [TrafficClass; 10] = [
         TrafficClass::WeightLoad,
         TrafficClass::InputLoad,
         TrafficClass::OutputStore,
@@ -59,6 +70,7 @@ impl TrafficClass {
         TrafficClass::OffchipRemap,
         TrafficClass::OnchipCopy,
         TrafficClass::OnchipRemap,
+        TrafficClass::InterCore,
     ];
 }
 
@@ -92,12 +104,15 @@ impl TrafficCounters {
     }
 
     /// Total bytes moved inside the scratchpad by copies/remaps.
+    /// Explicitly the two scratchpad classes — inter-core fabric bytes
+    /// are a third bucket, not on-chip movement.
     pub fn onchip_total(&self) -> i64 {
-        self.counts
-            .iter()
-            .filter(|(c, _)| !c.is_offchip())
-            .map(|(_, v)| v)
-            .sum()
+        self.get(TrafficClass::OnchipCopy) + self.get(TrafficClass::OnchipRemap)
+    }
+
+    /// Total bytes over the core-to-core fabric (pipeline cut edges).
+    pub fn intercore_total(&self) -> i64 {
+        self.get(TrafficClass::InterCore)
     }
 
     /// Off-chip bytes attributable to *copies* (the paper's "off-chip
@@ -125,6 +140,7 @@ impl TrafficCounters {
             .collect();
         pairs.push(("offchip_total", Json::Int(self.offchip_total())));
         pairs.push(("onchip_total", Json::Int(self.onchip_total())));
+        pairs.push(("intercore_total", Json::Int(self.intercore_total())));
         Json::obj(pairs)
     }
 }
@@ -140,10 +156,18 @@ mod tests {
         t.add(TrafficClass::OnchipCopy, 40);
         t.add(TrafficClass::OnchipRemap, 2);
         t.add(TrafficClass::Spill, 10);
+        t.add(TrafficClass::InterCore, 7);
         assert_eq!(t.offchip_total(), 110);
         assert_eq!(t.onchip_total(), 42);
+        assert_eq!(t.intercore_total(), 7);
         assert_eq!(t.offchip_copy_total(), 10);
         assert_eq!(t.get(TrafficClass::Reload), 0);
+        // the three totals partition every charged byte
+        assert!(!TrafficClass::InterCore.is_offchip());
+        assert_eq!(
+            t.offchip_total() + t.onchip_total() + t.intercore_total(),
+            110 + 42 + 7
+        );
     }
 
     #[test]

@@ -134,6 +134,106 @@ pub fn pipeline_intervals(steps: &[PipeStep]) -> Vec<PipeInterval> {
     out
 }
 
+/// Seconds to ship `bytes` between adjacent cores over the fabric.
+pub fn intercore_seconds(cfg: &AccelConfig, bytes: i64) -> f64 {
+    bytes as f64 / cfg.intercore_bps
+}
+
+/// Steady-state initiation interval of a multi-core pipeline: once the
+/// pipe is full, a new batch completes every `max_i(stage_i +
+/// transfer_i)` seconds (each core must finish its stage *and* hand the
+/// result to its successor before accepting the next batch).
+/// `transfer_seconds` has one entry per stage; the last stage's entry
+/// covers its write-back hand-off and is normally 0.
+pub fn multicore_interval(stage_seconds: &[f64], transfer_seconds: &[f64]) -> f64 {
+    assert_eq!(stage_seconds.len(), transfer_seconds.len());
+    let mut iv = 0.0f64;
+    for (s, t) in stage_seconds.iter().zip(transfer_seconds) {
+        iv = iv.max(s + t);
+    }
+    iv
+}
+
+/// Makespan (seconds) of `batches` back-to-back batches through a
+/// multi-core pipeline with one stage per core. Stage `s` of batch `b`
+/// starts when both the core is free (it holds a batch until its
+/// inter-core send completes) and batch `b` has arrived from stage
+/// `s-1`; fill and drain are accounted naturally by the recurrence.
+/// One batch degenerates to `Σ stage + Σ transfer[..k-1]`; for large
+/// `batches` the marginal batch costs [`multicore_interval`].
+pub fn multicore_pipeline_seconds(
+    stage_seconds: &[f64],
+    transfer_seconds: &[f64],
+    batches: usize,
+) -> f64 {
+    assert_eq!(stage_seconds.len(), transfer_seconds.len());
+    let k = stage_seconds.len();
+    if k == 0 || batches == 0 {
+        return 0.0;
+    }
+    let mut core_free = vec![0.0f64; k];
+    let mut makespan = 0.0f64;
+    for _b in 0..batches {
+        let mut arrive = 0.0f64; // host feeds stage 0 back-to-back
+        for s in 0..k {
+            let start = arrive.max(core_free[s]);
+            let done = start + stage_seconds[s];
+            let sent = done + transfer_seconds[s];
+            core_free[s] = sent;
+            arrive = sent;
+            if s + 1 == k {
+                makespan = makespan.max(done);
+            }
+        }
+    }
+    makespan
+}
+
+/// One core's busy interval for one batch in the multi-core pipeline.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CoreSpan {
+    pub core: usize,
+    pub batch: usize,
+    /// Stage compute+DMA work occupies the core over `[start, done)`.
+    pub start: f64,
+    pub done: f64,
+    /// Inter-core send occupies the fabric over `[done, sent)`.
+    pub sent: f64,
+}
+
+/// The full per-core timeline behind [`multicore_pipeline_seconds`]:
+/// the same recurrence, unrolled into one span per `(batch, core)` for
+/// Chrome-trace export (one lane per core). The makespan equals the
+/// last batch's `done` on the last core with the exact floating-point
+/// operation order of the scalar recurrence — pinned bit-exactly by
+/// the test below, because sharded calibration compares seconds via
+/// `to_bits()`.
+pub fn multicore_pipeline_intervals(
+    stage_seconds: &[f64],
+    transfer_seconds: &[f64],
+    batches: usize,
+) -> Vec<CoreSpan> {
+    assert_eq!(stage_seconds.len(), transfer_seconds.len());
+    let k = stage_seconds.len();
+    let mut out = Vec::with_capacity(k * batches);
+    if k == 0 || batches == 0 {
+        return out;
+    }
+    let mut core_free = vec![0.0f64; k];
+    for b in 0..batches {
+        let mut arrive = 0.0f64;
+        for s in 0..k {
+            let start = arrive.max(core_free[s]);
+            let done = start + stage_seconds[s];
+            let sent = done + transfer_seconds[s];
+            core_free[s] = sent;
+            arrive = sent;
+            out.push(CoreSpan { core: s, batch: b, start, done, sent });
+        }
+    }
+    out
+}
+
 fn is_mxu_kind(kind: &OpKind) -> bool {
     matches!(
         kind,
@@ -282,6 +382,76 @@ mod tests {
                 assert!(i.in_done <= iv[k - 1].out_start);
             }
         }
+    }
+
+    #[test]
+    fn multicore_single_batch_is_sum_of_stages_and_transfers() {
+        let stages = [2.0, 3.0, 1.0];
+        let transfers = [0.5, 0.25, 0.0];
+        let t = multicore_pipeline_seconds(&stages, &transfers, 1);
+        // one batch: all stage times plus the two interior hand-offs
+        assert!((t - (2.0 + 0.5 + 3.0 + 0.25 + 1.0)).abs() < 1e-12, "{t}");
+        assert_eq!(multicore_pipeline_seconds(&stages, &transfers, 0), 0.0);
+        assert_eq!(multicore_pipeline_seconds(&[], &[], 4), 0.0);
+    }
+
+    #[test]
+    fn multicore_steady_state_is_bottleneck_interval() {
+        let stages = [2.0, 3.0, 1.0];
+        let transfers = [0.5, 0.25, 0.0];
+        let iv = multicore_interval(&stages, &transfers);
+        assert_eq!(iv, 3.25);
+        // marginal batch in the filled pipe costs exactly the interval
+        let t9 = multicore_pipeline_seconds(&stages, &transfers, 9);
+        let t10 = multicore_pipeline_seconds(&stages, &transfers, 10);
+        assert!((t10 - t9 - iv).abs() < 1e-9, "{}", t10 - t9);
+        // and a k-stage pipeline beats the serial single core on the
+        // same work once the pipe is full
+        let single = stages.iter().sum::<f64>();
+        assert!(t10 < single * 10.0);
+    }
+
+    #[test]
+    fn multicore_intervals_bit_equal_to_pipeline_seconds() {
+        let cases: Vec<(Vec<f64>, Vec<f64>, usize)> = vec![
+            (vec![2.0], vec![0.0], 7),
+            (vec![2.0, 3.0, 1.0], vec![0.5, 0.25, 0.0], 1),
+            (vec![2.0, 3.0, 1.0], vec![0.5, 0.25, 0.0], 10),
+            (
+                (0..5).map(|k| 0.3 + 0.071 * k as f64).collect(),
+                (0..5).map(|k| 0.013 * (k % 3) as f64).collect(),
+                13,
+            ),
+        ];
+        for (stages, transfers, batches) in cases {
+            let spans = multicore_pipeline_intervals(&stages, &transfers, batches);
+            assert_eq!(spans.len(), stages.len() * batches);
+            let makespan = spans
+                .iter()
+                .filter(|s| s.core + 1 == stages.len())
+                .map(|s| s.done)
+                .fold(0.0f64, f64::max);
+            assert_eq!(
+                makespan.to_bits(),
+                multicore_pipeline_seconds(&stages, &transfers, batches).to_bits()
+            );
+            // per-core lanes never overlap: a core's next batch starts
+            // at or after its previous send completed
+            for core in 0..stages.len() {
+                let lane: Vec<&CoreSpan> = spans.iter().filter(|s| s.core == core).collect();
+                for w in lane.windows(2) {
+                    assert!(w[0].sent <= w[1].start + 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intercore_seconds_uses_fabric_bandwidth() {
+        let cfg = AccelConfig::inferentia_like();
+        let t = intercore_seconds(&cfg, 1 << 20);
+        assert!(t < dma_seconds(&cfg, 1 << 20, true)); // faster than DRAM
+        assert_eq!(intercore_seconds(&cfg, 0), 0.0);
     }
 
     #[test]

@@ -58,6 +58,9 @@ struct Inner {
     predicted_offchip_bytes: i64,
     /// Cost-drift audit, keyed by bucket batch size.
     drift: BTreeMap<usize, BucketDrift>,
+    /// Plan-cache buckets evicted by the LRU cap (reported by the
+    /// serving layer from `PlanCache::evictions`).
+    plan_cache_evictions: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -84,6 +87,8 @@ pub struct Snapshot {
     /// Per-bucket cost-drift audit (empty until a backend reports
     /// actuals).
     pub drift: BTreeMap<usize, BucketDrift>,
+    /// Plan-cache buckets evicted by the LRU cap.
+    pub plan_cache_evictions: u64,
 }
 
 impl Metrics {
@@ -132,6 +137,13 @@ impl Metrics {
         d.actual_seconds += actual_seconds;
     }
 
+    /// Publish the plan cache's running LRU eviction total (a monotone
+    /// counter owned by the cache; the sink keeps the latest value).
+    pub fn set_plan_cache_evictions(&self, total: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.plan_cache_evictions = g.plan_cache_evictions.max(total);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let lat = &g.latency_us;
@@ -156,6 +168,7 @@ impl Metrics {
             predicted_offchip_bytes: g.predicted_offchip_bytes,
             latency: lat.clone(),
             drift: g.drift.clone(),
+            plan_cache_evictions: g.plan_cache_evictions,
         }
     }
 }
@@ -177,6 +190,7 @@ impl Snapshot {
             "polymem_predicted_offchip_bytes_total",
             self.predicted_offchip_bytes,
         );
+        enc.metric("polymem_plan_cache_evictions_total", self.plan_cache_evictions);
         enc.metric("polymem_request_latency_us_count", self.latency.count());
         enc.metric("polymem_request_latency_us_sum", self.latency.sum());
         for (q, v) in [
@@ -202,6 +216,22 @@ impl Snapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn plan_cache_evictions_render_and_never_regress() {
+        let m = Metrics::new();
+        assert!(m
+            .snapshot()
+            .render_text()
+            .contains("polymem_plan_cache_evictions_total 0"));
+        m.set_plan_cache_evictions(3);
+        m.set_plan_cache_evictions(2); // stale republish must not rewind
+        assert_eq!(m.snapshot().plan_cache_evictions, 3);
+        assert!(m
+            .snapshot()
+            .render_text()
+            .contains("polymem_plan_cache_evictions_total 3"));
+    }
 
     #[test]
     fn aggregates() {

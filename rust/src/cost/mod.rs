@@ -41,5 +41,5 @@ pub mod model;
 pub mod policy;
 
 pub use decision::{AllocDecision, DecisionVector, TileDecision};
-pub use model::{compulsory_offchip, evaluate, CostBreakdown};
+pub use model::{combine_sharded, compulsory_offchip, evaluate, CostBreakdown, ShardedCost};
 pub use policy::{DecisionPolicy, GreedyPolicy, TrafficPolicy};

@@ -355,6 +355,122 @@ fn exact_reader_bytes(
     Some(nest_tensor_bytes(g, nest, t))
 }
 
+/// Multi-core prediction for a pipeline-sharded model: per-stage
+/// traffic merged with the inter-core fabric bytes, plus the pipelined
+/// multi-core latencies (steady-state interval = bottleneck stage +
+/// its hand-off; fill/drain accounted by the engine recurrence).
+///
+/// Built by [`combine_sharded`] from per-stage inputs; the shard
+/// replay path feeds the *simulated* per-stage numbers through the
+/// same combiner, so the sharded calibration contract (byte-exact
+/// traffic, bit-exact seconds) reduces to the per-stage invariant the
+/// repo already holds.
+#[derive(Clone, Debug)]
+pub struct ShardedCost {
+    /// Per-stage pipelined seconds (one entry per core).
+    pub stage_seconds: Vec<f64>,
+    /// Per-stage hand-off seconds over the fabric (last entry 0).
+    pub transfer_seconds: Vec<f64>,
+    /// Merged per-class traffic of every stage, plus `InterCore` bytes
+    /// charged once per boundary a cut tensor crosses.
+    pub traffic: TrafficCounters,
+    /// Steady-state batch initiation interval (throughput =
+    /// batch / interval once the pipe is full).
+    pub interval_seconds: f64,
+    /// One batch end-to-end through the pipe (fill latency).
+    pub latency_seconds: f64,
+    /// Worst per-core scratchpad high-water mark.
+    pub peak_scratchpad: i64,
+}
+
+impl ShardedCost {
+    pub fn offchip_total(&self) -> i64 {
+        self.traffic.offchip_total()
+    }
+
+    pub fn intercore_total(&self) -> i64 {
+        self.traffic.intercore_total()
+    }
+
+    /// Bit-exact equality — the bar the sharded replay is held to.
+    pub fn bits_eq(&self, other: &ShardedCost) -> bool {
+        self.traffic == other.traffic
+            && self.peak_scratchpad == other.peak_scratchpad
+            && self.stage_seconds.len() == other.stage_seconds.len()
+            && self
+                .stage_seconds
+                .iter()
+                .zip(&other.stage_seconds)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self
+                .transfer_seconds
+                .iter()
+                .zip(&other.transfer_seconds)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self.interval_seconds.to_bits() == other.interval_seconds.to_bits()
+            && self.latency_seconds.to_bits() == other.latency_seconds.to_bits()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stages", Json::Int(self.stage_seconds.len() as i64)),
+            (
+                "stage_seconds",
+                Json::Arr(self.stage_seconds.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            (
+                "transfer_seconds",
+                Json::Arr(self.transfer_seconds.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            ("offchip_total", Json::Int(self.offchip_total())),
+            ("intercore_total", Json::Int(self.intercore_total())),
+            ("interval_seconds", Json::Num(self.interval_seconds)),
+            ("latency_seconds", Json::Num(self.latency_seconds)),
+            ("peak_scratchpad", Json::Int(self.peak_scratchpad)),
+        ])
+    }
+}
+
+/// Combine per-stage `(pipelined seconds, traffic, peak)` triples and
+/// the per-stage boundary-crossing byte counts (`transfer_bytes[s]` =
+/// bytes every tensor alive across the cut after stage `s` ships over
+/// the fabric; last entry 0) into the multi-core prediction.
+///
+/// This is the *single* combiner both the cost side and the
+/// multi-engine replay use — identical floating-point operation order,
+/// so equal per-stage inputs give bit-equal sharded outputs.
+pub fn combine_sharded(
+    stage_seconds: &[f64],
+    stage_traffic: &[&TrafficCounters],
+    stage_peaks: &[i64],
+    transfer_bytes: &[i64],
+    cfg: &AccelConfig,
+) -> ShardedCost {
+    assert_eq!(stage_seconds.len(), stage_traffic.len());
+    assert_eq!(stage_seconds.len(), stage_peaks.len());
+    assert_eq!(stage_seconds.len(), transfer_bytes.len());
+    let mut traffic = TrafficCounters::new();
+    for t in stage_traffic {
+        traffic = traffic.merged(t);
+    }
+    let mut transfer_seconds = Vec::with_capacity(transfer_bytes.len());
+    for &b in transfer_bytes {
+        traffic.add(TrafficClass::InterCore, b);
+        transfer_seconds.push(engine::intercore_seconds(cfg, b));
+    }
+    let interval_seconds = engine::multicore_interval(stage_seconds, &transfer_seconds);
+    let latency_seconds =
+        engine::multicore_pipeline_seconds(stage_seconds, &transfer_seconds, 1);
+    ShardedCost {
+        stage_seconds: stage_seconds.to_vec(),
+        transfer_seconds,
+        traffic,
+        interval_seconds,
+        latency_seconds,
+        peak_scratchpad: stage_peaks.iter().copied().max().unwrap_or(0),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -47,6 +47,18 @@ impl Graph {
         Graph::default()
     }
 
+    /// Build a graph from pre-existing tensor/node records *preserving
+    /// their original ids* — the shard stage extractor relies on this so
+    /// per-tensor seeded buffers and cut-edge identities line up across
+    /// stages. The id counters resume past the largest preserved id, so
+    /// later pass-inserted tensors/nodes (bank-mapping `MemCopy`
+    /// splices) can never collide with a preserved id.
+    pub(crate) fn from_parts(tensors: BTreeMap<TensorId, TensorInfo>, nodes: Vec<Node>) -> Self {
+        let next_tensor = tensors.keys().map(|t| t.0 + 1).max().unwrap_or(0);
+        let next_node = nodes.iter().map(|n| n.id.0 + 1).max().unwrap_or(0);
+        Graph { tensors, nodes, next_tensor, next_node }
+    }
+
     /// Register a new tensor.
     pub fn add_tensor(
         &mut self,

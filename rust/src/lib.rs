@@ -51,6 +51,11 @@
 //!   batch-size bucket), the planned backend that replays predicted
 //!   pipelined service times, and the deterministic closed-loop /
 //!   Poisson load simulation behind `bench_serving`.
+//! * [`shard`] — pipeline-parallel multi-core sharding: contiguous
+//!   stage cuts over the scheduled graph searched jointly with the
+//!   per-stage memory plans, the inter-core transfer cost model
+//!   (`TrafficClass::InterCore`), and the multi-engine replay that
+//!   holds the sharded prediction byte-/bit-exact.
 //! * [`report`] — paper-table formatting for the benchmark harness.
 //! * [`util`] — offline substitutes for clap/serde/criterion/proptest.
 //!
@@ -73,5 +78,6 @@ pub mod poly;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod tile;
 pub mod util;

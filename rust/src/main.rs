@@ -60,6 +60,11 @@ fn accel_from_args(p: &Parsed) -> Result<AccelConfig, String> {
             cfg.bank_bytes = (kib as i64 * 1024) / (2 * cfg.banks as i64);
         }
     }
+    if let Ok(c) = p.get_usize("cores") {
+        if c > 0 {
+            cfg = cfg.with_cores(c);
+        }
+    }
     Ok(cfg)
 }
 
@@ -149,7 +154,7 @@ fn cmd_serve_trace(p: &Parsed, cfg: &AccelConfig) -> Result<(), String> {
     // search's artifacts trace identically (bench_serving covers them)
     let mut cache = PlanCache::new(
         model,
-        PlanCacheConfig { accel: cfg.clone(), joint: false, verify: false },
+        PlanCacheConfig { accel: cfg.clone(), joint: false, verify: false, max_entries: 0 },
     );
     let arts = cache.compile_buckets(&buckets).map_err(|e| e.to_string())?;
     let costs: Vec<BucketCost> = arts
@@ -216,6 +221,9 @@ fn cmd_simulate(p: &Parsed) -> Result<(), String> {
     if p.has_flag("profile") {
         polymem::obs::set_enabled(true);
     }
+    if cfg.num_cores > 1 {
+        return cmd_simulate_sharded(g, &cfg, p);
+    }
     let want_plan = p.has_flag("plan");
     let want_tile = p.has_flag("tile");
     let want_opt = p.has_flag("opt");
@@ -263,6 +271,106 @@ fn cmd_simulate(p: &Parsed) -> Result<(), String> {
             print!("{}", polymem::obs::global().snapshot().render_text());
         }
     }
+    Ok(())
+}
+
+/// `simulate --cores N` (N > 1): pipeline-parallel sharding. Searches
+/// the cut-point axis jointly with each stage's memory plan, verifies
+/// the combined prediction against a bit-exact multi-engine replay,
+/// and prints the per-stage table (or JSON); `--trace-out` writes the
+/// steady-state pipeline as Chrome trace-event JSON, one lane per core.
+fn cmd_simulate_sharded(
+    g: polymem::ir::Graph,
+    cfg: &AccelConfig,
+    p: &Parsed,
+) -> Result<(), String> {
+    use polymem::shard::{replay_sharded, search_sharded, ShardOpts};
+    use polymem::util::json::Json;
+
+    let opts = ShardOpts {
+        // --opt keeps its meaning from the single-core comparison;
+        // plain `simulate --cores N` uses the staged-greedy stages
+        joint: p.has_flag("opt"),
+        verify: !p.has_flag("no-verify"),
+        threads: p.get_usize("search-threads").unwrap_or(0),
+        ..ShardOpts::default()
+    };
+    let outcome = search_sharded(&g, cfg, &opts).map_err(|e| e.to_string())?;
+    let replay = replay_sharded(&outcome.stages, &outcome.transfer_bytes, cfg)
+        .map_err(|e| e.to_string())?;
+    if !outcome.cost.bits_eq(&replay) {
+        return Err("sharded calibration broke: prediction != multi-engine replay".into());
+    }
+
+    if !p.get("trace-out").is_empty() {
+        let path = p.get("trace-out");
+        let batches = p.get_usize("trace-batches")?;
+        let j = outcome.to_chrome_json(batches.max(1));
+        let n = j
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        std::fs::write(path, j.to_string_compact())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path} ({n} trace events; open in chrome://tracing or Perfetto)");
+    }
+
+    if p.has_flag("json") {
+        let j = Json::obj(vec![
+            ("model", Json::Str(p.get("model").to_string())),
+            ("accel", cfg.to_json()),
+            ("sharded", outcome.to_json()),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "pipeline-parallel sharding on '{}' ({}, {} cores):\n",
+        p.get("model"),
+        cfg.name,
+        cfg.num_cores
+    );
+    for (s, stage) in outcome.stages.iter().enumerate() {
+        println!(
+            "  stage {s}: nodes [{:>3}..{:>3})  compute {:>9.3} ms  off-chip {:>10}  \
+             send {:>10}  [{}]",
+            stage.start,
+            stage.end,
+            outcome.cost.stage_seconds[s] * 1e3,
+            report::mb(stage.cost.offchip_total()),
+            report::mb(outcome.transfer_bytes[s]),
+            stage.decision
+        );
+    }
+    println!(
+        "\n  steady-state interval: {:>9.3} ms ({:.0} batches/s at saturation)",
+        outcome.cost.interval_seconds * 1e3,
+        1.0 / outcome.cost.interval_seconds
+    );
+    println!("  fill latency:          {:>9.3} ms", outcome.cost.latency_seconds * 1e3);
+    println!(
+        "  off-chip total:        {:>10}",
+        report::mb(outcome.cost.offchip_total())
+    );
+    println!(
+        "  inter-core fabric:     {:>10}",
+        report::mb(outcome.cost.traffic.intercore_total())
+    );
+    println!("  calibration:           bit-exact vs multi-engine replay");
+    let st = &outcome.stats;
+    println!(
+        "  search: {} candidates ({} evaluated, {} pruned, {} infeasible), \
+         {} stage compiles + {} memo hits in {:.2} s",
+        st.candidates,
+        st.evaluated,
+        st.pruned,
+        st.infeasible,
+        st.stage_compiles,
+        st.memo_hits,
+        st.search_seconds
+    );
     Ok(())
 }
 
@@ -619,8 +727,15 @@ fn app() -> App {
                 .opt("banks", "0", "override bank count (0 = default)")
                 .opt("scratchpad-kib", "0", "override total scratchpad KiB (0 = default)")
                 .opt("accel-config", "", "JSON accelerator config path")
+                .opt(
+                    "cores",
+                    "0",
+                    "accelerator cores (0 = config default; >1 runs the \
+                     pipeline-parallel shard search)",
+                )
                 .opt("top-layers", "8", "per-layer attribution rows to print")
                 .opt("trace-out", "", "write the engine timeline as Chrome trace-event JSON")
+                .opt("trace-batches", "4", "batches in the --cores trace timeline")
                 .opt(
                     "serve-trace-out",
                     "",
@@ -651,7 +766,8 @@ fn app() -> App {
                 .opt("batch", "1", "batch size")
                 .opt("banks", "0", "override bank count (0 = default)")
                 .opt("scratchpad-kib", "0", "override total scratchpad KiB (0 = default)")
-                .opt("accel-config", "", "JSON accelerator config path"),
+                .opt("accel-config", "", "JSON accelerator config path")
+                .opt("cores", "0", "accelerator cores (0 = config default)"),
             Command::new("serve", "serve an AOT artifact with dynamic batching")
                 .opt("artifact", "artifacts/model.hlo.txt", "HLO text artifact")
                 .opt("batch", "8", "compiled batch size")

@@ -6,8 +6,13 @@
 //! routes the batch to the smallest bucket that fits, then replays
 //! that bucket's pipelined execution time (`service_seconds`, equal by
 //! calibration to `simulate_pipelined`'s latency for the bucket's
-//! `(Program, MemoryPlan)`). End-to-end serving numbers therefore
-//! reflect exactly the memory behavior the optimizer predicted.
+//! `(Program, MemoryPlan)`). A batch larger than every compiled
+//! bucket is **split** ([`PlannedBackend::route`]) into back-to-back
+//! chunks — largest bucket repeatedly, remainder to the smallest
+//! bucket that fits — rather than silently truncated or rejected;
+//! only an empty batch is an error. End-to-end serving numbers
+//! therefore reflect exactly the memory behavior the optimizer
+//! predicted.
 //! Output values are a deterministic placeholder (first input element
 //! × 2 per request) — value correctness is the interpreter's and the
 //! PJRT runtime's domain, not the serving simulator's.
@@ -16,6 +21,7 @@
 //! ([`Backend::bucket_costs`]), which switches the server's flush
 //! policy to cost-aware bucketized batching.
 
+use super::loadsim::{choose_placement, PipelinedBucket, Placement};
 use super::plans::PlannedArtifact;
 use crate::coordinator::{Backend, BatchActuals, BucketCost};
 use crate::util::error::Result;
@@ -66,8 +72,8 @@ impl PlannedBackend {
     }
 
     /// The smallest bucket serving `n` requests (the largest bucket
-    /// when `n` exceeds every bucket — callers cap `n` at
-    /// `max_batch`).
+    /// when `n` exceeds every bucket — `route` splits such batches
+    /// before they get here).
     pub fn bucket_for(&self, n: usize) -> &Arc<PlannedArtifact> {
         self.buckets
             .iter()
@@ -75,8 +81,60 @@ impl PlannedBackend {
             .unwrap_or_else(|| self.buckets.last().expect("non-empty by construction"))
     }
 
+    /// How an `n`-request batch maps onto the compiled buckets: chunk
+    /// sizes served back to back, in submission order. A batch no
+    /// bucket can hold is split — the largest bucket repeatedly, then
+    /// the remainder to the smallest bucket that fits — instead of
+    /// being rejected; an empty batch is an explicit error.
+    pub fn route(&self, n: usize) -> Result<Vec<usize>> {
+        crate::ensure!(n >= 1, "cannot route an empty batch");
+        let cap = self.max_batch();
+        let mut chunks = Vec::with_capacity(n / cap + 1);
+        let mut rem = n;
+        while rem > cap {
+            chunks.push(cap);
+            rem -= cap;
+        }
+        chunks.push(rem);
+        Ok(chunks)
+    }
+
     pub fn buckets(&self) -> &[Arc<PlannedArtifact>] {
         &self.buckets
+    }
+
+    /// Per-core placement of this model on a `cores`-core chip, by the
+    /// amortized-cost rule over the largest (saturation) bucket:
+    /// `cores` independent replicas complete a batch every
+    /// `service / cores` seconds, the sharded pipeline one every
+    /// `interval`. Without a compiled sharding (single-core cache)
+    /// the answer is always replicas.
+    pub fn placement(&self, cores: usize) -> Placement {
+        let art = self.buckets.last().expect("non-empty by construction");
+        match (&art.sharded, cores > 1) {
+            (Some(s), true) => choose_placement(art.service_seconds, s.interval_seconds(), cores),
+            _ => Placement::Replicas(cores.max(1)),
+        }
+    }
+
+    /// The bucket table under the placement's service model: sharded
+    /// placements admit a flush every pipeline interval, everything
+    /// else every service time (what `run_load_pipelined` consumes).
+    pub fn pipelined_buckets(&self, placement: Placement) -> Vec<PipelinedBucket> {
+        self.buckets
+            .iter()
+            .map(|a| PipelinedBucket {
+                cost: BucketCost {
+                    batch: a.batch as usize,
+                    offchip_bytes: a.cost.offchip_total(),
+                    service_seconds: a.service_seconds,
+                },
+                interval_seconds: match (placement, &a.sharded) {
+                    (Placement::Sharded, Some(s)) => s.interval_seconds(),
+                    _ => a.service_seconds,
+                },
+            })
+            .collect()
     }
 }
 
@@ -113,18 +171,28 @@ impl Backend for PlannedBackend {
     fn infer(&mut self, batch: &[f32], n: usize) -> Result<Vec<f32>> {
         let in_len = self.input_len();
         let out_len = self.output_len();
-        crate::ensure!(n >= 1, "empty batch");
-        crate::ensure!(n <= self.max_batch(), "batch {n} exceeds largest bucket");
         crate::ensure!(batch.len() == n * in_len, "bad batch packing");
-        let art = self.bucket_for(n).clone();
-        let service = art.service_seconds * self.time_scale;
-        // report the *replayed* numbers, not the predicted ones: the
-        // drift auditor's whole point is comparing the two
+        let chunks = self.route(n)?;
+        let mut service = 0.0f64;
+        let mut replayed_bytes = 0i64;
+        let mut replayed_seconds = 0.0f64;
+        let mut bucket_batch = 0usize;
+        for &c in &chunks {
+            let art = self.bucket_for(c);
+            service += art.service_seconds;
+            replayed_bytes += art.replayed_offchip_bytes;
+            replayed_seconds += art.replayed_seconds;
+            bucket_batch = bucket_batch.max(art.batch as usize);
+        }
+        // report the *replayed* numbers, not the predicted ones (the
+        // drift auditor's whole point is comparing the two), summed
+        // over every chunk an oversized batch split into
         self.last_actuals = Some(BatchActuals {
-            bucket_batch: art.batch as usize,
-            offchip_bytes: art.replayed_offchip_bytes,
-            service_seconds: art.replayed_seconds,
+            bucket_batch,
+            offchip_bytes: replayed_bytes,
+            service_seconds: replayed_seconds,
         });
+        let service = service * self.time_scale;
         if service > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(service));
         }
@@ -134,5 +202,107 @@ impl Backend for PlannedBackend {
             row.fill(2.0 * batch[k * in_len]);
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+    use crate::serve::plans::{PlanCache, PlanCacheConfig};
+
+    fn backend() -> PlannedBackend {
+        let mut cache = PlanCache::new(
+            "mlp",
+            PlanCacheConfig {
+                accel: AccelConfig::tiny(64 * 1024),
+                joint: false,
+                verify: true,
+                max_entries: 0,
+            },
+        );
+        let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
+        PlannedBackend::new(arts).unwrap().with_time_scale(0.0)
+    }
+
+    #[test]
+    fn route_splits_oversized_batches_and_rejects_empty() {
+        let be = backend();
+        assert!(be.route(0).is_err());
+        assert_eq!(be.route(1).unwrap(), vec![1]);
+        assert_eq!(be.route(3).unwrap(), vec![3]);
+        assert_eq!(be.route(4).unwrap(), vec![4]);
+        assert_eq!(be.route(10).unwrap(), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn oversized_infer_splits_and_aggregates_actuals() {
+        let mut be = backend();
+        let in_len = be.input_len();
+        let out_len = be.output_len();
+        let n = 10usize; // routes as 4 + 4 + 2
+        let batch: Vec<f32> = (0..n * in_len).map(|i| i as f32).collect();
+        let out = be.infer(&batch, n).unwrap();
+        assert_eq!(out.len(), n * out_len);
+        for k in 0..n {
+            assert_eq!(out[k * out_len], 2.0 * batch[k * in_len]);
+        }
+        let b4 = be.bucket_for(4).clone();
+        let b2 = be.bucket_for(2).clone();
+        let acts = be.last_batch_actuals().unwrap();
+        assert_eq!(acts.bucket_batch, 4);
+        assert_eq!(
+            acts.offchip_bytes,
+            2 * b4.replayed_offchip_bytes + b2.replayed_offchip_bytes
+        );
+        assert_eq!(
+            acts.service_seconds,
+            b4.replayed_seconds + b4.replayed_seconds + b2.replayed_seconds
+        );
+        // in-range batches keep the single-bucket fast path
+        let small = vec![1.0f32; 3 * in_len];
+        be.infer(&small, 3).unwrap();
+        let acts = be.last_batch_actuals().unwrap();
+        assert_eq!(acts.bucket_batch, 4);
+        assert_eq!(acts.offchip_bytes, b4.replayed_offchip_bytes);
+    }
+
+    #[test]
+    fn empty_batch_is_an_explicit_error() {
+        let mut be = backend();
+        assert!(be.infer(&[], 0).is_err());
+    }
+
+    #[test]
+    fn placement_follows_the_amortized_cost_rule() {
+        let mut cache = PlanCache::new(
+            "mlp",
+            PlanCacheConfig {
+                accel: AccelConfig::tiny(8 * 1024).with_cores(2),
+                joint: false,
+                verify: true,
+                max_entries: 0,
+            },
+        );
+        let arts = cache.compile_buckets(&[1, 2]).unwrap();
+        let be = PlannedBackend::new(arts).unwrap();
+        let top = be.buckets().last().unwrap().clone();
+        let s = top.sharded.as_ref().expect("multi-core compile attaches a sharding");
+        assert_eq!(
+            be.placement(2),
+            choose_placement(top.service_seconds, s.interval_seconds(), 2)
+        );
+        assert_eq!(be.placement(1), Placement::Replicas(1));
+        // the pipelined bucket table mirrors the placement's admission
+        // period: sharded flushes every interval, replicas every
+        // service time
+        let sharded_tab = be.pipelined_buckets(Placement::Sharded);
+        assert_eq!(
+            sharded_tab.last().unwrap().interval_seconds,
+            s.interval_seconds()
+        );
+        for b in &be.pipelined_buckets(Placement::Replicas(2)) {
+            assert_eq!(b.interval_seconds, b.cost.service_seconds);
+        }
     }
 }

@@ -348,6 +348,224 @@ pub fn run_load_traced(
     }
 }
 
+/// Per-bucket service model under pipelined (possibly sharded)
+/// execution: one flush occupies the engine front for
+/// `interval_seconds` (the steady-state admission period) while its
+/// requests wait `cost.service_seconds` end to end (the pipeline
+/// latency). An unsharded engine has the two equal; a sharded pipeline
+/// has `interval <= service`, which is exactly where its extra
+/// throughput comes from.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelinedBucket {
+    pub cost: BucketCost,
+    pub interval_seconds: f64,
+}
+
+/// Per-core placement of one model on a multi-core chip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Independent single-core replicas, each flushing its own
+    /// batches (no fabric traffic).
+    Replicas(usize),
+    /// One pipeline sharded across all cores.
+    Sharded,
+}
+
+/// The amortized-cost placement rule at saturation: `cores` replicas
+/// of a single-core plan complete a batch every `service / cores`
+/// seconds, while the sharded pipeline completes one every
+/// `interval`. Shard iff strictly ahead — ties keep replicas, which
+/// ship no inter-core bytes.
+pub fn choose_placement(
+    service_seconds: f64,
+    sharded_interval_seconds: f64,
+    cores: usize,
+) -> Placement {
+    let cores = cores.max(1);
+    if sharded_interval_seconds < service_seconds / cores as f64 {
+        Placement::Sharded
+    } else {
+        Placement::Replicas(cores)
+    }
+}
+
+/// [`run_load`] generalized to `workers` engines and a pipelined
+/// service model: a flush starts on the earliest-free engine, holds it
+/// for the bucket's `interval_seconds`, and completes its requests
+/// after the bucket's `service_seconds`. With `workers = 1` and
+/// `interval == service` per bucket this reproduces [`run_load`]
+/// exactly (asserted in the unit tests); `run_load`'s own event loop
+/// is left untouched because committed baselines replay it bit-exactly.
+pub fn run_load_pipelined(
+    buckets: &[PipelinedBucket],
+    workers: usize,
+    cfg: &LoadSimConfig,
+    label: &str,
+) -> LoadReport {
+    assert!(!buckets.is_empty(), "load sim needs at least one bucket");
+    assert!(workers >= 1, "load sim needs at least one worker");
+    let costs: Vec<BucketCost> = buckets.iter().map(|b| b.cost).collect();
+    let interval_of = |batch: usize| -> f64 {
+        buckets
+            .iter()
+            .find(|b| b.cost.batch == batch)
+            .expect("bucket chosen from this table")
+            .interval_seconds
+    };
+    let max_bucket = costs.iter().map(|c| c.batch).max().unwrap_or(1).max(1);
+    let max_wait_ns = cfg.max_wait.as_nanos() as u64;
+
+    let mut arrivals: BinaryHeap<Reverse<u64>> = BinaryHeap::new();
+    let (total_requests, mut issued) = match cfg.arrivals {
+        Arrivals::Poisson { rate_qps, requests, seed } => {
+            assert!(rate_qps > 0.0, "Poisson rate must be positive");
+            let mut rng = SplitMix64::new(seed);
+            let mut t = 0.0f64;
+            for _ in 0..requests {
+                let u = rng.next_f64().max(1e-12);
+                t += -u.ln() / rate_qps;
+                arrivals.push(Reverse((t * NS) as u64));
+            }
+            (requests, requests)
+        }
+        Arrivals::Closed { clients, requests } => {
+            let initial = if clients < 1 { 1 } else { clients }.min(requests);
+            for _ in 0..initial {
+                arrivals.push(Reverse(0));
+            }
+            (requests, initial)
+        }
+    };
+    let closed = matches!(cfg.arrivals, Arrivals::Closed { .. });
+
+    let mut queue: VecDeque<u64> = VecDeque::new();
+    // when each engine can admit its next flush (ns)
+    let mut free = vec![0u64; workers];
+    let mut now = 0u64;
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    let mut batches = 0u64;
+    let mut offchip: i64 = 0;
+    let mut batch_size_sum = 0u64;
+    let mut last_completion = 0u64;
+    let mut latency_us = LogHistogram::new();
+    let mut flushes_by_bucket: BTreeMap<usize, u64> = BTreeMap::new();
+    let (mut slo_met, mut slo_missed) = (0u64, 0u64);
+    let objective_ns = cfg.slo.map(|s| s.latency.as_nanos() as u64);
+
+    loop {
+        while let Some(&Reverse(t)) = arrivals.peek() {
+            if t > now {
+                break;
+            }
+            arrivals.pop();
+            submitted += 1;
+            if queue.len() < cfg.queue_cap {
+                queue.push_back(t);
+            } else {
+                rejected += 1;
+                if objective_ns.is_some() {
+                    slo_missed += 1;
+                }
+            }
+        }
+        let Some(&oldest) = queue.front() else {
+            match arrivals.peek() {
+                Some(&Reverse(t)) => {
+                    now = t;
+                    continue;
+                }
+                None => break,
+            }
+        };
+        let deadline = oldest + max_wait_ns;
+        if queue.len() < max_bucket && now < deadline {
+            let next_arrival = arrivals.peek().map(|&Reverse(t)| t).unwrap_or(u64::MAX);
+            now = deadline.min(next_arrival);
+            continue;
+        }
+        // the batch is due: wait for the earliest-free engine, then
+        // admit the flush there
+        let (worker, &free_at) =
+            free.iter().enumerate().min_by_key(|&(i, &t)| (t, i)).expect("workers >= 1");
+        if free_at > now {
+            now = free_at;
+            continue;
+        }
+        let (take, bucket) =
+            choose_bucket(queue.len(), &costs).expect("non-empty queue and table");
+        let done = now + (bucket.service_seconds * NS) as u64;
+        free[worker] = now + (interval_of(bucket.batch) * NS) as u64;
+        for _ in 0..take {
+            let enq = queue.pop_front().expect("take <= queue.len()");
+            let lat_ns = done - enq;
+            latency_us.record(lat_ns / 1_000);
+            if let Some(obj) = objective_ns {
+                if lat_ns <= obj {
+                    slo_met += 1;
+                } else {
+                    slo_missed += 1;
+                }
+            }
+            completed += 1;
+            if closed && issued < total_requests {
+                arrivals.push(Reverse(done));
+                issued += 1;
+            }
+        }
+        batches += 1;
+        batch_size_sum += take as u64;
+        *flushes_by_bucket.entry(bucket.batch).or_insert(0) += 1;
+        offchip += bucket.offchip_bytes;
+        last_completion = last_completion.max(done);
+    }
+
+    let makespan = (last_completion as f64 / NS).max(1e-12);
+    let mut bucket_sizes: Vec<usize> = costs.iter().map(|c| c.batch).collect();
+    bucket_sizes.sort_unstable();
+    LoadReport {
+        label: label.to_string(),
+        buckets: bucket_sizes,
+        submitted,
+        completed,
+        rejected,
+        batches,
+        makespan_seconds: makespan,
+        qps: completed as f64 / makespan,
+        latency_us,
+        offchip_bytes: offchip,
+        bytes_per_request: if completed > 0 {
+            offchip as f64 / completed as f64
+        } else {
+            0.0
+        },
+        mean_batch: if batches > 0 {
+            batch_size_sum as f64 / batches as f64
+        } else {
+            0.0
+        },
+        flushes_by_bucket,
+        slo: cfg.slo.map(|spec| {
+            let eligible = slo_met + slo_missed;
+            let attainment = if eligible > 0 {
+                slo_met as f64 / eligible as f64
+            } else {
+                1.0
+            };
+            let miss_rate = 1.0 - attainment;
+            SloReport {
+                objective_us: spec.latency.as_micros() as u64,
+                target: spec.target,
+                met: slo_met,
+                missed: slo_missed,
+                attainment,
+                error_budget_burn: miss_rate / (1.0 - spec.target).max(1e-9),
+            }
+        }),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -485,6 +703,79 @@ mod tests {
         let txt = r.to_json().to_string_compact();
         assert!(txt.contains("\"slo\""), "missing slo in {txt}");
         assert!(txt.contains("\"error_budget_burn\""));
+    }
+
+    fn as_pipelined(costs: &[BucketCost]) -> Vec<PipelinedBucket> {
+        costs
+            .iter()
+            .map(|&cost| PipelinedBucket { cost, interval_seconds: cost.service_seconds })
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_one_worker_equals_run_load() {
+        // workers = 1 and interval == service is exactly the single
+        // engine run_load models — the generalization must not drift
+        let t = table(&[1, 2, 4, 8]);
+        let pt = as_pipelined(&t);
+        for arrivals in [
+            Arrivals::Closed { clients: 12, requests: 500 },
+            Arrivals::Poisson { rate_qps: 60_000.0, requests: 2_000, seed: 7 },
+            Arrivals::Poisson { rate_qps: 3_000.0, requests: 1_000, seed: 42 },
+        ] {
+            let mut c = cfg(arrivals);
+            c.queue_cap = 8; // tight enough to exercise rejection
+            c.slo = Some(SloSpec { latency: Duration::from_millis(1), target: 0.99 });
+            let a = run_load(&t, &c, "base");
+            let b = run_load_pipelined(&pt, 1, &c, "pipe");
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.rejected, b.rejected);
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.offchip_bytes, b.offchip_bytes);
+            assert_eq!(a.qps, b.qps, "qps drifted");
+            assert_eq!(a.latency_us.percentile(0.99), b.latency_us.percentile(0.99));
+            assert_eq!(a.flushes_by_bucket, b.flushes_by_bucket);
+            let (sa, sb) = (a.slo.unwrap(), b.slo.unwrap());
+            assert_eq!((sa.met, sa.missed), (sb.met, sb.missed));
+        }
+    }
+
+    #[test]
+    fn sharded_interval_raises_saturated_qps() {
+        // a sharded pipeline admits a new batch every interval while
+        // requests still wait the full service latency: at saturation
+        // the closed loop must complete strictly more per second
+        let t = table(&[8]);
+        let single = as_pipelined(&t);
+        let sharded: Vec<PipelinedBucket> = t
+            .iter()
+            .map(|&cost| PipelinedBucket { cost, interval_seconds: cost.service_seconds / 3.0 })
+            .collect();
+        let c = cfg(Arrivals::Closed { clients: 32, requests: 600 });
+        let base = run_load_pipelined(&single, 1, &c, "single");
+        let pipe = run_load_pipelined(&sharded, 1, &c, "sharded");
+        assert_eq!(base.completed, pipe.completed, "unequal offered load");
+        assert!(
+            pipe.qps > base.qps,
+            "sharded {} <= single {}",
+            pipe.qps,
+            base.qps
+        );
+        // and two independent workers also beat one
+        let two = run_load_pipelined(&single, 2, &c, "replicas");
+        assert!(two.qps > base.qps, "replicas {} <= single {}", two.qps, base.qps);
+    }
+
+    #[test]
+    fn placement_rule_picks_the_faster_side() {
+        // interval under service/cores: sharding wins
+        assert_eq!(choose_placement(1.0, 0.2, 4), Placement::Sharded);
+        // interval at or above service/cores: replicas win (ties too —
+        // replicas ship no fabric bytes)
+        assert_eq!(choose_placement(1.0, 0.25, 4), Placement::Replicas(4));
+        assert_eq!(choose_placement(1.0, 0.4, 4), Placement::Replicas(4));
+        // one core: a pipeline can't beat itself
+        assert_eq!(choose_placement(1.0, 0.9, 1), Placement::Replicas(1));
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! * [`loadsim`] — deterministic virtual-time load simulation
 //!   (Poisson open loop and fixed-population closed loop) used by
 //!   `bench_serving` to report p50/p99 latency, sustained QPS and
-//!   off-chip bytes/request per bucket set at equal offered load.
+//!   off-chip bytes/request per bucket set at equal offered load;
+//!   [`loadsim::run_load_pipelined`] generalizes it to multiple
+//!   engines and the sharded interval/latency service model, and
+//!   [`loadsim::choose_placement`] is the amortized-cost rule between
+//!   per-core replicas and sharding one model across cores
+//!   (`bench_multicore`, E7).
 
 pub mod backend;
 pub mod loadsim;
@@ -25,6 +30,7 @@ pub mod plans;
 
 pub use backend::PlannedBackend;
 pub use loadsim::{
-    run_load, run_load_traced, Arrivals, LoadReport, LoadSimConfig, SloReport, SloSpec,
+    choose_placement, run_load, run_load_pipelined, run_load_traced, Arrivals, LoadReport,
+    LoadSimConfig, PipelinedBucket, Placement, SloReport, SloSpec,
 };
-pub use plans::{PlanCache, PlanCacheConfig, PlanKey, PlannedArtifact};
+pub use plans::{PlanCache, PlanCacheConfig, PlanKey, PlannedArtifact, ShardedPlan};

@@ -17,9 +17,10 @@
 
 use crate::accel::{simulate_pipelined, AccelConfig};
 use crate::alloc::MemoryPlan;
-use crate::cost::{evaluate, CostBreakdown, DecisionVector};
+use crate::cost::{evaluate, CostBreakdown, DecisionVector, ShardedCost};
 use crate::ir::Program;
 use crate::passes::{AllocStage, OptStage, PassManager, TileStage};
+use crate::shard::{self, ShardOpts};
 use crate::util::error::Result;
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -51,7 +52,7 @@ impl PlanKey {
 
 fn accel_fingerprint(cfg: &AccelConfig) -> String {
     format!(
-        "{}:{}x{}B:pe{}x{}:v{}:clk{:e}:dram{:e}:copy{:e}",
+        "{}:{}x{}B:pe{}x{}:v{}:clk{:e}:dram{:e}:copy{:e}:c{}:ic{:e}",
         cfg.name,
         cfg.banks,
         cfg.bank_bytes,
@@ -60,7 +61,9 @@ fn accel_fingerprint(cfg: &AccelConfig) -> String {
         cfg.vector_lanes,
         cfg.clock_hz,
         cfg.dram_bps,
-        cfg.onchip_copy_bps
+        cfg.onchip_copy_bps,
+        cfg.num_cores,
+        cfg.intercore_bps
     )
 }
 
@@ -97,6 +100,50 @@ pub struct PlannedArtifact {
     /// Flattened per-request output length.
     pub out_len: usize,
     pub compile_seconds: f64,
+    /// Multi-core pipeline sharding of the same `(model, batch)` point
+    /// (compiled when `accel.num_cores > 1`): the winning cut vector
+    /// with its per-stage plans and the combined multi-core cost,
+    /// verified against the multi-engine replay at compile time.
+    pub sharded: Option<ShardedPlan>,
+}
+
+/// The sharded serving artifact a multi-core backend places: per-stage
+/// plans plus the pipeline service model.
+#[derive(Clone, Debug)]
+pub struct ShardedPlan {
+    /// Cut node indices (empty = the search kept one stage).
+    pub cuts: Vec<usize>,
+    pub stages: Vec<Arc<crate::shard::StageArtifact>>,
+    /// Fabric bytes per stage hand-off (last entry 0).
+    pub transfer_bytes: Vec<i64>,
+    /// Combined multi-core prediction — `bits_eq`-verified against
+    /// [`crate::shard::replay_sharded`] at compile time.
+    pub cost: ShardedCost,
+    /// The widened decision vector (cuts + per-stage decisions).
+    pub decision: String,
+}
+
+impl ShardedPlan {
+    /// Steady-state seconds between batch completions once the
+    /// pipeline is full — the sharded service model's throughput term.
+    pub fn interval_seconds(&self) -> f64 {
+        self.cost.interval_seconds
+    }
+
+    /// One batch end-to-end through all stages (fill latency) — the
+    /// sharded service model's latency term.
+    pub fn latency_seconds(&self) -> f64 {
+        self.cost.latency_seconds
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cuts", Json::Arr(self.cuts.iter().map(|&c| Json::Int(c as i64)).collect())),
+            ("stages", Json::Int(self.stages.len() as i64)),
+            ("decision", Json::Str(self.decision.clone())),
+            ("cost", self.cost.to_json()),
+        ])
+    }
 }
 
 impl PlannedArtifact {
@@ -107,7 +154,7 @@ impl PlannedArtifact {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::Str(self.key.model.clone())),
             ("batch", Json::Int(self.batch)),
             ("accel", Json::Str(self.key.accel.clone())),
@@ -120,7 +167,11 @@ impl PlannedArtifact {
             ("in_len", Json::Int(self.in_len as i64)),
             ("out_len", Json::Int(self.out_len as i64)),
             ("compile_seconds", Json::Num(self.compile_seconds)),
-        ])
+        ];
+        if let Some(s) = &self.sharded {
+            fields.push(("sharded", s.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -136,6 +187,11 @@ pub struct PlanCacheConfig {
     /// Inter-pass IR verification while compiling (slower; on for
     /// tests, typically off for bulk bucket compilation).
     pub verify: bool,
+    /// LRU capacity in buckets (0 = unbounded). When a compile would
+    /// grow the cache past this, the least-recently-used bucket is
+    /// evicted; evictions are counted and surfaced by the coordinator
+    /// as `polymem_plan_cache_evictions_total`.
+    pub max_entries: usize,
 }
 
 /// Memoizing AOT compiler for one model's batch-size buckets.
@@ -143,13 +199,24 @@ pub struct PlanCache {
     model: String,
     cfg: PlanCacheConfig,
     entries: HashMap<i64, Arc<PlannedArtifact>>,
+    /// Bucket keys, least-recently-used first.
+    recency: Vec<i64>,
     hits: usize,
     misses: usize,
+    evictions: u64,
 }
 
 impl PlanCache {
     pub fn new(model: impl Into<String>, cfg: PlanCacheConfig) -> PlanCache {
-        PlanCache { model: model.into(), cfg, entries: HashMap::new(), hits: 0, misses: 0 }
+        PlanCache {
+            model: model.into(),
+            cfg,
+            entries: HashMap::new(),
+            recency: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
     }
 
     /// The cache key a given batch size resolves to.
@@ -174,6 +241,15 @@ impl PlanCache {
         self.misses
     }
 
+    /// Buckets evicted by the LRU cap since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains(&self, batch: i64) -> bool {
+        self.entries.contains_key(&batch)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -187,12 +263,30 @@ impl PlanCache {
     pub fn get_or_compile(&mut self, batch: i64) -> Result<Arc<PlannedArtifact>> {
         if let Some(a) = self.entries.get(&batch) {
             self.hits += 1;
-            return Ok(a.clone());
+            let a = a.clone();
+            self.touch(batch);
+            return Ok(a);
         }
         let art = Arc::new(self.compile(batch)?);
         self.misses += 1;
         self.entries.insert(batch, art.clone());
+        self.recency.push(batch);
+        if self.cfg.max_entries > 0 {
+            while self.entries.len() > self.cfg.max_entries {
+                let victim = self.recency.remove(0);
+                self.entries.remove(&victim);
+                self.evictions += 1;
+            }
+        }
         Ok(art)
+    }
+
+    /// Mark `batch` most-recently-used.
+    fn touch(&mut self, batch: i64) {
+        if let Some(pos) = self.recency.iter().position(|&b| b == batch) {
+            let b = self.recency.remove(pos);
+            self.recency.push(b);
+        }
     }
 
     /// Compile (or fetch) every bucket, returned in the given order —
@@ -248,6 +342,34 @@ impl PlanCache {
             cost.pipelined_seconds,
             cost.offchip_total()
         );
+        // multi-core chips also get the cut-axis search: the winning
+        // sharding rides alongside the single-pipeline artifact, held
+        // to the same contract against the multi-engine replay
+        let sharded = if accel.num_cores > 1 {
+            let sg = crate::models::by_name(&self.model, batch).expect("model resolved above");
+            let opts =
+                ShardOpts { joint: self.cfg.joint, verify: self.cfg.verify, ..ShardOpts::default() };
+            let outcome = shard::search_sharded(&sg, &accel, &opts)
+                .map_err(|e| crate::format_err!("sharding {}: {e}", key.describe()))?;
+            let replay = shard::replay_sharded(&outcome.stages, &outcome.transfer_bytes, &accel)
+                .map_err(|e| crate::format_err!("sharded replay {}: {e}", key.describe()))?;
+            crate::ensure!(
+                outcome.cost.bits_eq(&replay),
+                "sharded calibration broken for {}: predicted {}s vs replayed {}s",
+                key.describe(),
+                outcome.cost.interval_seconds,
+                replay.interval_seconds
+            );
+            Some(ShardedPlan {
+                cuts: outcome.cuts.clone(),
+                decision: outcome.describe(),
+                stages: outcome.stages,
+                transfer_bytes: outcome.transfer_bytes,
+                cost: outcome.cost,
+            })
+        } else {
+            None
+        };
         Ok(PlannedArtifact {
             key,
             program,
@@ -261,6 +383,7 @@ impl PlanCache {
             in_len: (total_in / batch) as usize,
             out_len: (total_out / batch) as usize,
             compile_seconds: t0.elapsed().as_secs_f64(),
+            sharded,
         })
     }
 }
@@ -273,7 +396,12 @@ mod tests {
     fn unknown_model_is_an_error() {
         let mut c = PlanCache::new(
             "no-such-model",
-            PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true },
+            PlanCacheConfig {
+                accel: AccelConfig::tiny(64 * 1024),
+                joint: false,
+                verify: true,
+                max_entries: 0,
+            },
         );
         assert!(c.get_or_compile(1).is_err());
         assert_eq!(c.misses(), 0);
@@ -283,7 +411,7 @@ mod tests {
     #[test]
     fn keys_distinguish_batch_accel_and_mode() {
         let mk = |joint, accel| {
-            PlanCache::new("mlp", PlanCacheConfig { accel, joint, verify: true })
+            PlanCache::new("mlp", PlanCacheConfig { accel, joint, verify: true, max_entries: 0 })
         };
         let a = mk(false, AccelConfig::tiny(64 * 1024));
         let b = mk(true, AccelConfig::tiny(64 * 1024));
@@ -292,5 +420,72 @@ mod tests {
         assert_ne!(a.key(1), b.key(1));
         assert_ne!(a.key(1), c.key(1));
         assert_eq!(a.key(4), a.key(4));
+    }
+
+    #[test]
+    fn keys_distinguish_core_count() {
+        let mk = |accel| {
+            PlanCache::new("mlp", PlanCacheConfig { accel, joint: false, verify: true, max_entries: 0 })
+        };
+        let one = mk(AccelConfig::tiny(64 * 1024));
+        let two = mk(AccelConfig::tiny(64 * 1024).with_cores(2));
+        assert_ne!(one.key(1), two.key(1));
+    }
+
+    #[test]
+    fn lru_cap_evicts_least_recently_used() {
+        let mut c = PlanCache::new(
+            "mlp",
+            PlanCacheConfig {
+                accel: AccelConfig::tiny(64 * 1024),
+                joint: false,
+                verify: true,
+                max_entries: 2,
+            },
+        );
+        c.get_or_compile(1).unwrap();
+        c.get_or_compile(2).unwrap();
+        c.get_or_compile(1).unwrap(); // refresh 1: the LRU victim is now 2
+        c.get_or_compile(4).unwrap(); // cap+1-th bucket
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.contains(1) && c.contains(4) && !c.contains(2));
+        // recompiling the victim is a fresh miss and evicts the new LRU
+        c.get_or_compile(2).unwrap();
+        assert_eq!(c.misses(), 4);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.evictions(), 2);
+        assert!(!c.contains(1) && c.contains(2) && c.contains(4));
+    }
+
+    #[test]
+    fn multicore_cache_attaches_verified_sharded_plan() {
+        let mut c = PlanCache::new(
+            "mlp",
+            PlanCacheConfig {
+                accel: AccelConfig::tiny(8 * 1024).with_cores(2),
+                joint: false,
+                verify: true,
+                max_entries: 0,
+            },
+        );
+        let a = c.get_or_compile(2).unwrap();
+        let s = a.sharded.as_ref().expect("multi-core compile attaches a sharding");
+        assert!(s.interval_seconds() > 0.0);
+        // the no-cut vector is always a candidate, so the sharded
+        // interval can never lose to the single-pipeline service time
+        assert!(s.interval_seconds() <= a.service_seconds);
+        assert_eq!(s.stages.len(), s.transfer_bytes.len());
+        // a single-core cache never pays for the cut search
+        let mut c1 = PlanCache::new(
+            "mlp",
+            PlanCacheConfig {
+                accel: AccelConfig::tiny(8 * 1024),
+                joint: false,
+                verify: true,
+                max_entries: 0,
+            },
+        );
+        assert!(c1.get_or_compile(2).unwrap().sharded.is_none());
     }
 }

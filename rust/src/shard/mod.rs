@@ -1,0 +1,694 @@
+//! Pipeline-parallel model sharding across cores.
+//!
+//! The chip the paper targets has several cores; everything upstream
+//! of this module compiles for exactly one. Sharding splits the
+//! scheduled graph into `k ≤ num_cores` **contiguous stages** (node
+//! ranges in the builder's topological order), compiles each stage
+//! through the full existing pass pipeline (lower → DME → opt/tile →
+//! bank → plan) for its own core, and runs the stages as a software
+//! pipeline: core `s` computes batch `b` while core `s-1` computes
+//! batch `b+1`.
+//!
+//! **The 3-hop transfer model.** A tensor cut by a stage boundary is
+//! (1) written back to the producer core's DRAM — its stage graph
+//! marks it `Output`, so the stage pays a normal `OutputStore`; (2)
+//! shipped over the core-to-core fabric — charged here as
+//! [`TrafficClass::InterCore`] bytes, once per boundary crossed, and
+//! as `transfer` seconds at `intercore_bps`; (3) loaded by the
+//! consumer core — its stage graph marks it `Input`, a normal
+//! `InputLoad`. Per-stage compilation, cost evaluation and simulation
+//! therefore run **unchanged**, and the sharded prediction/replay pair
+//! inherit the repo's calibration invariant: both sides combine
+//! per-stage numbers through the single
+//! [`cost::combine_sharded`] combiner, so traffic stays byte-exact and
+//! seconds bit-exact ([`replay_sharded`] is the multi-engine replay).
+//!
+//! **The search.** [`search_sharded`] widens the joint decision space
+//! with the cut-point axis: candidate boundaries are ranked by
+//! crossing bytes (the `max_cut_points` cheapest kept), cut vectors
+//! are enumerated for k = 1..=num_cores, and candidates are evaluated
+//! in ascending branch-and-bound floor order (per-stage compulsory
+//! DMA seconds + hand-off) so dominated cut vectors are pruned before
+//! any stage compiles. Per-stage artifacts are memoized by node range
+//! across cut vectors, and each stage's inner beam search reuses the
+//! memoized two-tier realization + worker pool — so the widened search
+//! stays affordable and, because the inner search is thread-count
+//! invariant and the outer enumeration is serial and deterministic,
+//! the sharded winner is too (extended in `tests/opt_threads.rs`).
+//!
+//! Interpreted semantics are preserved exactly: stage graphs keep the
+//! original tensor/node ids, so per-tensor seeded buffers line up, and
+//! [`interpret_sharded`] forwards cut tensors between stages —
+//! the differential oracle (`tests/diff_pipeline.rs`) holds the
+//! composition to bit-identical outputs against the unsharded
+//! reference.
+
+use crate::accel::engine;
+use crate::accel::{simulate_pipelined, AccelConfig};
+use crate::alloc::MemoryPlan;
+use crate::cost::{combine_sharded, compulsory_offchip, evaluate, CostBreakdown, ShardedCost};
+use crate::interp::{interpret, Buffers, InterpError};
+use crate::ir::graph::Node;
+use crate::ir::loopnest::Program;
+use crate::ir::tensor::{TensorId, TensorInfo, TensorKind};
+use crate::ir::Graph;
+use crate::obs::ChromeTrace;
+use crate::passes::dme::run_dme;
+use crate::passes::{AllocStage, OptStage, PassManager, TileStage};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How the shard search compiles and enumerates.
+#[derive(Clone, Debug)]
+pub struct ShardOpts {
+    /// Joint beam search per stage (`opt` stage) vs staged-greedy
+    /// tiling (`tile` stage); both end in the alloc stage.
+    pub joint: bool,
+    /// Inter-pass IR verification while compiling stages.
+    pub verify: bool,
+    /// Worker threads for each stage's inner beam search (0 = auto).
+    pub threads: usize,
+    /// Candidate cut positions kept (the cheapest boundaries by
+    /// crossing bytes). Bounds the enumeration at
+    /// `Σ_k C(max_cut_points, k-1)`.
+    pub max_cut_points: usize,
+}
+
+impl Default for ShardOpts {
+    fn default() -> ShardOpts {
+        ShardOpts { joint: true, verify: false, threads: 0, max_cut_points: 8 }
+    }
+}
+
+/// One compiled pipeline stage: the contiguous node range
+/// `[start, end)` of the original graph, compiled through the full
+/// pass pipeline for one core.
+#[derive(Clone, Debug)]
+pub struct StageArtifact {
+    pub start: usize,
+    pub end: usize,
+    pub program: Program,
+    pub plan: MemoryPlan,
+    /// Unified cost-model prediction for this stage alone.
+    pub cost: CostBreakdown,
+    /// The stage's winning memory-plan decision vector.
+    pub decision: String,
+}
+
+/// Search accounting (deterministic except `search_seconds`).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Cut vectors enumerated (including the k=1 no-cut vector).
+    pub candidates: usize,
+    /// Cut vectors fully evaluated (stages compiled + combined).
+    pub evaluated: usize,
+    /// Cut vectors skipped because their floor met or exceeded the
+    /// incumbent interval.
+    pub pruned: usize,
+    /// Cut vectors dropped because a stage could not plan.
+    pub infeasible: usize,
+    /// Stage compilations actually run (memo misses).
+    pub stage_compiles: usize,
+    /// Stage compilations served from the range memo.
+    pub memo_hits: usize,
+    pub search_seconds: f64,
+}
+
+impl ShardStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("candidates", Json::Int(self.candidates as i64)),
+            ("evaluated", Json::Int(self.evaluated as i64)),
+            ("pruned", Json::Int(self.pruned as i64)),
+            ("infeasible", Json::Int(self.infeasible as i64)),
+            ("stage_compiles", Json::Int(self.stage_compiles as i64)),
+            ("memo_hits", Json::Int(self.memo_hits as i64)),
+            ("search_seconds", Json::Num(self.search_seconds)),
+        ])
+    }
+}
+
+/// The sharded winner: the cut decision, its per-stage artifacts, and
+/// the combined multi-core prediction.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    /// Cut positions (node indices; empty = single stage).
+    pub cuts: Vec<usize>,
+    pub stages: Vec<Arc<StageArtifact>>,
+    /// Fabric bytes each stage ships to its successor (last entry 0):
+    /// the sizes of every tensor alive across that boundary.
+    pub transfer_bytes: Vec<i64>,
+    pub cost: ShardedCost,
+    pub stats: ShardStats,
+}
+
+impl ShardOutcome {
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The widened decision vector: the cut axis plus each stage's
+    /// memory-plan decision.
+    pub fn describe(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| format!("[{}..{}) {}", s.start, s.end, s.decision))
+            .collect();
+        format!("cuts={:?} | {}", self.cuts, stages.join(" | "))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cuts", Json::Arr(self.cuts.iter().map(|&c| Json::Int(c as i64)).collect())),
+            ("stages", Json::Int(self.num_stages() as i64)),
+            (
+                "transfer_bytes",
+                Json::Arr(self.transfer_bytes.iter().map(|&b| Json::Int(b)).collect()),
+            ),
+            ("decision", Json::Str(self.describe())),
+            ("cost", self.cost.to_json()),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+
+    /// Chrome-trace export of the steady-state pipeline: one lane per
+    /// core, `batches` batches through the pipe, compute spans plus
+    /// the inter-core sends.
+    pub fn to_chrome_json(&self, batches: usize) -> Json {
+        let spans = engine::multicore_pipeline_intervals(
+            &self.cost.stage_seconds,
+            &self.cost.transfer_seconds,
+            batches,
+        );
+        let mut ct = ChromeTrace::new();
+        for (s, stage) in self.stages.iter().enumerate() {
+            ct.thread_name(s as i64, &format!("core{} [{}..{})", s, stage.start, stage.end));
+        }
+        for sp in &spans {
+            ct.span(sp.core as i64, &format!("b{} stage{}", sp.batch, sp.core), sp.start, sp.done - sp.start);
+            if sp.sent > sp.done {
+                ct.span(sp.core as i64, &format!("b{} send", sp.batch), sp.done, sp.sent - sp.done);
+            }
+        }
+        ct.to_json()
+    }
+}
+
+/// Bytes of every tensor alive across a cut at node index `cut`:
+/// produced by a node `< cut`, consumed by a node `≥ cut`. These are
+/// the tensors the fabric must ship at this boundary.
+pub fn crossing_bytes(g: &Graph, cut: usize) -> i64 {
+    crossing_tensors(g, cut).iter().map(|&t| g.tensor(t).size_bytes()).sum()
+}
+
+/// The tensors alive across a cut, in id order.
+pub fn crossing_tensors(g: &Graph, cut: usize) -> Vec<TensorId> {
+    let nodes = g.nodes();
+    let mut produced_before: BTreeMap<TensorId, bool> = BTreeMap::new();
+    for (i, n) in nodes.iter().enumerate() {
+        produced_before.insert(n.output, i < cut);
+    }
+    let mut out: Vec<TensorId> = Vec::new();
+    for n in nodes.iter().skip(cut) {
+        for &t in &n.inputs {
+            if produced_before.get(&t) == Some(&true) && !out.contains(&t) {
+                out.push(t);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Extract the stage subgraph for nodes `[start, end)`, preserving the
+/// original tensor and node ids (so seeded buffers and cut identities
+/// line up across stages). Kind rewrites at the boundary implement the
+/// 3-hop model: tensors produced before `start` become stage `Input`s
+/// (cut-ins), tensors produced in-stage but consumed at or after `end`
+/// become stage `Output`s (cut-outs).
+pub fn stage_graph(g: &Graph, start: usize, end: usize) -> Graph {
+    let nodes = g.nodes();
+    assert!(start < end && end <= nodes.len(), "stage range [{start}..{end})");
+    let producer_pos: BTreeMap<TensorId, usize> =
+        nodes.iter().enumerate().map(|(i, n)| (n.output, i)).collect();
+    let mut last_use: BTreeMap<TensorId, usize> = BTreeMap::new();
+    for (i, n) in nodes.iter().enumerate() {
+        for &t in &n.inputs {
+            last_use.insert(t, i);
+        }
+    }
+    let mut tensors: BTreeMap<TensorId, TensorInfo> = BTreeMap::new();
+    let mut keep = |g: &Graph, t: TensorId, tensors: &mut BTreeMap<TensorId, TensorInfo>| {
+        if tensors.contains_key(&t) {
+            return;
+        }
+        let mut info = g.tensor(t).clone();
+        info.kind = match info.kind {
+            TensorKind::Input => TensorKind::Input,
+            TensorKind::Weight => TensorKind::Weight,
+            kind => match producer_pos.get(&t) {
+                // produced upstream: this stage receives it (cut-in)
+                Some(&p) if p < start => TensorKind::Input,
+                // produced here: keep Output; an intermediate consumed
+                // downstream becomes a cut-out
+                _ if kind == TensorKind::Output => TensorKind::Output,
+                _ if last_use.get(&t).is_some_and(|&u| u >= end) => TensorKind::Output,
+                _ => TensorKind::Intermediate,
+            },
+        };
+        tensors.insert(t, info);
+    };
+    let mut stage_nodes: Vec<Node> = Vec::with_capacity(end - start);
+    for n in &nodes[start..end] {
+        for &t in &n.inputs {
+            keep(g, t, &mut tensors);
+        }
+        keep(g, n.output, &mut tensors);
+        stage_nodes.push(n.clone());
+    }
+    Graph::from_parts(tensors, stage_nodes)
+}
+
+/// The contiguous stage ranges a cut vector induces over `n` nodes.
+pub fn stage_ranges(n: usize, cuts: &[usize]) -> Vec<(usize, usize)> {
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(0);
+    bounds.extend_from_slice(cuts);
+    bounds.push(n);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Per-stage fabric bytes for a cut vector (last entry 0).
+pub fn transfer_bytes(g: &Graph, cuts: &[usize]) -> Vec<i64> {
+    let mut out: Vec<i64> = cuts.iter().map(|&c| crossing_bytes(g, c)).collect();
+    out.push(0);
+    out
+}
+
+fn combinations(items: &[usize], k: usize) -> Vec<Vec<usize>> {
+    if k == 0 {
+        return vec![vec![]];
+    }
+    let mut out = Vec::new();
+    for (i, &first) in items.iter().enumerate() {
+        if items.len() - i < k {
+            break;
+        }
+        for mut rest in combinations(&items[i + 1..], k - 1) {
+            rest.insert(0, first);
+            out.push(rest);
+        }
+    }
+    out
+}
+
+/// `a` strictly better than `b`: smaller steady-state interval, then
+/// fewer off-chip bytes, then fewer fabric bytes, then fewer stages,
+/// then lexicographically smaller cuts — a deterministic total order.
+fn better(a: &ShardOutcome, b: &ShardOutcome) -> bool {
+    if a.cost.interval_seconds != b.cost.interval_seconds {
+        return a.cost.interval_seconds < b.cost.interval_seconds;
+    }
+    if a.cost.offchip_total() != b.cost.offchip_total() {
+        return a.cost.offchip_total() < b.cost.offchip_total();
+    }
+    if a.cost.intercore_total() != b.cost.intercore_total() {
+        return a.cost.intercore_total() < b.cost.intercore_total();
+    }
+    if a.num_stages() != b.num_stages() {
+        return a.num_stages() < b.num_stages();
+    }
+    a.cuts < b.cuts
+}
+
+struct SearchMemo {
+    /// Compiled stage artifacts by node range (Err = cannot plan).
+    stages: HashMap<(usize, usize), std::result::Result<Arc<StageArtifact>, String>>,
+    /// Branch-and-bound floors by node range: compulsory off-chip DMA
+    /// seconds of the post-DME stage program.
+    floors: HashMap<(usize, usize), f64>,
+}
+
+fn stage_floor(g: &Graph, range: (usize, usize), cfg: &AccelConfig, memo: &mut SearchMemo) -> f64 {
+    if let Some(&f) = memo.floors.get(&range) {
+        return f;
+    }
+    let sg = stage_graph(g, range.0, range.1);
+    let mut p = Program::lower(sg);
+    run_dme(&mut p);
+    let f = compulsory_offchip(&p) as f64 / cfg.dram_bps;
+    memo.floors.insert(range, f);
+    f
+}
+
+fn compile_stage(
+    g: &Graph,
+    range: (usize, usize),
+    cfg: &AccelConfig,
+    opts: &ShardOpts,
+    memo: &mut SearchMemo,
+    stats: &mut ShardStats,
+) -> std::result::Result<Arc<StageArtifact>, String> {
+    if let Some(r) = memo.stages.get(&range) {
+        stats.memo_hits += 1;
+        return r.clone();
+    }
+    stats.stage_compiles += 1;
+    let sg = stage_graph(g, range.0, range.1);
+    let pm = PassManager {
+        opt: opts
+            .joint
+            .then(|| OptStage::for_accel(cfg.clone()).with_threads(opts.threads)),
+        tile: (!opts.joint).then(|| TileStage::for_accel(cfg.clone())),
+        alloc: Some(AllocStage::for_accel(cfg.clone())),
+        verify: opts.verify,
+        ..PassManager::default()
+    };
+    let built = match pm.run(sg) {
+        Err(e) => Err(format!("stage [{}..{}): {e}", range.0, range.1)),
+        Ok(rep) => {
+            let decision = rep
+                .opt
+                .as_ref()
+                .map(|s| s.decision.clone())
+                .unwrap_or_else(|| crate::cost::DecisionVector::baseline().describe());
+            let program = rep.program;
+            let plan = rep.plan.expect("alloc stage always configured");
+            let cost = evaluate(&program, &plan, cfg);
+            Ok(Arc::new(StageArtifact {
+                start: range.0,
+                end: range.1,
+                program,
+                plan,
+                cost,
+                decision,
+            }))
+        }
+    };
+    memo.stages.insert(range, built.clone());
+    built
+}
+
+/// Search cut vectors × per-stage memory plans for the sharding that
+/// minimizes the steady-state batch interval on `cfg.num_cores` cores.
+/// `k = 1` (no cut) is always a candidate, so the winner is never
+/// worse than the single-core plan under the same objective. The
+/// result is deterministic and thread-count invariant.
+pub fn search_sharded(g: &Graph, cfg: &AccelConfig, opts: &ShardOpts) -> Result<ShardOutcome> {
+    let t0 = Instant::now();
+    let n = g.nodes().len();
+    crate::ensure!(n >= 1, "shard search: empty graph");
+    let cores = cfg.num_cores.max(1);
+    let mut stats = ShardStats::default();
+    let mut memo = SearchMemo { stages: HashMap::new(), floors: HashMap::new() };
+
+    // candidate boundaries: the cheapest crossings first
+    let mut scored: Vec<(i64, usize)> = (1..n).map(|p| (crossing_bytes(g, p), p)).collect();
+    scored.sort();
+    scored.truncate(opts.max_cut_points);
+    let mut positions: Vec<usize> = scored.into_iter().map(|(_, p)| p).collect();
+    positions.sort();
+
+    // enumerate cut vectors for k = 1..=cores, with their floors
+    let mut cands: Vec<(u64, Vec<usize>)> = Vec::new();
+    for k in 1..=cores.min(positions.len() + 1) {
+        for cuts in combinations(&positions, k - 1) {
+            let transfers = transfer_bytes(g, &cuts);
+            let floor = stage_ranges(n, &cuts)
+                .iter()
+                .zip(&transfers)
+                .map(|(&r, &b)| stage_floor(g, r, cfg, &mut memo) + engine::intercore_seconds(cfg, b))
+                .fold(0.0f64, f64::max);
+            cands.push((floor.to_bits(), cuts));
+        }
+    }
+    stats.candidates = cands.len();
+    // ascending floor, then fewer cuts, then lexicographic: pruning
+    // fires as early as possible and the scan order is deterministic
+    cands.sort_by(|a, b| {
+        f64::from_bits(a.0)
+            .total_cmp(&f64::from_bits(b.0))
+            .then(a.1.len().cmp(&b.1.len()))
+            .then(a.1.cmp(&b.1))
+    });
+
+    let mut best: Option<ShardOutcome> = None;
+    let mut first_err: Option<String> = None;
+    for (floor_bits, cuts) in cands {
+        if let Some(b) = &best {
+            if f64::from_bits(floor_bits) >= b.cost.interval_seconds {
+                stats.pruned += 1;
+                continue;
+            }
+        }
+        let ranges = stage_ranges(n, &cuts);
+        let mut stages: Vec<Arc<StageArtifact>> = Vec::with_capacity(ranges.len());
+        let mut failed = false;
+        for &r in &ranges {
+            match compile_stage(g, r, cfg, opts, &mut memo, &mut stats) {
+                Ok(a) => stages.push(a),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed {
+            stats.infeasible += 1;
+            continue;
+        }
+        stats.evaluated += 1;
+        let transfers = transfer_bytes(g, &cuts);
+        let stage_seconds: Vec<f64> = stages.iter().map(|s| s.cost.pipelined_seconds).collect();
+        let stage_traffic: Vec<&crate::accel::TrafficCounters> =
+            stages.iter().map(|s| &s.cost.traffic).collect();
+        let stage_peaks: Vec<i64> = stages.iter().map(|s| s.cost.peak_scratchpad).collect();
+        let cost = combine_sharded(&stage_seconds, &stage_traffic, &stage_peaks, &transfers, cfg);
+        let cand = ShardOutcome {
+            cuts,
+            stages,
+            transfer_bytes: transfers,
+            cost,
+            stats: ShardStats::default(),
+        };
+        let take = match &best {
+            None => true,
+            Some(b) => better(&cand, b),
+        };
+        if take {
+            best = Some(cand);
+        }
+    }
+    stats.search_seconds = t0.elapsed().as_secs_f64();
+    match best {
+        Some(mut b) => {
+            b.stats = stats;
+            Ok(b)
+        }
+        None => Err(crate::format_err!(
+            "shard search: no feasible sharding ({})",
+            first_err.unwrap_or_else(|| "no candidates".into())
+        )),
+    }
+}
+
+/// Multi-engine replay of a sharded winner: each stage replays on its
+/// own engine pair through `simulate_pipelined` (unchanged), and the
+/// per-stage measurements combine through the *same*
+/// [`combine_sharded`] recurrence as the prediction. The sharded
+/// calibration contract: the result `bits_eq` the predicted
+/// [`ShardedCost`].
+pub fn replay_sharded(
+    stages: &[Arc<StageArtifact>],
+    transfer_bytes: &[i64],
+    cfg: &AccelConfig,
+) -> Result<ShardedCost> {
+    let mut seconds = Vec::with_capacity(stages.len());
+    let mut traffic = Vec::with_capacity(stages.len());
+    let mut peaks = Vec::with_capacity(stages.len());
+    for s in stages {
+        let sim = simulate_pipelined(&s.program, &s.plan, cfg, None)
+            .map_err(|e| crate::format_err!("sharded replay stage [{}..{}): {e}", s.start, s.end))?;
+        seconds.push(sim.seconds);
+        traffic.push(sim.traffic);
+        peaks.push(sim.peak_scratchpad);
+    }
+    let refs: Vec<&crate::accel::TrafficCounters> = traffic.iter().collect();
+    Ok(combine_sharded(&seconds, &refs, &peaks, transfer_bytes, cfg))
+}
+
+/// Run the compiled stages end to end on the scalar interpreter,
+/// forwarding cut tensors between stages, and return the final values
+/// of the original graph's outputs. Stage graphs preserve tensor ids
+/// and `Buffers::seeded` seeds per tensor id, so the only values that
+/// need forwarding are the cut-ins (stage `Input`s some earlier stage
+/// produced). The differential oracle compares this bit-for-bit with
+/// the unsharded reference.
+pub fn interpret_sharded(
+    stages: &[Arc<StageArtifact>],
+    outputs: &[TensorId],
+    seed: u64,
+) -> std::result::Result<BTreeMap<TensorId, Vec<f64>>, InterpError> {
+    let mut forwarded: BTreeMap<TensorId, Vec<f64>> = BTreeMap::new();
+    for s in stages {
+        let g = &s.program.graph;
+        let mut bufs = Buffers::seeded(g, seed);
+        for t in g.tensors() {
+            if t.kind == TensorKind::Input {
+                if let Some(vals) = forwarded.get(&t.id) {
+                    bufs.set_tensor(t.id, vals.clone());
+                }
+            }
+        }
+        interpret(&s.program, &mut bufs)?;
+        for t in g.tensors() {
+            if t.kind == TensorKind::Output {
+                forwarded.insert(t.id, bufs.tensor(t.id).to_vec());
+            }
+        }
+    }
+    Ok(outputs
+        .iter()
+        .map(|&t| (t, forwarded.get(&t).cloned().unwrap_or_default()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::diff::stage_outputs;
+    use crate::models;
+
+    fn tiny_cfg(cores: usize) -> AccelConfig {
+        AccelConfig::tiny(8 * 1024).with_cores(cores)
+    }
+
+    fn greedy_opts() -> ShardOpts {
+        // staged-greedy per stage keeps unit tests fast; the joint
+        // path is covered by opt_threads / diff_pipeline / benches
+        ShardOpts { joint: false, verify: true, ..ShardOpts::default() }
+    }
+
+    #[test]
+    fn stage_graphs_partition_and_rewrite_kinds() {
+        let g = models::mlp(2, 12, 8, 4, 2);
+        let n = g.nodes().len();
+        let cut = n / 2;
+        let a = stage_graph(&g, 0, cut);
+        let b = stage_graph(&g, cut, n);
+        assert_eq!(a.nodes().len() + b.nodes().len(), n);
+        crate::ir::verify::verify_graph(&a).unwrap();
+        crate::ir::verify::verify_graph(&b).unwrap();
+        // every crossing tensor is an Output upstream and an Input
+        // downstream, under its original id
+        let crossing = crossing_tensors(&g, cut);
+        assert!(!crossing.is_empty());
+        for t in crossing {
+            assert_eq!(a.tensor(t).kind, TensorKind::Output, "{t:?} upstream");
+            assert_eq!(b.tensor(t).kind, TensorKind::Input, "{t:?} downstream");
+        }
+    }
+
+    #[test]
+    fn crossing_bytes_match_manual_count() {
+        let g = models::mlp(2, 12, 8, 4, 2);
+        for cut in 1..g.nodes().len() {
+            let manual: i64 = crossing_tensors(&g, cut)
+                .iter()
+                .map(|&t| g.tensor(t).size_bytes())
+                .sum();
+            assert_eq!(crossing_bytes(&g, cut), manual);
+        }
+    }
+
+    #[test]
+    fn stage_ranges_cover() {
+        assert_eq!(stage_ranges(10, &[]), vec![(0, 10)]);
+        assert_eq!(stage_ranges(10, &[3, 7]), vec![(0, 3), (3, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn combinations_count() {
+        let v = [1, 2, 3, 4];
+        assert_eq!(combinations(&v, 0).len(), 1);
+        assert_eq!(combinations(&v, 2).len(), 6);
+        assert_eq!(combinations(&v, 4).len(), 1);
+        assert_eq!(combinations(&v, 5).len(), 0);
+        // lexicographic order
+        assert_eq!(combinations(&v, 2)[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn search_single_core_is_one_stage() {
+        let g = models::mlp(2, 12, 8, 4, 2);
+        let out = search_sharded(&g, &tiny_cfg(1), &greedy_opts()).unwrap();
+        assert_eq!(out.num_stages(), 1);
+        assert!(out.cuts.is_empty());
+        assert_eq!(out.cost.intercore_total(), 0);
+        assert_eq!(out.transfer_bytes, vec![0]);
+        // one stage: interval == latency == the stage's pipelined time
+        assert_eq!(
+            out.cost.interval_seconds.to_bits(),
+            out.stages[0].cost.pipelined_seconds.to_bits()
+        );
+    }
+
+    #[test]
+    fn search_multicore_beats_or_ties_single_and_calibrates() {
+        let g = models::resnet18_scaled(1, 16, 8, 10);
+        let cfg = tiny_cfg(2);
+        let out = search_sharded(&g, &cfg, &greedy_opts()).unwrap();
+        let single = search_sharded(&g, &tiny_cfg(1), &greedy_opts()).unwrap();
+        assert!(out.cost.interval_seconds <= single.cost.interval_seconds);
+        assert!(out.num_stages() <= 2);
+        // the multi-engine replay agrees byte-exactly / bit-exactly
+        let replay = replay_sharded(&out.stages, &out.transfer_bytes, &cfg).unwrap();
+        assert!(out.cost.bits_eq(&replay), "sharded calibration broke");
+        if out.num_stages() == 2 {
+            assert!(out.cost.intercore_total() > 0);
+            assert!(out.cost.latency_seconds > out.cost.interval_seconds);
+        }
+        // stats add up
+        let st = &out.stats;
+        assert_eq!(st.candidates, st.evaluated + st.pruned + st.infeasible);
+        assert!(st.stage_compiles > 0);
+    }
+
+    #[test]
+    fn sharded_interpretation_is_bit_identical() {
+        let seed = 0xD1FF_5EED;
+        for (name, g) in [
+            ("mlp", models::mlp(2, 12, 8, 4, 2)),
+            ("resnet18", models::resnet18_scaled(1, 16, 8, 10)),
+        ] {
+            let cfg = tiny_cfg(2);
+            let out = search_sharded(&g, &cfg, &greedy_opts()).unwrap();
+            let outputs = g.outputs();
+            let reference =
+                stage_outputs(&Program::lower(g), &outputs, seed, "reference").unwrap();
+            let sharded = interpret_sharded(&out.stages, &outputs, seed).unwrap();
+            for (&t, vals) in &reference {
+                let got = &sharded[&t];
+                assert_eq!(vals.len(), got.len(), "{name} {t:?} length");
+                for (i, (a, b)) in vals.iter().zip(got).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} {t:?}[{i}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_export_has_one_lane_per_core() {
+        let g = models::resnet18_scaled(1, 16, 8, 10);
+        let cfg = tiny_cfg(2);
+        let out = search_sharded(&g, &cfg, &greedy_opts()).unwrap();
+        let j = out.to_chrome_json(3);
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert!(!evs.is_empty());
+    }
+}

@@ -22,6 +22,7 @@ use polymem::models::{self, WaveNetConfig};
 use polymem::passes::dme::run_dme;
 use polymem::passes::manager::{AllocStage, BankMode, OptStage, PassManager, TileStage};
 use polymem::poly::AccessMap;
+use polymem::shard::{interpret_sharded, search_sharded, ShardOpts};
 use polymem::util::fuzzgraph;
 
 const SEED: u64 = 0xD1FF_5EED;
@@ -172,7 +173,31 @@ fn fuzzed_graphs_equivalent_across_all_stages() {
         // the tiled config always sees scratchpad-busting graphs — and
         // every 4th such oversized seed (≡ 3 mod 16) runs the joint-
         // optimizer configuration instead, so widened fusion, halo
-        // recompute and spill-flavor choices are fuzzed too.
+        // recompute and spill-flavor choices are fuzzed too — and every
+        // 8th oversized seed (≡ 7 mod 32, disjoint from the joint slot)
+        // compiles sharded at num_cores = 2, holding the composed
+        // lower → dme → opt(shard) → bank → plan stages to bit-identical
+        // outputs across the cut.
+        if seed % 32 == 7 {
+            let cfg = AccelConfig::tiny(4 * 1024).with_cores(2);
+            let opts =
+                ShardOpts { joint: true, verify: true, max_cut_points: 4, ..ShardOpts::default() };
+            let outcome = search_sharded(&g, &cfg, &opts).unwrap_or_else(|e| {
+                panic!("shard search failed (replay with FUZZ_SEED={seed} FUZZ_CASES=1): {e}")
+            });
+            let outputs = g.outputs();
+            let reference = stage_outputs(&Program::lower(g), &outputs, seed, "reference")
+                .unwrap_or_else(|e| panic!("FUZZ_SEED={seed}: reference interpretation: {e}"));
+            let sharded = interpret_sharded(&outcome.stages, &outputs, seed)
+                .unwrap_or_else(|e| panic!("FUZZ_SEED={seed}: sharded interpretation: {e}"));
+            assert!(
+                first_mismatch(&reference, &sharded).is_none(),
+                "sharded outputs diverged (replay with FUZZ_SEED={seed} FUZZ_CASES=1, \
+                 cuts {:?})",
+                outcome.cuts
+            );
+            continue;
+        }
         let pm = match seed % 4 {
             0 => PassManager::default(),
             1 => PassManager { bank_mode: BankMode::Local, ..Default::default() },

@@ -14,7 +14,7 @@ fn tiny() -> AccelConfig {
 fn mlp_cache() -> PlanCache {
     PlanCache::new(
         "mlp",
-        PlanCacheConfig { accel: tiny(), joint: false, verify: true },
+        PlanCacheConfig { accel: tiny(), joint: false, verify: true, max_entries: 0 },
     )
 }
 

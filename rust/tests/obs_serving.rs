@@ -101,7 +101,7 @@ fn zoo_load_sims_conserve_spans() {
 fn traced_load_sim_over_compiled_artifacts_exports_chrome() {
     let mut cache = PlanCache::new(
         "mlp",
-        PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true },
+        PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true, max_entries: 0 },
     );
     let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
     let costs: Vec<BucketCost> = arts
@@ -161,7 +161,7 @@ fn traced_load_sim_over_compiled_artifacts_exports_chrome() {
 fn planned_backend_cost_drift_is_exactly_zero() {
     let mut cache = PlanCache::new(
         "mlp",
-        PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true },
+        PlanCacheConfig { accel: AccelConfig::tiny(64 * 1024), joint: false, verify: true, max_entries: 0 },
     );
     let arts = cache.compile_buckets(&[1, 2, 4]).unwrap();
     let in_len = arts[0].in_len;

@@ -150,6 +150,39 @@ fn zoo_search_is_thread_count_invariant_under_local_banking() {
     }
 }
 
+#[test]
+fn shard_search_is_thread_count_invariant_over_the_cut_axis() {
+    // the cut-point axis rides on the same worker pool: the sharded
+    // winner (cuts, per-stage decisions, combined cost, search shape)
+    // must be identical at any thread count
+    use polymem::shard::{search_sharded, ShardOpts};
+    let cfg = AccelConfig::tiny(8 * 1024).with_cores(2);
+    for (name, g) in zoo().into_iter().take(3) {
+        let at = |threads: usize| {
+            search_sharded(&g, &cfg, &ShardOpts { joint: true, threads, ..ShardOpts::default() })
+                .unwrap_or_else(|e| panic!("{name} t={threads}: {e}"))
+        };
+        let base = at(1);
+        for threads in [2usize, 8] {
+            let alt = at(threads);
+            assert_eq!(base.cuts, alt.cuts, "{name} t={threads}: cuts");
+            assert_eq!(base.describe(), alt.describe(), "{name} t={threads}: decision");
+            assert!(base.cost.bits_eq(&alt.cost), "{name} t={threads}: combined cost");
+            let (b, a) = (&base.stats, &alt.stats);
+            assert_eq!(
+                (b.candidates, b.evaluated, b.pruned, b.infeasible),
+                (a.candidates, a.evaluated, a.pruned, a.infeasible),
+                "{name} t={threads}: search shape"
+            );
+            assert_eq!(
+                (b.stage_compiles, b.memo_hits),
+                (a.stage_compiles, a.memo_hits),
+                "{name} t={threads}: memo shape"
+            );
+        }
+    }
+}
+
 fn env_u64(name: &str, default: u64) -> u64 {
     match std::env::var(name) {
         Err(_) => default,
